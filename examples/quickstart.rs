@@ -1,0 +1,63 @@
+//! Quickstart: the smallest end-to-end use of the fogml public API.
+//!
+//! Builds a 6-device fog network with testbed-like costs, runs 30 intervals
+//! of network-aware federated learning (movement optimization + local
+//! updates + weighted aggregation), and prints the resulting accuracy and
+//! cost ledger next to a plain-federated baseline.
+//!
+//! Run with:
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fogml::config::{EngineConfig, Method};
+use fogml::fed;
+use fogml::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // The runtime loads the AOT-compiled XLA artifacts (HLO text) produced
+    // once by `make artifacts`; python is not involved from here on.
+    let rt = Runtime::load_default()?;
+
+    let cfg = EngineConfig {
+        n: 6,
+        t_max: 30,
+        tau: 5,
+        n_train: 2400,
+        n_test: 600,
+        ..Default::default()
+    };
+
+    println!("running network-aware learning ({} devices, T={})...", cfg.n, cfg.t_max);
+    let aware = fed::run(&cfg, &rt)?;
+
+    println!("running federated baseline...");
+    let federated = fed::run(&cfg.clone().with(|c| c.method = Method::Federated), &rt)?;
+
+    println!();
+    println!("                      network-aware    federated");
+    println!(
+        "accuracy              {:>8.2}%        {:>8.2}%",
+        100.0 * aware.accuracy,
+        100.0 * federated.accuracy
+    );
+    println!(
+        "total network cost    {:>9.1}        {:>9.1}",
+        aware.ledger.total(),
+        federated.ledger.total()
+    );
+    println!(
+        "unit cost             {:>9.3}        {:>9.3}",
+        aware.ledger.unit_cost(aware.total_collected as f64),
+        federated.ledger.unit_cost(federated.total_collected as f64)
+    );
+    println!(
+        "data offloaded        {:>9}        {:>9}",
+        aware.movement.offloaded(),
+        federated.movement.offloaded()
+    );
+    let saving = 100.0 * (1.0 - aware.ledger.total() / federated.ledger.total());
+    println!();
+    println!("network-aware learning saved {saving:.0}% of network cost");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""fogml AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); python never appears on the rust
+request path afterwards.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (used by the `xla` rust crate) rejects (`proto.id() <= INT_MAX`).  The
+HLO text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <entry>.hlo.txt   one per ENTRY_POINTS entry + the dense microkernel
+  manifest.json     positional ABI: input/output dtypes+shapes per entry,
+                    plus the shared shape constants the rust side needs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import common
+from .kernels import dense
+from .model import ENTRY_POINTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def dense_micro(x, w, b):
+    """Standalone pallas dense layer for runtime micro-benchmarks."""
+    return (dense(x, w, b, True),)
+
+
+def dense_micro_specs():
+    f32 = lambda sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    return (
+        f32((common.BLOCK_M, common.IMG_PIXELS)),
+        f32((common.IMG_PIXELS, common.MLP_HIDDEN)),
+        f32((common.MLP_HIDDEN,)),
+    )
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = dict(ENTRY_POINTS)
+    entries["dense_micro"] = (dense_micro, dense_micro_specs)
+
+    manifest = {
+        "format": "hlo-text",
+        "constants": {
+            "img_side": common.IMG_SIDE,
+            "img_pixels": common.IMG_PIXELS,
+            "num_classes": common.NUM_CLASSES,
+            "batch": common.BATCH,
+            "mlp_hidden": common.MLP_HIDDEN,
+            "cnn_channels": common.CNN_CHANNELS,
+            "cnn_hidden": common.CNN_HIDDEN,
+            "cnn_pooled": common.CNN_POOLED,
+        },
+        "entries": {},
+    }
+
+    for name, (fn, spec_builder) in entries.items():
+        specs = spec_builder()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(s) for s in out_specs],
+        }
+        print(f"  {name}: {len(text)} chars, {len(specs)} inputs, "
+              f"{len(out_specs)} outputs")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    print(f"fogml aot: lowering to {args.out_dir}")
+    build_all(args.out_dir)
+    print("fogml aot: done")
+
+
+if __name__ == "__main__":
+    main()

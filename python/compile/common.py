@@ -1,0 +1,30 @@
+"""Shared shape constants for the fogml build pipeline.
+
+These constants define the single source of truth for every tensor shape
+that crosses the python -> rust AOT boundary.  `aot.py` embeds them in
+`artifacts/manifest.json`, which the rust runtime parses at startup, so the
+two sides can never silently disagree.
+"""
+
+# Image geometry of the SynthDigits dataset (see rust/src/data/dataset.rs).
+IMG_SIDE = 14
+IMG_PIXELS = IMG_SIDE * IMG_SIDE  # 196
+NUM_CLASSES = 10
+
+# Maximum (padded) microbatch size for one compiled train/eval step.  Larger
+# per-interval workloads are chunked by the rust trainer.
+BATCH = 32
+
+# MLP: 196 -> 128 -> 10
+MLP_HIDDEN = 128
+
+# CNN: 14x14x1 -> conv 3x3 x8 (same) -> relu -> maxpool 2x2 -> 7*7*8=392
+# -> dense 392 -> 64 -> relu -> dense 64 -> 10
+CNN_CHANNELS = 8
+CNN_KSIZE = 3
+CNN_POOLED = (IMG_SIDE // 2) * (IMG_SIDE // 2) * CNN_CHANNELS  # 392
+CNN_HIDDEN = 64
+
+# Default tile sizes for the pallas dense kernel (MXU-oriented blocking).
+BLOCK_M = 128
+BLOCK_N = 128

@@ -1,0 +1,5 @@
+"""fogml L1: pallas kernels + pure-jnp oracles (build-time only)."""
+
+from .dense import dense, matmul  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,102 @@
+"""Pallas dense-layer kernel — the compute hot-spot of every local update.
+
+The paper's local update (eq. 3) is dominated by the dense matmuls of the
+MLP/CNN forward and backward passes.  This module implements them as a
+blocked pallas matmul:
+
+  * grid over (M/bm, N/bn) output tiles, K resident per tile — the
+    HBM->VMEM schedule a TPU MXU wants (see DESIGN.md §Hardware-Adaptation);
+  * f32 accumulation regardless of input dtype;
+  * `dense` is wrapped in a `jax.custom_vjp` whose backward pass reuses the
+    same pallas matmul for dx = g @ w.T and dw = x.T @ g, so the whole
+    fwd+bwd lowers to pallas-blocked compute.
+
+`interpret=True` is mandatory here: the image's CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+the rust runtime executes.  Numerical equivalence with `ref.dense_ref` is
+enforced by `python/tests/test_kernels.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import BLOCK_M, BLOCK_N
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full-K matmul with f32 accumulation."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (>=1)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(x, w, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """Blocked pallas matmul x[M,K] @ w[K,N] -> [M,N].
+
+    Degenerate shapes (empty dims) fall back to jnp.dot, which is also the
+    correctness oracle (`ref.matmul_ref`).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    if m == 0 or n == 0 or k == 0:
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool = False):
+    """y = x @ w + b (pallas matmul), optionally ReLU-fused.
+
+    Differentiable: the custom VJP routes both gradient matmuls through the
+    same pallas kernel, so fwd *and* bwd of the model are pallas-blocked.
+    """
+    y = matmul(x, w) + b.astype(x.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def _dense_fwd(x, w, b, relu: bool):
+    y = matmul(x, w) + b.astype(x.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+        return y, (x, w, y)
+    return y, (x, w, None)
+
+
+def _dense_bwd(relu: bool, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

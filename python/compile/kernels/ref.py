@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the pallas kernels.
+
+Every kernel in this package must match its oracle here to float tolerance;
+`python/tests/test_kernels.py` sweeps shapes and dtypes with hypothesis and
+asserts allclose.  The oracles are also what the kernels fall back to for
+degenerate shapes the blocked kernels do not support (e.g. zero-sized
+batches), so they are part of the public contract, not just test helpers.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, relu: bool = False):
+    """y = x @ w + b, optionally followed by ReLU.
+
+    x: [B, K] float
+    w: [K, N] float
+    b: [N]    float
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def matmul_ref(a, b):
+    """Plain a @ b in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def softmax_xent_ref(logits, onehot, wt):
+    """Weighted mean softmax cross-entropy.
+
+    logits: [B, C], onehot: [B, C], wt: [B] (0/1 mask or arbitrary weights)
+    Returns a scalar: sum_i wt_i * xent_i / max(sum_i wt_i, 1).
+    """
+    logits = logits.astype(jnp.float32)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    xent = logsumexp - jnp.sum(z * onehot.astype(jnp.float32), axis=-1)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    return jnp.sum(xent * wt) / denom
+
+
+def softmax_xent_grad_ref(logits, onehot, wt):
+    """Closed-form gradient of `softmax_xent_ref` w.r.t. logits."""
+    logits = logits.astype(jnp.float32)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(z) / jnp.sum(jnp.exp(z), axis=-1, keepdims=True)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    return (p - onehot.astype(jnp.float32)) * (wt / denom)[:, None]

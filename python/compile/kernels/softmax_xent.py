@@ -1,0 +1,73 @@
+"""Pallas fused weighted softmax cross-entropy kernel.
+
+Computes the masked/weighted mean cross-entropy the fogml trainer minimizes:
+
+    loss = sum_i wt_i * xent(logits_i, onehot_i) / max(sum_i wt_i, 1)
+
+The per-sample weight vector `wt` is how a single compiled train step serves
+any microbatch size <= BATCH: the rust trainer pads the batch and zeroes the
+padded rows' weights, which provably removes them from both the loss and the
+gradient (tested in test_models.py::test_padding_invariance).
+
+Forward is a single pallas kernel over the whole [B, C] tile (B, C are small
+and VMEM-resident); backward uses the closed-form softmax gradient, also as
+a pallas kernel, wired up via `jax.custom_vjp`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_fwd_kernel(logits_ref, onehot_ref, wt_ref, loss_ref):
+    logits = logits_ref[...].astype(jnp.float32)
+    onehot = onehot_ref[...].astype(jnp.float32)
+    wt = wt_ref[...].astype(jnp.float32)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    xent = logsumexp - jnp.sum(z * onehot, axis=-1)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    # scalar output as a (1, 1) tile
+    loss_ref[...] = (jnp.sum(xent * wt) / denom).reshape(1, 1)
+
+
+def _xent_bwd_kernel(logits_ref, onehot_ref, wt_ref, g_ref, dlogits_ref):
+    logits = logits_ref[...].astype(jnp.float32)
+    onehot = onehot_ref[...].astype(jnp.float32)
+    wt = wt_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)  # (1, 1) upstream cotangent
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    ez = jnp.exp(z)
+    p = ez / jnp.sum(ez, axis=-1, keepdims=True)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    dlogits = (p - onehot) * (wt / denom)[:, None] * g[0, 0]
+    dlogits_ref[...] = dlogits.astype(dlogits_ref.dtype)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, onehot, wt):
+    """Weighted mean softmax cross-entropy (scalar)."""
+    loss = pl.pallas_call(
+        _xent_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(logits, onehot, wt)
+    return loss[0, 0]
+
+
+def _fwd(logits, onehot, wt):
+    return softmax_xent(logits, onehot, wt), (logits, onehot, wt)
+
+
+def _bwd(res, g):
+    logits, onehot, wt = res
+    dlogits = pl.pallas_call(
+        _xent_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(logits.shape, logits.dtype),
+        interpret=True,
+    )(logits, onehot, wt, jnp.reshape(g, (1, 1)).astype(jnp.float32))
+    # onehot and wt are data, not trainables; return zero cotangents.
+    return dlogits, jnp.zeros_like(onehot), jnp.zeros_like(wt)
+
+
+softmax_xent.defvjp(_fwd, _bwd)

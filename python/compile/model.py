@@ -1,0 +1,167 @@
+"""fogml L2: JAX model definitions (build-time only; never on request path).
+
+Two classifiers from the paper's evaluation (§V-A) — an MLP and a small CNN —
+plus the weight-masked SGD train step each device runs for its local update
+(eq. 3 of the paper).  The dense layers and the loss are the pallas kernels
+from `kernels/`; the conv layer stays in plain jnp (XLA fuses it fine and the
+paper's hot-spot is the dense compute).
+
+Design decisions that matter to the rust side:
+  * Parameters are a flat tuple of arrays (not a pytree dict), so the AOT'd
+    entry points have a stable positional ABI recorded in manifest.json.
+  * Every train step takes a per-sample weight vector `wt`: the rust trainer
+    pads microbatches to BATCH and zeroes padded rows, which removes them
+    from loss and gradient exactly (see tests).
+  * The step returns (new_params..., loss) so the rust hot loop is a single
+    PJRT execution per microbatch with no host round-trips in between.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    BATCH,
+    CNN_CHANNELS,
+    CNN_HIDDEN,
+    CNN_KSIZE,
+    CNN_POOLED,
+    IMG_PIXELS,
+    IMG_SIDE,
+    MLP_HIDDEN,
+    NUM_CLASSES,
+)
+from .kernels import dense, softmax_xent
+
+# ---------------------------------------------------------------------------
+# MLP: 196 -> 128 -> 10
+# ---------------------------------------------------------------------------
+
+MLP_PARAM_SHAPES = (
+    ("w1", (IMG_PIXELS, MLP_HIDDEN)),
+    ("b1", (MLP_HIDDEN,)),
+    ("w2", (MLP_HIDDEN, NUM_CLASSES)),
+    ("b2", (NUM_CLASSES,)),
+)
+
+
+def mlp_apply(params, x):
+    """Logits for a batch of flattened images x[B, 196]."""
+    w1, b1, w2, b2 = params
+    h = dense(x, w1, b1, True)
+    return dense(h, w2, b2, False)
+
+
+def mlp_loss(params, x, onehot, wt):
+    return softmax_xent(mlp_apply(params, x), onehot, wt)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, onehot, wt, lr):
+    """One weight-masked SGD step; returns (w1', b1', w2', b2', loss)."""
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, onehot, wt)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+def mlp_eval_step(w1, b1, w2, b2, x):
+    """Logits only; argmax/accuracy is computed on the rust side."""
+    return (mlp_apply((w1, b1, w2, b2), x),)
+
+
+# ---------------------------------------------------------------------------
+# CNN: 14x14x1 -> conv3x3 x8 -> relu -> maxpool2 -> dense 392->64 -> 64->10
+# ---------------------------------------------------------------------------
+
+CNN_PARAM_SHAPES = (
+    ("cw", (CNN_KSIZE, CNN_KSIZE, 1, CNN_CHANNELS)),
+    ("cb", (CNN_CHANNELS,)),
+    ("w1", (CNN_POOLED, CNN_HIDDEN)),
+    ("b1", (CNN_HIDDEN,)),
+    ("w2", (CNN_HIDDEN, NUM_CLASSES)),
+    ("b2", (NUM_CLASSES,)),
+)
+
+
+def cnn_apply(params, x):
+    """Logits for x[B, 196] (reshaped to NHWC inside)."""
+    cw, cb, w1, b1, w2, b2 = params
+    b = x.shape[0]
+    img = x.reshape(b, IMG_SIDE, IMG_SIDE, 1)
+    conv = jax.lax.conv_general_dilated(
+        img,
+        cw,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    conv = jnp.maximum(conv + cb, 0.0)
+    pooled = jax.lax.reduce_window(
+        conv,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+    flat = pooled.reshape(b, CNN_POOLED)
+    h = dense(flat, w1, b1, True)
+    return dense(h, w2, b2, False)
+
+
+def cnn_loss(params, x, onehot, wt):
+    return softmax_xent(cnn_apply(params, x), onehot, wt)
+
+
+def cnn_train_step(cw, cb, w1, b1, w2, b2, x, onehot, wt, lr):
+    params = (cw, cb, w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, onehot, wt)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+def cnn_eval_step(cw, cb, w1, b1, w2, b2, x):
+    return (cnn_apply((cw, cb, w1, b1, w2, b2), x),)
+
+
+# ---------------------------------------------------------------------------
+# Shape specs for AOT lowering (shared with aot.py / manifest.json)
+# ---------------------------------------------------------------------------
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def batch_specs():
+    """(x, onehot, wt, lr) example specs at the compiled batch size."""
+    return (
+        _f32((BATCH, IMG_PIXELS)),
+        _f32((BATCH, NUM_CLASSES)),
+        _f32((BATCH,)),
+        _f32(()),
+    )
+
+
+def param_specs(shapes):
+    return tuple(_f32(s) for _, s in shapes)
+
+
+ENTRY_POINTS = {
+    # name -> (fn, example-arg builder)
+    "mlp_train": (
+        mlp_train_step,
+        lambda: param_specs(MLP_PARAM_SHAPES) + batch_specs(),
+    ),
+    "mlp_eval": (
+        mlp_eval_step,
+        lambda: param_specs(MLP_PARAM_SHAPES) + (_f32((BATCH, IMG_PIXELS)),),
+    ),
+    "cnn_train": (
+        cnn_train_step,
+        lambda: param_specs(CNN_PARAM_SHAPES) + batch_specs(),
+    ),
+    "cnn_eval": (
+        cnn_eval_step,
+        lambda: param_specs(CNN_PARAM_SHAPES) + (_f32((BATCH, IMG_PIXELS)),),
+    ),
+}

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: the artifacts the rust runtime will load."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, common
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(str(out))
+    return str(out), manifest
+
+
+def test_manifest_constants(built):
+    _, manifest = built
+    consts = manifest["constants"]
+    assert consts["batch"] == common.BATCH
+    assert consts["img_pixels"] == common.IMG_SIDE ** 2
+    assert consts["num_classes"] == common.NUM_CLASSES
+    assert consts["cnn_pooled"] == common.CNN_POOLED
+
+
+def test_all_entries_emitted(built):
+    out, manifest = built
+    expected = {"mlp_train", "mlp_eval", "cnn_train", "cnn_eval", "dense_micro"}
+    assert set(manifest["entries"]) == expected
+    for name, entry in manifest["entries"].items():
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        # well-formed HLO text module with an ENTRY computation
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_train_entry_abi(built):
+    """Input layout: params..., x, onehot, wt, lr; outputs: params..., loss."""
+    _, manifest = built
+    for name, nparams in (("mlp_train", 4), ("cnn_train", 6)):
+        entry = manifest["entries"][name]
+        ins, outs = entry["inputs"], entry["outputs"]
+        assert len(ins) == nparams + 4
+        assert len(outs) == nparams + 1
+        # param shapes round-trip through the step unchanged
+        for i in range(nparams):
+            assert ins[i]["shape"] == outs[i]["shape"], (name, i)
+        assert ins[nparams]["shape"] == [common.BATCH, common.IMG_PIXELS]
+        assert ins[nparams + 1]["shape"] == [common.BATCH, common.NUM_CLASSES]
+        assert ins[nparams + 2]["shape"] == [common.BATCH]
+        assert ins[nparams + 3]["shape"] == []   # lr scalar
+        assert outs[-1]["shape"] == []           # loss scalar
+
+
+def test_eval_entry_abi(built):
+    _, manifest = built
+    for name, nparams in (("mlp_eval", 4), ("cnn_eval", 6)):
+        entry = manifest["entries"][name]
+        assert len(entry["inputs"]) == nparams + 1
+        assert entry["outputs"][0]["shape"] == [
+            common.BATCH, common.NUM_CLASSES]
+
+
+def test_manifest_is_valid_json_on_disk(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        reparsed = json.load(f)
+    assert reparsed["format"] == "hlo-text"

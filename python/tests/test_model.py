@@ -1,0 +1,112 @@
+"""L2 model contract tests: the ABI the rust trainer relies on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import common, model
+
+
+def _init_params(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _, shape in shapes:
+        if len(shape) >= 2:
+            fan_in = int(np.prod(shape[:-1]))
+            scale = np.sqrt(2.0 / fan_in)
+            out.append(jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32) * scale))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return tuple(out)
+
+
+def _toy_batch(seed=0, b=common.BATCH):
+    """Linearly separable 10-class blobs at the model's input width."""
+    rng = np.random.default_rng(seed)
+    protos = rng.standard_normal((common.NUM_CLASSES, common.IMG_PIXELS))
+    labels = rng.integers(0, common.NUM_CLASSES, size=b)
+    x = protos[labels] + 0.3 * rng.standard_normal((b, common.IMG_PIXELS))
+    onehot = np.eye(common.NUM_CLASSES, dtype=np.float32)[labels]
+    wt = np.ones(b, np.float32)
+    return (
+        jnp.asarray(x.astype(np.float32)),
+        jnp.asarray(onehot),
+        jnp.asarray(wt),
+    )
+
+
+CASES = [
+    ("mlp", model.MLP_PARAM_SHAPES, model.mlp_train_step, model.mlp_eval_step),
+    ("cnn", model.CNN_PARAM_SHAPES, model.cnn_train_step, model.cnn_eval_step),
+]
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_train_step_decreases_loss(name, shapes, train, evalf):
+    params = _init_params(shapes)
+    x, onehot, wt = _toy_batch()
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(12):
+        out = train(*params, x, onehot, wt, lr)
+        params, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_padding_invariance(name, shapes, train, evalf):
+    """Rows with wt=0 must not change params or loss — this is the contract
+    that lets the rust trainer serve any microbatch size with one compiled
+    executable."""
+    params = _init_params(shapes)
+    x, onehot, wt = _toy_batch()
+    half = common.BATCH // 2
+    wt_half = wt.at[half:].set(0.0)
+
+    out_a = train(*params, x, onehot, wt_half, jnp.float32(0.05))
+
+    # corrupt the masked rows: result must be bit-for-bit unaffected
+    x_b = x.at[half:].set(1e3)
+    onehot_b = onehot.at[half:].set(0.0)
+    out_b = train(*params, x_b, onehot_b, wt_half, jnp.float32(0.05))
+
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_eval_step_shapes(name, shapes, train, evalf):
+    params = _init_params(shapes)
+    x, _, _ = _toy_batch()
+    (logits,) = evalf(*params, x)
+    assert logits.shape == (common.BATCH, common.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_train_then_eval_improves_accuracy(name, shapes, train, evalf):
+    params = _init_params(shapes)
+    x, onehot, wt = _toy_batch()
+    labels = np.argmax(np.asarray(onehot), axis=1)
+
+    def acc():
+        (logits,) = evalf(*params, x)
+        return float(np.mean(np.argmax(np.asarray(logits), 1) == labels))
+
+    before = acc()
+    for _ in range(25):
+        out = train(*params, x, onehot, wt, jnp.float32(0.05))
+        params = out[:-1]
+    after = acc()
+    assert after > max(before, 0.5), (before, after)
+
+
+def test_entry_points_cover_both_models():
+    assert set(model.ENTRY_POINTS) == {
+        "mlp_train", "mlp_eval", "cnn_train", "cnn_eval"
+    }
+    for name, (fn, spec_builder) in model.ENTRY_POINTS.items():
+        specs = spec_builder()
+        assert all(s.dtype == jnp.float32 for s in specs), name

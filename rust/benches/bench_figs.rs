@@ -1,0 +1,81 @@
+//! End-to-end figure benchmarks: representative sweep points of Figures
+//! 5–10 at reduced scale — tracks how engine wall-clock scales with n, ρ,
+//! τ and churn, which bounds the cost of regenerating the full figures.
+
+use fogml::bench::Runner;
+use fogml::config::{Churn, EngineConfig, TopologyKind};
+use fogml::costs::{CostSource, Medium};
+use fogml::fed;
+use fogml::runtime::Runtime;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        n: 6,
+        t_max: 20,
+        tau: 5,
+        n_train: 1600,
+        n_test: 400,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let mut runner = Runner::new("figs").with_iters(1, 5);
+
+    // Fig 5: node-count scaling (largest point dominates the sweep)
+    for n in [5usize, 15, 30] {
+        runner.bench(&format!("fig5_point/n={n}"), || {
+            std::hint::black_box(fed::run(&small().with(|c| c.n = n), &rt).unwrap());
+        });
+    }
+
+    // Fig 6: connectivity extremes
+    for rho in [0.2f64, 1.0] {
+        runner.bench(&format!("fig6_point/rho={rho}"), || {
+            std::hint::black_box(
+                fed::run(&small().with(|c| c.topology = TopologyKind::Random(rho)), &rt)
+                    .unwrap(),
+            );
+        });
+    }
+
+    // Fig 7: aggregation period extremes
+    for tau in [2usize, 20] {
+        runner.bench(&format!("fig7_point/tau={tau}"), || {
+            std::hint::black_box(fed::run(&small().with(|c| c.tau = tau), &rt).unwrap());
+        });
+    }
+
+    // Fig 8: topology × medium
+    for (name, topo) in [
+        ("social", TopologyKind::SmallWorld),
+        ("hierarchical", TopologyKind::Hierarchical),
+    ] {
+        runner.bench(&format!("fig8_point/{name}_wifi"), || {
+            std::hint::black_box(
+                fed::run(
+                    &small().with(|c| {
+                        c.topology = topo;
+                        c.cost_source = CostSource::Testbed(Medium::Wifi);
+                    }),
+                    &rt,
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    // Figs 9/10: churn
+    runner.bench("fig9_point/p_exit=5pct", || {
+        std::hint::black_box(
+            fed::run(
+                &small().with(|c| c.churn = Some(Churn { p_exit: 0.05, p_entry: 0.02 })),
+                &rt,
+            )
+            .unwrap(),
+        );
+    });
+
+    runner.write_results().expect("write bench results");
+}

@@ -1,0 +1,70 @@
+//! Movement-optimizer benchmarks: solver cost as a function of network
+//! size for both solver families plus the repair pass. The L3 target from
+//! DESIGN.md §Perf: solver time per interval must stay far below a train
+//! step (~hundreds of µs), even at n = 50.
+
+use fogml::bench::Runner;
+use fogml::costs::{CapacityMode, CostSchedule};
+use fogml::movement::convex::{self, PgdOptions};
+use fogml::movement::problem::{DiscardModel, MovementProblem};
+use fogml::movement::{greedy, repair};
+use fogml::topology::generators::fully_connected;
+use fogml::util::rng::Rng;
+
+fn random_costs(n: usize, rng: &mut Rng) -> CostSchedule {
+    let mut costs = CostSchedule::zeros(n, 2);
+    for t in 0..2 {
+        for i in 0..n {
+            costs.compute[t][i] = rng.f64();
+            costs.error_weight[t][i] = 0.5;
+            for j in 0..n {
+                if i != j {
+                    costs.link[t][i * n + j] = rng.f64() * 0.4;
+                }
+            }
+        }
+    }
+    costs
+}
+
+fn main() {
+    let mut runner = Runner::new("movement").with_iters(3, 20);
+    let mut rng = Rng::new(1);
+
+    for &n in &[10usize, 25, 50] {
+        let graph = fully_connected(n);
+        let costs = random_costs(n, &mut rng);
+        let d: Vec<f64> = (0..n).map(|_| 8.0).collect();
+        let inbound = vec![0.0; n];
+        let active = vec![true; n];
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        runner.bench(&format!("greedy_theorem3/n={n}"), || {
+            std::hint::black_box(greedy::solve(&p));
+        });
+
+        let p_sqrt = MovementProblem { discard_model: DiscardModel::Sqrt, ..p };
+        runner.bench(&format!("convex_pgd_400it/n={n}"), || {
+            std::hint::black_box(convex::solve(&p_sqrt, PgdOptions::default()));
+        });
+
+        let mut capped = costs.clone();
+        capped.set_capacities(CapacityMode::Uniform(8.0));
+        let p_cap = MovementProblem { costs: &capped, ..p };
+        let base_plan = greedy::solve(&p_cap);
+        runner.bench(&format!("repair_pass/n={n}"), || {
+            let mut plan = base_plan.clone();
+            repair::repair(&p_cap, &mut plan);
+            std::hint::black_box(plan);
+        });
+    }
+
+    runner.write_results().expect("write bench results");
+}

@@ -1,0 +1,62 @@
+//! PJRT runtime benchmarks — the per-step cost the whole system pays:
+//! compiled train/eval step latency for both models, the standalone pallas
+//! dense microkernel, and parameter initialization. L1/L2 perf target from
+//! DESIGN.md §Perf is tracked here (before/after in EXPERIMENTS.md §Perf).
+
+use fogml::bench::Runner;
+use fogml::data::dataset::{IMG_PIXELS, NUM_CLASSES};
+use fogml::data::SynthDigits;
+use fogml::fed::Trainer;
+use fogml::runtime::{HostTensor, ModelKind, Runtime};
+use fogml::util::rng::Rng;
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let mut runner = Runner::new("runtime").with_iters(5, 30);
+    let b = rt.batch();
+
+    // dense pallas microkernel
+    let micro = rt.executable("dense_micro").unwrap();
+    let mut rng = Rng::new(3);
+    let x = HostTensor::new(vec![128, IMG_PIXELS], (0..128 * IMG_PIXELS).map(|_| rng.f32()).collect());
+    let w = HostTensor::new(vec![IMG_PIXELS, 128], (0..IMG_PIXELS * 128).map(|_| rng.f32()).collect());
+    let bias = HostTensor::new(vec![128], (0..128).map(|_| rng.f32()).collect());
+    runner.bench("dense_micro_128x196x128", || {
+        std::hint::black_box(micro.run(&[x.clone(), w.clone(), bias.clone()]).unwrap());
+    });
+
+    let gen = SynthDigits::new(0xF0D5);
+    let mut drng = Rng::new(5);
+    let (train, test) = gen.train_test(512, 256, &mut drng);
+
+    for kind in [ModelKind::Mlp, ModelKind::Cnn] {
+        let trainer = Trainer::new(&rt, kind, 0.05).unwrap();
+        let params0 = rt.init_params(kind, 7).unwrap();
+        let batch_idx: Vec<u32> = (0..b as u32).collect();
+
+        let mut params = params0.clone();
+        runner.bench(&format!("train_step_b{b}/{kind}"), || {
+            std::hint::black_box(
+                trainer.train_interval(&mut params, &train, &batch_idx).unwrap(),
+            );
+        });
+
+        runner.bench(&format!("eval_256/{kind}"), || {
+            std::hint::black_box(trainer.evaluate(&params0, &test).unwrap());
+        });
+
+        runner.bench(&format!("init_params/{kind}"), || {
+            std::hint::black_box(rt.init_params(kind, 11).unwrap());
+        });
+    }
+
+    // aggregation cost (pure host)
+    let p1 = rt.init_params(ModelKind::Mlp, 1).unwrap();
+    let p2 = rt.init_params(ModelKind::Mlp, 2).unwrap();
+    runner.bench("fedavg_aggregate_2xMLP", || {
+        std::hint::black_box(fogml::fed::aggregator::aggregate(&[(&p1, 3.0), (&p2, 5.0)]).unwrap());
+    });
+
+    let _ = NUM_CLASSES;
+    runner.write_results().expect("write bench results");
+}

@@ -1,0 +1,68 @@
+//! Substrate benchmarks: dataset synthesis, partitioning, topology
+//! generation, cost traces, queueing closed forms, and the JSON/manifest
+//! parser — everything the engine touches outside the PJRT hot path.
+
+use fogml::bench::Runner;
+use fogml::costs::traces::{self, Medium};
+use fogml::data::{Partitioner, SynthDigits};
+use fogml::queueing::{capacity_for_waiting_time, dm1, straggler};
+use fogml::topology::generators;
+use fogml::util::json::Json;
+use fogml::util::rng::Rng;
+
+fn main() {
+    let mut runner = Runner::new("substrates").with_iters(2, 10);
+
+    let gen = SynthDigits::new(1);
+    runner.bench("dataset_generate_8000", || {
+        let mut rng = Rng::new(2);
+        std::hint::black_box(gen.generate(8000, &mut rng));
+    });
+
+    let mut rng = Rng::new(3);
+    let ds = gen.generate(8000, &mut rng);
+    runner.bench("partition_noniid_n10_t100", || {
+        let mut rng = Rng::new(4);
+        let p = Partitioner { n_devices: 10, t_max: 100, iid: false };
+        std::hint::black_box(p.partition(&ds, &mut rng));
+    });
+
+    runner.bench("topology_scale_free_n100", || {
+        let mut rng = Rng::new(5);
+        std::hint::black_box(generators::scale_free(100, 2, &mut rng));
+    });
+    runner.bench("topology_watts_strogatz_n100", || {
+        let mut rng = Rng::new(6);
+        std::hint::black_box(generators::watts_strogatz(100, 10, 0.3, &mut rng));
+    });
+
+    runner.bench("costs_testbed_n50_t100", || {
+        let mut rng = Rng::new(7);
+        std::hint::black_box(traces::testbed(50, 100, Medium::Lte, &mut rng));
+    });
+
+    runner.bench("dm1_capacity_rule_1000x", || {
+        for i in 1..=1000 {
+            let mu = 0.5 + i as f64 / 500.0;
+            std::hint::black_box(capacity_for_waiting_time(mu, 1.0));
+        }
+    });
+    runner.bench("dm1_fixed_point_1000x", || {
+        for i in 1..=1000 {
+            let lambda = i as f64 / 1001.0;
+            std::hint::black_box(dm1::mean_waiting_time(1.0, lambda));
+        }
+    });
+    runner.bench("dm1_simulate_100k_jobs", || {
+        let mut rng = Rng::new(8);
+        std::hint::black_box(straggler::simulate(1.0, 0.8, 100_000, &mut rng));
+    });
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json")
+        .expect("run `make artifacts` first");
+    runner.bench("json_parse_manifest", || {
+        std::hint::black_box(Json::parse(&manifest_text).unwrap());
+    });
+
+    runner.write_results().expect("write bench results");
+}

@@ -1,0 +1,81 @@
+//! End-to-end table benchmarks: one scaled-down engine run per paper table
+//! (Tables II–V), timing the complete pipeline — movement optimization,
+//! PJRT local updates, aggregation, accounting. `fogml exp tableN`
+//! regenerates the full-size numbers; these benches track the wall-clock
+//! of the system that produces them.
+
+use fogml::bench::Runner;
+use fogml::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method};
+use fogml::fed;
+use fogml::movement::DiscardModel;
+use fogml::runtime::Runtime;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        n: 6,
+        t_max: 20,
+        tau: 5,
+        n_train: 1600,
+        n_test: 400,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let mut runner = Runner::new("tables").with_iters(1, 5);
+
+    // Table II cell: one methodology comparison point
+    runner.bench("table2_cell/network_aware_mlp", || {
+        std::hint::black_box(fed::run(&small(), &rt).unwrap());
+    });
+    runner.bench("table2_cell/federated_mlp", || {
+        std::hint::black_box(
+            fed::run(&small().with(|c| c.method = Method::Federated), &rt).unwrap(),
+        );
+    });
+    runner.bench("table2_cell/centralized_mlp", || {
+        std::hint::black_box(
+            fed::run(&small().with(|c| c.method = Method::Centralized), &rt).unwrap(),
+        );
+    });
+
+    // Table III settings: the costliest variants
+    runner.bench("table3_setting/C_estimated", || {
+        std::hint::black_box(
+            fed::run(&small().with(|c| c.info = InfoMode::Estimated(5)), &rt).unwrap(),
+        );
+    });
+    runner.bench("table3_setting/E_estimated_capped", || {
+        std::hint::black_box(
+            fed::run(
+                &small().with(|c| {
+                    c.info = InfoMode::Estimated(5);
+                    c.capacity = CapacityPolicy::MeanArrivals;
+                }),
+                &rt,
+            )
+            .unwrap(),
+        );
+    });
+
+    // Table IV row: the convex solver path (the heaviest optimizer)
+    runner.bench("table4_row/sqrt_discard_model", || {
+        std::hint::black_box(
+            fed::run(&small().with(|c| c.discard_model = DiscardModel::Sqrt), &rt).unwrap(),
+        );
+    });
+
+    // Table V row: dynamic network
+    runner.bench("table5_row/dynamic_1pct_churn", || {
+        std::hint::black_box(
+            fed::run(
+                &small().with(|c| c.churn = Some(Churn { p_exit: 0.01, p_entry: 0.01 })),
+                &rt,
+            )
+            .unwrap(),
+        );
+    });
+
+    runner.write_results().expect("write bench results");
+}

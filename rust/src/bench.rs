@@ -1,0 +1,143 @@
+//! Micro/benchmark harness (offline stand-in for `criterion`).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries that use
+//! [`Runner`]: warmup iterations, timed iterations, mean/p50/p95 report in
+//! criterion-like console format plus machine-readable JSON under
+//! `results/bench/`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One benchmark's timing summary (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Sample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters)),
+            ("mean_ns", Json::from(self.mean_ns)),
+            ("p50_ns", Json::from(self.p50_ns)),
+            ("p95_ns", Json::from(self.p95_ns)),
+            ("min_ns", Json::from(self.min_ns)),
+        ])
+    }
+}
+
+/// Bench runner with fixed warmup/measure iteration counts.
+pub struct Runner {
+    pub group: String,
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    samples: Vec<Sample>,
+}
+
+impl Runner {
+    pub fn new(group: &str) -> Runner {
+        Runner {
+            group: group.to_string(),
+            warmup_iters: 3,
+            measure_iters: 10,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Runner {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Sample {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let start = Instant::now();
+            f();
+            times.push(start.elapsed().as_nanos() as f64);
+        }
+        let sample = Sample {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns: stats::mean(&times),
+            p50_ns: stats::quantile(&times, 0.5),
+            p95_ns: stats::quantile(&times, 0.95),
+            min_ns: stats::min(&times),
+        };
+        println!(
+            "{}/{:<40} mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.group,
+            sample.name,
+            fmt_ns(sample.mean_ns),
+            fmt_ns(sample.p50_ns),
+            fmt_ns(sample.p95_ns),
+        );
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    /// Write all samples as JSON under `results/bench/<group>.json`.
+    pub fn write_results(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("results/bench")?;
+        let json = Json::Arr(self.samples.iter().map(Sample::to_json).collect());
+        std::fs::write(format!("results/bench/{}.json", self.group), json.to_string())
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+}
+
+/// Human-friendly nanosecond formatting (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_measures_and_reports() {
+        let mut r = Runner::new("test").with_iters(1, 5);
+        let mut counter = 0u64;
+        let s = r.bench("noop_loop", || {
+            for i in 0..1000u64 {
+                counter = counter.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns);
+        assert!(counter > 0);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+}

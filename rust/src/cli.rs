@@ -1,0 +1,127 @@
+//! Command-line argument parsing (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and an auto-generated usage block.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |next| !next.starts_with("--"))
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {raw}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = parse(&["exp", "table2", "--seeds", "5", "--model=cnn", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "table2");
+        assert_eq!(a.get("seeds"), Some("5"));
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["--n", "20", "--rho", "0.4"]);
+        assert_eq!(a.get_or("n", 10usize).unwrap(), 20);
+        assert_eq!(a.get_or("rho", 1.0f64).unwrap(), 0.4);
+        assert_eq!(a.get_or("tau", 10usize).unwrap(), 10);
+        assert!(a.get_parsed::<usize>("rho").is_err());
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        // a flag followed by another option stays a flag
+        let a = parse(&["--verbose", "--n", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["--offset", "-3"]);
+        // "-3" does not start with -- so it is a value
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

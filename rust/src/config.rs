@@ -1,0 +1,181 @@
+//! Experiment configuration: every knob of the paper's evaluation (§V-A)
+//! in one struct, with the paper's defaults.
+
+use crate::costs::traces::ErrorWeightProfile;
+use crate::costs::{CostSource, Medium};
+use crate::movement::DiscardModel;
+use crate::runtime::ModelKind;
+
+/// Fog topology families (Table I, §V-D).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopologyKind {
+    /// `E = {(i,j) : i ≠ j}` — the §V-B default.
+    Full,
+    /// Erdős–Rényi with connection probability ρ (§V-C2).
+    Random(f64),
+    /// Watts–Strogatz small world, k = n/5 ring neighbors (§V-D social).
+    SmallWorld,
+    /// n/3 cheapest devices as heads, 2 random leaves each (§V-D).
+    Hierarchical,
+    /// Barabási–Albert scale-free (Theorem 5's model).
+    ScaleFree,
+}
+
+/// Whether the optimizer sees true or estimated costs (§IV-A, Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InfoMode {
+    Perfect,
+    /// Time-averaged over `windows` estimation intervals.
+    Estimated(usize),
+}
+
+/// Capacity regime (§V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityPolicy {
+    Unconstrained,
+    /// `C_i(t) = C_ij(t) = |D_V| / (nT)`.
+    MeanArrivals,
+}
+
+/// Learning methodology under comparison (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's contribution: movement optimization + federated updates.
+    NetworkAware,
+    /// Plain federated learning: `G_i(t) = D_i(t)`, no movement.
+    Federated,
+    /// All data processed at one server (accuracy upper baseline).
+    Centralized,
+}
+
+/// Node churn parameters (§V-E).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Churn {
+    pub p_exit: f64,
+    pub p_entry: f64,
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub method: Method,
+    pub model: ModelKind,
+    /// Number of fog devices n.
+    pub n: usize,
+    /// Time horizon T (intervals).
+    pub t_max: usize,
+    /// Aggregation period τ.
+    pub tau: usize,
+    /// SGD learning rate η.
+    pub lr: f32,
+    /// iid vs 5-of-10-label non-iid device data (§V-A).
+    pub iid: bool,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub topology: TopologyKind,
+    pub cost_source: CostSource,
+    pub capacity: CapacityPolicy,
+    pub info: InfoMode,
+    pub discard_model: DiscardModel,
+    pub churn: Option<Churn>,
+    pub error_profile: ErrorWeightProfile,
+    /// Evaluate test accuracy at every aggregation (slower; for curves).
+    pub eval_curve: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    /// Paper defaults (§V-A): n = 10 devices, τ = 10, T = 100; η is 0.05
+    /// rather than the paper's 0.01 — calibrated so the centralized
+    /// baseline reaches the same high-80s/low-90s accuracy band on
+    /// SynthDigits as the paper's MNIST MLP (DESIGN.md §2),
+    /// fully-connected topology, testbed costs, iid data, perfect
+    /// information, no capacities, linear discard cost. The paper reports
+    /// CNN by default; we default to MLP for sweep speed and use CNN where
+    /// the table calls for it (DESIGN.md §4).
+    fn default() -> Self {
+        EngineConfig {
+            method: Method::NetworkAware,
+            model: ModelKind::Mlp,
+            n: 10,
+            t_max: 100,
+            tau: 10,
+            lr: 0.05,
+            iid: true,
+            n_train: 8000,
+            n_test: 2000,
+            topology: TopologyKind::Full,
+            cost_source: CostSource::Testbed(Medium::Lte),
+            capacity: CapacityPolicy::Unconstrained,
+            info: InfoMode::Perfect,
+            discard_model: DiscardModel::LinearR,
+            churn: None,
+            error_profile: ErrorWeightProfile::default(),
+            eval_curve: false,
+            seed: 1,
+        }
+    }
+}
+
+/// Calibrated default learning rate per model (DESIGN.md §2: the CNN needs
+/// a smaller step to stay stable under small-batch federated updates on
+/// SynthDigits).
+pub fn default_lr(model: ModelKind) -> f32 {
+    match model {
+        ModelKind::Mlp => 0.05,
+        ModelKind::Cnn => 0.02,
+    }
+}
+
+impl EngineConfig {
+    /// Number of estimation windows used by Table III settings C/E
+    /// (10 windows over T = 100, i.e. re-estimate every 10 intervals).
+    pub const DEFAULT_EST_WINDOWS: usize = 10;
+
+    /// Set the model together with its calibrated learning rate.
+    pub fn with_model(mut self, model: ModelKind) -> Self {
+        self.model = model;
+        self.lr = default_lr(model);
+        self
+    }
+
+    /// Mean arrivals per device-interval, `|D_V| / (nT)` — also the uniform
+    /// capacity value under [`CapacityPolicy::MeanArrivals`].
+    pub fn mean_arrivals(&self) -> f64 {
+        self.n_train as f64 / (self.n * self.t_max) as f64
+    }
+
+    // -- builder-style helpers (used heavily by experiment drivers) --------
+
+    pub fn with(mut self, f: impl FnOnce(&mut Self)) -> Self {
+        f(&mut self);
+        self
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = EngineConfig::default();
+        assert_eq!(c.n, 10);
+        assert_eq!(c.tau, 10);
+        assert_eq!(c.t_max, 100);
+        assert_eq!(c.lr, 0.05);
+        assert_eq!(c.mean_arrivals(), 8.0);
+    }
+
+    #[test]
+    fn builder_helpers() {
+        let c = EngineConfig::default().with(|c| c.n = 20).seeded(7);
+        assert_eq!(c.n, 20);
+        assert_eq!(c.seed, 7);
+    }
+}

@@ -1,0 +1,18 @@
+//! Thread-based leader/worker coordination.
+//!
+//! `xla::PjRtClient` is `Rc`-based and thread-confined, so all PJRT
+//! execution lives on a dedicated **runtime-service thread**; device actors
+//! and the aggregation server communicate with it (and each other) over
+//! `std::sync::mpsc` channels. This mirrors the paper's deployment shape —
+//! devices compute local updates, a server aggregates every τ intervals —
+//! while keeping the simulation engine (`fed::engine`) free to use the
+//! faster single-threaded direct path.
+//!
+//! * [`service`] — the runtime-service thread and its typed handle.
+//! * [`cluster`] — device actors + aggregation server wired together.
+
+pub mod cluster;
+pub mod service;
+
+pub use cluster::{Cluster, ClusterConfig, ClusterReport};
+pub use service::{RuntimeHandle, RuntimeService};

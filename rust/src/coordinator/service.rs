@@ -1,0 +1,192 @@
+//! The runtime-service thread: owns the (thread-confined) PJRT runtime and
+//! serves train/eval requests from any number of actor threads.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::dataset::Dataset;
+use crate::fed::trainer::Trainer;
+use crate::runtime::{HostTensor, ModelKind, Runtime};
+
+/// Model parameters as they travel between threads.
+pub type Params = Vec<HostTensor>;
+
+enum Request {
+    Train {
+        params: Params,
+        samples: Vec<u32>,
+        reply: Sender<Result<(Params, Option<f32>)>>,
+    },
+    Evaluate {
+        params: Params,
+        reply: Sender<Result<f64>>,
+    },
+    InitParams {
+        seed: u64,
+        reply: Sender<Result<Params>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime-service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+/// The service itself (join handle + control).
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Spawn the service thread. It compiles the model's entries on first
+    /// use and serves requests until [`RuntimeService::shutdown`].
+    pub fn spawn(kind: ModelKind, lr: f32, train_ds: Dataset, test_ds: Dataset) -> RuntimeService {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let join = std::thread::Builder::new()
+            .name("fogml-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::load_default() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        // fail every request with the load error
+                        for req in rx {
+                            match req {
+                                Request::Train { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
+                                }
+                                Request::Evaluate { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
+                                }
+                                Request::InitParams { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
+                                }
+                                Request::Shutdown => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                let trainer = Trainer::new(&rt, kind, lr).expect("trainer init");
+                for req in rx {
+                    match req {
+                        Request::Train { mut params, samples, reply } => {
+                            let res = trainer
+                                .train_interval(&mut params, &train_ds, &samples)
+                                .map(|loss| (params, loss));
+                            let _ = reply.send(res);
+                        }
+                        Request::Evaluate { params, reply } => {
+                            let _ = reply.send(trainer.evaluate(&params, &test_ds));
+                        }
+                        Request::InitParams { seed, reply } => {
+                            let _ = reply.send(rt.init_params(kind, seed));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn runtime service");
+        RuntimeService { handle: RuntimeHandle { tx }, join: Some(join) }
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the thread (idempotent; also called on drop).
+    pub fn shutdown(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl RuntimeHandle {
+    /// Run one interval of local updates; returns updated params + loss.
+    pub fn train(&self, params: Params, samples: Vec<u32>) -> Result<(Params, Option<f32>)> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::Train { params, samples, reply: tx })
+            .map_err(|_| anyhow!("runtime service gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    /// Test-set accuracy of the given parameters.
+    pub fn evaluate(&self, params: Params) -> Result<f64> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::Evaluate { params, reply: tx })
+            .map_err(|_| anyhow!("runtime service gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    /// Seeded parameter initialization on the service thread.
+    pub fn init_params(&self, seed: u64) -> Result<Params> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::InitParams { seed, reply: tx })
+            .map_err(|_| anyhow!("runtime service gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDigits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn service_trains_from_other_threads() {
+        let gen = SynthDigits::new(0xF0D5);
+        let mut rng = Rng::new(1);
+        let (train, test) = gen.train_test(600, 200, &mut rng);
+        let mut svc = RuntimeService::spawn(ModelKind::Mlp, 0.05, train, test);
+        let handle = svc.handle();
+
+        let params = handle.init_params(3).unwrap();
+        let before = handle.evaluate(params.clone()).unwrap();
+
+        // two worker threads train disjoint shards concurrently
+        let h1 = handle.clone();
+        let p1 = params.clone();
+        let t1 = std::thread::spawn(move || {
+            let mut p = p1;
+            for _ in 0..6 {
+                let (np, _) = h1.train(p, (0..300).collect()).unwrap();
+                p = np;
+            }
+            p
+        });
+        let h2 = handle.clone();
+        let p2 = params.clone();
+        let t2 = std::thread::spawn(move || {
+            let mut p = p2;
+            for _ in 0..6 {
+                let (np, _) = h2.train(p, (300..600).collect()).unwrap();
+                p = np;
+            }
+            p
+        });
+        let r1 = t1.join().unwrap();
+        let r2 = t2.join().unwrap();
+
+        // fedavg of the two shard models
+        let agg = crate::fed::aggregator::aggregate(&[(&r1, 1.0), (&r2, 1.0)]).unwrap();
+        let after = handle.evaluate(agg).unwrap();
+        assert!(after > before + 0.15, "{before} -> {after}");
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,179 @@
+//! Imperfect-information cost estimation (§IV-A, §V-A).
+//!
+//! In practice the optimizer cannot see future costs/capacities. The paper's
+//! scheme: divide the horizon `T` into `L` windows `T_1..T_L`; within window
+//! `l`, use the *time-averaged observations from window `l-1`* for every
+//! quantity. The first window has no history, so it uses its own averages
+//! (bootstrapping — equivalent to a short calibration period before
+//! deployment). Settings C and E of Table III run the optimizer on this
+//! estimated schedule while the ledger charges *actual* costs.
+
+use crate::costs::model::CostSchedule;
+
+/// Build the estimated schedule seen by the optimizer under imperfect
+/// information with `windows` estimation intervals.
+pub fn estimate(actual: &CostSchedule, windows: usize) -> CostSchedule {
+    let t_max = actual.t_max;
+    let n = actual.n;
+    let windows = windows.clamp(1, t_max);
+    let mut est = CostSchedule::zeros(n, t_max);
+
+    // window boundaries: near-equal partition of 0..t_max
+    let bounds: Vec<(usize, usize)> = (0..windows)
+        .map(|l| {
+            let a = l * t_max / windows;
+            let b = ((l + 1) * t_max / windows).max(a + 1);
+            (a, b.min(t_max))
+        })
+        .collect();
+
+    for (l, &(a, b)) in bounds.iter().enumerate() {
+        // source window: previous one, or self for the first
+        let (sa, sb) = if l == 0 { bounds[0] } else { bounds[l - 1] };
+        let span = (sb - sa) as f64;
+
+        // time-averaged values over the source window
+        let mut avg_compute = vec![0.0; n];
+        let mut avg_link = vec![0.0; n * n];
+        let mut avg_f = vec![0.0; n];
+        let mut avg_cap_node = vec![0.0; n];
+        let mut avg_cap_link = vec![0.0; n * n];
+        for t in sa..sb {
+            for i in 0..n {
+                avg_compute[i] += actual.compute[t][i] / span;
+                avg_f[i] += actual.error_weight[t][i] / span;
+                avg_cap_node[i] += cap_term(actual.cap_node[t][i], span);
+            }
+            for e in 0..n * n {
+                avg_link[e] += actual.link[t][e] / span;
+                avg_cap_link[e] += cap_term(actual.cap_link[t][e], span);
+            }
+        }
+
+        for t in a..b {
+            est.compute[t].copy_from_slice(&avg_compute);
+            est.link[t].copy_from_slice(&avg_link);
+            est.error_weight[t].copy_from_slice(&avg_f);
+            for i in 0..n {
+                est.cap_node[t][i] = restore_cap(avg_cap_node[i]);
+            }
+            for e in 0..n * n {
+                est.cap_link[t][e] = restore_cap(avg_cap_link[e]);
+            }
+        }
+    }
+    est
+}
+
+// Capacities may be infinite; average finite values, keep infinity as a
+// sentinel that survives averaging (inf + x = inf).
+fn cap_term(cap: f64, span: f64) -> f64 {
+    if cap.is_infinite() {
+        f64::INFINITY
+    } else {
+        cap / span
+    }
+}
+
+fn restore_cap(avg: f64) -> f64 {
+    avg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::traces::{synthetic, Medium};
+    use crate::util::rng::Rng;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn estimate_is_piecewise_constant() {
+        let mut rng = Rng::new(1);
+        let actual = synthetic(4, 20, &mut rng);
+        let est = estimate(&actual, 4); // windows of 5
+        // within a window all values equal
+        for w in 0..4 {
+            for t in (w * 5)..(w * 5 + 5) {
+                assert_eq!(est.compute[t], est.compute[w * 5]);
+            }
+        }
+    }
+
+    #[test]
+    fn windows_lag_by_one() {
+        let mut rng = Rng::new(2);
+        let mut actual = synthetic(2, 10, &mut rng);
+        // paint window 0 (t=0..5) with compute 1.0, window 1 with 3.0
+        for t in 0..5 {
+            actual.compute[t] = vec![1.0, 1.0];
+        }
+        for t in 5..10 {
+            actual.compute[t] = vec![3.0, 3.0];
+        }
+        let est = estimate(&actual, 2);
+        // window 0 bootstraps from itself, window 1 uses window 0's average
+        assert_eq!(est.compute[0][0], 1.0);
+        assert_eq!(est.compute[7][0], 1.0);
+    }
+
+    #[test]
+    fn estimation_error_is_bounded_for_stationary_traces() {
+        let mut rng = Rng::new(3);
+        let actual = crate::costs::traces::testbed(6, 100, Medium::Lte, &mut rng);
+        let est = estimate(&actual, 10);
+        // mean absolute deviation should be well under the trace spread
+        let mut devs = Vec::new();
+        for t in 0..100 {
+            for i in 0..6 {
+                devs.push((est.compute[t][i] - actual.compute[t][i]).abs());
+            }
+        }
+        assert!(mean(&devs) < 0.25, "MAD={}", mean(&devs));
+    }
+
+    #[test]
+    fn prop_estimates_bounded_by_source_window() {
+        // every estimated value must lie within [min, max] of the window it
+        // was averaged from — the estimator can never extrapolate
+        crate::prop::for_all("estimator_bounds", 40, |g| {
+            let n = g.usize_in(1, 6);
+            let t_max = g.usize_in(2, 40);
+            let windows = g.usize_in(1, t_max);
+            let actual = synthetic(n, t_max, g.rng());
+            let est = estimate(&actual, windows);
+            let bounds: Vec<(usize, usize)> = (0..windows.clamp(1, t_max))
+                .map(|l| {
+                    let a = l * t_max / windows.clamp(1, t_max);
+                    let b = ((l + 1) * t_max / windows.clamp(1, t_max)).max(a + 1);
+                    (a, b.min(t_max))
+                })
+                .collect();
+            for (l, &(a, b)) in bounds.iter().enumerate() {
+                let (sa, sb) = if l == 0 { bounds[0] } else { bounds[l - 1] };
+                for i in 0..n {
+                    let mut lo = f64::INFINITY;
+                    let mut hi = f64::NEG_INFINITY;
+                    for t in sa..sb {
+                        lo = lo.min(actual.compute[t][i]);
+                        hi = hi.max(actual.compute[t][i]);
+                    }
+                    for t in a..b {
+                        assert!(
+                            est.compute[t][i] >= lo - 1e-9 && est.compute[t][i] <= hi + 1e-9,
+                            "estimate escaped window bounds"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn infinite_capacities_survive() {
+        let mut rng = Rng::new(4);
+        let actual = synthetic(3, 12, &mut rng); // caps = inf by default
+        let est = estimate(&actual, 3);
+        assert!(est.cap_node_at(7, 1).is_infinite());
+        assert!(est.cap_link_at(2, 0, 1).is_infinite());
+    }
+}

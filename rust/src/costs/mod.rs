@@ -1,0 +1,11 @@
+//! Cost and capacity substrate: the `c_i(t)`, `c_ij(t)`, `f_i(t)`,
+//! `C_i(t)`, `C_ij(t)` schedules of §III, their generators (synthetic and
+//! testbed-like, LTE/WiFi), and the imperfect-information estimator of
+//! §IV-A / §V-A.
+
+pub mod estimator;
+pub mod model;
+pub mod traces;
+
+pub use model::{CapacityMode, CostSchedule};
+pub use traces::{CostSource, Medium};

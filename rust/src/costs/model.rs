@@ -1,0 +1,163 @@
+//! The cost/capacity schedule container (§III-A, §III-C).
+//!
+//! All quantities are per-interval and per-device (or per-link):
+//!
+//! * `c_i(t)`   — unit processing cost at device i,
+//! * `c_ij(t)`  — unit offloading cost on link (i, j),
+//! * `f_i(t)`   — error-cost weight (the price of discarding / model loss),
+//! * `C_i(t)`   — device compute capacity (datapoints per interval),
+//! * `C_ij(t)`  — link capacity (datapoints per interval).
+//!
+//! The schedule is dense: n ≤ ~50 devices and T ≤ ~200 intervals in every
+//! experiment, so `[t][i][j]` storage is at most a few MB and O(1) access
+//! keeps the movement optimizer tight.
+
+/// Full cost/capacity schedule over `n` devices and `t_max` intervals.
+#[derive(Debug, Clone)]
+pub struct CostSchedule {
+    pub n: usize,
+    pub t_max: usize,
+    /// `[t][i]` processing cost per datapoint.
+    pub compute: Vec<Vec<f64>>,
+    /// `[t][i * n + j]` link cost per datapoint.
+    pub link: Vec<Vec<f64>>,
+    /// `[t][i]` error-cost weight f_i(t).
+    pub error_weight: Vec<Vec<f64>>,
+    /// `[t][i]` node capacity (f64::INFINITY when unconstrained).
+    pub cap_node: Vec<Vec<f64>>,
+    /// `[t][i * n + j]` link capacity (f64::INFINITY when unconstrained).
+    pub cap_link: Vec<Vec<f64>>,
+}
+
+/// Capacity regimes used by the experiments (§V-A: "when imposed, the
+/// capacity constraints are taken as the average data generated per device
+/// per time period").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapacityMode {
+    /// No capacity constraints (settings B, C of Table III).
+    Unconstrained,
+    /// `C_i(t) = C_ij(t) = mean` (settings D, E of Table III).
+    Uniform(f64),
+}
+
+impl CostSchedule {
+    /// All-zero costs, unconstrained capacities.
+    pub fn zeros(n: usize, t_max: usize) -> Self {
+        CostSchedule {
+            n,
+            t_max,
+            compute: vec![vec![0.0; n]; t_max],
+            link: vec![vec![0.0; n * n]; t_max],
+            error_weight: vec![vec![0.0; n]; t_max],
+            cap_node: vec![vec![f64::INFINITY; n]; t_max],
+            cap_link: vec![vec![f64::INFINITY; n * n]; t_max],
+        }
+    }
+
+    /// Clamp t into the valid range (the optimizer looks ahead to `t+1`,
+    /// which at the horizon falls back to the last interval).
+    #[inline]
+    fn ct(&self, t: usize) -> usize {
+        t.min(self.t_max - 1)
+    }
+
+    /// Processing cost `c_i(t)`.
+    #[inline]
+    pub fn c_node(&self, t: usize, i: usize) -> f64 {
+        self.compute[self.ct(t)][i]
+    }
+
+    /// Link cost `c_ij(t)`.
+    #[inline]
+    pub fn c_link(&self, t: usize, i: usize, j: usize) -> f64 {
+        self.link[self.ct(t)][i * self.n + j]
+    }
+
+    /// Error weight `f_i(t)`.
+    #[inline]
+    pub fn f(&self, t: usize, i: usize) -> f64 {
+        self.error_weight[self.ct(t)][i]
+    }
+
+    /// Node capacity `C_i(t)`.
+    #[inline]
+    pub fn cap_node_at(&self, t: usize, i: usize) -> f64 {
+        self.cap_node[self.ct(t)][i]
+    }
+
+    /// Link capacity `C_ij(t)`.
+    #[inline]
+    pub fn cap_link_at(&self, t: usize, i: usize, j: usize) -> f64 {
+        self.cap_link[self.ct(t)][i * self.n + j]
+    }
+
+    /// Apply a capacity mode uniformly over all intervals.
+    pub fn set_capacities(&mut self, mode: CapacityMode) {
+        let (node_cap, link_cap) = match mode {
+            CapacityMode::Unconstrained => (f64::INFINITY, f64::INFINITY),
+            CapacityMode::Uniform(c) => (c, c),
+        };
+        for t in 0..self.t_max {
+            for v in self.cap_node[t].iter_mut() {
+                *v = node_cap;
+            }
+            for v in self.cap_link[t].iter_mut() {
+                *v = link_cap;
+            }
+        }
+    }
+
+    /// Time-averaged processing cost per device (used e.g. to rank devices
+    /// when building the hierarchical topology).
+    pub fn mean_compute_per_device(&self) -> Vec<f64> {
+        let mut acc = vec![0.0; self.n];
+        for t in 0..self.t_max {
+            for i in 0..self.n {
+                acc[i] += self.compute[t][i];
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= self.t_max as f64;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_accessors() {
+        let s = CostSchedule::zeros(3, 5);
+        assert_eq!(s.c_node(0, 1), 0.0);
+        assert_eq!(s.c_link(4, 1, 2), 0.0);
+        assert!(s.cap_node_at(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn t_clamped_at_horizon() {
+        let mut s = CostSchedule::zeros(2, 3);
+        s.compute[2][1] = 7.0;
+        // t = 5 beyond horizon -> clamps to last interval
+        assert_eq!(s.c_node(5, 1), 7.0);
+    }
+
+    #[test]
+    fn set_capacities_uniform() {
+        let mut s = CostSchedule::zeros(2, 2);
+        s.set_capacities(CapacityMode::Uniform(8.0));
+        assert_eq!(s.cap_node_at(1, 1), 8.0);
+        assert_eq!(s.cap_link_at(0, 0, 1), 8.0);
+        s.set_capacities(CapacityMode::Unconstrained);
+        assert!(s.cap_link_at(0, 0, 1).is_infinite());
+    }
+
+    #[test]
+    fn mean_compute() {
+        let mut s = CostSchedule::zeros(2, 2);
+        s.compute[0][0] = 1.0;
+        s.compute[1][0] = 3.0;
+        assert_eq!(s.mean_compute_per_device(), vec![2.0, 0.0]);
+    }
+}

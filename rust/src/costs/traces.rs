@@ -1,0 +1,320 @@
+//! Cost-trace generators: synthetic `U(0,1)` and testbed-like traces.
+//!
+//! The paper collects `c_i(t)` / `c_ij(t)` from a Raspberry-Pi testbed
+//! (gradient-update processing times and Pi→DynamoDB upload times over WiFi
+//! or LTE), linearly rescaled to [0, 1] (§V-A). That hardware is not
+//! available here, so `testbed` generates traces with the statistical
+//! structure the paper's analysis actually relies on:
+//!
+//! * per-device *speed factors* — a slow device is persistently slow,
+//!   giving the cross-device heterogeneity that makes offloading pay off;
+//! * **compute–communication correlation** — the paper observes that
+//!   devices with faster computation also transmit faster, and credits this
+//!   correlation for network-aware learning scoring *better* on testbed
+//!   costs than synthetic ones (Table II discussion);
+//! * medium-dependent tails — WiFi shows congestion spikes (heavier-tailed
+//!   delays, §V-D) while LTE is better regulated.
+//!
+//! All traces are rescaled to [0, 1] exactly like the paper's.
+
+use crate::costs::model::CostSchedule;
+use crate::util::rng::Rng;
+use crate::util::stats::rescale_unit;
+
+/// Wireless medium for the testbed-like generator (§V-D, Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Medium {
+    /// Cellular: moderate base delay, light tail.
+    Lte,
+    /// 2.4 GHz WiFi: heavier-tailed congestion (fewer interference
+    /// mitigation techniques, §V-D) — larger effective transfer costs.
+    Wifi,
+}
+
+impl Medium {
+    /// Relative magnitude of (rescaled) transfer costs vs processing costs.
+    /// On the paper's testbed, uploading a microbatch is considerably
+    /// cheaper than computing a gradient update on a Pi — that ratio is
+    /// what makes offloading worthwhile at all (Table III shows transfer
+    /// cost ≈ ⅓ of processing cost while most data moves). WiFi's
+    /// congestion makes its links dearer than LTE's (Fig. 8).
+    fn link_scale(self) -> f64 {
+        match self {
+            Medium::Lte => 0.45,
+            Medium::Wifi => 0.65,
+        }
+    }
+}
+
+/// Which cost model an experiment uses (§V-A "network cost and capacity
+/// parameters": synthetic vs testbed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostSource {
+    /// `c_i(t), c_ij(t) ~ U(0, 1)` i.i.d.
+    Synthetic,
+    /// Correlated testbed-like traces over the given medium.
+    Testbed(Medium),
+}
+
+/// Error-weight profile:
+///
+/// ```text
+/// f_i(t) = f0 · (1 − decay · t/T) · (1 − intra_decay · (t mod τ)/τ)
+/// ```
+///
+/// The paper motivates a decreasing `f_i(t)` two ways (§III-C, §V-C3):
+/// globally, loss matters less as the model converges over the horizon
+/// (`decay`); and *within an aggregation period*, local models converge on
+/// their local data, so the marginal value of another datapoint falls
+/// until the next synchronization resets it (`intra_decay`). The second
+/// term couples the aggregation period τ to the discard behaviour in
+/// Fig. 7: longer periods drive `f` lower before each sync, making
+/// discarding progressively cost-effective.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorWeightProfile {
+    pub f0: f64,
+    pub decay: f64,
+    /// Within-aggregation-period decay (0 disables the τ coupling).
+    pub intra_decay: f64,
+    /// Multiplier applied to `f_i(t)` in the *optimizer's belief* when the
+    /// discard model is the convex `f/√G` (Lemma 1's γ is a
+    /// gradient-divergence scale, not a per-datapoint unit cost: with
+    /// γ ≈ 2·c·G*^{3/2}, a target of G* ≈ the mean arrival count needs γ
+    /// roughly 40× the unit-cost-scale f). The ledger always charges the
+    /// unscaled `f`, keeping Table IV's cost columns comparable.
+    pub sqrt_gamma_scale: f64,
+}
+
+impl Default for ErrorWeightProfile {
+    fn default() -> Self {
+        // Calibrated so that all three cost components are active in the
+        // Table III reproduction: comparable magnitude to the mean of the
+        // U(0,1)/testbed unit costs.
+        ErrorWeightProfile { f0: 0.80, decay: 0.45, intra_decay: 0.55, sqrt_gamma_scale: 40.0 }
+    }
+}
+
+/// Generate a schedule for `source` (capacities start unconstrained; apply
+/// [`crate::costs::CapacityMode`] afterwards). `tau` is the aggregation
+/// period driving the intra-period component of `f_i(t)`.
+pub fn generate(
+    source: CostSource,
+    n: usize,
+    t_max: usize,
+    tau: usize,
+    profile: ErrorWeightProfile,
+    rng: &mut Rng,
+) -> CostSchedule {
+    let mut s = match source {
+        CostSource::Synthetic => synthetic(n, t_max, rng),
+        CostSource::Testbed(medium) => testbed(n, t_max, medium, rng),
+    };
+    let tau = tau.max(1);
+    for t in 0..t_max {
+        let global = 1.0 - profile.decay * t as f64 / t_max.max(1) as f64;
+        let intra = 1.0 - profile.intra_decay * (t % tau) as f64 / tau as f64;
+        let f_t = profile.f0 * global * intra;
+        for i in 0..n {
+            s.error_weight[t][i] = f_t;
+        }
+    }
+    s
+}
+
+/// Synthetic traces: every `c_i(t)` and `c_ij(t)` i.i.d. `U(0, 1)`.
+pub fn synthetic(n: usize, t_max: usize, rng: &mut Rng) -> CostSchedule {
+    let mut s = CostSchedule::zeros(n, t_max);
+    for t in 0..t_max {
+        for i in 0..n {
+            s.compute[t][i] = rng.f64();
+            for j in 0..n {
+                if i != j {
+                    s.link[t][i * n + j] = rng.f64();
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Testbed-like traces (see module docs).
+pub fn testbed(n: usize, t_max: usize, medium: Medium, rng: &mut Rng) -> CostSchedule {
+    let mut s = CostSchedule::zeros(n, t_max);
+
+    // Persistent device speed factors: processing time multiplier.
+    let speed: Vec<f64> = (0..n).map(|_| rng.uniform(0.25, 1.0)).collect();
+
+    // Raw (unscaled) processing times: speed * jitter.
+    let mut raw_compute = vec![0.0; t_max * n];
+    for t in 0..t_max {
+        for i in 0..n {
+            let jitter = (1.0 + 0.15 * rng.normal()).max(0.05);
+            raw_compute[t * n + i] = speed[i] * jitter;
+        }
+    }
+
+    // Raw transfer times: correlated with the endpoint speeds (fast devices
+    // also transmit fast), scaled by the medium's congestion process.
+    let (base, tail_sigma) = match medium {
+        Medium::Lte => (0.55, 0.20),
+        Medium::Wifi => (0.45, 0.65),
+    };
+    let mut raw_link = vec![0.0; t_max * n * n];
+    for t in 0..t_max {
+        // network-wide congestion level this interval (log-normal)
+        let congestion = (tail_sigma * rng.normal()).exp();
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let endpoint = 0.5 * (speed[i] + speed[j]);
+                let jitter = (1.0 + 0.1 * rng.normal()).max(0.05);
+                raw_link[t * n * n + i * n + j] = base * endpoint * congestion * jitter;
+            }
+        }
+    }
+
+    // Processing times: linear rescale to [0, 1] exactly like the paper's
+    // post-processing. Link times: normalize by the *mean* rather than the
+    // max — a max-rescale would let WiFi's rare congestion spikes compress
+    // its typical costs below LTE's, inverting the medium ordering the
+    // paper measures (Fig. 8); mean-normalization keeps typical WiFi links
+    // dearer than LTE while the heavy tail rides far above the mean.
+    rescale_unit(&mut raw_compute);
+    let link_mean = {
+        let nz: Vec<f64> = raw_link.iter().copied().filter(|&v| v > 0.0).collect();
+        crate::util::stats::mean(&nz).max(1e-12)
+    };
+    let target_mean = 0.5 * medium.link_scale();
+    for v in raw_link.iter_mut() {
+        *v *= target_mean / link_mean;
+    }
+
+    for t in 0..t_max {
+        for i in 0..n {
+            s.compute[t][i] = raw_compute[t * n + i];
+            for j in 0..n {
+                s.link[t][i * n + j] = raw_link[t * n * n + i * n + j];
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, pearson};
+
+    #[test]
+    fn synthetic_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        let s = synthetic(5, 20, &mut rng);
+        for t in 0..20 {
+            for i in 0..5 {
+                assert!((0.0..1.0).contains(&s.compute[t][i]));
+                for j in 0..5 {
+                    let c = s.link[t][i * 5 + j];
+                    assert!((0.0..1.0).contains(&c));
+                    if i == j {
+                        assert_eq!(c, 0.0);
+                    }
+                }
+            }
+        }
+        let all: Vec<f64> = s.compute.iter().flatten().copied().collect();
+        assert!((mean(&all) - 0.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn testbed_compute_comm_correlated() {
+        let mut rng = Rng::new(2);
+        let n = 10;
+        let s = testbed(n, 100, Medium::Lte, &mut rng);
+        // per-device mean compute cost vs mean outgoing link cost
+        let mut comp = vec![0.0; n];
+        let mut comm = vec![0.0; n];
+        for t in 0..100 {
+            for i in 0..n {
+                comp[i] += s.compute[t][i];
+                let row: f64 = (0..n).filter(|&j| j != i).map(|j| s.link[t][i * n + j]).sum();
+                comm[i] += row / (n - 1) as f64;
+            }
+        }
+        let r = pearson(&comp, &comm);
+        assert!(r > 0.5, "expected strong +corr, got {r}");
+    }
+
+    #[test]
+    fn wifi_heavier_tail_than_lte() {
+        let mut rng = Rng::new(3);
+        let n = 8;
+        let t_max = 200;
+        let wifi = testbed(n, t_max, Medium::Wifi, &mut rng);
+        let lte = testbed(n, t_max, Medium::Lte, &mut rng);
+        let spread = |s: &CostSchedule| {
+            let all: Vec<f64> = s.link.iter().flatten().copied().filter(|&x| x > 0.0).collect();
+            crate::util::stats::quantile(&all, 0.95) / crate::util::stats::quantile(&all, 0.5).max(1e-9)
+        };
+        assert!(
+            spread(&wifi) > spread(&lte),
+            "wifi {} <= lte {}",
+            spread(&wifi),
+            spread(&lte)
+        );
+    }
+
+    #[test]
+    fn error_weight_decreases_over_time() {
+        let mut rng = Rng::new(4);
+        let s = generate(
+            CostSource::Synthetic,
+            4,
+            50,
+            10,
+            ErrorWeightProfile::default(),
+            &mut rng,
+        );
+        assert!(s.f(0, 0) > s.f(49, 0));
+        assert!(s.f(49, 0) > 0.0);
+    }
+
+    #[test]
+    fn error_weight_intra_period_sawtooth() {
+        // f dips within each aggregation period and resets at each sync;
+        // a longer τ reaches a deeper trough (the Fig-7 coupling)
+        let mut rng = Rng::new(5);
+        let profile = ErrorWeightProfile::default();
+        let s10 = generate(CostSource::Synthetic, 2, 100, 10, profile, &mut Rng::new(5));
+        let s50 = generate(CostSource::Synthetic, 2, 100, 50, profile, &mut rng);
+        // within period: decreasing
+        assert!(s10.f(0, 0) > s10.f(9, 0));
+        // reset at sync boundary
+        assert!(s10.f(10, 0) > s10.f(9, 0));
+        // deeper trough for larger tau (compare trough/peak ratios)
+        let ratio10 = s10.f(9, 0) / s10.f(0, 0);
+        let ratio50 = s50.f(49, 0) / s50.f(0, 0);
+        assert!(ratio50 < ratio10);
+    }
+
+    #[test]
+    fn wifi_links_dearer_than_lte_on_average() {
+        // Fig. 8 ordering: typical WiFi transfer cost above LTE's
+        let wifi = testbed(8, 100, Medium::Wifi, &mut Rng::new(6));
+        let lte = testbed(8, 100, Medium::Lte, &mut Rng::new(6));
+        let avg = |s: &CostSchedule| {
+            let nz: Vec<f64> = s.link.iter().flatten().copied().filter(|&x| x > 0.0).collect();
+            mean(&nz)
+        };
+        assert!(avg(&wifi) > avg(&lte), "wifi {} <= lte {}", avg(&wifi), avg(&lte));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = testbed(6, 30, Medium::Wifi, &mut Rng::new(5));
+        let b = testbed(6, 30, Medium::Wifi, &mut Rng::new(5));
+        assert_eq!(a.compute, b.compute);
+        assert_eq!(a.link, b.link);
+    }
+}

@@ -1,0 +1,9 @@
+//! Data substrate: the SynthDigits dataset and its distribution over fog
+//! devices (iid and non-iid, Poisson arrivals), replacing the paper's MNIST
+//! per DESIGN.md §2 (offline environment).
+
+pub mod dataset;
+pub mod partition;
+
+pub use dataset::{Dataset, SynthDigits};
+pub use partition::{Arrivals, Partitioner};

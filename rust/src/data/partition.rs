@@ -1,0 +1,202 @@
+//! Distribution of the training set across fog devices over time.
+//!
+//! Implements the paper's data-collection model (§V-A): the number of
+//! samples `|D_i(t)|` collected by device `i` in interval `t` is Poisson
+//! with mean `|D_V| / (n·T)`; under **iid** each device samples uniformly at
+//! random without replacement from the global pool, while under **non-iid**
+//! each device is restricted to a random subset of 5 of the 10 labels and
+//! samples only from those.
+
+use crate::data::dataset::{Dataset, NUM_CLASSES};
+use crate::util::rng::Rng;
+
+/// Per-device, per-interval arrival schedule: `schedule[i][t]` holds the
+/// indices (into the training [`Dataset`]) collected by device `i` at `t`.
+#[derive(Debug, Clone)]
+pub struct Arrivals {
+    pub schedule: Vec<Vec<Vec<u32>>>,
+    /// Labels available to each device (all 10 under iid).
+    pub device_labels: Vec<Vec<u8>>,
+}
+
+impl Arrivals {
+    pub fn num_devices(&self) -> usize {
+        self.schedule.len()
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        self.schedule.first().map_or(0, |s| s.len())
+    }
+
+    /// Total datapoints collected by all devices over all time (= |D_V|
+    /// actually dealt, ≤ dataset size under iid-without-replacement).
+    pub fn total_collected(&self) -> usize {
+        self.schedule
+            .iter()
+            .flat_map(|dev| dev.iter().map(|iv| iv.len()))
+            .sum()
+    }
+
+    /// D_i(t) as a count matrix [i][t].
+    pub fn counts(&self) -> Vec<Vec<usize>> {
+        self.schedule
+            .iter()
+            .map(|dev| dev.iter().map(|iv| iv.len()).collect())
+            .collect()
+    }
+}
+
+/// How many labels a non-iid device can observe (paper: 5 of 10).
+pub const NON_IID_LABELS: usize = 5;
+
+/// Builds [`Arrivals`] from a dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct Partitioner {
+    pub n_devices: usize,
+    pub t_max: usize,
+    pub iid: bool,
+}
+
+impl Partitioner {
+    /// Deal the dataset. Mean arrivals per device-interval is
+    /// `train.len() / (n_devices * t_max)` as in the paper.
+    pub fn partition(&self, train: &Dataset, rng: &mut Rng) -> Arrivals {
+        let mean = train.len() as f64 / (self.n_devices * self.t_max) as f64;
+
+        // Pools of available sample indices, per label.
+        let mut by_label: Vec<Vec<u32>> = vec![Vec::new(); NUM_CLASSES];
+        for (i, &l) in train.labels.iter().enumerate() {
+            by_label[l as usize].push(i as u32);
+        }
+        for pool in by_label.iter_mut() {
+            rng.shuffle(pool);
+        }
+
+        // Device label menus.
+        let device_labels: Vec<Vec<u8>> = (0..self.n_devices)
+            .map(|_| {
+                if self.iid {
+                    (0..NUM_CLASSES as u8).collect()
+                } else {
+                    let mut ls = rng.sample_indices(NUM_CLASSES, NON_IID_LABELS);
+                    ls.sort_unstable();
+                    ls.into_iter().map(|l| l as u8).collect()
+                }
+            })
+            .collect();
+
+        let mut schedule =
+            vec![vec![Vec::<u32>::new(); self.t_max]; self.n_devices];
+        for t in 0..self.t_max {
+            for i in 0..self.n_devices {
+                let count = rng.poisson(mean);
+                let menu = &device_labels[i];
+                let mut taken = Vec::with_capacity(count);
+                for _ in 0..count {
+                    // draw a label uniformly from the device's menu, then pop
+                    // an unused sample of that label; skip exhausted labels.
+                    let mut attempts = 0;
+                    while attempts < menu.len() {
+                        let l = *rng.choose(menu) as usize;
+                        if let Some(idx) = by_label[l].pop() {
+                            taken.push(idx);
+                            break;
+                        }
+                        attempts += 1;
+                    }
+                    if attempts == menu.len() {
+                        // all menu labels exhausted: sweep for any remaining
+                        if let Some(idx) = menu
+                            .iter()
+                            .find_map(|&l| by_label[l as usize].pop())
+                        {
+                            taken.push(idx);
+                        }
+                    }
+                }
+                schedule[i][t] = taken;
+            }
+        }
+        Arrivals { schedule, device_labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SynthDigits;
+
+    fn dataset(n: usize) -> Dataset {
+        let gen = SynthDigits::new(1);
+        let mut rng = Rng::new(2);
+        gen.generate(n, &mut rng)
+    }
+
+    #[test]
+    fn iid_deals_most_of_the_pool_once() {
+        let ds = dataset(2000);
+        let p = Partitioner { n_devices: 10, t_max: 20, iid: true };
+        let mut rng = Rng::new(3);
+        let arr = p.partition(&ds, &mut rng);
+        let total = arr.total_collected();
+        // Poisson total ~ N(2000, sqrt); allow slack + pool exhaustion
+        assert!(total > 1700 && total <= 2000, "total={total}");
+
+        // no index dealt twice
+        let mut seen = vec![false; ds.len()];
+        for dev in &arr.schedule {
+            for iv in dev {
+                for &idx in iv {
+                    assert!(!seen[idx as usize], "duplicate {idx}");
+                    seen[idx as usize] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_iid_devices_see_only_their_labels() {
+        let ds = dataset(3000);
+        let p = Partitioner { n_devices: 8, t_max: 25, iid: false };
+        let mut rng = Rng::new(4);
+        let arr = p.partition(&ds, &mut rng);
+        for (i, dev) in arr.schedule.iter().enumerate() {
+            let menu = &arr.device_labels[i];
+            assert_eq!(menu.len(), NON_IID_LABELS);
+            for iv in dev {
+                for &idx in iv {
+                    assert!(
+                        menu.contains(&ds.labels[idx as usize]),
+                        "device {i} saw foreign label"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_are_poisson_like() {
+        let ds = dataset(8000);
+        let p = Partitioner { n_devices: 10, t_max: 100, iid: true };
+        let mut rng = Rng::new(5);
+        let arr = p.partition(&ds, &mut rng);
+        let counts = arr.counts();
+        let mean = 8000.0 / (10.0 * 100.0); // 8
+        let all: Vec<f64> = counts.iter().flatten().map(|&c| c as f64).collect();
+        let m = crate::util::stats::mean(&all);
+        // pool exhaustion near the end biases down slightly
+        assert!((m - mean).abs() < 1.0, "mean={m}");
+        let v = crate::util::stats::variance(&all);
+        assert!(v > 0.5 * mean && v < 2.0 * mean, "var={v}");
+    }
+
+    #[test]
+    fn deterministic_partition() {
+        let ds = dataset(500);
+        let p = Partitioner { n_devices: 4, t_max: 10, iid: false };
+        let a = p.partition(&ds, &mut Rng::new(7));
+        let b = p.partition(&ds, &mut Rng::new(7));
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.device_labels, b.device_labels);
+    }
+}

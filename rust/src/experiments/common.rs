@@ -1,0 +1,85 @@
+//! Shared experiment machinery: multi-seed averaging and result output.
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::fed::{self, EngineOutput};
+use crate::runtime::Runtime;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Seed-averaged summary of a configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Avg {
+    pub accuracy: f64,
+    pub accuracy_std: f64,
+    pub process: f64,
+    pub transfer: f64,
+    pub discard: f64,
+    pub total: f64,
+    pub unit: f64,
+    pub collected: f64,
+    pub processed_ratio: f64,
+    pub discarded_ratio: f64,
+    pub movement_rate: f64,
+    pub movement_rate_min: f64,
+    pub movement_rate_max: f64,
+    pub similarity_before: f64,
+    pub similarity_after: f64,
+    pub mean_active: f64,
+}
+
+impl Avg {
+    pub fn from_outputs(outs: &[EngineOutput]) -> Avg {
+        let k = outs.len().max(1) as f64;
+        let accs: Vec<f64> = outs.iter().map(|o| o.accuracy).collect();
+        let mut a = Avg {
+            accuracy: stats::mean(&accs),
+            accuracy_std: stats::std_dev(&accs),
+            ..Default::default()
+        };
+        for o in outs {
+            a.process += o.ledger.process / k;
+            a.transfer += o.ledger.transfer / k;
+            a.discard += o.ledger.discard / k;
+            a.total += o.ledger.total() / k;
+            a.unit += o.ledger.unit_cost(o.total_collected as f64) / k;
+            a.collected += o.total_collected as f64 / k;
+            a.processed_ratio += o.movement.processed_ratio() / k;
+            a.discarded_ratio += o.movement.discarded_ratio() / k;
+            let (mean, min, max) = o.movement.movement_rate_stats();
+            a.movement_rate += mean / k;
+            a.movement_rate_min += min / k;
+            a.movement_rate_max += max / k;
+            a.similarity_before += o.similarity.0 / k;
+            a.similarity_after += o.similarity.1 / k;
+            a.mean_active += o.mean_active / k;
+        }
+        a
+    }
+}
+
+/// Run `cfg` under `seeds` different seeds and average.
+pub fn run_avg(rt: &Runtime, cfg: &EngineConfig, seeds: usize) -> Result<(Avg, Vec<EngineOutput>)> {
+    let mut outs = Vec::with_capacity(seeds);
+    for s in 0..seeds {
+        let cfg_s = cfg.clone().seeded(cfg.seed + 1000 * s as u64);
+        outs.push(fed::run(&cfg_s, rt)?);
+    }
+    Ok((Avg::from_outputs(&outs), outs))
+}
+
+/// Print a table and persist its CSV under `<out_dir>/<name>.csv`.
+pub fn emit(table: &Table, out_dir: &str, name: &str) -> Result<()> {
+    table.print();
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/{name}.csv"), table.to_csv())?;
+    Ok(())
+}
+
+/// Write raw lines (e.g. per-interval series) to `<out_dir>/<name>.csv`.
+pub fn emit_raw(lines: &str, out_dir: &str, name: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/{name}.csv"), lines)?;
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Figures 5, 6, 7: sweeps of the network system characteristics —
+//! number of nodes n, connectivity ρ, aggregation period τ — each reported
+//! through the same four panels:
+//!
+//! (a) fraction of data processed vs discarded,
+//! (b) data movement rate (mean + range over intervals),
+//! (c) unit cost and its process/transfer/discard breakdown,
+//! (d) testing accuracy for iid and non-iid data.
+//!
+//! Expected shapes (paper): unit cost ↓ in n and ρ (more low-cost
+//! neighbors), accuracy ↑ in n and ρ (dramatically for non-iid); higher τ
+//! lowers cost but hurts accuracy (especially non-iid).
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, TopologyKind};
+use crate::experiments::common::{emit, run_avg};
+use crate::experiments::ExpOptions;
+use crate::runtime::Runtime;
+use crate::util::table::{fnum, pct, Table};
+
+/// One sweep point = the four panels' numbers.
+fn sweep(
+    rt: &Runtime,
+    title: &str,
+    csv_name: &str,
+    param_name: &str,
+    points: Vec<(String, EngineConfig)>,
+    opts: &ExpOptions,
+) -> Result<()> {
+    let mut table = Table::new(
+        title,
+        &[
+            param_name,
+            "Proc ratio",
+            "Disc ratio",
+            "Move rate",
+            "Rate min",
+            "Rate max",
+            "Unit",
+            "U.proc",
+            "U.trans",
+            "U.disc",
+            "Acc iid",
+            "Acc non-iid",
+        ],
+    );
+    for (label, cfg) in points {
+        let (avg, _) = run_avg(rt, &cfg, opts.seeds)?;
+        let (avg_noniid, _) = run_avg(rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
+        let coll = avg.collected.max(1.0);
+        table.row(vec![
+            label,
+            fnum(avg.processed_ratio, 3),
+            fnum(avg.discarded_ratio, 3),
+            fnum(avg.movement_rate, 3),
+            fnum(avg.movement_rate_min, 3),
+            fnum(avg.movement_rate_max, 3),
+            fnum(avg.unit, 3),
+            fnum(avg.process / coll, 3),
+            fnum(avg.transfer / coll, 3),
+            fnum(avg.discard / coll, 3),
+            pct(avg.accuracy),
+            pct(avg_noniid.accuracy),
+        ]);
+    }
+    emit(&table, &opts.out_dir, csv_name)
+}
+
+/// Figure 5: n ∈ {5, 10, ..., 50}, fully connected.
+pub fn run_fig5(opts: &ExpOptions) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut base = EngineConfig::default();
+    if let Some(m) = opts.model {
+        base = base.with_model(m);
+    }
+    let points = (1..=10)
+        .map(|k| {
+            let n = 5 * k;
+            (n.to_string(), base.clone().with(|c| c.n = n))
+        })
+        .collect();
+    sweep(
+        &rt,
+        "Fig 5 — impact of the number of nodes n",
+        "fig5_nodes",
+        "n",
+        points,
+        opts,
+    )
+}
+
+/// Figure 6: connectivity ρ ∈ {0, 0.2, ..., 1.0}, ER random graph.
+pub fn run_fig6(opts: &ExpOptions) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut base = EngineConfig::default();
+    if let Some(m) = opts.model {
+        base = base.with_model(m);
+    }
+    let points = (0..=5)
+        .map(|k| {
+            let rho = 0.2 * k as f64;
+            (
+                format!("{rho:.1}"),
+                base.clone().with(|c| c.topology = TopologyKind::Random(rho)),
+            )
+        })
+        .collect();
+    sweep(
+        &rt,
+        "Fig 6 — impact of network connectivity ρ",
+        "fig6_connectivity",
+        "rho",
+        points,
+        opts,
+    )
+}
+
+/// Figure 7: aggregation period τ ∈ {2, 5, 10, 20, 25, 50}.
+pub fn run_fig7(opts: &ExpOptions) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut base = EngineConfig::default();
+    if let Some(m) = opts.model {
+        base = base.with_model(m);
+    }
+    let points = [2usize, 5, 10, 20, 25, 50]
+        .iter()
+        .map(|&tau| (tau.to_string(), base.clone().with(|c| c.tau = tau)))
+        .collect();
+    sweep(
+        &rt,
+        "Fig 7 — impact of the aggregation period τ",
+        "fig7_tau",
+        "tau",
+        points,
+        opts,
+    )
+}

@@ -1,0 +1,55 @@
+//! Figure 8: cost components across fog topologies (social / hierarchical /
+//! fully connected) over LTE vs WiFi media.
+//!
+//! Expected shape (paper): the fully-connected topology maximizes offload
+//! opportunities, the hierarchical minimizes them (sparser edges → more
+//! local processing/discarding); WiFi's dearer, heavier-tailed links skew
+//! all topologies toward discarding, with both transfer and discard costs
+//! above their LTE counterparts.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, TopologyKind};
+use crate::costs::{CostSource, Medium};
+use crate::experiments::common::{emit, run_avg};
+use crate::experiments::ExpOptions;
+use crate::runtime::Runtime;
+use crate::util::table::{fnum, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut base = EngineConfig::default();
+    if let Some(m) = opts.model {
+        base = base.with_model(m);
+    }
+
+    let mut table = Table::new(
+        "Fig 8 — cost components by topology and medium",
+        &["Medium", "Topology", "Process", "Transfer", "Discard", "Total", "Unit"],
+    );
+
+    for (medium, med_name) in [(Medium::Lte, "LTE"), (Medium::Wifi, "WiFi")] {
+        for (topo, topo_name) in [
+            (TopologyKind::SmallWorld, "social"),
+            (TopologyKind::Hierarchical, "hierarchical"),
+            (TopologyKind::Full, "fully-connected"),
+        ] {
+            let cfg = base.clone().with(|c| {
+                c.cost_source = CostSource::Testbed(medium);
+                c.topology = topo;
+            });
+            let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
+            table.row(vec![
+                med_name.to_string(),
+                topo_name.to_string(),
+                fnum(avg.process, 0),
+                fnum(avg.transfer, 0),
+                fnum(avg.discard, 0),
+                fnum(avg.total, 0),
+                fnum(avg.unit, 3),
+            ]);
+        }
+    }
+
+    emit(&table, &opts.out_dir, "fig8_topologies")
+}

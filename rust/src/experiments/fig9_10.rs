@@ -1,0 +1,107 @@
+//! Figures 9 and 10: network dynamics sweeps.
+//!
+//! Fig 9 varies `p_exit` ∈ {0, 1, ..., 5}% with `p_entry = 2%`;
+//! Fig 10 varies `p_entry` ∈ {0, 1, ..., 5}% with `p_exit = 2%`.
+//!
+//! Panels: average active nodes, total data + processed/discarded ratio,
+//! movement rate, cost components, accuracy (iid and non-iid).
+//!
+//! Expected shapes (paper): active nodes fall sharply in p_exit and rise
+//! (saturating) in p_entry; fewer active nodes → less data, lower total
+//! cost but discard-skewed unit costs, and lower accuracy (non-iid hit
+//! hardest by exits).
+
+use anyhow::Result;
+
+use crate::config::{Churn, EngineConfig};
+use crate::experiments::common::{emit, run_avg};
+use crate::experiments::ExpOptions;
+use crate::runtime::Runtime;
+use crate::util::table::{fnum, pct, Table};
+
+fn churn_sweep(
+    title: &str,
+    csv_name: &str,
+    param_name: &str,
+    points: Vec<(String, Churn)>,
+    opts: &ExpOptions,
+) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut base = EngineConfig::default();
+    if let Some(m) = opts.model {
+        base = base.with_model(m);
+    }
+
+    let mut table = Table::new(
+        title,
+        &[
+            param_name,
+            "Nodes",
+            "Data",
+            "Proc ratio",
+            "Disc ratio",
+            "Move rate",
+            "Process",
+            "Transfer",
+            "Discard",
+            "Unit",
+            "Acc iid",
+            "Acc non-iid",
+        ],
+    );
+
+    for (label, churn) in points {
+        let cfg = base.clone().with(|c| c.churn = Some(churn));
+        let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
+        let (avg_noniid, _) = run_avg(&rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
+        table.row(vec![
+            label,
+            fnum(avg.mean_active, 1),
+            fnum(avg.collected, 0),
+            fnum(avg.processed_ratio, 3),
+            fnum(avg.discarded_ratio, 3),
+            fnum(avg.movement_rate, 3),
+            fnum(avg.process, 0),
+            fnum(avg.transfer, 0),
+            fnum(avg.discard, 0),
+            fnum(avg.unit, 3),
+            pct(avg.accuracy),
+            pct(avg_noniid.accuracy),
+        ]);
+    }
+    emit(&table, &opts.out_dir, csv_name)
+}
+
+/// Fig 9: vary p_exit, p_entry fixed at 2%.
+pub fn run_fig9(opts: &ExpOptions) -> Result<()> {
+    let points = (0..=5)
+        .map(|k| {
+            let p = k as f64 / 100.0;
+            (format!("{k}%"), Churn { p_exit: p, p_entry: 0.02 })
+        })
+        .collect();
+    churn_sweep(
+        "Fig 9 — impact of node-exit probability (p_entry = 2%)",
+        "fig9_pexit",
+        "p_exit",
+        points,
+        opts,
+    )
+}
+
+/// Fig 10: vary p_entry, p_exit fixed at 2%.
+pub fn run_fig10(opts: &ExpOptions) -> Result<()> {
+    let points = (0..=5)
+        .map(|k| {
+            let p = k as f64 / 100.0;
+            (format!("{k}%"), Churn { p_exit: 0.02, p_entry: p })
+        })
+        .collect();
+    churn_sweep(
+        "Fig 10 — impact of node-entry probability (p_exit = 2%)",
+        "fig10_pentry",
+        "p_entry",
+        points,
+        opts,
+    )
+}

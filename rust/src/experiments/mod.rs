@@ -1,0 +1,68 @@
+//! Experiment drivers: one per table and figure of the paper's evaluation
+//! (§V), plus the theorem-validation suite. Each driver prints the paper's
+//! rows/series as console tables and writes CSV under `results/`.
+//!
+//! See DESIGN.md §4 for the experiment index mapping every driver to the
+//! paper artifact it regenerates and the expected qualitative shape.
+
+pub mod common;
+pub mod fig4;
+pub mod fig5_7;
+pub mod fig8;
+pub mod fig9_10;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod theory;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ModelKind;
+
+/// Options shared by all drivers.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Seeds per configuration (the paper averages ≥ 5; default 3 for
+    /// wall-clock friendliness — pass `--seeds 5` for the paper protocol).
+    pub seeds: usize,
+    /// Override the model for sweep drivers (Table II always runs both).
+    pub model: Option<ModelKind>,
+    pub out_dir: String,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { seeds: 3, model: None, out_dir: "results".into() }
+    }
+}
+
+/// Run one named experiment (or `all`).
+pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
+    let started = std::time::Instant::now();
+    match which {
+        "table2" => table2::run(opts)?,
+        "table3" => table3::run(opts)?,
+        "table4" => table4::run(opts)?,
+        "table5" => table5::run(opts)?,
+        "fig4" => fig4::run(opts)?,
+        "fig5" => fig5_7::run_fig5(opts)?,
+        "fig6" => fig5_7::run_fig6(opts)?,
+        "fig7" => fig5_7::run_fig7(opts)?,
+        "fig8" => fig8::run(opts)?,
+        "fig9" => fig9_10::run_fig9(opts)?,
+        "fig10" => fig9_10::run_fig10(opts)?,
+        "theory" => theory::run(opts)?,
+        "all" => {
+            for name in [
+                "table2", "table3", "table4", "table5", "fig4", "fig5", "fig6",
+                "fig7", "fig8", "fig9", "fig10", "theory",
+            ] {
+                dispatch(name, opts)?;
+            }
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    eprintln!("[{which} done in {:.1?}]", started.elapsed());
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Table II: accuracy of centralized / federated / network-aware learning
+//! across {MLP, CNN} × {synthetic, testbed} costs × {iid, non-iid}.
+//!
+//! Expected shape (paper): network-aware within ~4% of federated in every
+//! cell; non-iid below iid; network-aware slightly better on testbed than
+//! synthetic costs (compute–communication correlation enables cheaper
+//! offloading and hence more processed data).
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, Method};
+use crate::costs::{CostSource, Medium};
+use crate::experiments::common::{emit, run_avg};
+use crate::experiments::ExpOptions;
+use crate::runtime::{ModelKind, Runtime};
+use crate::util::table::{pct, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let models = match opts.model {
+        Some(m) => vec![m],
+        None => vec![ModelKind::Mlp, ModelKind::Cnn],
+    };
+
+    let mut table = Table::new(
+        "Table II — learning methodology vs accuracy",
+        &["Methodology", "Synthetic MLP", "Synthetic CNN", "Testbed MLP", "Testbed CNN"],
+    );
+
+    let cell = |cfg: EngineConfig| -> Result<String> {
+        let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
+        Ok(pct(avg.accuracy))
+    };
+
+    let row = |label: &str, build: &dyn Fn(CostSource, ModelKind) -> EngineConfig| -> Result<Vec<String>> {
+        let mut cells = vec![label.to_string()];
+        for source in [CostSource::Synthetic, CostSource::Testbed(Medium::Lte)] {
+            for &model in &[ModelKind::Mlp, ModelKind::Cnn] {
+                if models.contains(&model) {
+                    cells.push(cell(build(source, model))?);
+                } else {
+                    cells.push("-".into());
+                }
+            }
+        }
+        Ok(cells)
+    };
+
+    let base = EngineConfig::default();
+
+    // Centralized and federated ignore network costs: same numbers across
+    // the cost columns, as in the paper.
+    let b = base.clone();
+    table.row(row("Centralized", &move |src, m| {
+        b.clone().with(|c| {
+            c.method = Method::Centralized;
+            c.model = m;
+            c.lr = crate::config::default_lr(m);
+            c.cost_source = src;
+        })
+    })?);
+    let b = base.clone();
+    table.row(row("Federated (iid)", &move |src, m| {
+        b.clone().with(|c| {
+            c.method = Method::Federated;
+            c.model = m;
+            c.lr = crate::config::default_lr(m);
+            c.cost_source = src;
+        })
+    })?);
+    let b = base.clone();
+    table.row(row("Federated (non-iid)", &move |src, m| {
+        b.clone().with(|c| {
+            c.method = Method::Federated;
+            c.model = m;
+            c.lr = crate::config::default_lr(m);
+            c.cost_source = src;
+            c.iid = false;
+        })
+    })?);
+    let b = base.clone();
+    table.row(row("Network-aware (iid)", &move |src, m| {
+        b.clone().with(|c| {
+            c.method = Method::NetworkAware;
+            c.model = m;
+            c.lr = crate::config::default_lr(m);
+            c.cost_source = src;
+        })
+    })?);
+    let b = base.clone();
+    table.row(row("Network-aware (non-iid)", &move |src, m| {
+        b.clone().with(|c| {
+            c.method = Method::NetworkAware;
+            c.model = m;
+            c.lr = crate::config::default_lr(m);
+            c.cost_source = src;
+            c.iid = false;
+        })
+    })?);
+
+    emit(&table, &opts.out_dir, "table2")
+}

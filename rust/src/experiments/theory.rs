@@ -1,0 +1,168 @@
+//! Theorem validation: the analytical results of §IV checked against
+//! simulation on this implementation.
+//!
+//! * Theorem 2 — the D/M/1 capacity rule bounds the mean waiting time.
+//! * Theorem 4 — closed-form r*, s* vs the convex PGD solver.
+//! * Theorem 5 — eq. (15) offloading savings vs Monte-Carlo, linear in C.
+//! * Theorem 6 — expected capacity violations vs simulation.
+
+use anyhow::Result;
+
+use crate::experiments::common::emit;
+use crate::experiments::ExpOptions;
+use crate::movement::theory as mv_theory;
+use crate::queueing::{capacity_for_waiting_time, dm1, straggler};
+use crate::topology::generators;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    theorem2(opts)?;
+    theorem4(opts)?;
+    theorem5(opts)?;
+    theorem6(opts)?;
+    Ok(())
+}
+
+fn theorem2(opts: &ExpOptions) -> Result<()> {
+    let mut table = Table::new(
+        "Theorem 2 — D/M/1 capacity rule vs simulated waiting time",
+        &["mu", "sigma", "C (rule)", "W analytic", "W simulated", "W <= sigma"],
+    );
+    let mut rng = Rng::new(42);
+    for (mu, sigma) in [(1.0, 1.0), (2.0, 0.5), (0.5, 2.0), (1.0, 0.25)] {
+        let c = capacity_for_waiting_time(mu, sigma);
+        let analytic = dm1::mean_waiting_time(mu, c);
+        let sim = straggler::simulate(mu, c, 200_000, &mut rng);
+        table.row(vec![
+            fnum(mu, 2),
+            fnum(sigma, 2),
+            fnum(c, 4),
+            fnum(analytic, 4),
+            fnum(sim.mean_wait, 4),
+            (sim.mean_wait <= sigma * 1.05).to_string(),
+        ]);
+    }
+    emit(&table, &opts.out_dir, "theory_thm2")
+}
+
+fn theorem4(opts: &ExpOptions) -> Result<()> {
+    use crate::costs::CostSchedule;
+    use crate::movement::convex::{self, PgdOptions};
+    use crate::movement::problem::{DiscardModel, MovementProblem};
+
+    let mut table = Table::new(
+        "Theorem 4 — closed form vs convex solver (hierarchical offloading)",
+        &["c_i", "r* closed", "r* PGD", "s* closed", "s* PGD"],
+    );
+
+    let n_dev = 3;
+    let n = n_dev + 1;
+    let server = n_dev;
+    let graph = generators::star(n, server);
+    let gamma = 60.0;
+    let c_t = 0.05;
+    let c_server = 0.12;
+    let c_dev = [0.4, 0.6, 0.8];
+    let d_i = 600.0;
+
+    let mut costs = CostSchedule::zeros(n, 2);
+    for t in 0..2 {
+        for i in 0..n_dev {
+            costs.compute[t][i] = c_dev[i];
+            costs.error_weight[t][i] = gamma;
+            costs.link[t][i * n + server] = c_t;
+        }
+        costs.compute[t][server] = c_server;
+        costs.error_weight[t][server] = gamma;
+    }
+    let mut d = vec![d_i; n_dev];
+    d.push(0.0);
+    let inbound = vec![0.0; n];
+    let active = vec![true; n];
+    let p = MovementProblem {
+        t: 0,
+        graph: &graph,
+        active: &active,
+        d: &d,
+        inbound_prev: &inbound,
+        costs: &costs,
+        discard_model: DiscardModel::Sqrt,
+    };
+    let plan = convex::solve(&p, PgdOptions { iterations: 4000, step0: 0.0 });
+    let closed = mv_theory::theorem4_closed_form(gamma, &c_dev, c_server, c_t, &vec![d_i; n_dev]);
+    for i in 0..n_dev {
+        table.row(vec![
+            fnum(c_dev[i], 2),
+            fnum(closed.r[i], 4),
+            fnum(plan.r[i], 4),
+            fnum(closed.s[i], 4),
+            fnum(plan.s(i, server), 4),
+        ]);
+    }
+    emit(&table, &opts.out_dir, "theory_thm4")
+}
+
+fn theorem5(opts: &ExpOptions) -> Result<()> {
+    let mut table = Table::new(
+        "Theorem 5 — value of offloading: eq. (15) vs Monte-Carlo (scale-free, γ = 2.5)",
+        &["C", "savings eq15", "savings MC", "savings / C"],
+    );
+    let fracs = mv_theory::scale_free_degree_fracs(2.5, 20);
+    let mut rng = Rng::new(7);
+    for c in [0.5, 1.0, 2.0, 4.0] {
+        let analytic = mv_theory::theorem5_savings(c, &fracs);
+        // Monte-Carlo with degrees drawn from the same distribution
+        let mut mc = 0.0;
+        let trials = 40_000;
+        for _ in 0..trials {
+            let k = sample_degree(&fracs, &mut rng);
+            mc += mv_theory::simulate_savings(c, k as u64, 1, &mut rng);
+        }
+        mc /= trials as f64;
+        table.row(vec![
+            fnum(c, 1),
+            fnum(analytic, 4),
+            fnum(mc, 4),
+            fnum(analytic / c, 4),
+        ]);
+    }
+    emit(&table, &opts.out_dir, "theory_thm5")
+}
+
+fn sample_degree(fracs: &[f64], rng: &mut Rng) -> usize {
+    let u = rng.f64();
+    let mut acc = 0.0;
+    for (k, &f) in fracs.iter().enumerate() {
+        acc += f;
+        if u < acc {
+            return k.max(1);
+        }
+    }
+    fracs.len() - 1
+}
+
+fn theorem6(opts: &ExpOptions) -> Result<()> {
+    let mut table = Table::new(
+        "Theorem 6 — expected capacity violations: formula vs simulation",
+        &["graph", "D", "E[viol] formula", "E[viol] simulated"],
+    );
+    let mut rng = Rng::new(9);
+    let cap_samples: Vec<f64> = (0..400).map(|_| rng.uniform(2.0, 14.0)).collect();
+    for (name, graph) in [
+        ("scale-free(60,2)", generators::scale_free(60, 2, &mut rng)),
+        ("erdos-renyi(40,0.1)", generators::erdos_renyi(40, 0.1, &mut rng)),
+        ("small-world(50,4)", generators::watts_strogatz(50, 4, 0.3, &mut rng)),
+    ] {
+        let d = 5.0;
+        let formula = mv_theory::theorem6_expected_violations(&graph, d, &cap_samples);
+        let sim = mv_theory::simulate_violations(&graph, d, 1.0, &cap_samples, 2000, &mut rng);
+        table.row(vec![
+            name.to_string(),
+            fnum(d, 1),
+            fnum(formula, 2),
+            fnum(sim, 2),
+        ]);
+    }
+    emit(&table, &opts.out_dir, "theory_thm6")
+}

@@ -1,0 +1,149 @@
+//! Cost ledger and movement statistics — the quantities behind the paper's
+//! Tables III–V and the cost panels of Figures 5–10.
+
+/// Accumulated network resource costs, charged at **actual** trace values
+/// (even when the optimizer planned with estimates).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Ledger {
+    /// Σ_t Σ_i G_i(t) c_i(t)
+    pub process: f64,
+    /// Σ_t Σ_(i,j) D_i(t) s_ij(t) c_ij(t)
+    pub transfer: f64,
+    /// Σ_t Σ_i f_i(t) D_i(t) r_i(t) — the realized error cost.
+    pub discard: f64,
+}
+
+impl Ledger {
+    pub fn total(&self) -> f64 {
+        self.process + self.transfer + self.discard
+    }
+
+    /// Total cost normalized by total data generated (the paper's "unit
+    /// cost" column).
+    pub fn unit_cost(&self, collected: f64) -> f64 {
+        if collected > 0.0 {
+            self.total() / collected
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Data-movement counts for one interval.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IntervalStats {
+    /// Datapoints collected by active devices this interval.
+    pub collected: usize,
+    /// Datapoints processed this interval (local keep + inbound arrivals).
+    pub processed: usize,
+    /// Datapoints sent over links this interval.
+    pub offloaded: usize,
+    /// Datapoints discarded this interval.
+    pub discarded: usize,
+}
+
+impl IntervalStats {
+    /// Fraction of this interval's collected data that *moved* (offloaded
+    /// or discarded) — the paper's "data movement rate" (Fig. 5b etc.).
+    pub fn movement_rate(&self) -> Option<f64> {
+        if self.collected == 0 {
+            None
+        } else {
+            Some((self.offloaded + self.discarded) as f64 / self.collected as f64)
+        }
+    }
+}
+
+/// Aggregated movement statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct MovementTotals {
+    pub per_interval: Vec<IntervalStats>,
+}
+
+impl MovementTotals {
+    pub fn push(&mut self, s: IntervalStats) {
+        self.per_interval.push(s);
+    }
+
+    pub fn collected(&self) -> usize {
+        self.per_interval.iter().map(|s| s.collected).sum()
+    }
+
+    pub fn processed(&self) -> usize {
+        self.per_interval.iter().map(|s| s.processed).sum()
+    }
+
+    pub fn offloaded(&self) -> usize {
+        self.per_interval.iter().map(|s| s.offloaded).sum()
+    }
+
+    pub fn discarded(&self) -> usize {
+        self.per_interval.iter().map(|s| s.discarded).sum()
+    }
+
+    /// Fraction of all collected data eventually processed (Fig. 5a's
+    /// "process ratio"). Offloaded data that is processed downstream counts
+    /// once, at its processing interval.
+    pub fn processed_ratio(&self) -> f64 {
+        let c = self.collected();
+        if c == 0 {
+            0.0
+        } else {
+            self.processed() as f64 / c as f64
+        }
+    }
+
+    /// Fraction of all collected data discarded (Fig. 5a's "discard ratio").
+    pub fn discarded_ratio(&self) -> f64 {
+        let c = self.collected();
+        if c == 0 {
+            0.0
+        } else {
+            self.discarded() as f64 / c as f64
+        }
+    }
+
+    /// (mean, min, max) of the per-interval movement rate (Fig. 5b shading).
+    pub fn movement_rate_stats(&self) -> (f64, f64, f64) {
+        let rates: Vec<f64> = self
+            .per_interval
+            .iter()
+            .filter_map(IntervalStats::movement_rate)
+            .collect();
+        if rates.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            crate::util::stats::mean(&rates),
+            crate::util::stats::min(&rates),
+            crate::util::stats::max(&rates),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_totals() {
+        let l = Ledger { process: 300.0, transfer: 120.0, discard: 140.0 };
+        assert_eq!(l.total(), 560.0);
+        assert!((l.unit_cost(4000.0) - 0.14).abs() < 1e-12);
+        assert_eq!(l.unit_cost(0.0), 0.0);
+    }
+
+    #[test]
+    fn movement_totals_ratios() {
+        let mut m = MovementTotals::default();
+        m.push(IntervalStats { collected: 100, processed: 60, offloaded: 30, discarded: 10 });
+        m.push(IntervalStats { collected: 0, processed: 30, offloaded: 0, discarded: 0 });
+        assert_eq!(m.collected(), 100);
+        assert_eq!(m.processed(), 90);
+        assert!((m.processed_ratio() - 0.9).abs() < 1e-12);
+        assert!((m.discarded_ratio() - 0.1).abs() < 1e-12);
+        let (mean, min, max) = m.movement_rate_stats();
+        // only the first interval has collected > 0: rate = 0.4
+        assert_eq!((mean, min, max), (0.4, 0.4, 0.4));
+    }
+}

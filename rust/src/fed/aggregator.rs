@@ -1,0 +1,81 @@
+//! Weighted federated averaging — eq. (4) of the paper:
+//!
+//! ```text
+//! w(k) = Σ_i H_i(kτ) · w_i(kτ) / Σ_i H_i(kτ)
+//! ```
+//!
+//! where `H_i` is the number of datapoints device i processed since the
+//! last aggregation. Devices that processed more data carry more weight,
+//! consistent with the empirical-loss objective (1).
+
+use crate::runtime::HostTensor;
+
+/// Model parameters: one tensor per layer, positionally matching the AOT
+/// entry's leading inputs.
+pub type Params = Vec<HostTensor>;
+
+/// Aggregate `(params, weight)` contributions. Contributions with zero
+/// weight are ignored; returns `None` if no weight at all (the paper keeps
+/// the previous global model in that case).
+pub fn aggregate(contributions: &[(&Params, f64)]) -> Option<Params> {
+    let total: f64 = contributions.iter().map(|&(_, h)| h).sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let first = contributions.iter().find(|&&(_, h)| h > 0.0)?.0;
+    let mut acc: Params = first
+        .iter()
+        .map(|t| HostTensor::zeros(t.shape.clone()))
+        .collect();
+    for &(params, h) in contributions {
+        if h <= 0.0 {
+            continue;
+        }
+        let w = (h / total) as f32;
+        for (a, p) in acc.iter_mut().zip(params) {
+            a.axpy(w, p);
+        }
+    }
+    Some(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(v: f32) -> Params {
+        vec![HostTensor::new(vec![2], vec![v, 2.0 * v])]
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let a = p(1.0);
+        let b = p(4.0);
+        // H_a = 3, H_b = 1 -> w = (3*1 + 1*4)/4 = 1.75
+        let agg = aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap();
+        assert!((agg[0].data[0] - 1.75).abs() < 1e-6);
+        assert!((agg[0].data[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_contributions_ignored() {
+        let a = p(1.0);
+        let b = p(100.0);
+        let agg = aggregate(&[(&a, 2.0), (&b, 0.0)]).unwrap();
+        assert_eq!(agg[0].data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn no_contributors_returns_none() {
+        let a = p(1.0);
+        assert!(aggregate(&[(&a, 0.0)]).is_none());
+        assert!(aggregate(&[]).is_none());
+    }
+
+    #[test]
+    fn single_contributor_identity() {
+        let a = p(3.0);
+        let agg = aggregate(&[(&a, 5.0)]).unwrap();
+        assert_eq!(agg[0].data, a[0].data);
+    }
+}

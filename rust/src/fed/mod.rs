@@ -1,0 +1,13 @@
+//! Federated learning engine: local updates (eq. 3), weighted aggregation
+//! (eq. 4), movement-integrated time-interval loop, cost accounting and
+//! data-similarity metrics.
+
+pub mod accounting;
+pub mod aggregator;
+pub mod engine;
+pub mod similarity;
+pub mod trainer;
+
+pub use accounting::{IntervalStats, Ledger, MovementTotals};
+pub use engine::{run, EngineOutput};
+pub use trainer::Trainer;

@@ -1,0 +1,107 @@
+//! Label-overlap data similarity between devices (Fig. 4b).
+//!
+//! Percent similarity between devices i and j is the multiset label overlap
+//! `s_ij = |Y_i ∩ Y_j| / min(|Y_i|, |Y_j|)` where `Y_i` is the multiset of
+//! labels at device i (§V-B1), averaged over all pairs that hold data. The
+//! paper computes this before offloading (on collected data `D_i`) and
+//! after (on processed data `G_i`) to show that movement makes non-iid
+//! local datasets more alike.
+
+use crate::data::dataset::{Dataset, NUM_CLASSES};
+
+/// Per-device label histograms for arbitrary sample-index lists.
+pub fn label_histograms(ds: &Dataset, per_device: &[Vec<u32>]) -> Vec<[usize; NUM_CLASSES]> {
+    per_device
+        .iter()
+        .map(|idxs| {
+            let mut h = [0usize; NUM_CLASSES];
+            for &i in idxs {
+                h[ds.labels[i as usize] as usize] += 1;
+            }
+            h
+        })
+        .collect()
+}
+
+/// Multiset-overlap similarity between two label histograms.
+pub fn pair_similarity(a: &[usize; NUM_CLASSES], b: &[usize; NUM_CLASSES]) -> Option<f64> {
+    let na: usize = a.iter().sum();
+    let nb: usize = b.iter().sum();
+    if na == 0 || nb == 0 {
+        return None;
+    }
+    let overlap: usize = a.iter().zip(b).map(|(&x, &y)| x.min(y)).sum();
+    Some(overlap as f64 / na.min(nb) as f64)
+}
+
+/// Mean pairwise similarity over all device pairs holding data.
+pub fn mean_similarity(hists: &[[usize; NUM_CLASSES]]) -> f64 {
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for i in 0..hists.len() {
+        for j in (i + 1)..hists.len() {
+            if let Some(s) = pair_similarity(&hists[i], &hists[j]) {
+                acc += s;
+                count += 1;
+            }
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        acc / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SynthDigits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_histograms_similarity_one() {
+        let a = [5, 5, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert_eq!(pair_similarity(&a, &a), Some(1.0));
+    }
+
+    #[test]
+    fn disjoint_histograms_similarity_zero() {
+        let a = [5, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let b = [0, 5, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert_eq!(pair_similarity(&a, &b), Some(0.0));
+    }
+
+    #[test]
+    fn empty_devices_skipped() {
+        let a = [1, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let empty = [0usize; NUM_CLASSES];
+        assert_eq!(pair_similarity(&a, &empty), None);
+        assert_eq!(mean_similarity(&[a, empty, a]), 1.0);
+    }
+
+    #[test]
+    fn offloading_between_disjoint_devices_raises_similarity() {
+        // device 0 holds labels {0..4}, device 1 holds {5..9}; moving half
+        // of device 0's data to device 1 must increase mean similarity.
+        let gen = SynthDigits::new(1);
+        let mut rng = Rng::new(2);
+        let ds = gen.generate(400, &mut rng);
+        let mut dev0: Vec<u32> = Vec::new();
+        let mut dev1: Vec<u32> = Vec::new();
+        for (i, &l) in ds.labels.iter().enumerate() {
+            if l < 5 {
+                dev0.push(i as u32);
+            } else {
+                dev1.push(i as u32);
+            }
+        }
+        let before = mean_similarity(&label_histograms(&ds, &[dev0.clone(), dev1.clone()]));
+        let moved: Vec<u32> = dev0.split_off(dev0.len() / 2);
+        let mut dev1_after = dev1.clone();
+        dev1_after.extend(moved);
+        let after = mean_similarity(&label_histograms(&ds, &[dev0, dev1_after]));
+        assert!(after > before, "before={before} after={after}");
+        assert_eq!(before, 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! # fogml — Network-Aware Optimization of Distributed Learning for Fog Computing
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of Wang et al.,
+//! *Network-Aware Optimization of Distributed Learning for Fog Computing*
+//! (IEEE INFOCOM 2020 / journal extension).
+//!
+//! The crate is the Layer-3 coordinator: it owns the fog network model
+//! (topology, costs, capacities, churn), solves the paper's data-movement
+//! optimization (eqs. 5–9) every time interval, schedules local gradient
+//! updates through AOT-compiled XLA executables (Layer 2 JAX models built on
+//! Layer 1 Pallas kernels), and performs weighted federated aggregation
+//! (eq. 4). Python never runs at training time — `make artifacts` lowers the
+//! models to HLO text once, and [`runtime`] loads them via PJRT.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — deterministic RNG, statistics, JSON, console tables.
+//! * [`data`] — SynthDigits dataset + iid/non-iid device partitioning.
+//! * [`topology`] — fog graphs (full/ER/Watts–Strogatz/hierarchical/scale-free) + churn.
+//! * [`costs`] — cost/capacity schedules: synthetic, testbed-like, LTE/WiFi;
+//!   imperfect-information estimation.
+//! * [`queueing`] — D/M/1 straggler model behind Theorem 2.
+//! * [`movement`] — the paper's core contribution: the data-movement
+//!   optimization and its solvers (Theorem-3 greedy, convex PGD), plus the
+//!   closed-form theory of Theorems 4–6.
+//! * [`runtime`] — PJRT loading/execution of the AOT artifacts.
+//! * [`fed`] — federated engine: local updates, weighted aggregation, ledger.
+//! * [`coordinator`] — thread-based leader/worker actors.
+//! * [`experiments`] — drivers that regenerate every table and figure.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costs;
+pub mod data;
+pub mod experiments;
+pub mod fed;
+pub mod movement;
+pub mod prop;
+pub mod queueing;
+pub mod runtime;
+pub mod topology;
+pub mod util;

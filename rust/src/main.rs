@@ -1,0 +1,188 @@
+//! `fogml` — CLI for the network-aware distributed learning system.
+//!
+//! ```text
+//! fogml train [--model mlp|cnn] [--method aware|federated|centralized]
+//!             [--n 10] [--t-max 100] [--tau 10] [--seed 1] [--iid true]
+//!             [--topology full|random|smallworld|hierarchical|scalefree]
+//!             [--rho 0.5] [--costs testbed-lte|testbed-wifi|synthetic]
+//!             [--discard linear-r|linear-g|sqrt] [--capacity] [--estimated]
+//!             [--p-exit 0.02] [--p-entry 0.02] [--curve]
+//! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
+//!             [--seeds 3] [--model mlp|cnn] [--out results]
+//! fogml cluster [--devices 4] [--rounds 5]
+//! ```
+
+use anyhow::{bail, Result};
+
+use fogml::cli::Args;
+use fogml::config::{
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind,
+};
+use fogml::coordinator::{Cluster, ClusterConfig};
+use fogml::costs::{CostSource, Medium};
+use fogml::experiments::{self, ExpOptions};
+use fogml::fed;
+use fogml::movement::DiscardModel;
+use fogml::runtime::{ModelKind, Runtime};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("fogml: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (want train|exp|cluster)"),
+        None => {
+            println!("fogml — Network-Aware Optimization of Distributed Learning for Fog Computing");
+            println!("usage: fogml <train|exp|cluster> [options]   (see README.md)");
+            Ok(())
+        }
+    }
+}
+
+/// Build an [`EngineConfig`] from CLI options (shared by `train`).
+fn config_from_args(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::default();
+    cfg.method = match args.get("method").unwrap_or("aware") {
+        "aware" | "network-aware" => Method::NetworkAware,
+        "federated" => Method::Federated,
+        "centralized" => Method::Centralized,
+        other => bail!("unknown --method {other}"),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelKind::parse(m)?;
+        cfg.lr = fogml::config::default_lr(cfg.model);
+    }
+    cfg.n = args.get_or("n", cfg.n)?;
+    cfg.t_max = args.get_or("t-max", cfg.t_max)?;
+    cfg.tau = args.get_or("tau", cfg.tau)?;
+    cfg.lr = args.get_or("lr", cfg.lr)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.n_train = args.get_or("train-size", cfg.n_train)?;
+    cfg.n_test = args.get_or("test-size", cfg.n_test)?;
+    cfg.iid = args.get_or("iid", true)?;
+    cfg.eval_curve = args.flag("curve");
+    cfg.topology = match args.get("topology").unwrap_or("full") {
+        "full" => TopologyKind::Full,
+        "random" => TopologyKind::Random(args.get_or("rho", 0.5)?),
+        "smallworld" => TopologyKind::SmallWorld,
+        "hierarchical" => TopologyKind::Hierarchical,
+        "scalefree" => TopologyKind::ScaleFree,
+        other => bail!("unknown --topology {other}"),
+    };
+    cfg.cost_source = match args.get("costs").unwrap_or("testbed-lte") {
+        "testbed-lte" | "lte" => CostSource::Testbed(Medium::Lte),
+        "testbed-wifi" | "wifi" => CostSource::Testbed(Medium::Wifi),
+        "synthetic" => CostSource::Synthetic,
+        other => bail!("unknown --costs {other}"),
+    };
+    cfg.discard_model = match args.get("discard").unwrap_or("linear-r") {
+        "linear-r" => DiscardModel::LinearR,
+        "linear-g" => DiscardModel::LinearG,
+        "sqrt" => DiscardModel::Sqrt,
+        other => bail!("unknown --discard {other}"),
+    };
+    if args.flag("capacity") {
+        cfg.capacity = CapacityPolicy::MeanArrivals;
+    }
+    if args.flag("estimated") {
+        cfg.info = InfoMode::Estimated(EngineConfig::DEFAULT_EST_WINDOWS);
+    }
+    let p_exit: f64 = args.get_or("p-exit", 0.0)?;
+    let p_entry: f64 = args.get_or("p-entry", 0.0)?;
+    if p_exit > 0.0 || p_entry > 0.0 {
+        cfg.churn = Some(Churn { p_exit, p_entry });
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load_default()?;
+    let started = std::time::Instant::now();
+    let out = fed::run(&cfg, &rt)?;
+    let elapsed = started.elapsed();
+
+    println!("== fogml train ==");
+    println!(
+        "method          {:?} / {} / {}",
+        cfg.method,
+        cfg.model,
+        if cfg.iid { "iid" } else { "non-iid" }
+    );
+    println!("accuracy        {:.2}%", 100.0 * out.accuracy);
+    if !out.accuracy_curve.is_empty() {
+        let pts: Vec<String> = out
+            .accuracy_curve
+            .iter()
+            .map(|(t, a)| format!("t={t}:{:.1}%", 100.0 * a))
+            .collect();
+        println!("curve           {}", pts.join(" "));
+    }
+    println!(
+        "costs           process {:.1}  transfer {:.1}  discard {:.1}  total {:.1}  unit {:.3}",
+        out.ledger.process,
+        out.ledger.transfer,
+        out.ledger.discard,
+        out.ledger.total(),
+        out.ledger.unit_cost(out.total_collected as f64)
+    );
+    let m = &out.movement;
+    println!(
+        "movement        collected {}  processed {}  offloaded {}  discarded {}",
+        m.collected(),
+        m.processed(),
+        m.offloaded(),
+        m.discarded()
+    );
+    let (rate_mean, rate_min, rate_max) = m.movement_rate_stats();
+    println!("movement rate   mean {rate_mean:.2}  range [{rate_min:.2}, {rate_max:.2}]");
+    println!(
+        "similarity      before {:.2}%  after {:.2}%",
+        100.0 * out.similarity.0,
+        100.0 * out.similarity.1
+    );
+    println!("active nodes    {:.1} mean", out.mean_active);
+    println!("wall time       {:.2?}", elapsed);
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let opts = ExpOptions {
+        seeds: args.get_or("seeds", 3usize)?,
+        model: match args.get("model") {
+            Some(m) => Some(ModelKind::parse(m)?),
+            None => None,
+        },
+        out_dir: args.get("out").unwrap_or("results").to_string(),
+    };
+    experiments::dispatch(which, &opts)
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = ClusterConfig {
+        n_devices: args.get_or("devices", 4usize)?,
+        rounds: args.get_or("rounds", 5usize)?,
+        tau: args.get_or("tau", 5usize)?,
+        seed: args.get_or("seed", 1u64)?,
+        ..Default::default()
+    };
+    let report = Cluster::run(&cfg)?;
+    println!(
+        "== fogml cluster ({} devices, {} rounds) ==",
+        cfg.n_devices, cfg.rounds
+    );
+    for (round, acc) in report.round_accuracy.iter().enumerate() {
+        println!("round {round}: accuracy {:.2}%", 100.0 * acc);
+    }
+    println!("device samples: {:?}", report.device_samples);
+    Ok(())
+}

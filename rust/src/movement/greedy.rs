@@ -1,0 +1,274 @@
+//! Theorem 3: closed-form optimal movement under linear discard costs.
+//!
+//! With the error cost `f_i(t) D_i(t) r_i(t)` (and no binding capacities),
+//! the optimum is integral: each device sends *all* of its collected data to
+//! whichever option has the least marginal cost —
+//!
+//! ```text
+//! s*_ik = 1  if c_ik(t) + c_k(t+1) ≤ min{ f_i(t), c_i(t) }
+//! s*_ii = 1  if c_i(t)             ≤ min{ f_i(t), c_ik(t) + c_k(t+1) }
+//! r*_i  = 1  if f_i(t)             ≤ min{ c_i(t), c_ik(t) + c_k(t+1) }
+//! k = argmin_{j : (i,j) ∈ E(t)} { c_ij(t) + c_j(t+1) }
+//! ```
+//!
+//! The `-f·G` model reduces to the same rule with modified marginal costs
+//! (§IV-A2), which [`MovementProblem::process_cost`] etc. already encode.
+//! Ties break process > offload > discard, matching the paper's preference
+//! for keeping data when indifferent.
+
+use crate::movement::plan::MovementPlan;
+use crate::movement::problem::MovementProblem;
+
+/// Solve by the Theorem-3 rule. Inactive devices (or devices with no data)
+/// get `s_ii = 1` rows, which is vacuous since `D_i(t) = 0`.
+pub fn solve(p: &MovementProblem) -> MovementPlan {
+    let n = p.n();
+    let mut plan = MovementPlan::keep_all(n);
+    for i in 0..n {
+        if !p.active[i] || p.d[i] == 0.0 {
+            continue;
+        }
+        let process = p.process_cost(i);
+        let discard = p.discard_cost(i);
+        let best = p.best_neighbor(i);
+
+        plan.set_s(i, i, 0.0);
+        match best {
+            Some((k, offload)) if offload < process && offload < discard => {
+                plan.set_s(i, k, 1.0);
+            }
+            _ if process <= discard => {
+                plan.set_s(i, i, 1.0);
+            }
+            _ => {
+                plan.r[i] = 1.0;
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::CostSchedule;
+    use crate::movement::problem::DiscardModel;
+    use crate::prop::for_all;
+    use crate::topology::generators::{erdos_renyi, fully_connected};
+    use crate::topology::Graph;
+
+    struct Fixture {
+        graph: Graph,
+        costs: CostSchedule,
+        d: Vec<f64>,
+        inbound: Vec<f64>,
+        active: Vec<bool>,
+    }
+
+    impl Fixture {
+        fn problem(&self, model: DiscardModel) -> MovementProblem<'_> {
+            MovementProblem {
+                t: 0,
+                graph: &self.graph,
+                active: &self.active,
+                d: &self.d,
+                inbound_prev: &self.inbound,
+                costs: &self.costs,
+                discard_model: model,
+            }
+        }
+    }
+
+    fn fixture(n: usize) -> Fixture {
+        Fixture {
+            graph: fully_connected(n),
+            costs: CostSchedule::zeros(n, 2),
+            d: vec![5.0; n],
+            inbound: vec![0.0; n],
+            active: vec![true; n],
+        }
+    }
+
+    #[test]
+    fn processes_when_cheapest() {
+        let mut f = fixture(2);
+        f.costs.compute[0] = vec![0.1, 0.9];
+        f.costs.compute[1] = vec![0.1, 0.9];
+        f.costs.error_weight[0] = vec![0.5, 0.5];
+        for t in 0..2 {
+            f.costs.link[t][1] = 0.3; // 0 -> 1
+            f.costs.link[t][2] = 0.3; // 1 -> 0
+        }
+        let plan = solve(&f.problem(DiscardModel::LinearR));
+        // device 0: process (0.1) < offload (0.3+0.9) and < discard (0.5)
+        assert_eq!(plan.s(0, 0), 1.0);
+        // device 1: offload to 0 (0.3+0.1=0.4) < process 0.9, < discard 0.5
+        assert_eq!(plan.s(1, 0), 1.0);
+        assert_eq!(plan.r[1], 0.0);
+    }
+
+    #[test]
+    fn discards_when_everything_expensive() {
+        let mut f = fixture(2);
+        f.costs.compute[0] = vec![0.9, 0.95];
+        f.costs.compute[1] = vec![0.9, 0.95];
+        f.costs.error_weight[0] = vec![0.1, 0.1];
+        for t in 0..2 {
+            f.costs.link[t][1] = 0.8;
+            f.costs.link[t][2] = 0.8;
+        }
+        let plan = solve(&f.problem(DiscardModel::LinearR));
+        assert_eq!(plan.r, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn linear_g_never_discards_when_f_dominates() {
+        // -f·G: discard marginal cost 0, process c - f < 0 when f > c
+        let mut f = fixture(3);
+        for t in 0..2 {
+            f.costs.compute[t] = vec![0.8, 0.8, 0.8];
+            f.costs.error_weight[t] = vec![0.9, 0.9, 0.9];
+            for i in 0..3 {
+                for j in 0..3 {
+                    if i != j {
+                        f.costs.link[t][i * 3 + j] = 0.9;
+                    }
+                }
+            }
+        }
+        let plan = solve(&f.problem(DiscardModel::LinearG));
+        for i in 0..3 {
+            assert_eq!(plan.r[i], 0.0, "device {i} discarded despite f > c");
+            assert_eq!(plan.s(i, i), 1.0);
+        }
+        // same costs under LinearR: discard (f=0.9) loses to process (0.8)
+        let plan_r = solve(&f.problem(DiscardModel::LinearR));
+        for i in 0..3 {
+            assert_eq!(plan_r.s(i, i), 1.0);
+        }
+    }
+
+    #[test]
+    fn inactive_devices_do_nothing() {
+        let mut f = fixture(3);
+        f.active = vec![true, false, true];
+        f.costs.compute[0] = vec![0.9, 0.0, 0.5];
+        f.costs.compute[1] = vec![0.9, 0.0, 0.5];
+        f.costs.error_weight[0] = vec![0.95; 3];
+        // device 1 would be the best target but is inactive
+        let plan = solve(&f.problem(DiscardModel::LinearR));
+        assert_eq!(plan.s(0, 1), 0.0);
+        assert_eq!(plan.s(0, 2), 1.0); // falls back to device 2 (0 link cost + 0.5)
+    }
+
+    /// Property: on random instances, the greedy plan is optimal among all
+    /// *integral single-choice* plans (which Theorem 3 proves is the global
+    /// optimum for linear discard costs without capacities) — verified by
+    /// brute force per device.
+    #[test]
+    fn prop_greedy_beats_every_single_choice_plan() {
+        for_all("greedy_optimal", 60, |g| {
+            let n = g.usize_in(2, 6);
+            let rho = g.f64_in(0.2, 1.0);
+            let graph = erdos_renyi(n, rho, g.rng());
+            let mut costs = CostSchedule::zeros(n, 2);
+            for t in 0..2 {
+                for i in 0..n {
+                    costs.compute[t][i] = g.f64_in(0.0, 1.0);
+                    costs.error_weight[t][i] = g.f64_in(0.0, 1.0);
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = g.f64_in(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+            let d: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 20.0)).collect();
+            let inbound = vec![0.0; n];
+            let active = vec![true; n];
+            let p = MovementProblem {
+                t: 0,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: DiscardModel::LinearR,
+            };
+            let greedy_plan = solve(&p);
+            let greedy_obj = greedy_plan.objective(&p);
+
+            // brute force: every per-device integral choice
+            for i in 0..n {
+                let mut options: Vec<MovementPlan> = Vec::new();
+                let mut base = greedy_plan.clone();
+                base.set_s(i, i, 0.0);
+                base.r[i] = 0.0;
+                for j in 0..n {
+                    if j != i {
+                        base.set_s(i, j, 0.0);
+                    }
+                }
+                let mut keep = base.clone();
+                keep.set_s(i, i, 1.0);
+                options.push(keep);
+                let mut drop = base.clone();
+                drop.r[i] = 1.0;
+                options.push(drop);
+                for j in 0..n {
+                    if j != i && graph.has_edge(i, j) {
+                        let mut off = base.clone();
+                        off.set_s(i, j, 1.0);
+                        options.push(off);
+                    }
+                }
+                for alt in options {
+                    assert!(
+                        greedy_obj <= alt.objective(&p) + 1e-9,
+                        "greedy {} beaten by alternative {} at device {i}",
+                        greedy_obj,
+                        alt.objective(&p)
+                    );
+                }
+            }
+        });
+    }
+
+    /// Property: greedy plans always satisfy the simplex constraint and
+    /// never offload on missing links.
+    #[test]
+    fn prop_greedy_feasible() {
+        for_all("greedy_feasible", 80, |g| {
+            let n = g.usize_in(1, 8);
+            let graph = erdos_renyi(n, g.f64_in(0.0, 1.0), g.rng());
+            let mut costs = CostSchedule::zeros(n, 2);
+            for t in 0..2 {
+                for i in 0..n {
+                    costs.compute[t][i] = g.f64_in(0.0, 1.0);
+                    costs.error_weight[t][i] = g.f64_in(0.0, 1.0);
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = g.f64_in(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+            let d: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 10.0)).collect();
+            let inbound = vec![0.0; n];
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.8)).collect();
+            let model = if g.bool(0.5) { DiscardModel::LinearR } else { DiscardModel::LinearG };
+            let restricted = graph.restrict(&active);
+            let p = MovementProblem {
+                t: 0,
+                graph: &restricted,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let plan = solve(&p);
+            plan.assert_feasible(&p, 1e-9);
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! The paper's core contribution: the data-movement optimization (eqs. 5–9).
+//!
+//! Every time interval, each device decides per collected datapoint whether
+//! to **process** it locally (`s_ii`), **offload** it to a neighbor
+//! (`s_ij`), or **discard** it (`r_i`), trading off processing cost
+//! `c_i(t)`, link cost `c_ij(t)` and the error (discard) cost weighted by
+//! `f_i(t)`.
+//!
+//! * [`problem`] — the per-interval problem instance and discard-cost models.
+//! * [`plan`] — the decision variables, feasibility checks, cost evaluation.
+//! * [`greedy`] — Theorem 3's closed-form optimal solution for linear
+//!   discard costs (and the `-f·G` variant via modified link costs).
+//! * [`convex`] — projected-gradient solver for the convex `f/√G` model.
+//! * [`repair`] — capacity-constraint repair pass (§IV-B's "minimal
+//!   adjustment" procedure justified by Theorem 6).
+//! * [`theory`] — closed forms of Theorems 4, 5, 6 + their validators.
+
+pub mod convex;
+pub mod distributed;
+pub mod greedy;
+pub mod plan;
+pub mod problem;
+pub mod repair;
+pub mod theory;
+
+pub use plan::{CostBreakdown, MovementPlan};
+pub use problem::{DiscardModel, MovementProblem};
+
+/// Solve a problem instance with the solver matching its discard model,
+/// then repair capacity violations. This is the entry point the federated
+/// engine calls once per interval.
+pub fn solve(p: &MovementProblem) -> MovementPlan {
+    let mut plan = match p.discard_model {
+        DiscardModel::LinearR | DiscardModel::LinearG => greedy::solve(p),
+        DiscardModel::Sqrt => convex::solve(p, convex::PgdOptions::default()),
+    };
+    repair::repair(p, &mut plan);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::CostSchedule;
+    use crate::topology::generators::fully_connected;
+
+    #[test]
+    fn solve_dispatches_and_is_feasible() {
+        let n = 6;
+        let graph = fully_connected(n);
+        let mut costs = CostSchedule::zeros(n, 4);
+        for t in 0..4 {
+            for i in 0..n {
+                costs.compute[t][i] = 0.1 * (i + 1) as f64;
+                costs.error_weight[t][i] = 0.35;
+                for j in 0..n {
+                    if i != j {
+                        costs.link[t][i * n + j] = 0.05;
+                    }
+                }
+            }
+        }
+        let d = vec![8.0; n];
+        let inbound = vec![0.0; n];
+        let active = vec![true; n];
+        for model in [DiscardModel::LinearR, DiscardModel::LinearG, DiscardModel::Sqrt] {
+            let p = MovementProblem {
+                t: 1,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let plan = solve(&p);
+            plan.assert_feasible(&p, 1e-6);
+        }
+    }
+}

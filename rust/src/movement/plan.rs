@@ -1,0 +1,336 @@
+//! Movement decision variables `s_ij(t)`, `r_i(t)` and their evaluation.
+
+use crate::movement::problem::{DiscardModel, MovementProblem};
+
+/// A (fractional) movement plan for one interval: `s[i*n + j]` is the
+/// fraction of `D_i(t)` offloaded to `j` (`s[i*n + i]` = fraction processed
+/// locally), `r[i]` the fraction discarded. Row invariant (eq. 8):
+/// `r_i + Σ_j s_ij = 1` whenever `D_i(t) > 0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MovementPlan {
+    pub n: usize,
+    pub s: Vec<f64>,
+    pub r: Vec<f64>,
+}
+
+/// Realized cost components of a plan (the paper's Table III columns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub process: f64,
+    pub transfer: f64,
+    pub discard: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.process + self.transfer + self.discard
+    }
+
+    pub fn add(&mut self, other: &CostBreakdown) {
+        self.process += other.process;
+        self.transfer += other.transfer;
+        self.discard += other.discard;
+    }
+}
+
+impl MovementPlan {
+    /// The no-movement plan: every device processes everything it collects
+    /// (`G_i(t) = D_i(t)`, classic federated learning).
+    pub fn keep_all(n: usize) -> Self {
+        let mut s = vec![0.0; n * n];
+        for i in 0..n {
+            s[i * n + i] = 1.0;
+        }
+        MovementPlan { n, s, r: vec![0.0; n] }
+    }
+
+    #[inline]
+    pub fn s(&self, i: usize, j: usize) -> f64 {
+        self.s[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set_s(&mut self, i: usize, j: usize, v: f64) {
+        self.s[i * self.n + j] = v;
+    }
+
+    /// Fraction of `D_i(t)` offloaded anywhere.
+    pub fn offloaded_fraction(&self, i: usize) -> f64 {
+        (0..self.n).filter(|&j| j != i).map(|j| self.s(i, j)).sum()
+    }
+
+    /// `G_i(t)` for every device: locally-kept collection plus last
+    /// interval's inbound.
+    pub fn processed(&self, p: &MovementProblem) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| self.s(i, i) * p.d[i] + p.inbound_prev[i])
+            .collect()
+    }
+
+    /// Data each device receives *this* interval (processed next interval).
+    pub fn inbound_next(&self, p: &MovementProblem) -> Vec<f64> {
+        let mut inbound = vec![0.0; self.n];
+        for i in 0..self.n {
+            if p.d[i] == 0.0 {
+                continue;
+            }
+            for j in 0..self.n {
+                if j != i {
+                    inbound[j] += self.s(i, j) * p.d[i];
+                }
+            }
+        }
+        inbound
+    }
+
+    /// Realized cost components under the *charging* schedule in `p` (call
+    /// with the actual schedule even when the plan was computed from an
+    /// estimated one). The discard column reports the realized error cost
+    /// `f_i(t) D_i(t) r_i(t)` for every model so Table IV rows are
+    /// comparable, matching the paper's presentation.
+    pub fn cost(&self, p: &MovementProblem) -> CostBreakdown {
+        let mut c = CostBreakdown::default();
+        let g = self.processed(p);
+        for i in 0..self.n {
+            c.process += g[i] * p.costs.c_node(p.t, i);
+            c.discard += p.costs.f(p.t, i) * p.d[i] * self.r[i];
+            if p.d[i] > 0.0 {
+                for j in 0..self.n {
+                    if j != i && self.s(i, j) > 0.0 {
+                        c.transfer += p.d[i] * self.s(i, j) * p.costs.c_link(p.t, i, j);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// The *objective* value the optimizer minimizes (model-dependent; this
+    /// is what solvers compare, while [`Self::cost`] is what the ledger
+    /// reports). Offloaded data is charged the receiver's next-interval
+    /// processing cost, consistent with the solvers' marginal costs.
+    pub fn objective(&self, p: &MovementProblem) -> f64 {
+        let mut obj = 0.0;
+        for i in 0..self.n {
+            // local processing of own data + inbound
+            let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
+            obj += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for j in 0..self.n {
+                    if j != i && self.s(i, j) > 0.0 {
+                        let amount = p.d[i] * self.s(i, j);
+                        obj += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
+            }
+        }
+        match p.discard_model {
+            DiscardModel::LinearR => {
+                for i in 0..self.n {
+                    obj += p.costs.f(p.t, i) * p.d[i] * self.r[i];
+                }
+            }
+            DiscardModel::LinearG => {
+                // -f_i(t) per point processed now; -f_j(t+1) per point
+                // offloaded to j (processed there next interval)
+                for i in 0..self.n {
+                    let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
+                    obj -= p.costs.f(p.t, i) * g_local;
+                    for j in 0..self.n {
+                        if j != i && p.d[i] > 0.0 {
+                            obj -= p.costs.f(p.t + 1, j) * p.d[i] * self.s(i, j);
+                        }
+                    }
+                }
+            }
+            DiscardModel::Sqrt => {
+                // f_i / sqrt(G̃_i): processed now + received now (credited
+                // to the receiver, where it is processed next interval)
+                let inbound_now = self.inbound_next(p);
+                for i in 0..self.n {
+                    if !p.active[i] {
+                        continue;
+                    }
+                    let g = self.s(i, i) * p.d[i] + p.inbound_prev[i] + inbound_now[i];
+                    obj += p.costs.f(p.t, i)
+                        / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                }
+            }
+        }
+        obj
+    }
+
+    /// Panics with a description if the plan violates feasibility (eqs.
+    /// 6–9): simplex rows, non-edges, capacities.
+    pub fn assert_feasible(&self, p: &MovementProblem, tol: f64) {
+        for i in 0..self.n {
+            let mut row = self.r[i];
+            for j in 0..self.n {
+                let sij = self.s(i, j);
+                assert!(sij >= -tol, "s[{i},{j}] = {sij} < 0");
+                row += sij;
+                if i != j && sij > tol {
+                    assert!(
+                        p.graph.has_edge(i, j) && p.active[i] && p.active[j],
+                        "offload on missing/inactive link ({i},{j})"
+                    );
+                    let cap = p.costs.cap_link_at(p.t, i, j);
+                    assert!(
+                        sij * p.d[i] <= cap + tol,
+                        "link cap violated on ({i},{j}): {} > {cap}",
+                        sij * p.d[i]
+                    );
+                }
+            }
+            assert!(self.r[i] >= -tol, "r[{i}] < 0");
+            if p.d[i] > 0.0 && p.active[i] {
+                assert!(
+                    (row - 1.0).abs() < tol.max(1e-9),
+                    "simplex violated at {i}: r+Σs = {row}"
+                );
+            }
+            let g = self.s(i, i) * p.d[i] + p.inbound_prev[i];
+            let cap = p.costs.cap_node_at(p.t, i);
+            assert!(
+                g <= cap + tol,
+                "node cap violated at {i}: G={g} > C={cap}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::CostSchedule;
+    use crate::topology::generators::fully_connected;
+
+    fn setup(n: usize) -> (crate::topology::Graph, CostSchedule, Vec<f64>, Vec<f64>, Vec<bool>) {
+        let graph = fully_connected(n);
+        let mut costs = CostSchedule::zeros(n, 3);
+        for t in 0..3 {
+            for i in 0..n {
+                costs.compute[t][i] = 0.2 + 0.1 * i as f64;
+                costs.error_weight[t][i] = 0.5;
+                for j in 0..n {
+                    if i != j {
+                        costs.link[t][i * n + j] = 0.1;
+                    }
+                }
+            }
+        }
+        (graph, costs, vec![10.0; n], vec![0.0; n], vec![true; n])
+    }
+
+    #[test]
+    fn keep_all_cost_is_pure_processing() {
+        let n = 3;
+        let (graph, costs, d, inbound, active) = setup(n);
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let plan = MovementPlan::keep_all(n);
+        let c = plan.cost(&p);
+        assert_eq!(c.transfer, 0.0);
+        assert_eq!(c.discard, 0.0);
+        let expected: f64 = (0..n).map(|i| 10.0 * (0.2 + 0.1 * i as f64)).sum();
+        assert!((c.process - expected).abs() < 1e-9);
+        plan.assert_feasible(&p, 1e-9);
+    }
+
+    #[test]
+    fn offload_moves_cost_to_transfer_column() {
+        let n = 2;
+        let (graph, costs, d, inbound, active) = setup(n);
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let mut plan = MovementPlan::keep_all(n);
+        plan.set_s(0, 0, 0.0);
+        plan.set_s(0, 1, 1.0);
+        let c = plan.cost(&p);
+        assert!((c.transfer - 10.0 * 0.1).abs() < 1e-9);
+        // device 0 processes nothing this interval
+        assert!((c.process - 10.0 * 0.3).abs() < 1e-9);
+        assert_eq!(plan.inbound_next(&p), vec![0.0, 10.0]);
+        plan.assert_feasible(&p, 1e-9);
+    }
+
+    #[test]
+    fn discard_charges_error_cost() {
+        let n = 2;
+        let (graph, costs, d, inbound, active) = setup(n);
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let mut plan = MovementPlan::keep_all(n);
+        plan.set_s(1, 1, 0.0);
+        plan.r[1] = 1.0;
+        let c = plan.cost(&p);
+        assert!((c.discard - 0.5 * 10.0).abs() < 1e-9);
+        plan.assert_feasible(&p, 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing/inactive link")]
+    fn offload_without_edge_panics() {
+        let n = 3;
+        let (_, costs, d, inbound, active) = setup(n);
+        let empty = crate::topology::Graph::empty(n);
+        let p = MovementProblem {
+            t: 0,
+            graph: &empty,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let mut plan = MovementPlan::keep_all(n);
+        plan.set_s(0, 0, 0.0);
+        plan.set_s(0, 1, 1.0);
+        plan.assert_feasible(&p, 1e-9);
+    }
+
+    #[test]
+    fn objective_linear_g_rewards_processing() {
+        let n = 2;
+        let (graph, costs, d, inbound, active) = setup(n);
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearG,
+        };
+        let keep = MovementPlan::keep_all(n);
+        let mut drop_all = MovementPlan::keep_all(n);
+        for i in 0..n {
+            drop_all.set_s(i, i, 0.0);
+            drop_all.r[i] = 1.0;
+        }
+        // f=0.5 > c for device 0 (0.2): processing should beat discarding
+        assert!(keep.objective(&p) < drop_all.objective(&p));
+    }
+}

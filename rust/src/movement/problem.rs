@@ -1,0 +1,100 @@
+//! Per-interval data-movement problem instance (§III-C).
+
+use crate::costs::CostSchedule;
+use crate::topology::Graph;
+
+/// The three discard-cost models compared in §IV-A2 / Table IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiscardModel {
+    /// `f_i(t) · D_i(t) · r_i(t)` — cost proportional to discarded data
+    /// (the linear form Theorem 3 optimizes, *without* the link-cost
+    /// modification).
+    LinearR,
+    /// `-f_i(t) · G_i(t)` — reward for processed data; equivalent to
+    /// `LinearR` after redefining `c_ij ← c_ij + f_i(t) - f_j(t+1)`
+    /// (§IV-A2). Prioritizes accuracy: offloading stays attractive even
+    /// when links are pricey, because processing *anywhere* earns `f`.
+    LinearG,
+    /// `f_i(t) / √G_i(t)` — the convex bound from Lemma 1/Theorem 1 with
+    /// diminishing marginal returns in processed data.
+    Sqrt,
+}
+
+/// One interval's optimization input. All slices are indexed by device id;
+/// `costs` may be the *actual* schedule (perfect information) or the
+/// estimator's output (§IV-A imperfect information) — the ledger always
+/// charges actual costs.
+#[derive(Debug, Clone, Copy)]
+pub struct MovementProblem<'a> {
+    /// Current interval (the optimizer reads `costs` at `t` and `t+1`:
+    /// offloaded data is processed by the receiver in the next interval).
+    pub t: usize,
+    /// Offloading links E(t) (already restricted to active devices).
+    pub graph: &'a Graph,
+    /// Active-device mask V(t).
+    pub active: &'a [bool],
+    /// `D_i(t)`: datapoints collected by each device this interval.
+    pub d: &'a [f64],
+    /// `Σ_j s_ji(t-1) D_j(t-1)`: data offloaded *to* i last interval, which
+    /// i processes now (enters `G_i(t)` and consumes node capacity).
+    pub inbound_prev: &'a [f64],
+    /// Cost/capacity schedule the optimizer believes.
+    pub costs: &'a CostSchedule,
+    pub discard_model: DiscardModel,
+}
+
+impl<'a> MovementProblem<'a> {
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Marginal cost of processing one datapoint locally at `i` (under the
+    /// linear models; `LinearG` earns back `f_i(t)` per processed point).
+    pub fn process_cost(&self, i: usize) -> f64 {
+        match self.discard_model {
+            DiscardModel::LinearR | DiscardModel::Sqrt => self.costs.c_node(self.t, i),
+            DiscardModel::LinearG => self.costs.c_node(self.t, i) - self.costs.f(self.t, i),
+        }
+    }
+
+    /// Marginal cost of offloading one datapoint from `i` to `j` (link now
+    /// + processing at the receiver next interval; `LinearG` earns back
+    /// `f_j(t+1)`).
+    pub fn offload_cost(&self, i: usize, j: usize) -> f64 {
+        let base = self.costs.c_link(self.t, i, j) + self.costs.c_node(self.t + 1, j);
+        match self.discard_model {
+            DiscardModel::LinearR | DiscardModel::Sqrt => base,
+            DiscardModel::LinearG => base - self.costs.f(self.t + 1, j),
+        }
+    }
+
+    /// Marginal cost of discarding one datapoint at `i`.
+    pub fn discard_cost(&self, i: usize) -> f64 {
+        match self.discard_model {
+            DiscardModel::LinearR | DiscardModel::Sqrt => self.costs.f(self.t, i),
+            DiscardModel::LinearG => 0.0,
+        }
+    }
+
+    /// Out-neighbors of `i` that are active this interval.
+    pub fn active_neighbors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.graph
+            .out_neighbors(i)
+            .iter()
+            .copied()
+            .filter(move |&j| self.active[j])
+    }
+
+    /// The cheapest offloading target `k = argmin_j c_ij(t) + c_j(t+1)`
+    /// from Theorem 3 (model-adjusted), if any neighbor is active.
+    pub fn best_neighbor(&self, i: usize) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for j in self.active_neighbors(i) {
+            let c = self.offload_cost(i, j);
+            if best.map_or(true, |(_, bc)| c < bc) {
+                best = Some((j, c));
+            }
+        }
+        best
+    }
+}

@@ -1,0 +1,335 @@
+//! Capacity-constraint repair (§IV-B, guided by Theorem 6).
+//!
+//! Both solvers ignore the capacity constraints (9); the paper argues (via
+//! Theorem 6) that when expected violations are few, the unconstrained
+//! solution plus "minimal adjustments" — re-deciding only the affected
+//! variables, or bumping `r_i(t)` until constraints hold — is near-optimal
+//! and far cheaper than a generic constrained solver.
+//!
+//! This pass enforces, in order:
+//!   1. link capacities       `s_ij(t) D_i(t) ≤ C_ij(t)`,
+//!   2. receiver capacities   `Σ_i s_ij(t) D_i(t) ≤ C_j(t+1)` (offloaded
+//!      data is processed by `j` next interval),
+//!   3. sender capacities     `s_ii(t) D_i(t) + inbound_i ≤ C_i(t)`,
+//! and then redistributes every displaced fraction to that device's
+//! cheapest still-feasible option (process → best neighbors → discard),
+//! updating shared slacks as it assigns. Discarding is always feasible, so
+//! the pass terminates with a feasible plan in one sweep.
+
+use crate::movement::plan::MovementPlan;
+use crate::movement::problem::MovementProblem;
+
+/// Repair `plan` in place to satisfy all capacity constraints of `p`.
+pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
+    let n = p.n();
+    let mut excess = vec![0.0; n]; // displaced fraction per sender
+
+    // --- 1. link capacities -------------------------------------------------
+    for i in 0..n {
+        if p.d[i] <= 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            if j == i || plan.s(i, j) == 0.0 {
+                continue;
+            }
+            let cap = p.costs.cap_link_at(p.t, i, j);
+            let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
+            if plan.s(i, j) > max_frac {
+                excess[i] += plan.s(i, j) - max_frac;
+                plan.set_s(i, j, max_frac);
+            }
+        }
+    }
+
+    // --- 2. receiver capacities ---------------------------------------------
+    // inbound to j this interval is processed at t+1 and must fit C_j(t+1)
+    for j in 0..n {
+        let cap = p.costs.cap_node_at(p.t + 1, j);
+        if cap.is_infinite() {
+            continue;
+        }
+        let inbound: f64 = (0..n)
+            .filter(|&i| i != j && p.d[i] > 0.0)
+            .map(|i| plan.s(i, j) * p.d[i])
+            .sum();
+        if inbound > cap {
+            let scale = cap / inbound;
+            for i in 0..n {
+                if i != j && p.d[i] > 0.0 && plan.s(i, j) > 0.0 {
+                    let removed = plan.s(i, j) * (1.0 - scale);
+                    excess[i] += removed;
+                    plan.set_s(i, j, plan.s(i, j) * scale);
+                }
+            }
+        }
+    }
+
+    // --- 3. sender local capacities ------------------------------------------
+    for i in 0..n {
+        if p.d[i] <= 0.0 {
+            continue;
+        }
+        let cap = p.costs.cap_node_at(p.t, i);
+        if cap.is_infinite() {
+            continue;
+        }
+        let avail = (cap - p.inbound_prev[i]).max(0.0);
+        let max_frac = avail / p.d[i];
+        if plan.s(i, i) > max_frac {
+            excess[i] += plan.s(i, i) - max_frac;
+            plan.set_s(i, i, max_frac);
+        }
+    }
+
+    // --- 4. redistribute displaced fractions ---------------------------------
+    // shared slacks after the clamping above
+    let mut recv_slack: Vec<f64> = (0..n)
+        .map(|j| {
+            let cap = p.costs.cap_node_at(p.t + 1, j);
+            if cap.is_infinite() {
+                return f64::INFINITY;
+            }
+            let inbound: f64 = (0..n)
+                .filter(|&i| i != j && p.d[i] > 0.0)
+                .map(|i| plan.s(i, j) * p.d[i])
+                .sum();
+            (cap - inbound).max(0.0)
+        })
+        .collect();
+
+    for i in 0..n {
+        if excess[i] <= 0.0 || p.d[i] <= 0.0 {
+            continue;
+        }
+        let mut remaining = excess[i];
+
+        // option list sorted by marginal cost: (cost, target)
+        #[derive(Clone, Copy)]
+        enum Opt {
+            Process,
+            Offload(usize),
+        }
+        let mut options: Vec<(f64, Opt)> = vec![(p.process_cost(i), Opt::Process)];
+        for j in p.active_neighbors(i).collect::<Vec<_>>() {
+            options.push((p.offload_cost(i, j), Opt::Offload(j)));
+        }
+        options.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        for (cost, opt) in options {
+            if remaining <= 1e-12 {
+                break;
+            }
+            // anything pricier than discarding goes to discard
+            if cost >= p.discard_cost(i) {
+                break;
+            }
+            match opt {
+                Opt::Process => {
+                    let cap = p.costs.cap_node_at(p.t, i);
+                    let slack_frac = if cap.is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        ((cap - p.inbound_prev[i]).max(0.0) / p.d[i] - plan.s(i, i)).max(0.0)
+                    };
+                    let take = remaining.min(slack_frac);
+                    plan.set_s(i, i, plan.s(i, i) + take);
+                    remaining -= take;
+                }
+                Opt::Offload(j) => {
+                    let link_cap = p.costs.cap_link_at(p.t, i, j);
+                    let link_slack = if link_cap.is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        (link_cap / p.d[i] - plan.s(i, j)).max(0.0)
+                    };
+                    let recv_frac = if recv_slack[j].is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        recv_slack[j] / p.d[i]
+                    };
+                    let take = remaining.min(link_slack).min(recv_frac);
+                    if take > 0.0 {
+                        plan.set_s(i, j, plan.s(i, j) + take);
+                        if !recv_slack[j].is_infinite() {
+                            recv_slack[j] -= take * p.d[i];
+                        }
+                        remaining -= take;
+                    }
+                }
+            }
+        }
+        // whatever could not be placed is discarded
+        plan.r[i] += remaining;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::{CapacityMode, CostSchedule};
+    use crate::movement::problem::DiscardModel;
+    use crate::movement::{convex, greedy};
+    use crate::prop::for_all;
+    use crate::topology::generators::{erdos_renyi, fully_connected};
+
+    fn base_costs(n: usize) -> CostSchedule {
+        let mut costs = CostSchedule::zeros(n, 3);
+        for t in 0..3 {
+            for i in 0..n {
+                costs.compute[t][i] = 0.1 + 0.2 * i as f64;
+                costs.error_weight[t][i] = 0.5;
+                for j in 0..n {
+                    if i != j {
+                        costs.link[t][i * n + j] = 0.02;
+                    }
+                }
+            }
+        }
+        costs
+    }
+
+    #[test]
+    fn no_op_when_unconstrained() {
+        let n = 4;
+        let graph = fully_connected(n);
+        let costs = base_costs(n);
+        let d = vec![10.0; n];
+        let inbound = vec![0.0; n];
+        let active = vec![true; n];
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let plan = greedy::solve(&p);
+        let mut repaired = plan.clone();
+        repair(&p, &mut repaired);
+        assert_eq!(plan, repaired);
+    }
+
+    #[test]
+    fn receiver_capacity_spreads_load() {
+        // all devices want to offload to cheap device 0, but its capacity
+        // only fits part of the load
+        let n = 4;
+        let graph = fully_connected(n);
+        let mut costs = base_costs(n);
+        costs.set_capacities(CapacityMode::Uniform(12.0));
+        // make device 0 very cheap so everyone targets it
+        for t in 0..3 {
+            costs.compute[t] = vec![0.01, 0.9, 0.9, 0.9];
+        }
+        let d = vec![10.0; n];
+        let inbound = vec![0.0; n];
+        let active = vec![true; n];
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let mut plan = greedy::solve(&p);
+        // before repair: 30 units inbound to device 0 > cap 12
+        let inbound_before: f64 = (1..n).map(|i| plan.s(i, 0) * d[i]).sum();
+        assert!(inbound_before > 12.0);
+        repair(&p, &mut plan);
+        plan.assert_feasible(&p, 1e-9);
+        let inbound_after: f64 = (1..n).map(|i| plan.s(i, 0) * d[i]).sum();
+        assert!(inbound_after <= 12.0 + 1e-9);
+        // load was spread, not silently dropped from the simplex
+        for i in 1..n {
+            let row: f64 = plan.r[i] + (0..n).map(|j| plan.s(i, j)).sum::<f64>();
+            assert!((row - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sender_capacity_forces_discard_or_offload() {
+        let n = 2;
+        let mut costs = base_costs(n);
+        costs.set_capacities(CapacityMode::Uniform(4.0));
+        // both devices process-favorable, but capacity 4 < d 10
+        for t in 0..3 {
+            costs.compute[t] = vec![0.1, 0.1];
+            costs.error_weight[t] = vec![0.9, 0.9];
+        }
+        let graph = fully_connected(n);
+        let d = vec![10.0; n];
+        let inbound = vec![0.0; n];
+        let active = vec![true; n];
+        let p = MovementProblem {
+            t: 0,
+            graph: &graph,
+            active: &active,
+            d: &d,
+            inbound_prev: &inbound,
+            costs: &costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        let mut plan = greedy::solve(&p);
+        repair(&p, &mut plan);
+        plan.assert_feasible(&p, 1e-9);
+        // each can keep only 0.4 locally; the rest must move or drop
+        for i in 0..n {
+            assert!(plan.s(i, i) <= 0.4 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_repair_always_feasible() {
+        for_all("repair_feasible", 60, |g| {
+            let n = g.usize_in(2, 7);
+            let graph = erdos_renyi(n, g.f64_in(0.2, 1.0), g.rng());
+            let mut costs = CostSchedule::zeros(n, 2);
+            for t in 0..2 {
+                for i in 0..n {
+                    costs.compute[t][i] = g.f64_in(0.0, 1.0);
+                    costs.error_weight[t][i] = g.f64_in(0.0, 1.0);
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = g.f64_in(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+            let cap = g.f64_in(2.0, 15.0);
+            costs.set_capacities(CapacityMode::Uniform(cap));
+            let d: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 25.0)).collect();
+            // inbound bounded by capacity (engine invariant: last interval's
+            // repaired plan respected the receiver constraint)
+            let inbound: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, cap)).collect();
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.85)).collect();
+            let restricted = graph.restrict(&active);
+            let model = match g.usize_in(0, 2) {
+                0 => DiscardModel::LinearR,
+                1 => DiscardModel::LinearG,
+                _ => DiscardModel::Sqrt,
+            };
+            let p = MovementProblem {
+                t: 0,
+                graph: &restricted,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let mut plan = match model {
+                DiscardModel::Sqrt => {
+                    convex::solve(&p, convex::PgdOptions { iterations: 60, step0: 0.0 })
+                }
+                _ => greedy::solve(&p),
+            };
+            repair(&p, &mut plan);
+            plan.assert_feasible(&p, 1e-6);
+        });
+    }
+}

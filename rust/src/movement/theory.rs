@@ -1,0 +1,314 @@
+//! Closed forms of Theorems 4, 5 and 6, plus Monte-Carlo validators.
+//!
+//! These are used by `fogml exp theory` to reproduce the paper's analytical
+//! claims against simulation, and by unit tests to pin the solvers to the
+//! math.
+
+use crate::topology::Graph;
+use crate::util::rng::Rng;
+use crate::util::stats::binomial;
+
+// ---------------------------------------------------------------------------
+// Theorem 4 — hierarchical scenario with convex error cost
+// ---------------------------------------------------------------------------
+
+/// Closed-form optimum for the Theorem-4 scenario.
+#[derive(Debug, Clone)]
+pub struct Theorem4Solution {
+    /// Fraction discarded per device, `r*_i = 1 - (γ/2c_i)^{2/3}/D_i - s_i`.
+    pub r: Vec<f64>,
+    /// Fraction offloaded per device,
+    /// `s*_i = (γ / 2(c_{n+1} + c_t))^{2/3} / Σ_j D_j`.
+    pub s: Vec<f64>,
+}
+
+/// Theorem 4: n devices with static costs `c_i` and data rates `D_i`
+/// offload to an edge server with processing cost `c_server` over links of
+/// identical cost `c_t`; the discard cost is `γ/√G_i` (Lemma 1). Assumes
+/// `D_i` large enough that the fractions fall in [0, 1] (we clamp).
+pub fn theorem4_closed_form(
+    gamma: f64,
+    c_dev: &[f64],
+    c_server: f64,
+    c_t: f64,
+    d: &[f64],
+) -> Theorem4Solution {
+    let total_d: f64 = d.iter().sum();
+    let s_star = ((gamma / (2.0 * (c_server + c_t))).powf(2.0 / 3.0) / total_d).clamp(0.0, 1.0);
+    let mut r = Vec::with_capacity(c_dev.len());
+    let s = vec![s_star; c_dev.len()];
+    for (i, &ci) in c_dev.iter().enumerate() {
+        let keep = (gamma / (2.0 * ci)).powf(2.0 / 3.0) / d[i];
+        r.push((1.0 - keep - s_star).clamp(0.0, 1.0));
+    }
+    Theorem4Solution { r, s }
+}
+
+// ---------------------------------------------------------------------------
+// Theorem 5 — value of offloading on social topologies
+// ---------------------------------------------------------------------------
+
+/// Eq. (15): expected per-device cost savings from offloading when a device
+/// with `k` neighbors has costs `c ~ U(0, C)`, `c_ij = 0`, no discarding.
+/// `degree_fracs[k]` = fraction of devices with k neighbors (index 0 unused
+/// mass contributes no savings).
+pub fn theorem5_savings(c_range: f64, degree_fracs: &[f64]) -> f64 {
+    degree_fracs
+        .iter()
+        .enumerate()
+        .map(|(k, &frac)| frac * savings_for_degree(c_range, k as u64))
+        .sum()
+}
+
+/// The inner bracket of eq. (15) for a single degree k.
+pub fn savings_for_degree(c_range: f64, k: u64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let kf = k as f64;
+    let mut sum_l = 0.0;
+    for l in 0..k {
+        let lf = l as f64;
+        sum_l += binomial(k, l) * c_range * (if l % 2 == 0 { 1.0 } else { -1.0 }) * (kf + 3.0)
+            / ((lf + 2.0) * (lf + 3.0));
+    }
+    let sign_k = if k % 2 == 0 { 1.0 } else { -1.0 };
+    c_range / 2.0 - c_range * sign_k / (kf + 2.0) - sum_l
+}
+
+/// The simplified exact form of the same expectation,
+/// `E[max(0, c - min_k c_j)] = C (k/(k+1) - 1/2 + 1/((k+1)(k+2)))`,
+/// derived by direct integration — used to cross-check eq. (15).
+pub fn savings_for_degree_simplified(c_range: f64, k: u64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let kf = k as f64;
+    c_range * (kf / (kf + 1.0) - 0.5 + 1.0 / ((kf + 1.0) * (kf + 2.0)))
+}
+
+/// Monte-Carlo estimate of the Theorem-5 expectation: draw device and
+/// neighbor costs `U(0, C)` and average `max(0, c_i - min_j c_j)`.
+pub fn simulate_savings(c_range: f64, k: u64, trials: usize, rng: &mut Rng) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let ci = rng.uniform(0.0, c_range);
+        let min_n = (0..k)
+            .map(|_| rng.uniform(0.0, c_range))
+            .fold(f64::INFINITY, f64::min);
+        acc += (ci - min_n).max(0.0);
+    }
+    acc / trials as f64
+}
+
+/// Degree-fraction vector `N(k)` of a scale-free network,
+/// `N(k) = Γ k^{1-γ}` normalized over `1..=k_max` (Theorem 5's model).
+pub fn scale_free_degree_fracs(gamma_exp: f64, k_max: usize) -> Vec<f64> {
+    let mut fracs = vec![0.0; k_max + 1];
+    let mut z = 0.0;
+    for k in 1..=k_max {
+        let w = (k as f64).powf(1.0 - gamma_exp);
+        fracs[k] = w;
+        z += w;
+    }
+    for f in fracs.iter_mut() {
+        *f /= z;
+    }
+    fracs
+}
+
+// ---------------------------------------------------------------------------
+// Theorem 6 — expected capacity-constraint violations
+// ---------------------------------------------------------------------------
+
+/// Theorem-6 estimate of the expected number of devices whose capacity is
+/// violated when devices follow the Theorem-3 policy with `c ~ U(0, C)`,
+/// `c_ij = 0`, no discarding, constant data rate `D`, and capacities drawn
+/// i.i.d. from `cap_samples` (an empirical distribution).
+///
+/// The expected processed load of a device with `k` neighbors is
+/// `D · (1 - P_o(k) + k Σ_n P_o(n) p_k(n) / n)`; with uniform costs the
+/// offload probability is `P_o(k) = k/(k+1)` and neighbor-degree
+/// distribution `p_k(n)` is measured from the graph. The load of a device
+/// is compared against capacity draws to get a violation probability.
+pub fn theorem6_expected_violations(graph: &Graph, d_rate: f64, cap_samples: &[f64]) -> f64 {
+    let n = graph.n();
+    if n == 0 || cap_samples.is_empty() {
+        return 0.0;
+    }
+    // degree histogram N(k) (counts) and neighbor-degree distribution
+    let hist = graph.degree_histogram();
+    let p_o = |k: usize| k as f64 / (k as f64 + 1.0);
+
+    let mut expected = 0.0;
+    for i in 0..n {
+        let k = graph.out_degree(i);
+        // empirical p_k(n): degree distribution of i's own neighbors
+        let mut inbound_term = 0.0;
+        for &j in graph.out_neighbors(i) {
+            let nj = graph.out_degree(j);
+            if nj > 0 {
+                // neighbor j offloads with prob P_o(nj) to a uniformly
+                // chosen min-cost neighbor -> lands on i w.p. 1/nj
+                inbound_term += p_o(nj) / nj as f64;
+            }
+        }
+        let load = d_rate * ((1.0 - p_o(k)) + inbound_term);
+        // violation probability under the capacity distribution
+        let p_viol = cap_samples.iter().filter(|&&c| load > c).count() as f64
+            / cap_samples.len() as f64;
+        expected += p_viol;
+    }
+    let _ = hist;
+    expected
+}
+
+/// Monte-Carlo companion: draw costs and capacities, run the Theorem-3
+/// policy (offload to min-cost neighbor if cheaper than local) and count
+/// devices whose realized load exceeds their capacity.
+pub fn simulate_violations(
+    graph: &Graph,
+    d_rate: f64,
+    c_range: f64,
+    cap_samples: &[f64],
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = graph.n();
+    let mut total = 0.0;
+    for _ in 0..trials {
+        let costs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, c_range)).collect();
+        let mut load = vec![0.0f64; n];
+        for i in 0..n {
+            // min-cost neighbor (c_ij = 0)
+            let best = graph
+                .out_neighbors(i)
+                .iter()
+                .copied()
+                .min_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap());
+            match best {
+                Some(k) if costs[k] < costs[i] => load[k] += d_rate,
+                _ => load[i] += d_rate,
+            }
+        }
+        let violations = (0..n)
+            .filter(|&i| load[i] > cap_samples[rng.below(cap_samples.len())])
+            .count();
+        total += violations as f64;
+    }
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::generators::scale_free;
+
+    #[test]
+    fn theorem5_eq15_matches_direct_integration() {
+        // the paper's eq. (15) and the simplified closed form must agree
+        for k in 1..=12u64 {
+            let paper = savings_for_degree(1.0, k);
+            let simple = savings_for_degree_simplified(1.0, k);
+            assert!(
+                (paper - simple).abs() < 1e-9,
+                "k={k}: eq15={paper} simplified={simple}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem5_matches_monte_carlo() {
+        let mut rng = Rng::new(11);
+        for k in [1u64, 2, 4, 8] {
+            let analytic = savings_for_degree_simplified(2.0, k);
+            let sim = simulate_savings(2.0, k, 200_000, &mut rng);
+            assert!(
+                (analytic - sim).abs() < 0.01 * 2.0,
+                "k={k}: analytic={analytic} sim={sim}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem5_savings_linear_in_c() {
+        let fracs = scale_free_degree_fracs(2.5, 20);
+        let s1 = theorem5_savings(1.0, &fracs);
+        let s2 = theorem5_savings(2.0, &fracs);
+        let s4 = theorem5_savings(4.0, &fracs);
+        assert!((s2 / s1 - 2.0).abs() < 1e-9);
+        assert!((s4 / s1 - 4.0).abs() < 1e-9);
+        // savings below the average computing cost C/2 (paper's remark)
+        assert!(s1 < 0.5);
+        assert!(s1 > 0.0);
+    }
+
+    #[test]
+    fn theorem5_savings_increase_with_connectivity() {
+        let mut prev = 0.0;
+        for k in 1..10u64 {
+            let s = savings_for_degree_simplified(1.0, k);
+            assert!(s > prev, "not monotone at k={k}");
+            prev = s;
+        }
+        // asymptote: with many neighbors the savings approach C/2
+        assert!(savings_for_degree_simplified(1.0, 200) > 0.49);
+    }
+
+    #[test]
+    fn scale_free_fracs_normalized_and_decreasing() {
+        let fracs = scale_free_degree_fracs(2.5, 30);
+        let sum: f64 = fracs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        for k in 2..30 {
+            assert!(fracs[k] < fracs[k - 1]);
+        }
+    }
+
+    #[test]
+    fn theorem4_monotonicity() {
+        // higher compute cost -> more discarded
+        let d = vec![1000.0; 3];
+        let sol = theorem4_closed_form(50.0, &[0.3, 0.6, 0.9], 0.1, 0.05, &d);
+        assert!(sol.r[0] < sol.r[1] && sol.r[1] < sol.r[2]);
+        // all fractions valid
+        for i in 0..3 {
+            assert!((0.0..=1.0).contains(&sol.r[i]));
+            assert!((0.0..=1.0).contains(&sol.s[i]));
+            assert!(sol.r[i] + sol.s[i] <= 1.0 + 1e-12);
+        }
+        // pricier server -> less offloading
+        let sol_cheap = theorem4_closed_form(50.0, &[0.5; 3], 0.05, 0.05, &d);
+        let sol_dear = theorem4_closed_form(50.0, &[0.5; 3], 0.4, 0.05, &d);
+        assert!(sol_dear.s[0] < sol_cheap.s[0]);
+    }
+
+    #[test]
+    fn theorem6_close_to_simulation_on_scale_free() {
+        let mut rng = Rng::new(21);
+        let graph = scale_free(60, 2, &mut rng);
+        let d = 5.0;
+        // capacities around the expected load scale
+        let cap_samples: Vec<f64> = (0..500).map(|_| rng.uniform(2.0, 14.0)).collect();
+        let analytic = theorem6_expected_violations(&graph, d, &cap_samples);
+        let sim = simulate_violations(&graph, d, 1.0, &cap_samples, 3000, &mut rng);
+        // the theorem uses expected loads (Jensen gap vs realized loads);
+        // the two should agree on scale
+        assert!(
+            (analytic - sim).abs() < 0.35 * sim.max(1.0),
+            "analytic={analytic} sim={sim}"
+        );
+        assert!(analytic > 0.0 && sim > 0.0);
+    }
+
+    #[test]
+    fn theorem6_zero_when_capacity_huge() {
+        let mut rng = Rng::new(22);
+        let graph = scale_free(30, 2, &mut rng);
+        let caps = vec![1e9];
+        assert_eq!(theorem6_expected_violations(&graph, 5.0, &caps), 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Property-testing mini-framework (offline stand-in for `proptest`).
+//!
+//! A property is a closure over a [`Gen`] (seeded case generator). The
+//! runner executes it for `cases` random seeds; on failure it reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath)
+//! use fogml::prop::{for_all, Gen};
+//! for_all("sum_commutes", 200, |g: &mut Gen| {
+//!     let a = g.f64_in(0.0, 10.0);
+//!     let b = g.f64_in(0.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Seeded case generator handed to each property execution.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), case_seed: seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of f64 drawn uniformly from [lo, hi).
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `property` for `cases` seeds derived deterministically from the
+/// property name. Panics (via the property's own assertions) with the
+/// failing seed in the panic context.
+pub fn for_all<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut property: F) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} (seed={seed:#x}); \
+                 replay with Gen::new({seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x1000_0000_01b3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_propagates_panic() {
+        let r = std::panic::catch_unwind(|| {
+            for_all("always_fails", 3, |_| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<f64> = Vec::new();
+        for_all("det", 10, |g| first.push(g.f64_in(0.0, 1.0)));
+        let mut second: Vec<f64> = Vec::new();
+        for_all("det", 10, |g| second.push(g.f64_in(0.0, 1.0)));
+        assert_eq!(first, second);
+    }
+}

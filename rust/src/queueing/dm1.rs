@@ -1,0 +1,145 @@
+//! D/M/1 queue closed forms and the Theorem-2 capacity rule.
+//!
+//! For a D/M/1 queue with deterministic inter-arrival time `1/λ` and
+//! exponential service rate `μ` (utilization `λ/μ < 1`), the mean waiting
+//! time is `W = δ / (μ (1 - δ))` where `δ` is the smallest root of
+//!
+//! ```text
+//! δ = exp(-μ (1 - δ) / λ)
+//! ```
+//!
+//! **Theorem 2.** To guarantee `W ≤ σ`, set the capacity `C_i` such that
+//! `φ(C_i) = σ μ / (1 + σ μ)` where `φ(C)` is the smallest solution of
+//! `φ = exp(-μ (1 - φ) / C)`. Inverting the fixed point gives
+//! `C = -μ (1 - φ) / ln φ`, which [`capacity_for_waiting_time`] computes
+//! directly.
+
+/// Smallest root of `δ = exp(-μ (1 - δ) / λ)` for a stable queue
+/// (`λ < μ`); returns 1.0 for an unstable/critical queue.
+pub fn delta_fixed_point(mu: f64, lambda: f64) -> f64 {
+    assert!(mu > 0.0 && lambda > 0.0);
+    if lambda >= mu {
+        return 1.0;
+    }
+    // The map x -> exp(-mu(1-x)/lambda) is increasing and convex on [0,1]
+    // with two fixed points; iterating from 0 converges to the smallest.
+    let mut x = 0.0f64;
+    for _ in 0..200 {
+        let next = (-mu * (1.0 - x) / lambda).exp();
+        if (next - x).abs() < 1e-14 {
+            return next;
+        }
+        x = next;
+    }
+    x
+}
+
+/// Mean waiting time of the D/M/1 queue; infinite if unstable.
+pub fn mean_waiting_time(mu: f64, lambda: f64) -> f64 {
+    let delta = delta_fixed_point(mu, lambda);
+    if delta >= 1.0 {
+        f64::INFINITY
+    } else {
+        delta / (mu * (1.0 - delta))
+    }
+}
+
+/// Theorem 2: the largest capacity `C_i` (arrival-rate bound) such that the
+/// mean waiting time stays below `sigma` when service is `exp(mu)`.
+pub fn capacity_for_waiting_time(mu: f64, sigma: f64) -> f64 {
+    assert!(mu > 0.0 && sigma > 0.0);
+    let phi = sigma * mu / (1.0 + sigma * mu); // in (0, 1)
+    -mu * (1.0 - phi) / phi.ln()
+}
+
+/// The link-capacity analog of Theorem 2 (§IV-A1: "network link congestion
+/// ... can be handled by choosing the network capacity C_ij(t) analogously").
+/// Transfers on link (i, j) queue behind each other with `exp(mu_link)`
+/// service (per-datapoint transmission time under fading/retries); the same
+/// D/M/1 bound applies, so the per-interval link capacity that keeps mean
+/// queueing delay under `sigma` is the same fixed-point inversion.
+pub fn link_capacity_for_delay(mu_link: f64, sigma: f64) -> f64 {
+    capacity_for_waiting_time(mu_link, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_increasing_in_lambda() {
+        let mu = 1.0;
+        let mut prev = 0.0;
+        for lambda in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let d = delta_fixed_point(mu, lambda);
+            assert!(d > prev, "delta not increasing at λ={lambda}");
+            assert!(d < 1.0);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn delta_satisfies_fixed_point() {
+        for (mu, lambda) in [(1.0, 0.5), (2.0, 1.0), (5.0, 4.0)] {
+            let d = delta_fixed_point(mu, lambda);
+            let rhs = (-mu * (1.0 - d) / lambda).exp();
+            assert!((d - rhs).abs() < 1e-10, "μ={mu} λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn unstable_queue_has_infinite_wait() {
+        assert!(mean_waiting_time(1.0, 1.0).is_infinite());
+        assert!(mean_waiting_time(1.0, 2.0).is_infinite());
+    }
+
+    #[test]
+    fn waiting_time_monotone_in_load() {
+        let mu = 1.0;
+        let mut prev = 0.0;
+        for lambda in [0.2, 0.4, 0.6, 0.8, 0.95] {
+            let w = mean_waiting_time(mu, lambda);
+            assert!(w > prev);
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn theorem2_capacity_achieves_sigma() {
+        // at the capacity rule's arrival rate, W == σ (up to fp error)
+        for (mu, sigma) in [(1.0, 1.0), (2.0, 0.5), (0.7, 2.0)] {
+            let c = capacity_for_waiting_time(mu, sigma);
+            assert!(c < mu, "capacity must keep the queue stable");
+            let w = mean_waiting_time(mu, c);
+            assert!(
+                (w - sigma).abs() < 1e-6,
+                "μ={mu} σ={sigma}: W(C)={w}"
+            );
+            // any arrival rate below C gives a smaller wait
+            let w_less = mean_waiting_time(mu, 0.9 * c);
+            assert!(w_less < sigma);
+        }
+    }
+
+    #[test]
+    fn link_capacity_rule_bounds_simulated_delay() {
+        // the §IV-A1 link analog: same guarantee on a transfer queue
+        let (mu, sigma) = (3.0, 0.4);
+        let c = link_capacity_for_delay(mu, sigma);
+        assert!(c < mu);
+        let w = mean_waiting_time(mu, c);
+        assert!((w - sigma).abs() < 1e-6);
+    }
+
+    #[test]
+    fn theorem2_phi_is_increasing_in_capacity() {
+        // φ(C) increasing in C (claimed in the theorem statement)
+        let mu = 1.0;
+        let mut prev = 0.0;
+        for c in [0.2, 0.4, 0.6, 0.8] {
+            let phi = delta_fixed_point(mu, c);
+            assert!(phi > prev);
+            prev = phi;
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Straggler / queueing substrate behind Theorem 2 (§IV-A1).
+//!
+//! Processing at a device is a D/M/1 queue: deterministic arrivals at rate
+//! `G_i(t) ≤ C_i` and exponential service times (`exp(μ)` stragglers, the
+//! standard model of [40]). [`dm1`] provides the closed-form waiting time
+//! and the Theorem-2 capacity rule; [`straggler`] is a discrete-event
+//! simulator used to validate both.
+
+pub mod dm1;
+pub mod straggler;
+
+pub use dm1::{capacity_for_waiting_time, mean_waiting_time};

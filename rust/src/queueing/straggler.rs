@@ -1,0 +1,94 @@
+//! Discrete-event D/M/1 simulator: validates the closed forms in [`super::dm1`]
+//! and powers the Theorem-2 validation experiment (`fogml exp theory`).
+//!
+//! Arrivals are deterministic at rate λ (one datapoint every 1/λ time
+//! units); service times are `exp(μ)` — the straggler model. The simulator
+//! reports the mean *waiting* time (time in queue, excluding service), the
+//! quantity Theorem 2 bounds.
+
+use crate::util::rng::Rng;
+
+/// Result of a simulation run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub mean_wait: f64,
+    pub max_wait: f64,
+    pub utilization: f64,
+}
+
+/// Simulate `n_jobs` deterministic arrivals at rate `lambda` through a
+/// single `exp(mu)` server; returns waiting statistics (after discarding a
+/// 10% warm-up prefix).
+pub fn simulate(mu: f64, lambda: f64, n_jobs: usize, rng: &mut Rng) -> SimResult {
+    assert!(mu > 0.0 && lambda > 0.0 && n_jobs > 1);
+    let interarrival = 1.0 / lambda;
+    let mut server_free_at = 0.0f64;
+    let mut waits = Vec::with_capacity(n_jobs);
+    let mut busy_time = 0.0f64;
+    let mut arrival = 0.0f64;
+    for _ in 0..n_jobs {
+        let start = server_free_at.max(arrival);
+        let wait = start - arrival;
+        let service = rng.exponential(mu);
+        server_free_at = start + service;
+        busy_time += service;
+        waits.push(wait);
+        arrival += interarrival;
+    }
+    let warmup = n_jobs / 10;
+    let tail = &waits[warmup..];
+    SimResult {
+        mean_wait: tail.iter().sum::<f64>() / tail.len() as f64,
+        max_wait: tail.iter().cloned().fold(0.0, f64::max),
+        utilization: busy_time / server_free_at,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queueing::dm1::mean_waiting_time;
+
+    #[test]
+    fn simulation_matches_closed_form() {
+        let mut rng = Rng::new(42);
+        for (mu, lambda) in [(1.0, 0.5), (1.0, 0.8), (2.0, 1.5)] {
+            let analytic = mean_waiting_time(mu, lambda);
+            let sim = simulate(mu, lambda, 200_000, &mut rng);
+            let rel = (sim.mean_wait - analytic).abs() / analytic;
+            assert!(
+                rel < 0.08,
+                "μ={mu} λ={lambda}: sim={} analytic={analytic}",
+                sim.mean_wait
+            );
+        }
+    }
+
+    #[test]
+    fn utilization_close_to_rho() {
+        let mut rng = Rng::new(7);
+        let sim = simulate(1.0, 0.6, 100_000, &mut rng);
+        assert!((sim.utilization - 0.6).abs() < 0.03, "{}", sim.utilization);
+    }
+
+    #[test]
+    fn light_load_rarely_waits() {
+        let mut rng = Rng::new(8);
+        let sim = simulate(10.0, 0.5, 50_000, &mut rng);
+        assert!(sim.mean_wait < 0.02, "{}", sim.mean_wait);
+    }
+
+    #[test]
+    fn theorem2_rule_validated_by_simulation() {
+        // capacity from Theorem 2 must empirically keep W under σ
+        let mut rng = Rng::new(9);
+        let (mu, sigma) = (1.0, 1.0);
+        let c = crate::queueing::dm1::capacity_for_waiting_time(mu, sigma);
+        let sim = simulate(mu, c, 300_000, &mut rng);
+        assert!(
+            sim.mean_wait < sigma * 1.08,
+            "W={} exceeds σ={sigma}",
+            sim.mean_wait
+        );
+    }
+}

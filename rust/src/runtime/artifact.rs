@@ -1,0 +1,170 @@
+//! Artifact manifest: the positional ABI contract between the python AOT
+//! pipeline and the rust runtime.
+//!
+//! `artifacts/manifest.json` (written by `python -m compile.aot`) records,
+//! for every entry point, the input/output dtypes+shapes and the shared
+//! shape constants. The runtime refuses to start on a mismatch with the
+//! crate's compiled-in constants — shape drift between the layers is a
+//! build error, not a runtime surprise.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::dataset::{IMG_PIXELS, NUM_CLASSES};
+use crate::util::json::Json;
+
+/// Shape+dtype of one tensor in an entry's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    /// Default artifacts location: `$FOGML_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FOGML_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unexpected manifest format (want hlo-text)");
+        }
+
+        let consts = json
+            .get("constants")
+            .ok_or_else(|| anyhow!("manifest missing constants"))?;
+        let get_const = |k: &str| -> Result<usize> {
+            consts
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing constant {k}"))
+        };
+        // cross-layer shape agreement
+        let img_pixels = get_const("img_pixels")?;
+        let num_classes = get_const("num_classes")?;
+        if img_pixels != IMG_PIXELS || num_classes != NUM_CLASSES {
+            bail!(
+                "artifact shape drift: python built img_pixels={img_pixels}, \
+                 num_classes={num_classes}; rust expects {IMG_PIXELS}/{NUM_CLASSES}. \
+                 Re-run `make artifacts`."
+            );
+        }
+        let batch = get_const("batch")?;
+
+        let mut entries = BTreeMap::new();
+        let raw_entries = json
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, e) in raw_entries {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        Ok(TensorSpec {
+                            dtype: s
+                                .get("dtype")
+                                .and_then(Json::as_str)
+                                .unwrap_or("float32")
+                                .to_string(),
+                            shape: s
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .ok_or_else(|| anyhow!("bad shape in {name}"))?
+                                .iter()
+                                .map(|d| d.as_usize().unwrap_or(0))
+                                .collect(),
+                        })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact entry '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Requires `make artifacts` (Makefile runs it before `cargo test`).
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load_default().expect("run `make artifacts` first");
+        assert_eq!(m.batch, 32);
+        for name in ["mlp_train", "mlp_eval", "cnn_train", "cnn_eval", "dense_micro"] {
+            let e = m.entry(name).unwrap();
+            assert!(e.file.exists(), "{} missing", e.file.display());
+            assert!(!e.inputs.is_empty());
+            assert!(!e.outputs.is_empty());
+        }
+        // train ABI: params..., x, onehot, wt, lr
+        let train = m.entry("mlp_train").unwrap();
+        assert_eq!(train.inputs.len(), 8);
+        assert_eq!(train.outputs.len(), 5);
+        let x = &train.inputs[4];
+        assert_eq!(x.shape, vec![m.batch, IMG_PIXELS]);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

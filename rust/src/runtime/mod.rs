@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `make artifacts` and executes them on the XLA CPU client.
+//!
+//! Python never runs here — the HLO text is parsed, compiled once per entry
+//! point, and executed from the L3 hot path. See DESIGN.md for why HLO
+//! *text* (not serialized protos) is the interchange format.
+//!
+//! NOTE: `xla::PjRtClient` is `Rc`-based (not `Send`), so a [`Runtime`] is
+//! confined to the thread that created it. The [`crate::coordinator`]
+//! module provides the message-passing service wrapper for multi-threaded
+//! use.
+
+pub mod artifact;
+pub mod model;
+pub mod tensor;
+
+pub use artifact::Manifest;
+pub use model::{ModelKind, Runtime};
+pub use tensor::HostTensor;

@@ -1,0 +1,281 @@
+//! The executable runtime: compile HLO-text artifacts once, then execute
+//! train/eval steps from the L3 hot path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::{EntrySpec, Manifest};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Which classifier an experiment trains (§V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Mlp,
+    Cnn,
+}
+
+impl ModelKind {
+    pub fn train_entry(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp_train",
+            ModelKind::Cnn => "cnn_train",
+        }
+    }
+
+    pub fn eval_entry(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp_eval",
+            ModelKind::Cnn => "cnn_eval",
+        }
+    }
+
+    /// Number of parameter tensors (leading inputs of the train entry).
+    pub fn num_params(&self) -> usize {
+        match self {
+            ModelKind::Mlp => 4,
+            ModelKind::Cnn => 6,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Ok(ModelKind::Mlp),
+            "cnn" => Ok(ModelKind::Cnn),
+            other => bail!("unknown model '{other}' (want mlp|cnn)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelKind::Mlp => write!(f, "MLP"),
+            ModelKind::Cnn => write!(f, "CNN"),
+        }
+    }
+}
+
+/// Compiled entry point plus its signature.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.run_literals(&refs)?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Hot-path variant: literals in (by reference, no copies), literals
+    /// out. Lets callers keep model parameters literal-resident across
+    /// successive steps instead of converting through `HostTensor` each
+    /// call (EXPERIMENTS.md §Perf).
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, want {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // python lowers with return_tuple=True: always a tuple
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// The per-thread runtime: PJRT CPU client + compile cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU client. Compilation of each
+    /// entry happens lazily on first use and is cached.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(Manifest::load_default()?)
+    }
+
+    pub fn load(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    /// Get (compiling if necessary) an entry point.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let executable = std::rc::Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// He-style initialization of a model's parameter tensors, shaped per
+    /// the manifest (deterministic under `seed`). Weights ~ N(0, 2/fan_in),
+    /// biases zero.
+    pub fn init_params(&self, kind: ModelKind, seed: u64) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.entry(kind.train_entry())?;
+        let mut rng = Rng::new(seed ^ 0x1217_AB1E);
+        let mut params = Vec::with_capacity(kind.num_params());
+        for ts in spec.inputs.iter().take(kind.num_params()) {
+            let len: usize = ts.shape.iter().product();
+            if ts.shape.len() >= 2 {
+                // fan_in = product of all dims but the last
+                let fan_in: usize = ts.shape[..ts.shape.len() - 1].iter().product();
+                let scale = (2.0 / fan_in as f64).sqrt();
+                let data: Vec<f32> =
+                    (0..len).map(|_| (rng.normal() * scale) as f32).collect();
+                params.push(HostTensor::new(ts.shape.clone(), data));
+            } else {
+                params.push(HostTensor::zeros(ts.shape.clone()));
+            }
+        }
+        Ok(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{IMG_PIXELS, NUM_CLASSES};
+
+    fn runtime() -> Runtime {
+        Runtime::load_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn dense_micro_executes_and_matches_cpu_reference() {
+        let rt = runtime();
+        let exe = rt.executable("dense_micro").unwrap();
+        let (m, k, n) = (128usize, IMG_PIXELS, 128usize);
+        let mut rng = Rng::new(3);
+        let x = HostTensor::new(vec![m, k], (0..m * k).map(|_| rng.f32() - 0.5).collect());
+        let w = HostTensor::new(vec![k, n], (0..k * n).map(|_| rng.f32() - 0.5).collect());
+        let b = HostTensor::new(vec![n], (0..n).map(|_| rng.f32()).collect());
+        let out = exe.run(&[x.clone(), w.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![m, n]);
+        // reference matmul + bias + relu on host
+        for row in [0usize, 17, 127] {
+            for col in [0usize, 63, 127] {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += x.data[row * k + kk] * w.data[kk * n + col];
+                }
+                let want = (acc + b.data[col]).max(0.0);
+                let got = out[0].data[row * n + col];
+                assert!(
+                    (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+                    "({row},{col}): want {want} got {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_train_step_decreases_loss() {
+        let rt = runtime();
+        let exe = rt.executable("mlp_train").unwrap();
+        let b = rt.batch();
+        let mut params = rt.init_params(ModelKind::Mlp, 7).unwrap();
+
+        // a separable toy batch: class = argmax over first NUM_CLASSES pixels
+        let mut rng = Rng::new(5);
+        let mut x = vec![0f32; b * IMG_PIXELS];
+        let mut onehot = vec![0f32; b * NUM_CLASSES];
+        for i in 0..b {
+            let label = rng.below(NUM_CLASSES);
+            for p in 0..IMG_PIXELS {
+                x[i * IMG_PIXELS + p] = rng.f32() * 0.1;
+            }
+            x[i * IMG_PIXELS + label] = 3.0;
+            onehot[i * NUM_CLASSES + label] = 1.0;
+        }
+        let xt = HostTensor::new(vec![b, IMG_PIXELS], x);
+        let yt = HostTensor::new(vec![b, NUM_CLASSES], onehot);
+        let wt = HostTensor::new(vec![b], vec![1.0; b]);
+        let lr = HostTensor::scalar(0.1);
+
+        let mut losses = Vec::new();
+        for _ in 0..15 {
+            let mut inputs = params.clone();
+            inputs.extend([xt.clone(), yt.clone(), wt.clone(), lr.clone()]);
+            let out = exe.run(&inputs).unwrap();
+            assert_eq!(out.len(), 5);
+            losses.push(out[4].data[0]);
+            params = out[..4].to_vec();
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "loss did not decrease: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn eval_entry_returns_logits() {
+        let rt = runtime();
+        let exe = rt.executable("mlp_eval").unwrap();
+        let b = rt.batch();
+        let params = rt.init_params(ModelKind::Mlp, 9).unwrap();
+        let x = HostTensor::zeros(vec![b, IMG_PIXELS]);
+        let mut inputs = params;
+        inputs.push(x);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![b, NUM_CLASSES]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let rt = runtime();
+        let a = rt.executable("mlp_eval").unwrap();
+        let b = rt.executable("mlp_eval").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn init_params_shapes_match_manifest() {
+        let rt = runtime();
+        for kind in [ModelKind::Mlp, ModelKind::Cnn] {
+            let params = rt.init_params(kind, 1).unwrap();
+            assert_eq!(params.len(), kind.num_params());
+            let spec = rt.manifest.entry(kind.train_entry()).unwrap();
+            for (p, s) in params.iter().zip(&spec.inputs) {
+                assert_eq!(p.shape, s.shape);
+            }
+            // deterministic
+            let again = rt.init_params(kind, 1).unwrap();
+            assert_eq!(params[0].data, again[0].data);
+        }
+    }
+}

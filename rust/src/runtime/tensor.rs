@@ -1,0 +1,127 @@
+//! Host-side tensors: the bridge between rust `Vec<f32>` data and XLA
+//! literals.
+
+use anyhow::{ensure, Result};
+
+/// A shaped f32 tensor in host memory (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let len = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; len] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal of matching shape (single copy via the
+    /// untyped-data constructor; `vec1 + reshape` would copy twice — see
+    /// EXPERIMENTS.md §Perf).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * std::mem::size_of::<f32>(),
+            )
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    /// Read a literal back into host memory.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        ensure!(
+            dims.iter().product::<usize>() == data.len(),
+            "literal shape/data mismatch"
+        );
+        Ok(HostTensor { shape: dims, data })
+    }
+
+    /// Elementwise in-place axpy: `self += alpha * other` (shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all elements in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// L2 norm (for tests / diagnostics).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_ops() {
+        let mut a = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = HostTensor::scalar(0.01);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.data, vec![0.01]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Node churn process of §V-E.
+//!
+//! Devices in the network exit with probability `p_exit` per interval;
+//! devices outside re-enter with probability `p_entry`. The paper's
+//! worst-case semantics are preserved by the federated engine: an exiting
+//! node cannot ship its local update first, and a re-entering node waits for
+//! the next global aggregation before resuming (it is *present* but not
+//! *synchronized*; see [`crate::fed::engine`]).
+
+use crate::util::rng::Rng;
+
+/// Markov on/off churn over `n` devices.
+#[derive(Debug, Clone)]
+pub struct ChurnProcess {
+    pub p_exit: f64,
+    pub p_entry: f64,
+    active: Vec<bool>,
+    /// history of active counts, one per step() call
+    active_counts: Vec<usize>,
+}
+
+impl ChurnProcess {
+    /// All devices start active (paper §V-E: "initially, all devices are in
+    /// the network").
+    pub fn new(n: usize, p_exit: f64, p_entry: f64) -> Self {
+        ChurnProcess {
+            p_exit,
+            p_entry,
+            active: vec![true; n],
+            active_counts: Vec::new(),
+        }
+    }
+
+    /// A static network (no churn): step() never changes anything.
+    pub fn static_network(n: usize) -> Self {
+        Self::new(n, 0.0, 0.0)
+    }
+
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    pub fn num_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Advance one interval; returns the set of devices that re-entered
+    /// this step (they must wait for the next aggregation to sync).
+    pub fn step(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let mut entered = Vec::new();
+        for i in 0..self.active.len() {
+            if self.active[i] {
+                if rng.bool(self.p_exit) {
+                    self.active[i] = false;
+                }
+            } else if rng.bool(self.p_entry) {
+                self.active[i] = true;
+                entered.push(i);
+            }
+        }
+        self.active_counts.push(self.num_active());
+        entered
+    }
+
+    /// Mean number of active devices over all steps so far.
+    pub fn mean_active(&self) -> f64 {
+        if self.active_counts.is_empty() {
+            self.active.len() as f64
+        } else {
+            self.active_counts.iter().sum::<usize>() as f64 / self.active_counts.len() as f64
+        }
+    }
+
+    /// Stationary expected active fraction p_entry / (p_entry + p_exit)
+    /// (both > 0), used by tests and the §V-E analysis.
+    pub fn stationary_active_fraction(&self) -> f64 {
+        if self.p_exit == 0.0 && self.p_entry == 0.0 {
+            1.0
+        } else if self.p_entry + self.p_exit == 0.0 {
+            1.0
+        } else {
+            self.p_entry / (self.p_entry + self.p_exit)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_network_never_changes() {
+        let mut c = ChurnProcess::static_network(10);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let entered = c.step(&mut rng);
+            assert!(entered.is_empty());
+            assert_eq!(c.num_active(), 10);
+        }
+        assert_eq!(c.mean_active(), 10.0);
+    }
+
+    #[test]
+    fn all_exit_with_p_one() {
+        let mut c = ChurnProcess::new(10, 1.0, 0.0);
+        let mut rng = Rng::new(2);
+        c.step(&mut rng);
+        assert_eq!(c.num_active(), 0);
+    }
+
+    #[test]
+    fn converges_to_stationary_fraction() {
+        let mut c = ChurnProcess::new(200, 0.02, 0.02);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            c.step(&mut rng);
+        }
+        // stationary fraction = 0.5; average over the trajectory (burn-in
+        // from all-active start biases up slightly)
+        let frac = c.mean_active() / 200.0;
+        assert!(frac > 0.45 && frac < 0.65, "frac={frac}");
+        assert_eq!(c.stationary_active_fraction(), 0.5);
+    }
+
+    #[test]
+    fn entered_nodes_reported() {
+        let mut c = ChurnProcess::new(5, 1.0, 1.0);
+        let mut rng = Rng::new(4);
+        c.step(&mut rng); // everyone exits
+        assert_eq!(c.num_active(), 0);
+        let entered = c.step(&mut rng); // everyone re-enters
+        assert_eq!(entered.len(), 5);
+    }
+}

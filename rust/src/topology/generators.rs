@@ -1,0 +1,263 @@
+//! Topology generators for the fog scenarios of Table I and §V.
+//!
+//! * `fully_connected` — §V-B's default (`E = {(i,j): i≠j}`).
+//! * `erdos_renyi` — §V-C2's random graph with `P[(i,j) ∈ E] = ρ`.
+//! * `watts_strogatz` — §V-D's social-network model (small world, each node
+//!   wired to `k` ring neighbors with rewiring probability `beta`).
+//! * `hierarchical` — §V-D: the `n/3` lowest-processing-cost nodes act as
+//!   heads, each connected to two of the remaining `2n/3` nodes at random.
+//! * `scale_free` — Barabási–Albert preferential attachment; degree
+//!   distribution `N(k) ∝ k^(1-γ)` as assumed by Theorem 5.
+//! * `star` — the single-edge-server scenario of Theorem 4.
+
+use crate::topology::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Every ordered pair is a link.
+pub fn fully_connected(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Undirected Erdős–Rényi: each unordered pair linked (both directions)
+/// with probability `rho`.
+pub fn erdos_renyi(n: usize, rho: f64, rng: &mut Rng) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.bool(rho) {
+                g.add_undirected(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Watts–Strogatz small world: ring lattice with `k` nearest neighbors per
+/// node (k rounded up to even), each edge rewired with probability `beta`.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Rng) -> Graph {
+    let k = k.max(2).min(n.saturating_sub(1));
+    let half = k / 2;
+    let mut g = Graph::empty(n);
+    if n < 2 {
+        return g;
+    }
+    for i in 0..n {
+        for d in 1..=half.max(1) {
+            let j = (i + d) % n;
+            if rng.bool(beta) {
+                // rewire: random non-self, non-duplicate target
+                let mut tries = 0;
+                loop {
+                    let t = rng.below(n);
+                    if t != i && !g.has_edge(i, t) {
+                        g.add_undirected(i, t);
+                        break;
+                    }
+                    tries += 1;
+                    if tries > 4 * n {
+                        g.add_undirected(i, j);
+                        break;
+                    }
+                }
+            } else {
+                g.add_undirected(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Hierarchical topology (§V-D): heads = the `n/3` devices with the lowest
+/// processing costs; each head is wired (bidirectionally) to two random
+/// non-head devices. `costs[i]` is each device's representative processing
+/// cost (e.g. time-averaged `c_i(t)`).
+pub fn hierarchical(n: usize, costs: &[f64], rng: &mut Rng) -> Graph {
+    assert_eq!(costs.len(), n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap());
+    let n_heads = (n / 3).max(1);
+    let heads = &order[..n_heads];
+    let leaves = &order[n_heads..];
+    let mut g = Graph::empty(n);
+    if leaves.is_empty() {
+        return g;
+    }
+    for &h in heads {
+        // two distinct random leaves per head (or one if only one exists)
+        let picks = rng.sample_indices(leaves.len(), 2.min(leaves.len()));
+        for p in picks {
+            g.add_undirected(h, leaves[p]);
+        }
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new node.
+/// Produces the scale-free degree law `N(k) ∝ k^{-γ}`, γ ≈ 3 (Theorem 5
+/// writes the fraction of devices with k neighbors as `Γ k^{1-γ}`).
+pub fn scale_free(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    let m = m.max(1);
+    let mut g = Graph::empty(n);
+    if n == 0 {
+        return g;
+    }
+    let seed = (m + 1).min(n);
+    // seed clique
+    for i in 0..seed {
+        for j in (i + 1)..seed {
+            g.add_undirected(i, j);
+        }
+    }
+    // repeated-endpoint list: preferential attachment by degree
+    let mut endpoints: Vec<usize> = Vec::new();
+    for (i, j) in g.edges().collect::<Vec<_>>() {
+        endpoints.push(i);
+        endpoints.push(j);
+    }
+    for v in seed..n {
+        let mut targets = Vec::new();
+        let mut guard = 0;
+        while targets.len() < m.min(v) && guard < 100 * n {
+            let t = if endpoints.is_empty() {
+                rng.below(v)
+            } else {
+                *rng.choose(&endpoints)
+            };
+            if t != v && !targets.contains(&t) {
+                targets.push(t);
+            }
+            guard += 1;
+        }
+        for t in targets {
+            g.add_undirected(v, t);
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    g
+}
+
+/// Star: devices 0..n-1 all bidirectionally linked to a hub (device n-1 by
+/// convention is NOT the hub — pass `hub` explicitly). Used for the
+/// Theorem-4 edge-server scenario where the hub is the server-class node.
+pub fn star(n: usize, hub: usize, ) -> Graph {
+    assert!(hub < n);
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        if i != hub {
+            g.add_undirected(i, hub);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_connected_degree() {
+        let g = fully_connected(6);
+        assert_eq!(g.num_edges(), 30);
+        for i in 0..6 {
+            assert_eq!(g.out_degree(i), 5);
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_extremes() {
+        let mut rng = Rng::new(1);
+        let empty = erdos_renyi(8, 0.0, &mut rng);
+        assert_eq!(empty.num_edges(), 0);
+        let full = erdos_renyi(8, 1.0, &mut rng);
+        assert_eq!(full.num_edges(), 8 * 7);
+    }
+
+    #[test]
+    fn erdos_renyi_density_matches_rho() {
+        let mut rng = Rng::new(2);
+        let n = 40;
+        let g = erdos_renyi(n, 0.3, &mut rng);
+        let density = g.num_edges() as f64 / (n * (n - 1)) as f64;
+        assert!((density - 0.3).abs() < 0.06, "density={density}");
+    }
+
+    #[test]
+    fn watts_strogatz_ring_degree() {
+        let mut rng = Rng::new(3);
+        let g = watts_strogatz(20, 4, 0.0, &mut rng);
+        // beta=0: pure ring lattice, every node degree k
+        for i in 0..20 {
+            assert_eq!(g.out_degree(i), 4, "node {i}");
+        }
+        assert!(g.is_connected_undirected());
+    }
+
+    #[test]
+    fn watts_strogatz_rewiring_preserves_edge_count_roughly() {
+        let mut rng = Rng::new(4);
+        let g0 = watts_strogatz(30, 6, 0.0, &mut rng);
+        let g1 = watts_strogatz(30, 6, 0.5, &mut rng);
+        // each undirected edge contributes 2
+        assert_eq!(g0.num_edges(), 30 * 6);
+        let diff = (g1.num_edges() as i64 - g0.num_edges() as i64).abs();
+        assert!(diff <= 30, "diff={diff}");
+    }
+
+    #[test]
+    fn hierarchical_heads_are_cheapest() {
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let costs: Vec<f64> = (0..n).map(|i| i as f64).collect(); // 0..3 are heads
+        let g = hierarchical(n, &costs, &mut rng);
+        // every edge must touch a head (bipartite head-leaf structure)
+        for (i, j) in g.edges() {
+            assert!(i < 4 || j < 4, "edge ({i},{j}) between leaves");
+        }
+        // heads have degree >= 1
+        for h in 0..4 {
+            assert!(g.out_degree(h) >= 1);
+        }
+    }
+
+    #[test]
+    fn scale_free_has_hubs() {
+        let mut rng = Rng::new(6);
+        let g = scale_free(100, 2, &mut rng);
+        assert!(g.is_connected_undirected());
+        let hist = g.degree_histogram();
+        let max_deg = hist.len() - 1;
+        // preferential attachment must create hubs well above m
+        assert!(max_deg >= 8, "max degree {max_deg}");
+        let mean_deg = g.avg_degree();
+        assert!(mean_deg < 2.0 * 2.0 * 2.0, "mean {mean_deg}");
+    }
+
+    #[test]
+    fn star_shape() {
+        let g = star(5, 0);
+        assert_eq!(g.out_degree(0), 4);
+        for i in 1..5 {
+            assert_eq!(g.out_degree(i), 1);
+            assert!(g.has_edge(i, 0) && g.has_edge(0, i));
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = erdos_renyi(15, 0.4, &mut Rng::new(9));
+        let b = erdos_renyi(15, 0.4, &mut Rng::new(9));
+        assert_eq!(a, b);
+        let c = scale_free(30, 2, &mut Rng::new(9));
+        let d = scale_free(30, 2, &mut Rng::new(9));
+        assert_eq!(c, d);
+    }
+}

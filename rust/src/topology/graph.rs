@@ -1,0 +1,192 @@
+//! Directed device graph `({s, V}, E)` from §III-A2.
+//!
+//! Vertices are the `n` fog devices; the aggregation server is implicit
+//! (every device can reach it for parameter aggregation — the paper excludes
+//! that traffic from the cost model). Edges are directed offloading links
+//! `(i, j)` with per-interval capacities and costs stored separately in
+//! [`crate::costs::CostSchedule`].
+
+use std::collections::BTreeSet;
+
+/// Directed graph over `n` devices with O(1) edge queries and
+/// adjacency iteration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    out: Vec<Vec<usize>>,
+    inn: Vec<Vec<usize>>,
+    edge_set: BTreeSet<(usize, usize)>,
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Self {
+        Graph { n, out: vec![Vec::new(); n], inn: vec![Vec::new(); n], edge_set: BTreeSet::new() }
+    }
+
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Graph::empty(n);
+        for &(i, j) in edges {
+            g.add_edge(i, j);
+        }
+        g
+    }
+
+    /// Add directed edge i -> j (idempotent; self-loops rejected).
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i < self.n && j < self.n, "edge ({i},{j}) out of range n={}", self.n);
+        if i == j || self.edge_set.contains(&(i, j)) {
+            return;
+        }
+        self.edge_set.insert((i, j));
+        self.out[i].push(j);
+        self.inn[j].push(i);
+    }
+
+    /// Add both i -> j and j -> i.
+    pub fn add_undirected(&mut self, i: usize, j: usize) {
+        self.add_edge(i, j);
+        self.add_edge(j, i);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_set.len()
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.edge_set.contains(&(i, j))
+    }
+
+    /// Out-neighborhood of i: devices i can offload to.
+    pub fn out_neighbors(&self, i: usize) -> &[usize] {
+        &self.out[i]
+    }
+
+    /// In-neighborhood `N_i = {j : (j, i) ∈ E}` (Theorem 3's notation).
+    pub fn in_neighbors(&self, i: usize) -> &[usize] {
+        &self.inn[i]
+    }
+
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out[i].len()
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.edge_set.iter().copied()
+    }
+
+    /// Average out-degree over all devices.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.n as f64
+        }
+    }
+
+    /// Whether the graph, viewed undirected and including the implicit
+    /// server (which links every device), is connected. Since the server
+    /// connects all devices, this is trivially true for n >= 1; the method
+    /// instead reports whether the *device-to-device* graph is connected,
+    /// which the experiments use to characterize topologies.
+    pub fn is_connected_undirected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &w in self.out[v].iter().chain(self.inn[v].iter()) {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Restrict to the active subset: edges with both endpoints active.
+    /// Vertex ids are preserved (inactive vertices become isolated).
+    pub fn restrict(&self, active: &[bool]) -> Graph {
+        assert_eq!(active.len(), self.n);
+        let mut g = Graph::empty(self.n);
+        for &(i, j) in &self.edge_set {
+            if active[i] && active[j] {
+                g.add_edge(i, j);
+            }
+        }
+        g
+    }
+
+    /// Out-degree histogram: `hist[k]` = number of devices with k out-edges.
+    pub fn degree_histogram(&self) -> Vec<usize> {
+        let maxd = (0..self.n).map(|i| self.out[i].len()).max().unwrap_or(0);
+        let mut hist = vec![0usize; maxd + 1];
+        for i in 0..self.n {
+            hist[self.out[i].len()] += 1;
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_edge_basics() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(0, 1); // idempotent
+        g.add_edge(1, 0);
+        g.add_edge(2, 2); // self-loop rejected
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 2));
+        assert_eq!(g.out_neighbors(0), &[1]);
+        assert_eq!(g.in_neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut g = Graph::empty(4);
+        g.add_undirected(0, 1);
+        g.add_undirected(2, 3);
+        assert!(!g.is_connected_undirected());
+        g.add_edge(1, 2);
+        assert!(g.is_connected_undirected());
+    }
+
+    #[test]
+    fn restrict_drops_inactive_edges() {
+        let mut g = Graph::empty(3);
+        g.add_undirected(0, 1);
+        g.add_undirected(1, 2);
+        let r = g.restrict(&[true, false, true]);
+        assert_eq!(r.num_edges(), 0);
+        assert_eq!(r.n(), 3);
+    }
+
+    #[test]
+    fn degree_histogram_counts() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 2);
+        assert_eq!(g.degree_histogram(), vec![1, 1, 1]); // deg0:1 (v2), deg1:1 (v1), deg2:1 (v0)
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_edge_panics() {
+        let mut g = Graph::empty(2);
+        g.add_edge(0, 5);
+    }
+}

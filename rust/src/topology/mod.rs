@@ -1,0 +1,10 @@
+//! Fog network topology substrate: directed device graphs, the generators
+//! for every topology family the paper evaluates (Table I / §V-D), and the
+//! node churn process of §V-E.
+
+pub mod dynamics;
+pub mod generators;
+pub mod graph;
+
+pub use dynamics::ChurnProcess;
+pub use graph::Graph;

@@ -1,0 +1,256 @@
+//! Deterministic pseudo-random number generation (SplitMix64 core).
+//!
+//! Every stochastic element of the reproduction — dataset synthesis, device
+//! arrivals, topology wiring, cost traces, churn — draws from this generator
+//! so that a single `seed` in the experiment config reproduces a run
+//! bit-for-bit. SplitMix64 passes BigCrush, is trivially seedable, and its
+//! `split` operation gives independent child streams so subsystems cannot
+//! perturb each other's sequences when call orders change.
+
+/// SplitMix64 PRNG with Box–Muller caching for normal deviates.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams for practical purposes.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare_normal: None }
+    }
+
+    /// Derive an independent child stream (e.g. one per device).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xDEAD_BEEF_CAFE_F00D)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [a, b).
+    pub fn uniform(&mut self, a: f64, b: f64) -> f64 {
+        a + (b - a) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Panics if n == 0.
+    /// Lemire multiply-shift with rejection of the biased tail.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below(0)");
+        let n = n as u64;
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let wide = (self.next_u64() as u128) * (n as u128);
+            if wide as u64 >= threshold {
+                return (wide >> 64) as usize;
+            }
+        }
+    }
+
+    /// Bernoulli draw with probability p.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the spare deviate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean and standard deviation.
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with the given rate (mean 1/rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        -(1.0 - self.f64()).ln() / rate
+    }
+
+    /// Poisson-distributed count (Knuth's method for small lambda, normal
+    /// approximation above 30 — our arrival means are single digits).
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let x = self.normal_with(lambda, lambda.sqrt());
+            return x.max(0.0).round() as usize;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices drawn from [0, n) (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // partial Fisher–Yates over an index vector
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Uniformly pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniformish() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_coverage() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / 70_000.0;
+            assert!((frac - 1.0 / 7.0).abs() < 0.01, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut r = Rng::new(13);
+        for &lambda in &[0.5, 3.0, 8.0, 40.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.poisson(lambda)).sum::<usize>() as f64 / n as f64;
+            assert!((mean - lambda).abs() < 0.15 * lambda.max(1.0), "lambda={lambda} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(23);
+        for _ in 0..100 {
+            let ks = r.sample_indices(20, 8);
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8);
+            assert!(ks.iter().all(|&k| k < 20));
+        }
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Rng::new(5);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! End-to-end engine integration tests: artifacts → runtime → movement →
+//! training → aggregation → evaluation. Requires `make artifacts`.
+
+use fogml::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method};
+use fogml::fed;
+use fogml::movement::DiscardModel;
+use fogml::runtime::Runtime;
+
+/// Small-but-real configuration: quick enough for CI, large enough that
+/// learning signal and cost structure are both visible.
+fn small(method: Method) -> EngineConfig {
+    EngineConfig {
+        method,
+        n: 6,
+        t_max: 30,
+        tau: 5,
+        lr: 0.05,
+        n_train: 2400,
+        n_test: 600,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn network_aware_learns_and_saves_cost() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+
+    let fed_out = fed::run(&small(Method::Federated), &rt).unwrap();
+    let na_out = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+
+    // both learn far above chance (10 classes)
+    assert!(fed_out.accuracy > 0.5, "federated acc {}", fed_out.accuracy);
+    assert!(na_out.accuracy > 0.5, "network-aware acc {}", na_out.accuracy);
+    // network-aware stays within a few points of federated (Table II claim)
+    assert!(
+        na_out.accuracy > fed_out.accuracy - 0.10,
+        "network-aware lost too much accuracy: {} vs {}",
+        na_out.accuracy,
+        fed_out.accuracy
+    );
+
+    // federated processes everything it collects, moves nothing
+    assert_eq!(fed_out.movement.offloaded(), 0);
+    assert_eq!(fed_out.movement.discarded(), 0);
+    assert_eq!(fed_out.movement.processed(), fed_out.movement.collected());
+    assert_eq!(fed_out.ledger.transfer, 0.0);
+    assert_eq!(fed_out.ledger.discard, 0.0);
+
+    // network-aware must actually use the network and cut total cost
+    assert!(na_out.movement.offloaded() > 0, "no offloading happened");
+    assert!(
+        na_out.ledger.total() < fed_out.ledger.total(),
+        "movement did not reduce cost: {} vs {}",
+        na_out.ledger.total(),
+        fed_out.ledger.total()
+    );
+
+    // conservation: processed + discarded = collected (every point ends
+    // somewhere; offloaded points are processed later or pending at T)
+    let m = &na_out.movement;
+    let accounted = m.processed() + m.discarded();
+    let in_flight = m.offloaded() as i64
+        - (m.processed() as i64 - (m.collected() as i64 - m.offloaded() as i64 - m.discarded() as i64));
+    assert!(
+        accounted <= m.collected() && m.collected() - accounted <= 64,
+        "conservation broken: processed {} + discarded {} vs collected {} (in flight {in_flight})",
+        m.processed(),
+        m.discarded(),
+        m.collected()
+    );
+}
+
+#[test]
+fn centralized_is_accuracy_upper_bound_ish() {
+    let rt = Runtime::load_default().unwrap();
+    let central = fed::run(&small(Method::Centralized), &rt).unwrap();
+    let na = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    assert!(central.accuracy > 0.6, "centralized acc {}", central.accuracy);
+    // centralized should not lose to network-aware by more than noise
+    assert!(central.accuracy > na.accuracy - 0.05);
+    // no network costs in centralized
+    assert_eq!(central.ledger.total(), 0.0);
+}
+
+#[test]
+fn non_iid_similarity_increases_with_offloading() {
+    let rt = Runtime::load_default().unwrap();
+    let cfg = small(Method::NetworkAware).with(|c| c.iid = false);
+    let out = fed::run(&cfg, &rt).unwrap();
+    let (before, after) = out.similarity;
+    assert!(before < 0.9, "non-iid start should not be fully similar");
+    assert!(
+        after >= before - 0.02,
+        "similarity should not fall: {before} -> {after}"
+    );
+}
+
+#[test]
+fn capacity_constraints_increase_discards() {
+    let rt = Runtime::load_default().unwrap();
+    let uncon = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    let capped = fed::run(
+        &small(Method::NetworkAware).with(|c| c.capacity = CapacityPolicy::MeanArrivals),
+        &rt,
+    )
+    .unwrap();
+    assert!(
+        capped.movement.discarded() >= uncon.movement.discarded(),
+        "caps should not reduce discards: {} vs {}",
+        capped.movement.discarded(),
+        uncon.movement.discarded()
+    );
+}
+
+#[test]
+fn imperfect_information_is_mild() {
+    let rt = Runtime::load_default().unwrap();
+    let perfect = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    let imperfect = fed::run(
+        &small(Method::NetworkAware).with(|c| c.info = InfoMode::Estimated(6)),
+        &rt,
+    )
+    .unwrap();
+    // B vs C in Table III: minor changes only
+    let rel = (imperfect.ledger.total() - perfect.ledger.total()).abs()
+        / perfect.ledger.total().max(1e-9);
+    assert!(rel < 0.5, "estimation blew up cost: rel diff {rel}");
+    assert!(imperfect.accuracy > 0.45);
+}
+
+#[test]
+fn churn_reduces_active_nodes_and_data() {
+    let rt = Runtime::load_default().unwrap();
+    let static_out = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    let dynamic_out = fed::run(
+        &small(Method::NetworkAware)
+            .with(|c| c.churn = Some(Churn { p_exit: 0.05, p_entry: 0.02 })),
+        &rt,
+    )
+    .unwrap();
+    assert!(dynamic_out.mean_active < static_out.mean_active);
+    assert!(dynamic_out.total_collected < static_out.total_collected);
+}
+
+#[test]
+fn discard_models_all_run_and_differ_sensibly() {
+    let rt = Runtime::load_default().unwrap();
+    let base = small(Method::NetworkAware);
+    let linear_r = fed::run(&base.clone().with(|c| c.discard_model = DiscardModel::LinearR), &rt).unwrap();
+    let linear_g = fed::run(&base.clone().with(|c| c.discard_model = DiscardModel::LinearG), &rt).unwrap();
+    let sqrt = fed::run(&base.clone().with(|c| c.discard_model = DiscardModel::Sqrt), &rt).unwrap();
+    // -f·G and f·D·r share the same decision structure up to the f-decay
+    // between t and t+1 (§IV-A2); their realized discard volumes must stay
+    // close (paper Table IV: Di 125 vs 136)
+    let diff = (linear_g.movement.discarded() as i64 - linear_r.movement.discarded() as i64).abs();
+    assert!(
+        diff <= (linear_r.movement.collected() / 10) as i64,
+        "-f·G and f·D·r diverged: {} vs {}",
+        linear_g.movement.discarded(),
+        linear_r.movement.discarded()
+    );
+    for (name, out) in [("linear_r", &linear_r), ("linear_g", &linear_g), ("sqrt", &sqrt)] {
+        assert!(
+            out.accuracy > 0.45,
+            "{name}: acc={} processed={} discarded={} offloaded={} of {}",
+            out.accuracy,
+            out.movement.processed(),
+            out.movement.discarded(),
+            out.movement.offloaded(),
+            out.movement.collected()
+        );
+    }
+}
+
+#[test]
+fn deterministic_under_seed() {
+    let rt = Runtime::load_default().unwrap();
+    let a = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    let b = fed::run(&small(Method::NetworkAware), &rt).unwrap();
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.ledger, b.ledger);
+    assert_eq!(a.movement.collected(), b.movement.collected());
+}
