@@ -1,0 +1,107 @@
+//! Engine-throughput benchmark: serial `fed::run` vs pooled
+//! `SimPool::run_many` over identical (config, seed) grids.
+//!
+//! This is the perf trajectory for the session/pool refactor (DESIGN.md
+//! §Perf): seed fan-outs of 1, 4 and 8 runs, timed end-to-end (substrate
+//! derivation + movement optimization + PJRT training + aggregation).
+//! Emits `BENCH_engine.json` (and a copy under `results/bench/`) so later
+//! PRs have numbers to beat.
+
+use std::time::Instant;
+
+use fogml::config::EngineConfig;
+use fogml::coordinator::SimPool;
+use fogml::experiments::common::seed_sweep;
+use fogml::fed;
+use fogml::runtime::Runtime;
+use fogml::util::json::Json;
+
+const POOL_JOBS: usize = 4;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        n: 6,
+        t_max: 20,
+        tau: 5,
+        n_train: 1600,
+        n_test: 400,
+        ..Default::default()
+    }
+}
+
+fn runs_per_sec(runs: usize, secs: f64) -> f64 {
+    if secs > 0.0 {
+        runs as f64 / secs
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let pool = SimPool::new(POOL_JOBS);
+
+    // warmup: compile the executables on both paths before timing
+    let warm = small().with(|c| {
+        c.t_max = 5;
+        c.n_train = 400;
+        c.n_test = 100;
+    });
+    fed::run(&warm, &rt).expect("serial warmup");
+    // warm every pool service (run_many's work-stealing could leave one
+    // service cold, putting its XLA compilation inside the timed window)
+    pool.warm(&warm).expect("pooled warmup");
+
+    let mut rows = Vec::new();
+    for seeds in [1usize, 4, 8] {
+        let cfgs = seed_sweep(&small(), seeds);
+
+        let start = Instant::now();
+        for cfg in &cfgs {
+            std::hint::black_box(fed::run(cfg, &rt).expect("serial run"));
+        }
+        let serial_s = start.elapsed().as_secs_f64();
+
+        let start = Instant::now();
+        std::hint::black_box(pool.run_many(&cfgs).expect("pooled run"));
+        let pooled_s = start.elapsed().as_secs_f64();
+
+        let serial_rps = runs_per_sec(seeds, serial_s);
+        let pooled_rps = runs_per_sec(seeds, pooled_s);
+        let speedup = if serial_s > 0.0 {
+            serial_s / pooled_s.max(1e-9)
+        } else {
+            0.0
+        };
+        println!(
+            "engine/seeds={seeds:<2} serial {serial_s:>7.2}s ({serial_rps:.2} runs/s)  \
+             pooled×{POOL_JOBS} {pooled_s:>7.2}s ({pooled_rps:.2} runs/s)  speedup {speedup:.2}×"
+        );
+        rows.push(Json::obj(vec![
+            ("seeds", Json::from(seeds)),
+            ("serial_s", Json::from(serial_s)),
+            ("pooled_s", Json::from(pooled_s)),
+            ("serial_runs_per_sec", Json::from(serial_rps)),
+            ("pooled_runs_per_sec", Json::from(pooled_rps)),
+            ("speedup", Json::from(speedup)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::from("bench_engine")),
+        ("pool_jobs", Json::from(POOL_JOBS)),
+        ("config", Json::obj(vec![
+            ("n", Json::from(small().n)),
+            ("t_max", Json::from(small().t_max)),
+            ("tau", Json::from(small().tau)),
+            ("n_train", Json::from(small().n_train)),
+        ])),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let text = report.to_string();
+    std::fs::write("BENCH_engine.json", &text).expect("write BENCH_engine.json");
+    if std::fs::create_dir_all("results/bench").is_ok() {
+        let _ = std::fs::write("results/bench/BENCH_engine.json", &text);
+    }
+    println!("wrote BENCH_engine.json");
+}

@@ -1,7 +1,7 @@
 //! PJRT runtime benchmarks — the per-step cost the whole system pays:
 //! compiled train/eval step latency for both models, the standalone pallas
 //! dense microkernel, and parameter initialization. L1/L2 perf target from
-//! DESIGN.md §Perf is tracked here (before/after in EXPERIMENTS.md §Perf).
+//! DESIGN.md §Perf is tracked here (JSON history under `results/bench/`).
 
 use fogml::bench::Runner;
 use fogml::data::dataset::{IMG_PIXELS, NUM_CLASSES};

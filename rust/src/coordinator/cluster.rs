@@ -11,8 +11,9 @@
 //!    and the next round begins.
 //!
 //! This module exists to prove the system composes as an actual
-//! distributed-shaped runtime; the measurement-focused experiments use the
-//! single-threaded [`crate::fed::engine`] fast path instead.
+//! distributed-shaped runtime; the measurement-focused experiments run the
+//! [`crate::fed::session`] engine instead — single-threaded via
+//! [`crate::fed::run`], or fanned out via [`crate::coordinator::pool::SimPool`].
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 

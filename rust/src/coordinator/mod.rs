@@ -1,18 +1,24 @@
 //! Thread-based leader/worker coordination.
 //!
 //! `xla::PjRtClient` is `Rc`-based and thread-confined, so all PJRT
-//! execution lives on a dedicated **runtime-service thread**; device actors
-//! and the aggregation server communicate with it (and each other) over
-//! `std::sync::mpsc` channels. This mirrors the paper's deployment shape —
-//! devices compute local updates, a server aggregates every τ intervals —
-//! while keeping the simulation engine (`fed::engine`) free to use the
-//! faster single-threaded direct path.
+//! execution lives on dedicated **runtime-service threads**; device actors,
+//! the aggregation server, and pool workers communicate with them (and each
+//! other) over `std::sync::mpsc` channels. This mirrors the paper's
+//! deployment shape — devices compute local updates, a server aggregates
+//! every τ intervals — while keeping the simulation engine
+//! (`fed::session`) free to use the faster single-threaded direct path.
 //!
-//! * [`service`] — the runtime-service thread and its typed handle.
+//! * [`service`] — the runtime-service thread: model/dataset-agnostic,
+//!   with a raw [`ServiceClient`] and a bound [`RuntimeHandle`] that
+//!   implements [`crate::fed::session::Compute`].
+//! * [`pool`] — [`SimPool`]: parallel fan-out of independent
+//!   (config, seed) engine runs across worker threads.
 //! * [`cluster`] — device actors + aggregation server wired together.
 
 pub mod cluster;
+pub mod pool;
 pub mod service;
 
 pub use cluster::{Cluster, ClusterConfig, ClusterReport};
-pub use service::{RuntimeHandle, RuntimeService};
+pub use pool::SimPool;
+pub use service::{DatasetId, RuntimeHandle, RuntimeService, ServiceClient};

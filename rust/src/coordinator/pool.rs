@@ -1,0 +1,166 @@
+//! `SimPool`: parallel fan-out of independent (config, seed) engine runs.
+//!
+//! The paper's evaluation (§V) is built from dozens of independent runs —
+//! every table cell and figure point averages several seeds, and every
+//! sweep walks a parameter grid. Those runs share nothing but the compiled
+//! XLA executables, so they parallelize perfectly: the pool keeps a small
+//! set of [`RuntimeService`] threads (each owning a PJRT runtime and a
+//! compile cache) and streams queued [`EngineConfig`]s through worker
+//! threads that derive substrates, register their datasets, and drive a
+//! [`Session`](crate::fed::session::Session) against a service handle.
+//!
+//! Determinism: a run's output depends only on its config (substrate
+//! derivation is seeded; XLA CPU execution is deterministic), never on
+//! which worker or service executed it or in which order. `jobs = 1`
+//! therefore reproduces the serial `fed::run` numbers bit-for-bit, and
+//! `jobs = N` reproduces `jobs = 1` (see `tests/determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::service::{RuntimeService, ServiceClient};
+use crate::fed::session::{self, EngineOutput, Substrates};
+
+/// A pool of engine workers over shared runtime services.
+pub struct SimPool {
+    jobs: usize,
+    services: Vec<RuntimeService>,
+}
+
+impl SimPool {
+    /// A pool running up to `jobs` concurrent runs, with one runtime
+    /// service per worker (maximum training parallelism; each service
+    /// compiles its own executables once).
+    pub fn new(jobs: usize) -> SimPool {
+        let jobs = jobs.max(1);
+        Self::with_services(jobs, jobs)
+    }
+
+    /// Explicit service count: `services < jobs` makes workers share
+    /// service threads (less memory and compilation, but training requests
+    /// serialize per service — useful when the movement optimizer, not
+    /// training, dominates). `services = 1` is the fully-shared shape.
+    pub fn with_services(jobs: usize, services: usize) -> SimPool {
+        let jobs = jobs.max(1);
+        let services = services.clamp(1, jobs);
+        SimPool {
+            jobs,
+            services: (0..services).map(|_| RuntimeService::spawn_shared()).collect(),
+        }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run one config end-to-end against a service: derive substrates,
+    /// register the datasets, drive the session, release the datasets.
+    pub fn run_one(client: &ServiceClient, cfg: &EngineConfig) -> Result<EngineOutput> {
+        let sub = Substrates::derive(cfg);
+        let ds = client.register_dataset(sub.train.clone(), sub.test.clone())?;
+        let handle = client.bind(cfg.model, cfg.lr, ds);
+        let out = session::run_with(cfg, &sub, handle);
+        client.unregister_dataset(ds);
+        out
+    }
+
+    /// Run `cfg` once on *every* service in the pool — e.g. to force each
+    /// service's XLA compilation before a timed measurement (`run_many`'s
+    /// work-stealing gives no such guarantee).
+    pub fn warm(&self, cfg: &EngineConfig) -> Result<()> {
+        for svc in &self.services {
+            Self::run_one(&svc.client(), cfg)?;
+        }
+        Ok(())
+    }
+
+    /// Run every config, up to `jobs` at a time, and return the outputs in
+    /// input order. The first failed run aborts with its error (remaining
+    /// in-flight runs finish their current request and are discarded).
+    pub fn run_many(&self, cfgs: &[EngineConfig]) -> Result<Vec<EngineOutput>> {
+        if cfgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = self.jobs.min(cfgs.len());
+        if workers <= 1 {
+            let client = self.services[0].client();
+            return cfgs.iter().map(|cfg| Self::run_one(&client, cfg)).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<EngineOutput>>>> =
+            cfgs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let client = self.services[w % self.services.len()].client();
+                let next = &next;
+                let slots = &slots;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfgs.len() {
+                        break;
+                    }
+                    let out = Self::run_one(&client, &cfgs[i]);
+                    let failed = out.is_err();
+                    *slots[i].lock().unwrap() = Some(out);
+                    if failed {
+                        // drain the queue so sibling workers stop early
+                        next.store(cfgs.len(), Ordering::Relaxed);
+                        break;
+                    }
+                });
+            }
+        });
+
+        let mut outs = Vec::with_capacity(cfgs.len());
+        for slot in slots {
+            match slot.into_inner().unwrap() {
+                Some(res) => outs.push(res?),
+                None => return Err(anyhow!("pooled run aborted before completion")),
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn tiny(seed: u64) -> EngineConfig {
+        EngineConfig {
+            method: Method::NetworkAware,
+            n: 4,
+            t_max: 10,
+            tau: 5,
+            n_train: 400,
+            n_test: 100,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Pooled outputs must arrive in input order and match a serial rerun
+    /// of the same configs bit-for-bit.
+    #[test]
+    fn pool_preserves_order_and_determinism() {
+        let cfgs: Vec<EngineConfig> = (1..=4).map(tiny).collect();
+        let pool = SimPool::new(2);
+        let pooled = pool.run_many(&cfgs).expect("pooled runs");
+        let serial_pool = SimPool::new(1);
+        let serial = serial_pool.run_many(&cfgs).expect("serial runs");
+        assert_eq!(pooled.len(), cfgs.len());
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.ledger, b.ledger);
+            assert_eq!(a.movement.per_interval, b.movement.per_interval);
+        }
+        // different seeds actually produce different runs
+        assert!(pooled.windows(2).any(|w| w[0].accuracy != w[1].accuracy
+            || w[0].ledger != w[1].ledger));
+    }
+}

@@ -1,106 +1,207 @@
 //! The runtime-service thread: owns the (thread-confined) PJRT runtime and
-//! serves train/eval requests from any number of actor threads.
+//! serves train/eval requests from any number of actor or pool-worker
+//! threads.
+//!
+//! The service is model- and dataset-agnostic: callers register
+//! `(train, test)` dataset pairs (one per in-flight run) and address every
+//! request with an explicit [`ModelKind`]/learning-rate/[`DatasetId`]
+//! triple. [`Trainer`]s are built lazily per `(model, lr)` and cached for
+//! the lifetime of the thread, so the expensive XLA compilation happens
+//! once per entry point no matter how many runs stream through.
+//!
+//! Two client views exist:
+//! * [`ServiceClient`] — the raw cloneable handle with the full addressed
+//!   API (what [`crate::coordinator::pool::SimPool`] workers use);
+//! * [`RuntimeHandle`] — a client bound to one `(model, lr, dataset)`
+//!   context. It keeps the original positional `train/evaluate/init_params`
+//!   API used by the [`crate::coordinator::cluster`] actors, and implements
+//!   [`crate::fed::session::Compute`] so a whole engine session can run
+//!   against the service from any thread.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::dataset::Dataset;
+use crate::fed::session::Compute;
 use crate::fed::trainer::Trainer;
 use crate::runtime::{HostTensor, ModelKind, Runtime};
 
 /// Model parameters as they travel between threads.
 pub type Params = Vec<HostTensor>;
 
+/// Handle to a `(train, test)` dataset pair registered with the service.
+pub type DatasetId = usize;
+
 enum Request {
+    Register {
+        train: Dataset,
+        test: Dataset,
+        reply: Sender<DatasetId>,
+    },
+    Unregister {
+        id: DatasetId,
+    },
     Train {
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
         params: Params,
         samples: Vec<u32>,
         reply: Sender<Result<(Params, Option<f32>)>>,
     },
     Evaluate {
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
         params: Params,
         reply: Sender<Result<f64>>,
     },
     InitParams {
+        kind: ModelKind,
         seed: u64,
         reply: Sender<Result<Params>>,
     },
     Shutdown,
 }
 
-/// Cloneable handle to the runtime-service thread.
+/// Cloneable, unbound handle to the runtime-service thread.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: Sender<Request>,
+}
+
+/// A [`ServiceClient`] bound to one `(model, lr, dataset)` context.
 #[derive(Clone)]
 pub struct RuntimeHandle {
-    tx: Sender<Request>,
+    client: ServiceClient,
+    kind: ModelKind,
+    lr: f32,
+    ds: DatasetId,
 }
 
 /// The service itself (join handle + control).
 pub struct RuntimeService {
-    handle: RuntimeHandle,
+    client: ServiceClient,
+    default_handle: Option<RuntimeHandle>,
     join: Option<JoinHandle<()>>,
 }
 
+/// Thread-local state of the service loop: the (lazily loaded) runtime,
+/// the dataset registry, and the per-(model, lr) trainer cache.
+struct ServiceState {
+    /// `None` until the first compute request: idle services (e.g. pool
+    /// workers an experiment never exercises) cost one parked thread, not
+    /// a PJRT client.
+    rt: Option<Result<Runtime>>,
+    datasets: HashMap<DatasetId, (Dataset, Dataset)>,
+    next_id: DatasetId,
+    trainers: HashMap<(ModelKind, u32), Trainer>,
+}
+
+impl ServiceState {
+    fn runtime(&mut self) -> Result<&Runtime> {
+        self.rt
+            .get_or_insert_with(Runtime::load_default)
+            .as_ref()
+            .map_err(|e| anyhow!("runtime load failed: {e:#}"))
+    }
+
+    fn dataset(&self, id: DatasetId) -> Result<&(Dataset, Dataset)> {
+        self.datasets
+            .get(&id)
+            .ok_or_else(|| anyhow!("dataset {id} not registered (or already dropped)"))
+    }
+
+    /// Build and cache the trainer for a `(model, lr)` pair if it does not
+    /// exist yet. The lr is part of the key bit-exactly.
+    fn ensure_trainer(&mut self, kind: ModelKind, lr: f32) -> Result<()> {
+        let key = (kind, lr.to_bits());
+        if !self.trainers.contains_key(&key) {
+            let trainer = Trainer::new(self.runtime()?, kind, lr)?;
+            self.trainers.insert(key, trainer);
+        }
+        Ok(())
+    }
+
+    fn handle_train(
+        &mut self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        mut params: Params,
+        samples: &[u32],
+    ) -> Result<(Params, Option<f32>)> {
+        // look up the dataset first so a stale id errors before compiling
+        self.dataset(ds)?;
+        self.ensure_trainer(kind, lr)?;
+        let trainer = &self.trainers[&(kind, lr.to_bits())];
+        let train_ds = &self.datasets[&ds].0;
+        let loss = trainer.train_interval(&mut params, train_ds, samples)?;
+        Ok((params, loss))
+    }
+
+    fn handle_evaluate(
+        &mut self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        params: &Params,
+    ) -> Result<f64> {
+        self.dataset(ds)?;
+        self.ensure_trainer(kind, lr)?;
+        let trainer = &self.trainers[&(kind, lr.to_bits())];
+        let test_ds = &self.datasets[&ds].1;
+        trainer.evaluate(params, test_ds)
+    }
+}
+
 impl RuntimeService {
-    /// Spawn the service thread. It compiles the model's entries on first
-    /// use and serves requests until [`RuntimeService::shutdown`].
-    pub fn spawn(kind: ModelKind, lr: f32, train_ds: Dataset, test_ds: Dataset) -> RuntimeService {
+    /// Spawn a model/dataset-agnostic service thread. Register datasets and
+    /// bind handles through [`RuntimeService::client`].
+    pub fn spawn_shared() -> RuntimeService {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let join = std::thread::Builder::new()
             .name("fogml-runtime".into())
-            .spawn(move || {
-                let rt = match Runtime::load_default() {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        // fail every request with the load error
-                        for req in rx {
-                            match req {
-                                Request::Train { reply, .. } => {
-                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
-                                }
-                                Request::Evaluate { reply, .. } => {
-                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
-                                }
-                                Request::InitParams { reply, .. } => {
-                                    let _ = reply.send(Err(anyhow!("runtime load failed: {e:#}")));
-                                }
-                                Request::Shutdown => break,
-                            }
-                        }
-                        return;
-                    }
-                };
-                let trainer = Trainer::new(&rt, kind, lr).expect("trainer init");
-                for req in rx {
-                    match req {
-                        Request::Train { mut params, samples, reply } => {
-                            let res = trainer
-                                .train_interval(&mut params, &train_ds, &samples)
-                                .map(|loss| (params, loss));
-                            let _ = reply.send(res);
-                        }
-                        Request::Evaluate { params, reply } => {
-                            let _ = reply.send(trainer.evaluate(&params, &test_ds));
-                        }
-                        Request::InitParams { seed, reply } => {
-                            let _ = reply.send(rt.init_params(kind, seed));
-                        }
-                        Request::Shutdown => break,
-                    }
-                }
-            })
+            .spawn(move || service_loop(rx))
             .expect("spawn runtime service");
-        RuntimeService { handle: RuntimeHandle { tx }, join: Some(join) }
+        RuntimeService {
+            client: ServiceClient { tx },
+            default_handle: None,
+            join: Some(join),
+        }
     }
 
+    /// Spawn the service pre-bound to one model/lr/dataset context — the
+    /// original single-tenant API the cluster actors use.
+    pub fn spawn(kind: ModelKind, lr: f32, train_ds: Dataset, test_ds: Dataset) -> RuntimeService {
+        let mut svc = Self::spawn_shared();
+        let ds = svc
+            .client
+            .register_dataset(train_ds, test_ds)
+            .expect("register default datasets");
+        svc.default_handle = Some(svc.client.bind(kind, lr, ds));
+        svc
+    }
+
+    /// The raw, unbound client (register datasets, address any model).
+    pub fn client(&self) -> ServiceClient {
+        self.client.clone()
+    }
+
+    /// The default bound handle (only for services created via
+    /// [`RuntimeService::spawn`]).
     pub fn handle(&self) -> RuntimeHandle {
-        self.handle.clone()
+        self.default_handle
+            .clone()
+            .expect("service spawned without default context; use client()")
     }
 
     /// Stop the thread (idempotent; also called on drop).
     pub fn shutdown(&mut self) {
-        let _ = self.handle.tx.send(Request::Shutdown);
+        let _ = self.client.tx.send(Request::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -113,32 +214,133 @@ impl Drop for RuntimeService {
     }
 }
 
-impl RuntimeHandle {
-    /// Run one interval of local updates; returns updated params + loss.
-    pub fn train(&self, params: Params, samples: Vec<u32>) -> Result<(Params, Option<f32>)> {
+fn service_loop(rx: Receiver<Request>) {
+    let mut state = ServiceState {
+        rt: None,
+        datasets: HashMap::new(),
+        next_id: 0,
+        trainers: HashMap::new(),
+    };
+    for req in rx {
+        match req {
+            Request::Register { train, test, reply } => {
+                let id = state.next_id;
+                state.next_id += 1;
+                state.datasets.insert(id, (train, test));
+                let _ = reply.send(id);
+            }
+            Request::Unregister { id } => {
+                state.datasets.remove(&id);
+            }
+            Request::Train { kind, lr, ds, params, samples, reply } => {
+                let _ = reply.send(state.handle_train(kind, lr, ds, params, &samples));
+            }
+            Request::Evaluate { kind, lr, ds, params, reply } => {
+                let _ = reply.send(state.handle_evaluate(kind, lr, ds, &params));
+            }
+            Request::InitParams { kind, seed, reply } => {
+                let res = state
+                    .runtime()
+                    .and_then(|rt| rt.init_params(kind, seed));
+                let _ = reply.send(res);
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl ServiceClient {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx.send(req).map_err(|_| anyhow!("runtime service gone"))
+    }
+
+    /// Register a `(train, test)` dataset pair; returns its id. Callers
+    /// should [`ServiceClient::unregister_dataset`] when the run finishes so
+    /// the service does not accumulate dead datasets.
+    pub fn register_dataset(&self, train: Dataset, test: Dataset) -> Result<DatasetId> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Request::Train { params, samples, reply: tx })
-            .map_err(|_| anyhow!("runtime service gone"))?;
+        self.send(Request::Register { train, test, reply: tx })?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))
+    }
+
+    /// Drop a registered dataset pair (fire-and-forget).
+    pub fn unregister_dataset(&self, id: DatasetId) {
+        let _ = self.send(Request::Unregister { id });
+    }
+
+    /// Bind this client to a `(model, lr, dataset)` context.
+    pub fn bind(&self, kind: ModelKind, lr: f32, ds: DatasetId) -> RuntimeHandle {
+        RuntimeHandle { client: self.clone(), kind, lr, ds }
+    }
+
+    /// One interval of local updates; returns updated params + loss.
+    pub fn train(
+        &self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        params: Params,
+        samples: Vec<u32>,
+    ) -> Result<(Params, Option<f32>)> {
+        let (tx, rx) = channel();
+        self.send(Request::Train { kind, lr, ds, params, samples, reply: tx })?;
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
     }
 
-    /// Test-set accuracy of the given parameters.
-    pub fn evaluate(&self, params: Params) -> Result<f64> {
+    /// Test-set accuracy of the given parameters on dataset `ds`.
+    pub fn evaluate(
+        &self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        params: Params,
+    ) -> Result<f64> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Request::Evaluate { params, reply: tx })
-            .map_err(|_| anyhow!("runtime service gone"))?;
+        self.send(Request::Evaluate { kind, lr, ds, params, reply: tx })?;
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
     }
 
     /// Seeded parameter initialization on the service thread.
-    pub fn init_params(&self, seed: u64) -> Result<Params> {
+    pub fn init_params(&self, kind: ModelKind, seed: u64) -> Result<Params> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Request::InitParams { seed, reply: tx })
-            .map_err(|_| anyhow!("runtime service gone"))?;
+        self.send(Request::InitParams { kind, seed, reply: tx })?;
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+impl RuntimeHandle {
+    /// Run one interval of local updates; returns updated params + loss.
+    pub fn train(&self, params: Params, samples: Vec<u32>) -> Result<(Params, Option<f32>)> {
+        self.client.train(self.kind, self.lr, self.ds, params, samples)
+    }
+
+    /// Test-set accuracy of the given parameters.
+    pub fn evaluate(&self, params: Params) -> Result<f64> {
+        self.client.evaluate(self.kind, self.lr, self.ds, params)
+    }
+
+    /// Seeded parameter initialization on the service thread.
+    pub fn init_params(&self, seed: u64) -> Result<Params> {
+        self.client.init_params(self.kind, seed)
+    }
+}
+
+/// A bound handle is a full engine backend: [`crate::fed::session::Session`]
+/// can train through the service thread from any worker.
+impl Compute for RuntimeHandle {
+    fn init_params(&self, seed: u64) -> Result<Params> {
+        RuntimeHandle::init_params(self, seed)
+    }
+
+    fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>> {
+        let owned = std::mem::take(params);
+        let (updated, loss) = RuntimeHandle::train(self, owned, samples.to_vec())?;
+        *params = updated;
+        Ok(loss)
+    }
+
+    fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
+        RuntimeHandle::evaluate(self, params.to_vec())
     }
 }
 
@@ -187,6 +389,37 @@ mod tests {
         let agg = crate::fed::aggregator::aggregate(&[(&r1, 1.0), (&r2, 1.0)]).unwrap();
         let after = handle.evaluate(agg).unwrap();
         assert!(after > before + 0.15, "{before} -> {after}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shared_service_isolates_datasets() {
+        let gen = SynthDigits::new(0xF0D5);
+        let mut rng = Rng::new(2);
+        let (train_a, test_a) = gen.train_test(400, 100, &mut rng);
+        let (train_b, test_b) = gen.train_test(400, 100, &mut rng);
+
+        let mut svc = RuntimeService::spawn_shared();
+        let client = svc.client();
+        let a = client.register_dataset(train_a, test_a).unwrap();
+        let b = client.register_dataset(train_b, test_b).unwrap();
+        assert_ne!(a, b);
+
+        let params = client.init_params(ModelKind::Mlp, 7).unwrap();
+        let (pa, la) = client
+            .train(ModelKind::Mlp, 0.05, a, params.clone(), (0..400).collect())
+            .unwrap();
+        let (_pb, lb) = client
+            .train(ModelKind::Mlp, 0.05, b, params.clone(), (0..400).collect())
+            .unwrap();
+        assert!(la.unwrap() > 0.0 && lb.unwrap() > 0.0);
+        let acc = client.evaluate(ModelKind::Mlp, 0.05, a, pa).unwrap();
+        assert!(acc > 0.0);
+
+        // dropped datasets error cleanly rather than training on stale data
+        client.unregister_dataset(b);
+        let err = client.train(ModelKind::Mlp, 0.05, b, params, (0..10).collect());
+        assert!(err.is_err());
         svc.shutdown();
     }
 }

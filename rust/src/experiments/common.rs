@@ -1,8 +1,10 @@
-//! Shared experiment machinery: multi-seed averaging and result output.
+//! Shared experiment machinery: multi-seed averaging (serial and pooled)
+//! and result output.
 
 use anyhow::Result;
 
 use crate::config::EngineConfig;
+use crate::coordinator::SimPool;
 use crate::fed::{self, EngineOutput};
 use crate::runtime::Runtime;
 use crate::util::stats;
@@ -59,14 +61,74 @@ impl Avg {
     }
 }
 
-/// Run `cfg` under `seeds` different seeds and average.
+/// The `seeds` configs a seed-averaged cell expands to: same config, seeds
+/// `base, base+1000, base+2000, …` (the historical spacing — load-bearing
+/// for reproducing pre-pool numbers).
+pub fn seed_sweep(cfg: &EngineConfig, seeds: usize) -> Vec<EngineConfig> {
+    (0..seeds)
+        .map(|s| cfg.clone().seeded(cfg.seed + 1000 * s as u64))
+        .collect()
+}
+
+/// Run `cfg` under `seeds` different seeds and average — serial path on a
+/// borrowed runtime (used by the lighter drivers; the sweep drivers fan
+/// out through [`run_avg_pool`] / [`run_avg_batch`] instead).
 pub fn run_avg(rt: &Runtime, cfg: &EngineConfig, seeds: usize) -> Result<(Avg, Vec<EngineOutput>)> {
     let mut outs = Vec::with_capacity(seeds);
-    for s in 0..seeds {
-        let cfg_s = cfg.clone().seeded(cfg.seed + 1000 * s as u64);
+    for cfg_s in seed_sweep(cfg, seeds) {
         outs.push(fed::run(&cfg_s, rt)?);
     }
     Ok((Avg::from_outputs(&outs), outs))
+}
+
+/// Pooled equivalent of [`run_avg`]: the seed fan-out runs through the
+/// pool's workers. Bit-identical to [`run_avg`] at any job count.
+pub fn run_avg_pool(
+    pool: &SimPool,
+    cfg: &EngineConfig,
+    seeds: usize,
+) -> Result<(Avg, Vec<EngineOutput>)> {
+    let outs = pool.run_many(&seed_sweep(cfg, seeds))?;
+    Ok((Avg::from_outputs(&outs), outs))
+}
+
+/// Fan out a whole sweep at once: every config × every seed in one pooled
+/// batch (so the pool stays saturated across sweep points, not just within
+/// one cell), averaged back per config in input order.
+pub fn run_avg_batch(pool: &SimPool, cfgs: &[EngineConfig], seeds: usize) -> Result<Vec<Avg>> {
+    if seeds == 0 {
+        // mirror run_avg's zero-seed behavior: a zeros row per config
+        return Ok(cfgs.iter().map(|_| Avg::from_outputs(&[])).collect());
+    }
+    let expanded: Vec<EngineConfig> =
+        cfgs.iter().flat_map(|c| seed_sweep(c, seeds)).collect();
+    let outs = pool.run_many(&expanded)?;
+    Ok(outs.chunks(seeds).map(Avg::from_outputs).collect())
+}
+
+/// Expand each config into its (iid, non-iid) twin, fan the whole grid out
+/// in one pooled batch, and pair the averages back per input config — the
+/// shape every paper table/figure reports. Centralizing the expansion and
+/// the pairing keeps drivers free of index arithmetic that could silently
+/// swap the iid/non-iid columns.
+pub fn run_avg_iid_pairs(
+    pool: &SimPool,
+    cfgs: &[EngineConfig],
+    seeds: usize,
+) -> Result<Vec<(Avg, Avg)>> {
+    let expanded: Vec<EngineConfig> = cfgs
+        .iter()
+        .flat_map(|c| {
+            [c.clone().with(|x| x.iid = true), c.clone().with(|x| x.iid = false)]
+        })
+        .collect();
+    let avgs = run_avg_batch(pool, &expanded, seeds)?;
+    let mut it = avgs.into_iter();
+    let mut pairs = Vec::with_capacity(cfgs.len());
+    while let (Some(iid), Some(noniid)) = (it.next(), it.next()) {
+        pairs.push((iid, noniid));
+    }
+    Ok(pairs)
 }
 
 /// Print a table and persist its CSV under `<out_dir>/<name>.csv`.
@@ -82,4 +144,30 @@ pub fn emit_raw(lines: &str, out_dir: &str, name: &str) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     std::fs::write(format!("{out_dir}/{name}.csv"), lines)?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_sweep_spacing_matches_legacy() {
+        let cfg = EngineConfig::default().seeded(7);
+        let sweep = seed_sweep(&cfg, 3);
+        assert_eq!(sweep.len(), 3);
+        assert_eq!(
+            sweep.iter().map(|c| c.seed).collect::<Vec<_>>(),
+            vec![7, 1007, 2007]
+        );
+        // everything but the seed is identical
+        assert_eq!(sweep[0].n, cfg.n);
+        assert_eq!(sweep[2].t_max, cfg.t_max);
+    }
+
+    #[test]
+    fn avg_from_outputs_handles_empty() {
+        let a = Avg::from_outputs(&[]);
+        assert_eq!(a.accuracy, 0.0);
+        assert_eq!(a.total, 0.0);
+    }
 }

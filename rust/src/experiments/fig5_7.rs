@@ -10,24 +10,30 @@
 //! Expected shapes (paper): unit cost ↓ in n and ρ (more low-cost
 //! neighbors), accuracy ↑ in n and ρ (dramatically for non-iid); higher τ
 //! lowers cost but hurts accuracy (especially non-iid).
+//!
+//! Each figure's whole (point × {iid, non-iid} × seed) grid fans out
+//! through one [`SimPool`] batch.
 
 use anyhow::Result;
 
 use crate::config::{EngineConfig, TopologyKind};
-use crate::experiments::common::{emit, run_avg};
+use crate::coordinator::SimPool;
+use crate::experiments::common::{emit, run_avg_iid_pairs};
 use crate::experiments::ExpOptions;
-use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
 
 /// One sweep point = the four panels' numbers.
 fn sweep(
-    rt: &Runtime,
     title: &str,
     csv_name: &str,
     param_name: &str,
     points: Vec<(String, EngineConfig)>,
     opts: &ExpOptions,
+    pool: &SimPool,
 ) -> Result<()> {
+    let cfgs: Vec<EngineConfig> = points.iter().map(|(_, cfg)| cfg.clone()).collect();
+    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
+
     let mut table = Table::new(
         title,
         &[
@@ -45,12 +51,10 @@ fn sweep(
             "Acc non-iid",
         ],
     );
-    for (label, cfg) in points {
-        let (avg, _) = run_avg(rt, &cfg, opts.seeds)?;
-        let (avg_noniid, _) = run_avg(rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
+    for ((label, _), (avg, avg_noniid)) in points.iter().zip(&pairs) {
         let coll = avg.collected.max(1.0);
         table.row(vec![
-            label,
+            label.clone(),
             fnum(avg.processed_ratio, 3),
             fnum(avg.discarded_ratio, 3),
             fnum(avg.movement_rate, 3),
@@ -68,8 +72,7 @@ fn sweep(
 }
 
 /// Figure 5: n ∈ {5, 10, ..., 50}, fully connected.
-pub fn run_fig5(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
+pub fn run_fig5(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
@@ -81,18 +84,17 @@ pub fn run_fig5(opts: &ExpOptions) -> Result<()> {
         })
         .collect();
     sweep(
-        &rt,
         "Fig 5 — impact of the number of nodes n",
         "fig5_nodes",
         "n",
         points,
         opts,
+        pool,
     )
 }
 
 /// Figure 6: connectivity ρ ∈ {0, 0.2, ..., 1.0}, ER random graph.
-pub fn run_fig6(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
+pub fn run_fig6(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
@@ -107,18 +109,17 @@ pub fn run_fig6(opts: &ExpOptions) -> Result<()> {
         })
         .collect();
     sweep(
-        &rt,
         "Fig 6 — impact of network connectivity ρ",
         "fig6_connectivity",
         "rho",
         points,
         opts,
+        pool,
     )
 }
 
 /// Figure 7: aggregation period τ ∈ {2, 5, 10, 20, 25, 50}.
-pub fn run_fig7(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
+pub fn run_fig7(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
@@ -128,11 +129,11 @@ pub fn run_fig7(opts: &ExpOptions) -> Result<()> {
         .map(|&tau| (tau.to_string(), base.clone().with(|c| c.tau = tau)))
         .collect();
     sweep(
-        &rt,
         "Fig 7 — impact of the aggregation period τ",
         "fig7_tau",
         "tau",
         points,
         opts,
+        pool,
     )
 }

@@ -10,13 +10,16 @@
 //! (saturating) in p_entry; fewer active nodes → less data, lower total
 //! cost but discard-skewed unit costs, and lower accuracy (non-iid hit
 //! hardest by exits).
+//!
+//! Each figure's (churn point × {iid, non-iid} × seed) grid fans out
+//! through one [`SimPool`] batch.
 
 use anyhow::Result;
 
 use crate::config::{Churn, EngineConfig};
-use crate::experiments::common::{emit, run_avg};
+use crate::coordinator::SimPool;
+use crate::experiments::common::{emit, run_avg_iid_pairs};
 use crate::experiments::ExpOptions;
-use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
 
 fn churn_sweep(
@@ -25,12 +28,18 @@ fn churn_sweep(
     param_name: &str,
     points: Vec<(String, Churn)>,
     opts: &ExpOptions,
+    pool: &SimPool,
 ) -> Result<()> {
-    let rt = Runtime::load_default()?;
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
     }
+
+    let cfgs: Vec<EngineConfig> = points
+        .iter()
+        .map(|(_, churn)| base.clone().with(|c| c.churn = Some(*churn)))
+        .collect();
+    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         title,
@@ -50,12 +59,9 @@ fn churn_sweep(
         ],
     );
 
-    for (label, churn) in points {
-        let cfg = base.clone().with(|c| c.churn = Some(churn));
-        let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
-        let (avg_noniid, _) = run_avg(&rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
+    for ((label, _), (avg, avg_noniid)) in points.iter().zip(&pairs) {
         table.row(vec![
-            label,
+            label.clone(),
             fnum(avg.mean_active, 1),
             fnum(avg.collected, 0),
             fnum(avg.processed_ratio, 3),
@@ -73,7 +79,7 @@ fn churn_sweep(
 }
 
 /// Fig 9: vary p_exit, p_entry fixed at 2%.
-pub fn run_fig9(opts: &ExpOptions) -> Result<()> {
+pub fn run_fig9(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let points = (0..=5)
         .map(|k| {
             let p = k as f64 / 100.0;
@@ -86,11 +92,12 @@ pub fn run_fig9(opts: &ExpOptions) -> Result<()> {
         "p_exit",
         points,
         opts,
+        pool,
     )
 }
 
 /// Fig 10: vary p_entry, p_exit fixed at 2%.
-pub fn run_fig10(opts: &ExpOptions) -> Result<()> {
+pub fn run_fig10(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let points = (0..=5)
         .map(|k| {
             let p = k as f64 / 100.0;
@@ -103,5 +110,6 @@ pub fn run_fig10(opts: &ExpOptions) -> Result<()> {
         "p_entry",
         points,
         opts,
+        pool,
     )
 }

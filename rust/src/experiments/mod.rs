@@ -3,7 +3,10 @@
 //! rows/series as console tables and writes CSV under `results/`.
 //!
 //! See DESIGN.md §4 for the experiment index mapping every driver to the
-//! paper artifact it regenerates and the expected qualitative shape.
+//! paper artifact it regenerates and the expected qualitative shape. The
+//! sweep drivers (Tables III–IV, Figs. 5–7, 9–10) fan their (config, seed)
+//! grids out through [`crate::coordinator::SimPool`]; `--jobs N` controls
+//! the worker count (`--jobs 1` reproduces serial numbers bit-for-bit).
 
 pub mod common;
 pub mod fig4;
@@ -18,6 +21,7 @@ pub mod theory;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::SimPool;
 use crate::runtime::ModelKind;
 
 /// Options shared by all drivers.
@@ -29,36 +33,46 @@ pub struct ExpOptions {
     /// Override the model for sweep drivers (Table II always runs both).
     pub model: Option<ModelKind>,
     pub out_dir: String,
+    /// Concurrent engine runs for the pooled sweep drivers (`--jobs`).
+    pub jobs: usize,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { seeds: 3, model: None, out_dir: "results".into() }
+        ExpOptions { seeds: 3, model: None, out_dir: "results".into(), jobs: 1 }
     }
 }
 
-/// Run one named experiment (or `all`).
+/// Run one named experiment (or `all`). One [`SimPool`] is shared by every
+/// pooled driver of this invocation, so `exp all --jobs N` compiles the XLA
+/// entry points once per worker instead of once per driver (DESIGN.md §Perf
+/// "compile once").
 pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
+    let pool = SimPool::new(opts.jobs);
+    dispatch_with(which, opts, &pool)
+}
+
+fn dispatch_with(which: &str, opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let started = std::time::Instant::now();
     match which {
         "table2" => table2::run(opts)?,
-        "table3" => table3::run(opts)?,
-        "table4" => table4::run(opts)?,
+        "table3" => table3::run(opts, pool)?,
+        "table4" => table4::run(opts, pool)?,
         "table5" => table5::run(opts)?,
         "fig4" => fig4::run(opts)?,
-        "fig5" => fig5_7::run_fig5(opts)?,
-        "fig6" => fig5_7::run_fig6(opts)?,
-        "fig7" => fig5_7::run_fig7(opts)?,
+        "fig5" => fig5_7::run_fig5(opts, pool)?,
+        "fig6" => fig5_7::run_fig6(opts, pool)?,
+        "fig7" => fig5_7::run_fig7(opts, pool)?,
         "fig8" => fig8::run(opts)?,
-        "fig9" => fig9_10::run_fig9(opts)?,
-        "fig10" => fig9_10::run_fig10(opts)?,
+        "fig9" => fig9_10::run_fig9(opts, pool)?,
+        "fig10" => fig9_10::run_fig10(opts, pool)?,
         "theory" => theory::run(opts)?,
         "all" => {
             for name in [
                 "table2", "table3", "table4", "table5", "fig4", "fig5", "fig6",
                 "fig7", "fig8", "fig9", "fig10", "theory",
             ] {
-                dispatch(name, opts)?;
+                dispatch_with(name, opts, pool)?;
             }
         }
         other => bail!("unknown experiment '{other}'"),

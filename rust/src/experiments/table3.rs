@@ -10,13 +10,16 @@
 //! B cuts unit cost ≈ 50% by offloading/discarding; C ≈ B (robust to
 //! estimation error); D/E discard more due to capacities; accuracy ordering
 //! A ≈ B ≈ C > D ≈ E, with non-iid uniformly below iid.
+//!
+//! All (setting × {iid, non-iid} × seed) runs fan out through one
+//! [`SimPool`] batch.
 
 use anyhow::Result;
 
 use crate::config::{CapacityPolicy, EngineConfig, InfoMode, Method};
-use crate::experiments::common::{emit, run_avg};
+use crate::coordinator::SimPool;
+use crate::experiments::common::{emit, run_avg_iid_pairs};
 use crate::experiments::ExpOptions;
-use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
 
 /// The five settings as config transforms.
@@ -40,22 +43,22 @@ pub fn settings(base: &EngineConfig) -> Vec<(&'static str, EngineConfig)> {
     ]
 }
 
-pub fn run(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
+pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
     }
+
+    let named = settings(&base);
+    let cfgs: Vec<EngineConfig> = named.iter().map(|(_, cfg)| cfg.clone()).collect();
+    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         "Table III — settings A–E: accuracy and network costs",
         &["Setting", "Acc iid", "Acc non-iid", "Process", "Transfer", "Discard", "Total", "Unit"],
     );
 
-    for (name, cfg) in settings(&base) {
-        let (avg_iid, _) = run_avg(&rt, &cfg, opts.seeds)?;
-        let (avg_noniid, _) =
-            run_avg(&rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
+    for ((name, _), (avg_iid, avg_noniid)) in named.iter().zip(&pairs) {
         // costs are identical for iid/non-iid (the optimization is
         // distribution-agnostic) — report the iid ledger like the paper
         table.row(vec![

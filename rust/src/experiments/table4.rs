@@ -4,52 +4,61 @@
 //! Expected shape (paper): `−f·G` trades cost for accuracy (more transfer,
 //! more data processed, higher accuracy); `f·D·r` is close to the convex
 //! `f/√G` on both cost and accuracy.
+//!
+//! All (model × setting × {iid, non-iid} × seed) runs fan out through one
+//! [`SimPool`] batch.
 
 use anyhow::Result;
 
 use crate::config::{CapacityPolicy, EngineConfig};
-use crate::experiments::common::{emit, run_avg};
+use crate::coordinator::SimPool;
+use crate::experiments::common::{emit, run_avg_iid_pairs};
 use crate::experiments::ExpOptions;
 use crate::movement::DiscardModel;
-use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
 
-pub fn run(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
+pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     let mut base = EngineConfig::default();
     if let Some(m) = opts.model {
         base = base.with_model(m);
     }
+
+    let mut rows: Vec<(&'static str, &'static str, EngineConfig)> = Vec::new();
+    for (model, label) in [
+        (DiscardModel::LinearR, "f·D·r"),
+        (DiscardModel::LinearG, "-f·G"),
+        (DiscardModel::Sqrt, "f/sqrt(G)"),
+    ] {
+        for (setting, cap) in
+            [("B", CapacityPolicy::Unconstrained), ("D", CapacityPolicy::MeanArrivals)]
+        {
+            let cfg = base.clone().with(|c| {
+                c.discard_model = model;
+                c.capacity = cap;
+            });
+            rows.push((label, setting, cfg));
+        }
+    }
+
+    let cfgs: Vec<EngineConfig> = rows.iter().map(|(_, _, cfg)| cfg.clone()).collect();
+    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         "Table IV — discard-cost model comparison (settings B and D)",
         &["Objective", "Setting", "Acc iid", "Acc non-iid", "Pr", "Tr", "Di", "Tot"],
     );
 
-    for (model, label) in [
-        (DiscardModel::LinearR, "f·D·r"),
-        (DiscardModel::LinearG, "-f·G"),
-        (DiscardModel::Sqrt, "f/sqrt(G)"),
-    ] {
-        for (setting, cap) in [("B", CapacityPolicy::Unconstrained), ("D", CapacityPolicy::MeanArrivals)] {
-            let cfg = base.clone().with(|c| {
-                c.discard_model = model;
-                c.capacity = cap;
-            });
-            let (avg_iid, _) = run_avg(&rt, &cfg, opts.seeds)?;
-            let (avg_noniid, _) =
-                run_avg(&rt, &cfg.clone().with(|c| c.iid = false), opts.seeds)?;
-            table.row(vec![
-                label.to_string(),
-                setting.to_string(),
-                pct(avg_iid.accuracy),
-                pct(avg_noniid.accuracy),
-                fnum(avg_iid.process, 0),
-                fnum(avg_iid.transfer, 0),
-                fnum(avg_iid.discard, 0),
-                fnum(avg_iid.total, 0),
-            ]);
-        }
+    for ((label, setting, _), (avg_iid, avg_noniid)) in rows.iter().zip(&pairs) {
+        table.row(vec![
+            label.to_string(),
+            setting.to_string(),
+            pct(avg_iid.accuracy),
+            pct(avg_noniid.accuracy),
+            fnum(avg_iid.process, 0),
+            fnum(avg_iid.transfer, 0),
+            fnum(avg_iid.discard, 0),
+            fnum(avg_iid.total, 0),
+        ]);
     }
 
     emit(&table, &opts.out_dir, "table4")

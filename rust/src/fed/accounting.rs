@@ -30,7 +30,7 @@ impl Ledger {
 }
 
 /// Data-movement counts for one interval.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct IntervalStats {
     /// Datapoints collected by active devices this interval.
     pub collected: usize,
@@ -55,7 +55,7 @@ impl IntervalStats {
 }
 
 /// Aggregated movement statistics over a run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MovementTotals {
     pub per_interval: Vec<IntervalStats>,
 }

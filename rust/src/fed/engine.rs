@@ -1,497 +1,32 @@
-//! The network-aware federated learning engine: the full time-interval loop
-//! of §III integrating data collection, the movement optimization (§III-C),
-//! local gradient updates (eq. 3), weighted aggregation (eq. 4), cost
-//! accounting, and §V-E churn semantics.
+//! Compatibility wrapper over the session-based engine.
 //!
-//! One call to [`run`] = one experiment run (one cell of a paper table, one
-//! point of a figure).
+//! Historically this module held the full ~500-line time-interval loop of
+//! §III. That loop now lives in [`crate::fed::session`] as an explicit
+//! state machine ([`Session`](crate::fed::session::Session)) with
+//! preallocated per-interval workspaces, trainable through any
+//! [`Compute`](crate::fed::session::Compute) backend — the borrowed
+//! single-thread [`Trainer`] here, or the runtime-service handle used by
+//! [`crate::coordinator::pool::SimPool`] for parallel (config, seed)
+//! fan-out.
 //!
-//! Churn semantics (worst case, §V-E): an exiting device loses the local
-//! updates it accumulated since the last aggregation (it "cannot transmit
-//! its local update results prior to exiting"); a re-entering device
-//! participates in data collection and movement immediately, but trains
-//! and contributes only after it re-synchronizes at the end of the ongoing
-//! aggregation period.
+//! `run` keeps its original signature: one call = one experiment run (one
+//! cell of a paper table, one point of a figure), bit-identical to the
+//! pre-session engine under the same seed.
 
 use anyhow::Result;
 
-use crate::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind};
-use crate::costs::{estimator, traces, CapacityMode, CostSchedule};
-use crate::data::dataset::Dataset;
-use crate::data::{Partitioner, SynthDigits};
-use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
-use crate::fed::aggregator;
-use crate::fed::similarity;
+use crate::config::EngineConfig;
+use crate::fed::session::{self, LocalCompute, Substrates};
 use crate::fed::trainer::Trainer;
-use crate::movement::{self, MovementPlan, MovementProblem};
-use crate::runtime::{HostTensor, Runtime};
-use crate::topology::{generators, ChurnProcess, Graph};
-use crate::util::rng::Rng;
+use crate::runtime::Runtime;
 
-/// Everything an experiment driver needs from one run.
-#[derive(Debug, Clone)]
-pub struct EngineOutput {
-    /// Final test accuracy of the global model.
-    pub accuracy: f64,
-    /// Test accuracy after each aggregation `(t, acc)` (if `eval_curve`).
-    pub accuracy_curve: Vec<(usize, f64)>,
-    /// Per-interval, per-device training loss (None when the device did
-    /// not train that interval) — Fig. 4a.
-    pub per_device_loss: Vec<Vec<Option<f32>>>,
-    pub ledger: Ledger,
-    pub movement: MovementTotals,
-    /// Mean pairwise label similarity (before movement, after movement) —
-    /// Fig. 4b.
-    pub similarity: (f64, f64),
-    /// Mean active devices per interval (Table V / Figs. 9–10).
-    pub mean_active: f64,
-    /// Total datapoints collected by active devices.
-    pub total_collected: usize,
-}
+pub use crate::fed::session::{EngineOutput, TASK_SEED};
 
-/// Fixed generator seed for the SynthDigits class prototypes: the *task*
-/// is identical across all experiments; per-run seeds control sampling,
-/// partitioning, costs, topology and churn.
-const TASK_SEED: u64 = 0xF0D5;
-
-/// Run one experiment.
+/// Run one experiment on the calling thread's runtime (the classic
+/// single-threaded fast path).
 pub fn run(cfg: &EngineConfig, rt: &Runtime) -> Result<EngineOutput> {
-    let mut root = Rng::new(cfg.seed);
-    let mut data_rng = root.split();
-    let mut topo_rng = root.split();
-    let mut cost_rng = root.split();
-    let mut churn_rng = root.split();
-    let init_seed = root.next_u64();
-
-    // --- substrates --------------------------------------------------------
-    let gen = SynthDigits::new(TASK_SEED);
-    let (train, test) = gen.train_test(cfg.n_train, cfg.n_test, &mut data_rng);
-    let arrivals = Partitioner { n_devices: cfg.n, t_max: cfg.t_max, iid: cfg.iid }
-        .partition(&train, &mut data_rng);
-
-    let mut actual_costs = traces::generate(
-        cfg.cost_source,
-        cfg.n,
-        cfg.t_max,
-        cfg.tau,
-        cfg.error_profile,
-        &mut cost_rng,
-    );
-    if let CapacityPolicy::MeanArrivals = cfg.capacity {
-        actual_costs.set_capacities(CapacityMode::Uniform(cfg.mean_arrivals()));
-    }
-    let mut belief_costs: CostSchedule = match cfg.info {
-        InfoMode::Perfect => actual_costs.clone(),
-        InfoMode::Estimated(w) => estimator::estimate(&actual_costs, w),
-    };
-    if cfg.discard_model == crate::movement::DiscardModel::Sqrt {
-        // γ-rescaling for the convex error model (see ErrorWeightProfile)
-        for t in 0..cfg.t_max {
-            for i in 0..cfg.n {
-                belief_costs.error_weight[t][i] *= cfg.error_profile.sqrt_gamma_scale;
-            }
-        }
-    }
-
-    let graph = build_topology(cfg, &actual_costs, &mut topo_rng);
-    let mut churn = match cfg.churn {
-        Some(Churn { p_exit, p_entry }) => ChurnProcess::new(cfg.n, p_exit, p_entry),
-        None => ChurnProcess::static_network(cfg.n),
-    };
-
+    let sub = Substrates::derive(cfg);
     let trainer = Trainer::new(rt, cfg.model, cfg.lr)?;
-    let mut global: Vec<HostTensor> = rt.init_params(cfg.model, init_seed)?;
-
-    match cfg.method {
-        Method::Centralized => run_centralized(cfg, rt, &trainer, global, &train, &test, &arrivals),
-        _ => run_distributed(
-            cfg,
-            &trainer,
-            &mut global,
-            &train,
-            &test,
-            &arrivals,
-            &actual_costs,
-            &belief_costs,
-            &graph,
-            &mut churn,
-            &mut churn_rng,
-        ),
-    }
-}
-
-fn build_topology(cfg: &EngineConfig, costs: &CostSchedule, rng: &mut Rng) -> Graph {
-    match cfg.topology {
-        TopologyKind::Full => generators::fully_connected(cfg.n),
-        TopologyKind::Random(rho) => generators::erdos_renyi(cfg.n, rho, rng),
-        TopologyKind::SmallWorld => {
-            generators::watts_strogatz(cfg.n, (cfg.n / 5).max(2), 0.3, rng)
-        }
-        TopologyKind::Hierarchical => {
-            generators::hierarchical(cfg.n, &costs.mean_compute_per_device(), rng)
-        }
-        TopologyKind::ScaleFree => generators::scale_free(cfg.n, 2, rng),
-    }
-}
-
-/// Centralized baseline: all collected data is processed at one server;
-/// no movement, no network costs (accuracy comparison only, Table II).
-fn run_centralized(
-    cfg: &EngineConfig,
-    _rt: &Runtime,
-    trainer: &Trainer,
-    mut params: Vec<HostTensor>,
-    train: &Dataset,
-    test: &Dataset,
-    arrivals: &crate::data::Arrivals,
-) -> Result<EngineOutput> {
-    let mut per_device_loss = vec![vec![None; cfg.n]; cfg.t_max];
-    let mut collected = 0usize;
-    let mut curve = Vec::new();
-    for t in 0..cfg.t_max {
-        let mut batch: Vec<u32> = Vec::new();
-        for i in 0..cfg.n {
-            batch.extend(&arrivals.schedule[i][t]);
-        }
-        collected += batch.len();
-        if let Some(loss) = trainer.train_interval(&mut params, train, &batch)? {
-            per_device_loss[t][0] = Some(loss);
-        }
-        if cfg.eval_curve && (t + 1) % cfg.tau == 0 {
-            curve.push((t + 1, trainer.evaluate(&params, test)?));
-        }
-    }
-    let accuracy = trainer.evaluate(&params, test)?;
-    Ok(EngineOutput {
-        accuracy,
-        accuracy_curve: curve,
-        per_device_loss,
-        ledger: Ledger::default(),
-        movement: MovementTotals::default(),
-        similarity: (1.0, 1.0),
-        mean_active: cfg.n as f64,
-        total_collected: collected,
-    })
-}
-
-#[allow(clippy::too_many_arguments)]
-fn run_distributed(
-    cfg: &EngineConfig,
-    trainer: &Trainer,
-    global: &mut Vec<HostTensor>,
-    train: &Dataset,
-    test: &Dataset,
-    arrivals: &crate::data::Arrivals,
-    actual_costs: &CostSchedule,
-    belief_costs: &CostSchedule,
-    graph: &Graph,
-    churn: &mut ChurnProcess,
-    churn_rng: &mut Rng,
-) -> Result<EngineOutput> {
-    let n = cfg.n;
-    let mut device_params: Vec<Vec<HostTensor>> = vec![global.clone(); n];
-    let mut synced = vec![true; n];
-    let mut h = vec![0f64; n]; // datapoints processed since last aggregation
-    let mut inbound: Vec<Vec<u32>> = vec![Vec::new(); n]; // received last interval
-    let mut per_device_loss = vec![vec![None; n]; cfg.t_max];
-    let mut ledger = Ledger::default();
-    let mut movement_totals = MovementTotals::default();
-    let mut curve = Vec::new();
-
-    // similarity bookkeeping: collected vs processed label multisets
-    let mut collected_per_device: Vec<Vec<u32>> = vec![Vec::new(); n];
-    let mut processed_per_device: Vec<Vec<u32>> = vec![Vec::new(); n];
-
-    for t in 0..cfg.t_max {
-        // --- churn ----------------------------------------------------------
-        let entered = churn.step(churn_rng);
-        for &i in &entered {
-            synced[i] = false;
-            h[i] = 0.0;
-        }
-        let active: Vec<bool> = churn.active().to_vec();
-
-        // a device that exited loses unsent updates: reset its weight
-        for i in 0..n {
-            if !active[i] {
-                h[i] = 0.0;
-            }
-        }
-
-        // --- data collection --------------------------------------------------
-        let mut new_data: Vec<Vec<u32>> = (0..n)
-            .map(|i| if active[i] { arrivals.schedule[i][t].clone() } else { Vec::new() })
-            .collect();
-        for (i, samples) in new_data.iter().enumerate() {
-            collected_per_device[i].extend(samples);
-        }
-
-        // --- movement optimization --------------------------------------------
-        let d: Vec<f64> = new_data.iter().map(|s| s.len() as f64).collect();
-        let inbound_counts: Vec<f64> = inbound.iter().map(|s| s.len() as f64).collect();
-        let restricted = graph.restrict(&active);
-        let plan = match cfg.method {
-            Method::NetworkAware => {
-                let problem = MovementProblem {
-                    t,
-                    graph: &restricted,
-                    active: &active,
-                    d: &d,
-                    inbound_prev: &inbound_counts,
-                    costs: belief_costs,
-                    discard_model: cfg.discard_model,
-                };
-                movement::solve(&problem)
-            }
-            Method::Federated => MovementPlan::keep_all(n),
-            Method::Centralized => unreachable!(),
-        };
-
-        // --- materialize the plan into integer sample movements ---------------
-        let mut pending: Vec<Vec<u32>> = vec![Vec::new(); n];
-        let mut stats = IntervalStats::default();
-        for i in 0..n {
-            let samples = std::mem::take(&mut new_data[i]);
-            stats.collected += samples.len();
-            if samples.is_empty() {
-                continue;
-            }
-            let alloc = apportion(&plan, i, samples.len());
-            let mut cursor = 0usize;
-            // kept locally
-            let keep = &samples[cursor..cursor + alloc.keep];
-            cursor += alloc.keep;
-            // offloads, ascending j (deterministic)
-            for &(j, count) in &alloc.offloads {
-                let sent = &samples[cursor..cursor + count];
-                cursor += count;
-                pending[j].extend_from_slice(sent);
-                stats.offloaded += count;
-                ledger.transfer += count as f64 * actual_costs.c_link(t, i, j);
-            }
-            // discards
-            let dropped = samples.len() - cursor;
-            stats.discarded += dropped;
-            ledger.discard += dropped as f64 * actual_costs.f(t, i);
-            // local processing queue = kept + inbound from last interval
-            new_data[i] = keep.to_vec();
-        }
-
-        // --- local updates -----------------------------------------------------
-        for i in 0..n {
-            let mut workload = std::mem::take(&mut inbound[i]);
-            workload.extend(&new_data[i]);
-            if workload.is_empty() || !active[i] {
-                // inactive devices drop their queue (worst case: data at an
-                // exited device is unreachable); its discard cost is charged
-                // since the network loses those points.
-                if !workload.is_empty() && !active[i] {
-                    ledger.discard += workload.len() as f64 * actual_costs.f(t, i);
-                    stats.discarded += workload.len();
-                }
-                continue;
-            }
-            stats.processed += workload.len();
-            ledger.process += workload.len() as f64 * actual_costs.c_node(t, i);
-            processed_per_device[i].extend(&workload);
-            if synced[i] {
-                if let Some(loss) = trainer.train_interval(&mut device_params[i], train, &workload)? {
-                    per_device_loss[t][i] = Some(loss);
-                    h[i] += workload.len() as f64;
-                }
-            }
-            // unsynced devices process data (it is consumed) but their stale
-            // update cannot be used — the processed points still count
-            // toward resource usage, not toward aggregation weight.
-        }
-        inbound = pending;
-        movement_totals.push(stats);
-
-        // --- aggregation ---------------------------------------------------------
-        if (t + 1) % cfg.tau == 0 {
-            let contributions: Vec<(&Vec<HostTensor>, f64)> = (0..n)
-                .filter(|&i| active[i] && synced[i])
-                .map(|i| (&device_params[i], h[i]))
-                .collect();
-            if let Some(new_global) = aggregator::aggregate(&contributions) {
-                *global = new_global;
-            }
-            for i in 0..n {
-                if active[i] {
-                    device_params[i] = global.clone();
-                    synced[i] = true;
-                }
-                h[i] = 0.0;
-            }
-            if cfg.eval_curve {
-                curve.push((t + 1, trainer.evaluate(global, test)?));
-            }
-        }
-    }
-
-    let accuracy = trainer.evaluate(global, test)?;
-    let sim_before =
-        similarity::mean_similarity(&similarity::label_histograms(train, &collected_per_device));
-    let sim_after =
-        similarity::mean_similarity(&similarity::label_histograms(train, &processed_per_device));
-    let total_collected = movement_totals.collected();
-
-    Ok(EngineOutput {
-        accuracy,
-        accuracy_curve: curve,
-        per_device_loss,
-        ledger,
-        movement: movement_totals,
-        similarity: (sim_before, sim_after),
-        mean_active: churn.mean_active(),
-        total_collected,
-    })
-}
-
-/// Integer apportionment of `count` samples to a device's plan row by the
-/// largest-remainder method (keep / offload-per-neighbor / discard).
-struct Allocation {
-    keep: usize,
-    /// (target, count), ascending target id.
-    offloads: Vec<(usize, usize)>,
-}
-
-fn apportion(plan: &MovementPlan, i: usize, count: usize) -> Allocation {
-    let n = plan.n;
-    // options: 0 = keep, 1..=n = offload to j-1, n+1 = discard
-    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(n + 2);
-    fracs.push((0, plan.s(i, i)));
-    for j in 0..n {
-        if j != i && plan.s(i, j) > 0.0 {
-            fracs.push((j + 1, plan.s(i, j)));
-        }
-    }
-    fracs.push((n + 1, plan.r[i]));
-
-    let total: f64 = fracs.iter().map(|&(_, f)| f).sum();
-    if total <= 0.0 {
-        // degenerate all-zero row (e.g. from an inactive device): discard
-        return Allocation { keep: 0, offloads: Vec::new() };
-    }
-    let norm = total;
-    let mut counts: Vec<(usize, usize, f64)> = fracs
-        .iter()
-        .map(|&(opt, f)| {
-            let exact = f / norm * count as f64;
-            (opt, exact.floor() as usize, exact - exact.floor())
-        })
-        .collect();
-    let assigned: usize = counts.iter().map(|&(_, c, _)| c).sum();
-    let mut remaining = count - assigned;
-    // largest remainders get the leftover units
-    let mut order: Vec<usize> = (0..counts.len()).collect();
-    order.sort_by(|&a, &b| counts[b].2.partial_cmp(&counts[a].2).unwrap());
-    for &k in &order {
-        if remaining == 0 {
-            break;
-        }
-        counts[k].1 += 1;
-        remaining -= 1;
-    }
-
-    let mut alloc = Allocation { keep: 0, offloads: Vec::new() };
-    for (opt, c, _) in counts {
-        if c == 0 {
-            continue;
-        }
-        if opt == 0 {
-            alloc.keep = c;
-        } else if opt <= plan.n {
-            alloc.offloads.push((opt - 1, c));
-        }
-        // discard = remainder, implicit
-    }
-    alloc.offloads.sort_unstable();
-    alloc
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn plan_from_rows(n: usize, rows: Vec<(Vec<f64>, f64)>) -> MovementPlan {
-        let mut plan = MovementPlan::keep_all(n);
-        for (i, (s_row, r)) in rows.into_iter().enumerate() {
-            for j in 0..n {
-                plan.set_s(i, j, s_row[j]);
-            }
-            plan.r[i] = r;
-        }
-        plan
-    }
-
-    #[test]
-    fn apportion_integral_plan() {
-        let plan = plan_from_rows(2, vec![(vec![0.0, 1.0], 0.0), (vec![0.0, 1.0], 0.0)]);
-        let a = apportion(&plan, 0, 7);
-        assert_eq!(a.keep, 0);
-        assert_eq!(a.offloads, vec![(1, 7)]);
-    }
-
-    #[test]
-    fn apportion_fractional_sums_to_count() {
-        let plan = plan_from_rows(
-            3,
-            vec![
-                (vec![0.5, 0.3, 0.0], 0.2),
-                (vec![0.0, 1.0, 0.0], 0.0),
-                (vec![0.0, 0.0, 1.0], 0.0),
-            ],
-        );
-        for count in [1usize, 2, 3, 10, 17] {
-            let a = apportion(&plan, 0, count);
-            let offloaded: usize = a.offloads.iter().map(|&(_, c)| c).sum();
-            assert!(a.keep + offloaded <= count);
-            // exact proportions within 1 unit each
-            assert!((a.keep as f64 - 0.5 * count as f64).abs() <= 1.0);
-        }
-    }
-
-    #[test]
-    fn apportion_empty_row_discards_everything() {
-        // all-zero row (inactive device shape) normalizes to discard
-        let plan = plan_from_rows(2, vec![(vec![0.0, 0.0], 0.0), (vec![0.0, 1.0], 0.0)]);
-        let a = apportion(&plan, 0, 5);
-        assert_eq!(a.keep, 0);
-        assert!(a.offloads.is_empty());
-    }
-
-    /// Property: apportionment conserves the sample count and tracks the
-    /// fractional plan within one unit per option.
-    #[test]
-    fn prop_apportion_conserves_and_tracks() {
-        crate::prop::for_all("apportion", 150, |g| {
-            let n = g.usize_in(2, 6);
-            let count = g.usize_in(0, 40);
-            // random simplex row for device 0
-            let mut fracs = g.vec_f64(n + 1, 0.0, 1.0); // s_00..s_0(n-1), r_0
-            let total: f64 = fracs.iter().sum();
-            for f in fracs.iter_mut() {
-                *f /= total.max(1e-12);
-            }
-            let mut plan = MovementPlan::keep_all(n);
-            for j in 0..n {
-                plan.set_s(0, j, fracs[j]);
-            }
-            plan.r[0] = fracs[n];
-
-            let a = apportion(&plan, 0, count);
-            let offloaded: usize = a.offloads.iter().map(|&(_, c)| c).sum();
-            assert!(a.keep + offloaded <= count);
-            // per-option counts within 1 of the exact proportion
-            assert!((a.keep as f64 - fracs[0] * count as f64).abs() <= 1.0 + 1e-9);
-            for &(j, c) in &a.offloads {
-                assert!(j != 0 && j < n);
-                assert!((c as f64 - fracs[j] * count as f64).abs() <= 1.0 + 1e-9);
-            }
-            // implied discard also within 1
-            let discard = count - a.keep - offloaded;
-            assert!((discard as f64 - fracs[n] * count as f64).abs() <= 1.0 + 1e-9);
-        });
-    }
+    let compute = LocalCompute { rt, trainer: &trainer, train: &sub.train, test: &sub.test };
+    session::run_with(cfg, &sub, compute)
 }

@@ -1,13 +1,19 @@
 //! Federated learning engine: local updates (eq. 3), weighted aggregation
 //! (eq. 4), movement-integrated time-interval loop, cost accounting and
 //! data-similarity metrics.
+//!
+//! The loop itself lives in [`session`] as an explicit state machine over a
+//! pluggable [`session::Compute`] backend; [`engine`] is the thin
+//! single-threaded compatibility wrapper ([`run`]).
 
 pub mod accounting;
 pub mod aggregator;
 pub mod engine;
+pub mod session;
 pub mod similarity;
 pub mod trainer;
 
 pub use accounting::{IntervalStats, Ledger, MovementTotals};
 pub use engine::{run, EngineOutput};
+pub use session::{Compute, LocalCompute, Session, SessionState, Substrates};
 pub use trainer::Trainer;

@@ -1,0 +1,883 @@
+//! The session-based federated engine: the time-interval loop of §III as an
+//! explicit state machine.
+//!
+//! [`crate::fed::run`] used to be a ~500-line monolith that interleaved
+//! substrate derivation, churn, data collection, movement optimization,
+//! training and aggregation in one function body. This module splits it into
+//!
+//! * [`Substrates`] — everything derived from an [`EngineConfig`] before the
+//!   loop starts (datasets, arrival schedules, cost traces, topology, churn
+//!   process). Pure CPU work, no runtime needed, bit-deterministic per seed.
+//! * [`Compute`] — the training backend. [`LocalCompute`] borrows a
+//!   [`Trainer`] for the classic single-threaded fast path;
+//!   [`crate::coordinator::RuntimeHandle`] implements it over the
+//!   runtime-service thread so sessions can run from any worker thread
+//!   (see [`crate::coordinator::pool::SimPool`]).
+//! * [`Session`] — the loop itself, decomposed into
+//!   [`Session::step_churn`], [`Session::step_collect`],
+//!   [`Session::step_movement`], [`Session::step_train`] and
+//!   [`Session::step_aggregate`], with all per-interval buffers preallocated
+//!   in an interval workspace (no per-`t` `Vec` churn in the
+//!   movement-materialization and training loops; see DESIGN.md §Perf).
+//!
+//! Churn semantics (worst case, §V-E): an exiting device loses the local
+//! updates it accumulated since the last aggregation (it "cannot transmit
+//! its local update results prior to exiting"); a re-entering device
+//! participates in data collection and movement immediately, but trains
+//! and contributes only after it re-synchronizes at the end of the ongoing
+//! aggregation period.
+
+use anyhow::Result;
+
+use crate::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind};
+use crate::costs::{estimator, traces, CapacityMode, CostSchedule};
+use crate::data::dataset::Dataset;
+use crate::data::{Arrivals, Partitioner, SynthDigits};
+use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
+use crate::fed::aggregator;
+use crate::fed::similarity;
+use crate::fed::trainer::Trainer;
+use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace};
+use crate::runtime::{HostTensor, Runtime};
+use crate::topology::{generators, ChurnProcess, Graph};
+use crate::util::rng::Rng;
+
+/// Model parameters as one tensor per layer.
+pub type Params = Vec<HostTensor>;
+
+/// Everything an experiment driver needs from one run.
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    /// Final test accuracy of the global model.
+    pub accuracy: f64,
+    /// Test accuracy after each aggregation `(t, acc)` (if `eval_curve`).
+    pub accuracy_curve: Vec<(usize, f64)>,
+    /// Per-interval, per-device training loss (None when the device did
+    /// not train that interval) — Fig. 4a.
+    pub per_device_loss: Vec<Vec<Option<f32>>>,
+    pub ledger: Ledger,
+    pub movement: MovementTotals,
+    /// Mean pairwise label similarity (before movement, after movement) —
+    /// Fig. 4b.
+    pub similarity: (f64, f64),
+    /// Mean active devices per interval (Table V / Figs. 9–10).
+    pub mean_active: f64,
+    /// Total datapoints collected by active devices.
+    pub total_collected: usize,
+}
+
+/// Fixed generator seed for the SynthDigits class prototypes: the *task*
+/// is identical across all experiments; per-run seeds control sampling,
+/// partitioning, costs, topology and churn.
+pub const TASK_SEED: u64 = 0xF0D5;
+
+/// The training backend a [`Session`] schedules local updates through.
+///
+/// Two implementations exist: [`LocalCompute`] (borrowed [`Trainer`] on the
+/// current thread — the classic `fed::run` path) and
+/// [`crate::coordinator::RuntimeHandle`] (message-passing to the
+/// runtime-service thread — the [`crate::coordinator::pool::SimPool`]
+/// path). Both must be deterministic: the same parameters and samples must
+/// produce bit-identical updates, which is what makes pooled and serial
+/// runs interchangeable (see `tests/determinism.rs`).
+pub trait Compute {
+    /// Seeded parameter initialization for the session's model.
+    fn init_params(&self, seed: u64) -> Result<Params>;
+    /// One interval of local updates over `samples`; updates `params` in
+    /// place and returns the sample-weighted mean loss (None if empty).
+    fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>>;
+    /// Test-set accuracy of `params`.
+    fn evaluate(&self, params: &[HostTensor]) -> Result<f64>;
+}
+
+/// Direct, single-threaded backend: borrows the runtime and trainer of the
+/// calling thread. This is the fast path `fed::run` uses.
+pub struct LocalCompute<'a> {
+    pub rt: &'a Runtime,
+    pub trainer: &'a Trainer,
+    pub train: &'a Dataset,
+    pub test: &'a Dataset,
+}
+
+impl Compute for LocalCompute<'_> {
+    fn init_params(&self, seed: u64) -> Result<Params> {
+        self.rt.init_params(self.trainer.kind, seed)
+    }
+
+    fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>> {
+        self.trainer.train_interval(params, self.train, samples)
+    }
+
+    fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
+        self.trainer.evaluate(params, self.test)
+    }
+}
+
+/// Everything a run derives from its [`EngineConfig`] before the loop
+/// starts. Derivation is pure CPU work: a pooled worker can build this
+/// concurrently with other runs, then register the datasets with the
+/// runtime service and stream the loop through a [`Compute`] handle.
+#[derive(Debug, Clone)]
+pub struct Substrates {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub arrivals: Arrivals,
+    /// Ground-truth cost/capacity schedule (the ledger always charges this).
+    pub actual_costs: CostSchedule,
+    /// What the optimizer believes (equals `actual_costs` under perfect
+    /// information).
+    pub belief_costs: CostSchedule,
+    pub graph: Graph,
+    /// Initial churn process state (cloned into each session).
+    pub churn: ChurnProcess,
+    /// Churn RNG stream (cloned into each session).
+    pub churn_rng: Rng,
+    /// Seed for parameter initialization.
+    pub init_seed: u64,
+}
+
+impl Substrates {
+    /// Derive all substrates from the config. The RNG split order below is
+    /// load-bearing: it must stay exactly as in the original engine so that
+    /// every seed reproduces the pre-refactor numbers bit-for-bit.
+    pub fn derive(cfg: &EngineConfig) -> Substrates {
+        let mut root = Rng::new(cfg.seed);
+        let mut data_rng = root.split();
+        let mut topo_rng = root.split();
+        let mut cost_rng = root.split();
+        let churn_rng = root.split();
+        let init_seed = root.next_u64();
+
+        let gen = SynthDigits::new(TASK_SEED);
+        let (train, test) = gen.train_test(cfg.n_train, cfg.n_test, &mut data_rng);
+        let arrivals = Partitioner { n_devices: cfg.n, t_max: cfg.t_max, iid: cfg.iid }
+            .partition(&train, &mut data_rng);
+
+        let mut actual_costs = traces::generate(
+            cfg.cost_source,
+            cfg.n,
+            cfg.t_max,
+            cfg.tau,
+            cfg.error_profile,
+            &mut cost_rng,
+        );
+        if let CapacityPolicy::MeanArrivals = cfg.capacity {
+            actual_costs.set_capacities(CapacityMode::Uniform(cfg.mean_arrivals()));
+        }
+        let mut belief_costs: CostSchedule = match cfg.info {
+            InfoMode::Perfect => actual_costs.clone(),
+            InfoMode::Estimated(w) => estimator::estimate(&actual_costs, w),
+        };
+        if cfg.discard_model == crate::movement::DiscardModel::Sqrt {
+            // γ-rescaling for the convex error model (see ErrorWeightProfile)
+            for t in 0..cfg.t_max {
+                for i in 0..cfg.n {
+                    belief_costs.error_weight[t][i] *= cfg.error_profile.sqrt_gamma_scale;
+                }
+            }
+        }
+
+        let graph = build_topology(cfg, &actual_costs, &mut topo_rng);
+        let churn = match cfg.churn {
+            Some(Churn { p_exit, p_entry }) => ChurnProcess::new(cfg.n, p_exit, p_entry),
+            None => ChurnProcess::static_network(cfg.n),
+        };
+
+        Substrates {
+            train,
+            test,
+            arrivals,
+            actual_costs,
+            belief_costs,
+            graph,
+            churn,
+            churn_rng,
+            init_seed,
+        }
+    }
+}
+
+fn build_topology(cfg: &EngineConfig, costs: &CostSchedule, rng: &mut Rng) -> Graph {
+    match cfg.topology {
+        TopologyKind::Full => generators::fully_connected(cfg.n),
+        TopologyKind::Random(rho) => generators::erdos_renyi(cfg.n, rho, rng),
+        TopologyKind::SmallWorld => {
+            generators::watts_strogatz(cfg.n, (cfg.n / 5).max(2), 0.3, rng)
+        }
+        TopologyKind::Hierarchical => {
+            generators::hierarchical(cfg.n, &costs.mean_compute_per_device(), rng)
+        }
+        TopologyKind::ScaleFree => generators::scale_free(cfg.n, 2, rng),
+    }
+}
+
+/// The mutable learning state of a running session: what a checkpoint of
+/// the distributed system would have to contain.
+pub struct SessionState {
+    /// Global model parameters (updated at each aggregation).
+    pub global: Params,
+    /// Per-device local parameters.
+    pub device_params: Vec<Params>,
+    /// Whether device i holds a model synchronized with the current
+    /// aggregation period (re-entering devices wait for the next one).
+    pub synced: Vec<bool>,
+    /// Datapoints processed since the last aggregation (eq. 4 weight).
+    pub h: Vec<f64>,
+    /// Data offloaded *to* each device last interval, processed this one.
+    pub inbound: Vec<Vec<u32>>,
+    pub ledger: Ledger,
+    pub movement: MovementTotals,
+    pub per_device_loss: Vec<Vec<Option<f32>>>,
+    pub curve: Vec<(usize, f64)>,
+    /// Label multiset collected per device (similarity "before").
+    pub collected_per_device: Vec<Vec<u32>>,
+    /// Label multiset processed per device (similarity "after").
+    pub processed_per_device: Vec<Vec<u32>>,
+}
+
+impl SessionState {
+    fn new(cfg: &EngineConfig, global: Params) -> SessionState {
+        let n = cfg.n;
+        SessionState {
+            device_params: vec![global.clone(); n],
+            global,
+            synced: vec![true; n],
+            h: vec![0.0; n],
+            inbound: vec![Vec::new(); n],
+            ledger: Ledger::default(),
+            movement: MovementTotals::default(),
+            per_device_loss: vec![vec![None; n]; cfg.t_max],
+            curve: Vec::new(),
+            collected_per_device: vec![Vec::new(); n],
+            processed_per_device: vec![Vec::new(); n],
+        }
+    }
+}
+
+/// Preallocated per-interval buffers, reused across all `t` (DESIGN.md
+/// §Perf): the hot loops never allocate per interval except where an
+/// algorithm intrinsically must (topology restriction, solver plan clones).
+struct IntervalWorkspace {
+    active: Vec<bool>,
+    /// Collected-this-interval sample queues (after movement: the kept
+    /// prefix only).
+    new_data: Vec<Vec<u32>>,
+    /// Samples offloaded this interval, delivered next interval (swapped
+    /// with `SessionState::inbound` at the end of `step_train`).
+    pending: Vec<Vec<u32>>,
+    d: Vec<f64>,
+    inbound_counts: Vec<f64>,
+    workload: Vec<u32>,
+    solver: SolverWorkspace,
+    apportion: ApportionScratch,
+    stats: IntervalStats,
+}
+
+impl IntervalWorkspace {
+    fn new(n: usize) -> IntervalWorkspace {
+        IntervalWorkspace {
+            active: Vec::with_capacity(n),
+            new_data: vec![Vec::new(); n],
+            pending: vec![Vec::new(); n],
+            d: Vec::with_capacity(n),
+            inbound_counts: Vec::with_capacity(n),
+            workload: Vec::new(),
+            solver: SolverWorkspace::new(),
+            apportion: ApportionScratch::default(),
+            stats: IntervalStats::default(),
+        }
+    }
+}
+
+/// One distributed run as an explicit state machine. Construct with
+/// [`Session::new`], drive with [`Session::run`] (or step manually for
+/// tests and future schedulers).
+pub struct Session<'a, C: Compute> {
+    pub cfg: &'a EngineConfig,
+    sub: &'a Substrates,
+    compute: C,
+    churn: ChurnProcess,
+    churn_rng: Rng,
+    pub state: SessionState,
+    ws: IntervalWorkspace,
+}
+
+impl<'a, C: Compute> Session<'a, C> {
+    pub fn new(cfg: &'a EngineConfig, sub: &'a Substrates, compute: C) -> Result<Session<'a, C>> {
+        let global = compute.init_params(sub.init_seed)?;
+        Ok(Session {
+            cfg,
+            sub,
+            compute,
+            churn: sub.churn.clone(),
+            churn_rng: sub.churn_rng.clone(),
+            state: SessionState::new(cfg, global),
+            ws: IntervalWorkspace::new(cfg.n),
+        })
+    }
+
+    /// Advance the churn process and reset state for exits/entries: a
+    /// re-entering device is present but unsynchronized; an exited device
+    /// loses the updates it could not transmit.
+    pub fn step_churn(&mut self, _t: usize) {
+        let entered = self.churn.step(&mut self.churn_rng);
+        for &i in &entered {
+            self.state.synced[i] = false;
+            self.state.h[i] = 0.0;
+        }
+        self.ws.active.clear();
+        self.ws.active.extend_from_slice(self.churn.active());
+        for i in 0..self.cfg.n {
+            if !self.ws.active[i] {
+                self.state.h[i] = 0.0;
+            }
+        }
+    }
+
+    /// Materialize this interval's arrivals `D_i(t)` for active devices.
+    pub fn step_collect(&mut self, t: usize) {
+        for i in 0..self.cfg.n {
+            self.ws.new_data[i].clear();
+            if self.ws.active[i] {
+                self.ws.new_data[i].extend_from_slice(&self.sub.arrivals.schedule[i][t]);
+            }
+            self.state.collected_per_device[i].extend_from_slice(&self.ws.new_data[i]);
+        }
+    }
+
+    /// Solve the movement problem (eqs. 5–9) for this interval and
+    /// materialize the fractional plan into integer sample movements:
+    /// kept prefixes stay in the local queues, offloads land in `pending`
+    /// (delivered next interval), the rest is discarded and charged.
+    pub fn step_movement(&mut self, t: usize) {
+        let n = self.cfg.n;
+        self.ws.d.clear();
+        self.ws.d.extend(self.ws.new_data.iter().map(|s| s.len() as f64));
+        self.ws.inbound_counts.clear();
+        self.ws.inbound_counts.extend(self.state.inbound.iter().map(|s| s.len() as f64));
+
+        match self.cfg.method {
+            Method::NetworkAware => {
+                // restricting rebuilds neighbor lists in sorted edge order,
+                // which the tie-breaking of best_neighbor depends on — always
+                // restrict, even on an all-active interval
+                let restricted = self.sub.graph.restrict(&self.ws.active);
+                let problem = MovementProblem {
+                    t,
+                    graph: &restricted,
+                    active: &self.ws.active,
+                    d: &self.ws.d,
+                    inbound_prev: &self.ws.inbound_counts,
+                    costs: &self.sub.belief_costs,
+                    discard_model: self.cfg.discard_model,
+                };
+                movement::solve_with(&problem, &mut self.ws.solver);
+            }
+            Method::Federated => self.ws.solver.plan.reset_keep_all(n),
+            Method::Centralized => unreachable!("centralized runs bypass Session"),
+        }
+
+        self.ws.stats = IntervalStats::default();
+        for i in 0..n {
+            let count = self.ws.new_data[i].len();
+            self.ws.stats.collected += count;
+            if count == 0 {
+                continue;
+            }
+            let keep = apportion_into(&self.ws.solver.plan, i, count, &mut self.ws.apportion);
+            // offloads, ascending j (deterministic)
+            let mut cursor = keep;
+            for &(j, sent) in &self.ws.apportion.offloads {
+                self.ws.pending[j].extend_from_slice(&self.ws.new_data[i][cursor..cursor + sent]);
+                cursor += sent;
+                self.ws.stats.offloaded += sent;
+                self.state.ledger.transfer +=
+                    sent as f64 * self.sub.actual_costs.c_link(t, i, j);
+            }
+            let dropped = count - cursor;
+            self.ws.stats.discarded += dropped;
+            self.state.ledger.discard += dropped as f64 * self.sub.actual_costs.f(t, i);
+            // local processing queue = kept prefix (+ inbound, in step_train)
+            self.ws.new_data[i].truncate(keep);
+        }
+    }
+
+    /// Run local gradient updates (eq. 3) on every active, synchronized
+    /// device's workload (inbound from last interval + kept collection),
+    /// then rotate the pending offloads into the inbound queues.
+    pub fn step_train(&mut self, t: usize) -> Result<()> {
+        let n = self.cfg.n;
+        for i in 0..n {
+            self.ws.workload.clear();
+            self.ws.workload.extend_from_slice(&self.state.inbound[i]);
+            self.state.inbound[i].clear();
+            self.ws.workload.extend_from_slice(&self.ws.new_data[i]);
+            if self.ws.workload.is_empty() || !self.ws.active[i] {
+                // inactive devices drop their queue (worst case: data at an
+                // exited device is unreachable); its discard cost is charged
+                // since the network loses those points.
+                if !self.ws.workload.is_empty() && !self.ws.active[i] {
+                    self.state.ledger.discard +=
+                        self.ws.workload.len() as f64 * self.sub.actual_costs.f(t, i);
+                    self.ws.stats.discarded += self.ws.workload.len();
+                }
+                continue;
+            }
+            self.ws.stats.processed += self.ws.workload.len();
+            self.state.ledger.process +=
+                self.ws.workload.len() as f64 * self.sub.actual_costs.c_node(t, i);
+            self.state.processed_per_device[i].extend_from_slice(&self.ws.workload);
+            if self.state.synced[i] {
+                if let Some(loss) = self
+                    .compute
+                    .train_interval(&mut self.state.device_params[i], &self.ws.workload)?
+                {
+                    self.state.per_device_loss[t][i] = Some(loss);
+                    self.state.h[i] += self.ws.workload.len() as f64;
+                }
+            }
+            // unsynced devices process data (it is consumed) but their stale
+            // update cannot be used — the processed points still count
+            // toward resource usage, not toward aggregation weight.
+        }
+        // offloads sent this interval become next interval's inbound; the
+        // drained inbound vectors become next interval's pending buffers.
+        std::mem::swap(&mut self.state.inbound, &mut self.ws.pending);
+        self.state.movement.push(self.ws.stats);
+        Ok(())
+    }
+
+    /// Weighted federated averaging (eq. 4) every τ intervals; re-syncs all
+    /// active devices to the new global model.
+    pub fn step_aggregate(&mut self, t: usize) -> Result<()> {
+        if (t + 1) % self.cfg.tau != 0 {
+            return Ok(());
+        }
+        let n = self.cfg.n;
+        let contributions: Vec<(&Params, f64)> = (0..n)
+            .filter(|&i| self.ws.active[i] && self.state.synced[i])
+            .map(|i| (&self.state.device_params[i], self.state.h[i]))
+            .collect();
+        let new_global = aggregator::aggregate(&contributions);
+        if let Some(g) = new_global {
+            self.state.global = g;
+        }
+        for i in 0..n {
+            if self.ws.active[i] {
+                self.state.device_params[i] = self.state.global.clone();
+                self.state.synced[i] = true;
+            }
+            self.state.h[i] = 0.0;
+        }
+        if self.cfg.eval_curve {
+            let acc = self.compute.evaluate(&self.state.global)?;
+            self.state.curve.push((t + 1, acc));
+        }
+        Ok(())
+    }
+
+    /// Drive all intervals and produce the run's output.
+    pub fn run(mut self) -> Result<EngineOutput> {
+        for t in 0..self.cfg.t_max {
+            self.step_churn(t);
+            self.step_collect(t);
+            self.step_movement(t);
+            self.step_train(t)?;
+            self.step_aggregate(t)?;
+        }
+        self.finish()
+    }
+
+    /// Final evaluation and similarity metrics.
+    pub fn finish(self) -> Result<EngineOutput> {
+        let accuracy = self.compute.evaluate(&self.state.global)?;
+        let sim_before = similarity::mean_similarity(&similarity::label_histograms(
+            &self.sub.train,
+            &self.state.collected_per_device,
+        ));
+        let sim_after = similarity::mean_similarity(&similarity::label_histograms(
+            &self.sub.train,
+            &self.state.processed_per_device,
+        ));
+        let total_collected = self.state.movement.collected();
+        Ok(EngineOutput {
+            accuracy,
+            accuracy_curve: self.state.curve,
+            per_device_loss: self.state.per_device_loss,
+            ledger: self.state.ledger,
+            movement: self.state.movement,
+            similarity: (sim_before, sim_after),
+            mean_active: self.churn.mean_active(),
+            total_collected,
+        })
+    }
+}
+
+/// Run one experiment on already-derived substrates through any backend.
+/// Dispatches centralized runs to the no-network baseline loop.
+pub fn run_with<C: Compute>(
+    cfg: &EngineConfig,
+    sub: &Substrates,
+    compute: C,
+) -> Result<EngineOutput> {
+    match cfg.method {
+        Method::Centralized => run_centralized(cfg, sub, &compute),
+        _ => Session::new(cfg, sub, compute)?.run(),
+    }
+}
+
+/// Centralized baseline: all collected data is processed at one server;
+/// no movement, no network costs (accuracy comparison only, Table II).
+fn run_centralized<C: Compute>(
+    cfg: &EngineConfig,
+    sub: &Substrates,
+    compute: &C,
+) -> Result<EngineOutput> {
+    let mut params = compute.init_params(sub.init_seed)?;
+    let mut per_device_loss = vec![vec![None; cfg.n]; cfg.t_max];
+    let mut collected = 0usize;
+    let mut curve = Vec::new();
+    let mut batch: Vec<u32> = Vec::new();
+    for t in 0..cfg.t_max {
+        batch.clear();
+        for i in 0..cfg.n {
+            batch.extend(&sub.arrivals.schedule[i][t]);
+        }
+        collected += batch.len();
+        if let Some(loss) = compute.train_interval(&mut params, &batch)? {
+            per_device_loss[t][0] = Some(loss);
+        }
+        if cfg.eval_curve && (t + 1) % cfg.tau == 0 {
+            curve.push((t + 1, compute.evaluate(&params)?));
+        }
+    }
+    let accuracy = compute.evaluate(&params)?;
+    Ok(EngineOutput {
+        accuracy,
+        accuracy_curve: curve,
+        per_device_loss,
+        ledger: Ledger::default(),
+        movement: MovementTotals::default(),
+        similarity: (1.0, 1.0),
+        mean_active: cfg.n as f64,
+        total_collected: collected,
+    })
+}
+
+/// Reusable scratch for [`apportion_into`] (one call per device per
+/// interval — preallocating avoids four `Vec`s per call).
+#[derive(Debug, Default)]
+pub struct ApportionScratch {
+    fracs: Vec<(usize, f64)>,
+    counts: Vec<(usize, usize, f64)>,
+    order: Vec<usize>,
+    /// `(target, count)` ascending by target id — valid after a call.
+    pub offloads: Vec<(usize, usize)>,
+}
+
+/// Integer apportionment of `count` samples to device `i`'s plan row by the
+/// largest-remainder method (keep / offload-per-neighbor / discard).
+/// Returns the kept count; offloads land in `ws.offloads`; the implicit
+/// remainder is discarded.
+pub fn apportion_into(
+    plan: &MovementPlan,
+    i: usize,
+    count: usize,
+    ws: &mut ApportionScratch,
+) -> usize {
+    let n = plan.n;
+    ws.offloads.clear();
+    // options: 0 = keep, 1..=n = offload to j-1, n+1 = discard
+    ws.fracs.clear();
+    ws.fracs.push((0, plan.s(i, i)));
+    for j in 0..n {
+        if j != i && plan.s(i, j) > 0.0 {
+            ws.fracs.push((j + 1, plan.s(i, j)));
+        }
+    }
+    ws.fracs.push((n + 1, plan.r[i]));
+
+    let total: f64 = ws.fracs.iter().map(|&(_, f)| f).sum();
+    if total <= 0.0 {
+        // degenerate all-zero row (e.g. from an inactive device): discard
+        return 0;
+    }
+    let norm = total;
+    ws.counts.clear();
+    ws.counts.extend(ws.fracs.iter().map(|&(opt, f)| {
+        let exact = f / norm * count as f64;
+        (opt, exact.floor() as usize, exact - exact.floor())
+    }));
+    let assigned: usize = ws.counts.iter().map(|&(_, c, _)| c).sum();
+    let mut remaining = count - assigned;
+    // largest remainders get the leftover units (stable sort: ties keep
+    // option order, matching the pre-refactor engine exactly)
+    let ApportionScratch { counts, order, offloads, .. } = ws;
+    order.clear();
+    order.extend(0..counts.len());
+    order.sort_by(|&a, &b| counts[b].2.partial_cmp(&counts[a].2).unwrap());
+    for &k in order.iter() {
+        if remaining == 0 {
+            break;
+        }
+        counts[k].1 += 1;
+        remaining -= 1;
+    }
+
+    let mut keep = 0usize;
+    for &(opt, c, _) in counts.iter() {
+        if c == 0 {
+            continue;
+        }
+        if opt == 0 {
+            keep = c;
+        } else if opt <= n {
+            offloads.push((opt - 1, c));
+        }
+        // discard = remainder, implicit
+    }
+    offloads.sort_unstable();
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- apportionment ------------------------------------------------------
+
+    struct Allocation {
+        keep: usize,
+        offloads: Vec<(usize, usize)>,
+    }
+
+    fn apportion(plan: &MovementPlan, i: usize, count: usize) -> Allocation {
+        let mut ws = ApportionScratch::default();
+        let keep = apportion_into(plan, i, count, &mut ws);
+        Allocation { keep, offloads: ws.offloads.clone() }
+    }
+
+    fn plan_from_rows(n: usize, rows: Vec<(Vec<f64>, f64)>) -> MovementPlan {
+        let mut plan = MovementPlan::keep_all(n);
+        for (i, (s_row, r)) in rows.into_iter().enumerate() {
+            for j in 0..n {
+                plan.set_s(i, j, s_row[j]);
+            }
+            plan.r[i] = r;
+        }
+        plan
+    }
+
+    #[test]
+    fn apportion_integral_plan() {
+        let plan = plan_from_rows(2, vec![(vec![0.0, 1.0], 0.0), (vec![0.0, 1.0], 0.0)]);
+        let a = apportion(&plan, 0, 7);
+        assert_eq!(a.keep, 0);
+        assert_eq!(a.offloads, vec![(1, 7)]);
+    }
+
+    #[test]
+    fn apportion_fractional_sums_to_count() {
+        let plan = plan_from_rows(
+            3,
+            vec![
+                (vec![0.5, 0.3, 0.0], 0.2),
+                (vec![0.0, 1.0, 0.0], 0.0),
+                (vec![0.0, 0.0, 1.0], 0.0),
+            ],
+        );
+        for count in [1usize, 2, 3, 10, 17] {
+            let a = apportion(&plan, 0, count);
+            let offloaded: usize = a.offloads.iter().map(|&(_, c)| c).sum();
+            assert!(a.keep + offloaded <= count);
+            // exact proportions within 1 unit each
+            assert!((a.keep as f64 - 0.5 * count as f64).abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn apportion_empty_row_discards_everything() {
+        // all-zero row (inactive device shape) normalizes to discard
+        let plan = plan_from_rows(2, vec![(vec![0.0, 0.0], 0.0), (vec![0.0, 1.0], 0.0)]);
+        let a = apportion(&plan, 0, 5);
+        assert_eq!(a.keep, 0);
+        assert!(a.offloads.is_empty());
+    }
+
+    #[test]
+    fn apportion_scratch_reuse_is_stateless() {
+        // reusing one scratch across calls must not leak previous results
+        let plan_a = plan_from_rows(2, vec![(vec![0.0, 1.0], 0.0), (vec![0.0, 1.0], 0.0)]);
+        let plan_b = plan_from_rows(2, vec![(vec![1.0, 0.0], 0.0), (vec![0.0, 1.0], 0.0)]);
+        let mut ws = ApportionScratch::default();
+        let keep_a = apportion_into(&plan_a, 0, 9, &mut ws);
+        assert_eq!((keep_a, ws.offloads.as_slice()), (0, &[(1usize, 9usize)][..]));
+        let keep_b = apportion_into(&plan_b, 0, 9, &mut ws);
+        assert_eq!((keep_b, ws.offloads.len()), (9, 0));
+    }
+
+    /// Property: apportionment conserves the sample count and tracks the
+    /// fractional plan within one unit per option.
+    #[test]
+    fn prop_apportion_conserves_and_tracks() {
+        crate::prop::for_all("apportion", 150, |g| {
+            let n = g.usize_in(2, 6);
+            let count = g.usize_in(0, 40);
+            // random simplex row for device 0
+            let mut fracs = g.vec_f64(n + 1, 0.0, 1.0); // s_00..s_0(n-1), r_0
+            let total: f64 = fracs.iter().sum();
+            for f in fracs.iter_mut() {
+                *f /= total.max(1e-12);
+            }
+            let mut plan = MovementPlan::keep_all(n);
+            for j in 0..n {
+                plan.set_s(0, j, fracs[j]);
+            }
+            plan.r[0] = fracs[n];
+
+            let a = apportion(&plan, 0, count);
+            let offloaded: usize = a.offloads.iter().map(|&(_, c)| c).sum();
+            assert!(a.keep + offloaded <= count);
+            // per-option counts within 1 of the exact proportion
+            assert!((a.keep as f64 - fracs[0] * count as f64).abs() <= 1.0 + 1e-9);
+            for &(j, c) in &a.offloads {
+                assert!(j != 0 && j < n);
+                assert!((c as f64 - fracs[j] * count as f64).abs() <= 1.0 + 1e-9);
+            }
+            // implied discard also within 1
+            let discard = count - a.keep - offloaded;
+            assert!((discard as f64 - fracs[n] * count as f64).abs() <= 1.0 + 1e-9);
+        });
+    }
+
+    // -- session loop with a stub backend (no PJRT needed) ------------------
+
+    /// Deterministic fake backend: "parameters" are a single 2-element
+    /// tensor; training accumulates the sample count. Lets the session's
+    /// bookkeeping (churn, movement, accounting, aggregation) be tested
+    /// without XLA artifacts.
+    struct StubCompute;
+
+    impl Compute for StubCompute {
+        fn init_params(&self, seed: u64) -> Result<Params> {
+            Ok(vec![HostTensor::new(vec![2], vec![(seed % 97) as f32, 0.0])])
+        }
+
+        fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>> {
+            if samples.is_empty() {
+                return Ok(None);
+            }
+            params[0].data[1] += samples.len() as f32;
+            Ok(Some(1.0 / (1.0 + params[0].data[1])))
+        }
+
+        fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
+            Ok((params[0].data[1] as f64 / 1e4).tanh())
+        }
+    }
+
+    fn stub_cfg(method: Method) -> EngineConfig {
+        EngineConfig {
+            method,
+            n: 5,
+            t_max: 12,
+            tau: 4,
+            n_train: 600,
+            n_test: 120,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_conserves_datapoints() {
+        let cfg = stub_cfg(Method::NetworkAware);
+        let sub = Substrates::derive(&cfg);
+        let out = run_with(&cfg, &sub, StubCompute).unwrap();
+        let m = &out.movement;
+        assert!(m.collected() > 0, "nothing collected");
+        // every point ends somewhere: processed + discarded never exceeds
+        // collected (offloads still in flight at T are the only gap)
+        assert!(m.processed() + m.discarded() <= m.collected());
+        assert!(m.collected() - (m.processed() + m.discarded()) <= cfg.n * 64);
+        assert!(out.ledger.process >= 0.0 && out.ledger.transfer >= 0.0);
+        assert_eq!(out.per_device_loss.len(), cfg.t_max);
+        assert_eq!(out.per_device_loss[0].len(), cfg.n);
+        assert_eq!(out.total_collected, m.collected());
+    }
+
+    #[test]
+    fn session_is_deterministic() {
+        let cfg = stub_cfg(Method::NetworkAware).with(|c| {
+            c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 });
+        });
+        let sub = Substrates::derive(&cfg);
+        let a = run_with(&cfg, &sub, StubCompute).unwrap();
+        let b = run_with(&cfg, &sub, StubCompute).unwrap();
+        // and from independently re-derived substrates
+        let c = run_with(&cfg, &Substrates::derive(&cfg), StubCompute).unwrap();
+        for other in [&b, &c] {
+            assert_eq!(a.accuracy, other.accuracy);
+            assert_eq!(a.ledger, other.ledger);
+            assert_eq!(a.movement.per_interval, other.movement.per_interval);
+            assert_eq!(a.per_device_loss, other.per_device_loss);
+            assert_eq!(a.similarity, other.similarity);
+            assert_eq!(a.mean_active, other.mean_active);
+        }
+    }
+
+    #[test]
+    fn federated_session_moves_nothing() {
+        let cfg = stub_cfg(Method::Federated);
+        let sub = Substrates::derive(&cfg);
+        let out = run_with(&cfg, &sub, StubCompute).unwrap();
+        assert_eq!(out.movement.offloaded(), 0);
+        assert_eq!(out.movement.discarded(), 0);
+        assert_eq!(out.movement.processed(), out.movement.collected());
+        assert_eq!(out.ledger.transfer, 0.0);
+        assert_eq!(out.ledger.discard, 0.0);
+    }
+
+    #[test]
+    fn churn_reduces_active_devices() {
+        let static_cfg = stub_cfg(Method::NetworkAware);
+        let churn_cfg = static_cfg
+            .clone()
+            .with(|c| c.churn = Some(Churn { p_exit: 0.25, p_entry: 0.05 }));
+        let s = run_with(&static_cfg, &Substrates::derive(&static_cfg), StubCompute).unwrap();
+        let d = run_with(&churn_cfg, &Substrates::derive(&churn_cfg), StubCompute).unwrap();
+        assert_eq!(s.mean_active, static_cfg.n as f64);
+        assert!(d.mean_active < s.mean_active);
+        assert!(d.total_collected < s.total_collected);
+    }
+
+    #[test]
+    fn centralized_session_has_no_network_costs() {
+        let cfg = stub_cfg(Method::Centralized);
+        let sub = Substrates::derive(&cfg);
+        let out = run_with(&cfg, &sub, StubCompute).unwrap();
+        assert_eq!(out.ledger.total(), 0.0);
+        assert_eq!(out.movement.collected(), 0);
+        assert!(out.total_collected > 0);
+        assert_eq!(out.mean_active, cfg.n as f64);
+    }
+
+    #[test]
+    fn stepwise_equals_run() {
+        let cfg = stub_cfg(Method::NetworkAware);
+        let sub = Substrates::derive(&cfg);
+        let whole = run_with(&cfg, &sub, StubCompute).unwrap();
+
+        let mut session = Session::new(&cfg, &sub, StubCompute).unwrap();
+        for t in 0..cfg.t_max {
+            session.step_churn(t);
+            session.step_collect(t);
+            session.step_movement(t);
+            session.step_train(t).unwrap();
+            session.step_aggregate(t).unwrap();
+        }
+        let stepped = session.finish().unwrap();
+        assert_eq!(whole.accuracy, stepped.accuracy);
+        assert_eq!(whole.ledger, stepped.ledger);
+        assert_eq!(whole.movement.per_interval, stepped.movement.per_interval);
+    }
+}

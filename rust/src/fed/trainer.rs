@@ -49,7 +49,7 @@ impl Trainer {
     /// Hot path: parameters are converted to XLA literals once, stay
     /// literal-resident across all chunks (each step's outputs feed the
     /// next step's inputs without host round-trips), and are materialized
-    /// back into `HostTensor`s only at the end (EXPERIMENTS.md §Perf).
+    /// back into `HostTensor`s only at the end (DESIGN.md §Perf).
     pub fn train_interval(
         &self,
         params: &mut Vec<HostTensor>,

@@ -24,9 +24,13 @@
 //!   optimization and its solvers (Theorem-3 greedy, convex PGD), plus the
 //!   closed-form theory of Theorems 4–6.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts.
-//! * [`fed`] — federated engine: local updates, weighted aggregation, ledger.
-//! * [`coordinator`] — thread-based leader/worker actors.
-//! * [`experiments`] — drivers that regenerate every table and figure.
+//! * [`fed`] — federated engine: the session state machine
+//!   ([`fed::session`]) over pluggable compute backends, local updates,
+//!   weighted aggregation, ledger.
+//! * [`coordinator`] — thread-based runtime service, the [`coordinator::pool::SimPool`]
+//!   (config, seed) fan-out, and the leader/worker cluster actors.
+//! * [`experiments`] — drivers that regenerate every table and figure
+//!   (sweeps fan out through the pool; `--jobs N`).
 
 pub mod bench;
 pub mod cli;

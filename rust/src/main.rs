@@ -8,9 +8,13 @@
 //!             [--discard linear-r|linear-g|sqrt] [--capacity] [--estimated]
 //!             [--p-exit 0.02] [--p-entry 0.02] [--curve]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
-//!             [--seeds 3] [--model mlp|cnn] [--out results]
+//!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //! fogml cluster [--devices 4] [--rounds 5]
 //! ```
+//!
+//! `--jobs N` fans the sweep drivers' (config, seed) grids out over N
+//! pooled engine workers (see `coordinator::pool`); `--jobs 1` reproduces
+//! the serial numbers bit-for-bit.
 
 use anyhow::{bail, Result};
 
@@ -163,6 +167,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             None => None,
         },
         out_dir: args.get("out").unwrap_or("results").to_string(),
+        jobs: args.get_or("jobs", 1usize)?,
     };
     experiments::dispatch(which, &opts)
 }

@@ -16,6 +16,7 @@
 
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
+use crate::movement::SolverWorkspace;
 
 /// Smoothing constant in `φ(G) = (G + SQRT_EPS)^{-1/2}`.
 pub const SQRT_EPS: f64 = 1.0;
@@ -36,19 +37,29 @@ impl Default for PgdOptions {
 /// Solve the Sqrt-model problem by projected gradient descent, warm-started
 /// from the Theorem-3 greedy solution under the linear model.
 pub fn solve(p: &MovementProblem, opts: PgdOptions) -> MovementPlan {
+    let mut ws = SolverWorkspace::new();
+    solve_with(p, opts, &mut ws);
+    ws.plan
+}
+
+/// Workspace-reusing variant of [`solve`]: the best iterate lands in
+/// `ws.plan`. Every buffer is zeroed or fully overwritten first, so the
+/// result is bit-identical to a fresh [`solve`].
+pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspace) {
     let n = p.n();
-    let mut plan = crate::movement::greedy::solve(p);
+    crate::movement::greedy::solve_into(p, &mut ws.plan);
 
     // auto step size: inversely proportional to the largest row scale
     let max_d = p.d.iter().cloned().fold(1.0, f64::max);
     let step0 = if opts.step0 > 0.0 { opts.step0 } else { 0.5 / max_d };
 
-    let mut best = plan.clone();
-    let mut best_obj = plan.objective(p);
+    ws.best.clone_from(&ws.plan);
+    let mut best_obj = ws.plan.objective(p);
 
-    let mut grad_s = vec![0.0; n * n];
+    ws.grad_s.clear();
+    ws.grad_s.resize(n * n, 0.0);
     for it in 0..opts.iterations {
-        gradient(p, &plan, &mut grad_s);
+        gradient(p, &ws.plan, &mut ws.grad_s, &mut ws.g_tilde);
         let step = step0 / (1.0 + (it as f64 / 40.0)).sqrt();
         // gradient step on s (r has zero gradient; the simplex projection
         // absorbs mass into r when the s-coordinates shrink)
@@ -58,27 +69,33 @@ pub fn solve(p: &MovementProblem, opts: PgdOptions) -> MovementPlan {
             }
             for j in 0..n {
                 if j == i || p.graph.has_edge(i, j) {
-                    plan.s[i * n + j] -= step * grad_s[i * n + j];
+                    ws.plan.s[i * n + j] -= step * ws.grad_s[i * n + j];
                 }
             }
         }
-        project_rows(p, &mut plan);
-        let obj = plan.objective(p);
+        project_rows(p, ws);
+        let obj = ws.plan.objective(p);
         if obj < best_obj {
             best_obj = obj;
-            best = plan.clone();
+            ws.best.clone_from(&ws.plan);
         }
     }
-    best
+    ws.plan.clone_from(&ws.best);
 }
 
 /// ∂F/∂s_ij for the smoothed objective (see module docs).
 /// ∂F/∂s_ii = d_i (c_i(t) + f_i(t) φ'(G̃_i))
 /// ∂F/∂s_ij = d_i (c_ij(t) + c_j(t+1) + f_j(t) φ'(G̃_j)), j ≠ i
-fn gradient(p: &MovementProblem, plan: &MovementPlan, grad_s: &mut [f64]) {
+fn gradient(
+    p: &MovementProblem,
+    plan: &MovementPlan,
+    grad_s: &mut [f64],
+    g_tilde: &mut Vec<f64>,
+) {
     let n = p.n();
     // G̃_i = s_ii d_i + inbound_prev_i + Σ_{j≠i} s_ji d_j
-    let mut g_tilde = vec![0.0; n];
+    g_tilde.clear();
+    g_tilde.resize(n, 0.0);
     for i in 0..n {
         g_tilde[i] = plan.s(i, i) * p.d[i] + p.inbound_prev[i];
     }
@@ -113,33 +130,35 @@ fn gradient(p: &MovementProblem, plan: &MovementPlan, grad_s: &mut [f64]) {
 }
 
 /// Project every device row onto its simplex (r_i, s_ii, s_ij for active
-/// out-neighbors; other coordinates forced to 0).
-fn project_rows(p: &MovementProblem, plan: &mut MovementPlan) {
+/// out-neighbors; other coordinates forced to 0). Uses the workspace's
+/// gather/projection buffers (`ws.plan` is the row source and target).
+fn project_rows(p: &MovementProblem, ws: &mut SolverWorkspace) {
     let n = p.n();
     for i in 0..n {
         if !p.active[i] || p.d[i] == 0.0 {
             continue;
         }
         // gather the free coordinates of row i
-        let mut coords: Vec<(Option<usize>, f64)> = Vec::with_capacity(n + 1);
-        coords.push((None, plan.r[i])); // r_i
-        coords.push((Some(i), plan.s(i, i)));
+        ws.coords.clear();
+        ws.coords.push((None, ws.plan.r[i])); // r_i
+        ws.coords.push((Some(i), ws.plan.s(i, i)));
         for j in p.graph.out_neighbors(i) {
             if p.active[*j] {
-                coords.push((Some(*j), plan.s(i, *j)));
+                ws.coords.push((Some(*j), ws.plan.s(i, *j)));
             }
         }
-        let values: Vec<f64> = coords.iter().map(|&(_, v)| v).collect();
-        let projected = project_simplex(&values);
+        ws.values.clear();
+        ws.values.extend(ws.coords.iter().map(|&(_, v)| v));
+        project_simplex_into(&ws.values, &mut ws.scratch, &mut ws.projected);
         // zero the whole row, then write back the projected coordinates
-        plan.r[i] = 0.0;
+        ws.plan.r[i] = 0.0;
         for j in 0..n {
-            plan.s[i * n + j] = 0.0;
+            ws.plan.s[i * n + j] = 0.0;
         }
-        for ((target, _), v) in coords.iter().zip(projected) {
+        for (&(target, _), &v) in ws.coords.iter().zip(ws.projected.iter()) {
             match target {
-                None => plan.r[i] = v,
-                Some(j) => plan.s[i * n + j] = v,
+                None => ws.plan.r[i] = v,
+                Some(j) => ws.plan.s[i * n + j] = v,
             }
         }
     }
@@ -148,21 +167,29 @@ fn project_rows(p: &MovementProblem, plan: &mut MovementPlan) {
 /// Euclidean projection of `v` onto the probability simplex
 /// (Held–Wolfe–Crowder / Duchi et al. algorithm).
 pub fn project_simplex(v: &[f64]) -> Vec<f64> {
-    let mut u = v.to_vec();
-    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    project_simplex_into(v, &mut scratch, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`project_simplex`]: `scratch` holds the
+/// descending sort, `out` receives the projection.
+pub fn project_simplex_into(v: &[f64], scratch: &mut Vec<f64>, out: &mut Vec<f64>) {
+    scratch.clear();
+    scratch.extend_from_slice(v);
+    scratch.sort_by(|a, b| b.partial_cmp(a).unwrap());
     let mut css = 0.0;
-    let mut rho = 0;
     let mut theta = 0.0;
-    for (k, &uk) in u.iter().enumerate() {
+    for (k, &uk) in scratch.iter().enumerate() {
         css += uk;
         let candidate = (css - 1.0) / (k + 1) as f64;
         if uk - candidate > 0.0 {
-            rho = k;
             theta = candidate;
         }
     }
-    let _ = rho;
-    v.iter().map(|&x| (x - theta).max(0.0)).collect()
+    out.clear();
+    out.extend(v.iter().map(|&x| (x - theta).max(0.0)));
 }
 
 #[cfg(test)]

@@ -22,8 +22,16 @@ use crate::movement::problem::MovementProblem;
 /// Solve by the Theorem-3 rule. Inactive devices (or devices with no data)
 /// get `s_ii = 1` rows, which is vacuous since `D_i(t) = 0`.
 pub fn solve(p: &MovementProblem) -> MovementPlan {
+    let mut plan = MovementPlan::keep_all(p.n());
+    solve_into(p, &mut plan);
+    plan
+}
+
+/// In-place variant for workspace reuse: `plan` is reset to keep-all and
+/// then filled exactly as [`solve`] would.
+pub fn solve_into(p: &MovementProblem, plan: &mut MovementPlan) {
     let n = p.n();
-    let mut plan = MovementPlan::keep_all(n);
+    plan.reset_keep_all(n);
     for i in 0..n {
         if !p.active[i] || p.d[i] == 0.0 {
             continue;
@@ -45,7 +53,6 @@ pub fn solve(p: &MovementProblem) -> MovementPlan {
             }
         }
     }
-    plan
 }
 
 #[cfg(test)]

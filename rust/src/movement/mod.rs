@@ -26,16 +26,69 @@ pub mod theory;
 pub use plan::{CostBreakdown, MovementPlan};
 pub use problem::{DiscardModel, MovementProblem};
 
+/// Reusable scratch for the per-interval solvers. The engine solves one
+/// movement problem per time interval; routing every solve through one
+/// workspace keeps the hot path free of the ~`n²`-sized allocations the
+/// solvers would otherwise make per call (plan rows, PGD gradients,
+/// projection buffers — DESIGN.md §Perf).
+///
+/// All buffers are zeroed or fully overwritten per solve, so reuse is
+/// bit-identical to fresh allocation.
+#[derive(Debug)]
+pub struct SolverWorkspace {
+    /// The most recent solution (valid after [`solve_with`]).
+    pub plan: MovementPlan,
+    /// Best-iterate tracking buffer for the PGD solver.
+    pub(crate) best: MovementPlan,
+    /// ∂F/∂s gradient buffer (n×n).
+    pub(crate) grad_s: Vec<f64>,
+    /// G̃ accumulator for the convex objective gradient.
+    pub(crate) g_tilde: Vec<f64>,
+    /// Free-coordinate gathering for per-row simplex projection.
+    pub(crate) coords: Vec<(Option<usize>, f64)>,
+    pub(crate) values: Vec<f64>,
+    pub(crate) projected: Vec<f64>,
+    pub(crate) scratch: Vec<f64>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> SolverWorkspace {
+        SolverWorkspace {
+            plan: MovementPlan::keep_all(0),
+            best: MovementPlan::keep_all(0),
+            grad_s: Vec::new(),
+            g_tilde: Vec::new(),
+            coords: Vec::new(),
+            values: Vec::new(),
+            projected: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Default for SolverWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Solve a problem instance with the solver matching its discard model,
 /// then repair capacity violations. This is the entry point the federated
 /// engine calls once per interval.
 pub fn solve(p: &MovementProblem) -> MovementPlan {
-    let mut plan = match p.discard_model {
-        DiscardModel::LinearR | DiscardModel::LinearG => greedy::solve(p),
-        DiscardModel::Sqrt => convex::solve(p, convex::PgdOptions::default()),
-    };
-    repair::repair(p, &mut plan);
-    plan
+    let mut ws = SolverWorkspace::new();
+    solve_with(p, &mut ws);
+    ws.plan
+}
+
+/// Workspace-reusing variant of [`solve`]: the solution lands in
+/// `ws.plan` (already capacity-repaired).
+pub fn solve_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
+    match p.discard_model {
+        DiscardModel::LinearR | DiscardModel::LinearG => greedy::solve_into(p, &mut ws.plan),
+        DiscardModel::Sqrt => convex::solve_with(p, convex::PgdOptions::default(), ws),
+    }
+    repair::repair(p, &mut ws.plan);
 }
 
 #[cfg(test)]
@@ -75,6 +128,49 @@ mod tests {
             };
             let plan = solve(&p);
             plan.assert_feasible(&p, 1e-6);
+        }
+    }
+
+    /// A shared workspace must produce bit-identical plans to fresh
+    /// allocation, across solves of different sizes and models (the engine
+    /// reuses one workspace for a whole run).
+    #[test]
+    fn workspace_reuse_matches_fresh_solve() {
+        let mut ws = SolverWorkspace::new();
+        for (n, model) in [
+            (6, DiscardModel::Sqrt),
+            (3, DiscardModel::LinearR),
+            (5, DiscardModel::LinearG),
+            (6, DiscardModel::Sqrt),
+        ] {
+            let graph = fully_connected(n);
+            let mut costs = CostSchedule::zeros(n, 4);
+            for t in 0..4 {
+                for i in 0..n {
+                    costs.compute[t][i] = 0.07 * (i + 1) as f64;
+                    costs.error_weight[t][i] = 0.4;
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = 0.03 + 0.01 * j as f64;
+                        }
+                    }
+                }
+            }
+            let d = vec![7.0; n];
+            let inbound = vec![1.0; n];
+            let active = vec![true; n];
+            let p = MovementProblem {
+                t: 1,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let fresh = solve(&p);
+            solve_with(&p, &mut ws);
+            assert_eq!(fresh, ws.plan, "n={n} model={model:?}");
         }
     }
 }

@@ -6,11 +6,26 @@ use crate::movement::problem::{DiscardModel, MovementProblem};
 /// fraction of `D_i(t)` offloaded to `j` (`s[i*n + i]` = fraction processed
 /// locally), `r[i]` the fraction discarded. Row invariant (eq. 8):
 /// `r_i + Σ_j s_ij = 1` whenever `D_i(t) > 0`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct MovementPlan {
     pub n: usize,
     pub s: Vec<f64>,
     pub r: Vec<f64>,
+}
+
+impl Clone for MovementPlan {
+    fn clone(&self) -> Self {
+        MovementPlan { n: self.n, s: self.s.clone(), r: self.r.clone() }
+    }
+
+    /// Delegates to `Vec::clone_from` so the PGD best-iterate tracking in
+    /// the solver workspace reuses buffer capacity instead of reallocating
+    /// an n²-sized plan per improving iterate.
+    fn clone_from(&mut self, source: &Self) {
+        self.n = source.n;
+        self.s.clone_from(&source.s);
+        self.r.clone_from(&source.r);
+    }
 }
 
 /// Realized cost components of a plan (the paper's Table III columns).
@@ -42,6 +57,20 @@ impl MovementPlan {
             s[i * n + i] = 1.0;
         }
         MovementPlan { n, s, r: vec![0.0; n] }
+    }
+
+    /// Reset this plan in place to the keep-all state for `n` devices,
+    /// reusing the existing allocations (workspace path: one plan buffer
+    /// serves every interval of a run).
+    pub fn reset_keep_all(&mut self, n: usize) {
+        self.n = n;
+        self.s.clear();
+        self.s.resize(n * n, 0.0);
+        self.r.clear();
+        self.r.resize(n, 0.0);
+        for i in 0..n {
+            self.s[i * n + i] = 1.0;
+        }
     }
 
     #[inline]

@@ -79,7 +79,7 @@ impl Executable {
     /// Hot-path variant: literals in (by reference, no copies), literals
     /// out. Lets callers keep model parameters literal-resident across
     /// successive steps instead of converting through `HostTensor` each
-    /// call (EXPERIMENTS.md §Perf).
+    /// call (DESIGN.md §Perf).
     pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         anyhow::ensure!(
             inputs.len() == self.spec.inputs.len(),

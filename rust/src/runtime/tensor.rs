@@ -40,7 +40,7 @@ impl HostTensor {
 
     /// Convert to an XLA literal of matching shape (single copy via the
     /// untyped-data constructor; `vec1 + reshape` would copy twice — see
-    /// EXPERIMENTS.md §Perf).
+    /// DESIGN.md §Perf).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes = unsafe {
             std::slice::from_raw_parts(

@@ -1,5 +1,5 @@
 //! Console table printer used by the experiment drivers to reproduce the
-//! paper's tables as aligned text (and by EXPERIMENTS.md generation).
+//! paper's tables as aligned text (and as CSV under `results/`).
 
 /// A simple column-aligned table with a header row.
 #[derive(Debug, Clone, Default)]

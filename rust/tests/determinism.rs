@@ -1,0 +1,91 @@
+//! Determinism regression: the same `EngineConfig` must produce
+//! bit-identical `EngineOutput` whether run serially (`fed::run`), through
+//! `SimPool` with one job, or through `SimPool` with four jobs. This is
+//! the contract that makes the pooled sweep drivers trustworthy: `--jobs`
+//! changes wall-clock, never numbers. Requires `make artifacts`.
+
+use fogml::config::{Churn, EngineConfig, Method};
+use fogml::coordinator::SimPool;
+use fogml::experiments::common::{run_avg_pool, seed_sweep};
+use fogml::fed::{self, EngineOutput};
+use fogml::runtime::Runtime;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        method: Method::NetworkAware,
+        n: 5,
+        t_max: 20,
+        tau: 5,
+        n_train: 1200,
+        n_test: 300,
+        // churn exercises the per-session RNG clone path too
+        churn: Some(Churn { p_exit: 0.03, p_entry: 0.03 }),
+        ..Default::default()
+    }
+}
+
+fn assert_identical(a: &EngineOutput, b: &EngineOutput, label: &str) {
+    assert_eq!(a.accuracy, b.accuracy, "{label}: accuracy");
+    assert_eq!(a.accuracy_curve, b.accuracy_curve, "{label}: curve");
+    assert_eq!(a.per_device_loss, b.per_device_loss, "{label}: losses");
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger");
+    assert_eq!(
+        a.movement.per_interval, b.movement.per_interval,
+        "{label}: movement"
+    );
+    assert_eq!(a.similarity, b.similarity, "{label}: similarity");
+    assert_eq!(a.mean_active, b.mean_active, "{label}: mean_active");
+    assert_eq!(a.total_collected, b.total_collected, "{label}: collected");
+}
+
+#[test]
+fn serial_pool1_and_pool4_are_bit_identical() {
+    let cfgs = seed_sweep(&small(), 3);
+
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let serial: Vec<EngineOutput> = cfgs
+        .iter()
+        .map(|c| fed::run(c, &rt).expect("serial run"))
+        .collect();
+
+    // run_avg_pool expands the same seed grid internally (seed_sweep)
+    let pool1 = SimPool::new(1);
+    let (_, pooled1) = run_avg_pool(&pool1, &small(), 3).expect("pool --jobs 1");
+
+    let pool4 = SimPool::new(4);
+    let (_, pooled4) = run_avg_pool(&pool4, &small(), 3).expect("pool --jobs 4");
+
+    // the shared-service shape: 4 workers interleaving requests on ONE
+    // runtime-service thread (the riskiest configuration for cross-run
+    // isolation of dataset ids and trainer caches)
+    let shared = SimPool::with_services(4, 1);
+    let pooled_shared = shared.run_many(&cfgs).expect("pool jobs=4, services=1");
+
+    assert_eq!(serial.len(), pooled1.len());
+    assert_eq!(serial.len(), pooled4.len());
+    assert_eq!(serial.len(), pooled_shared.len());
+    for (k, s) in serial.iter().enumerate() {
+        assert_identical(s, &pooled1[k], &format!("seed #{k}, serial vs jobs=1"));
+        assert_identical(s, &pooled4[k], &format!("seed #{k}, serial vs jobs=4"));
+        assert_identical(
+            s,
+            &pooled_shared[k],
+            &format!("seed #{k}, serial vs jobs=4/shared-service"),
+        );
+    }
+}
+
+/// The centralized baseline must round-trip through the pool identically
+/// too (it takes the no-network code path inside the session layer).
+#[test]
+fn centralized_is_pool_invariant() {
+    let cfg = small().with(|c| {
+        c.method = Method::Centralized;
+        c.churn = None;
+    });
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let serial = fed::run(&cfg, &rt).expect("serial centralized");
+    let pool = SimPool::new(2);
+    let pooled = pool.run_many(std::slice::from_ref(&cfg)).expect("pooled centralized");
+    assert_identical(&serial, &pooled[0], "centralized");
+}
