@@ -1,0 +1,23 @@
+# fogml build orchestration.
+#
+# `make artifacts` runs the L2 AOT pipeline (python/compile/aot.py): every
+# entry point — scalar train/eval steps plus the batched
+# `*_train_many_d<D>` device-stack variants — is lowered to HLO text under
+# rust/artifacts/, which is also where the rust runtime looks by default
+# when invoked from rust/ (override with FOGML_ARTIFACTS). The generated
+# artifacts are vendored in-repo so `cargo test` works without a JAX
+# toolchain; re-run this target after changing python/compile/.
+
+PYTHON ?= python3
+ARTIFACTS_DIR := $(abspath rust/artifacts)
+
+.PHONY: artifacts test-python test-rust
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR)
+
+test-python:
+	cd python && $(PYTHON) -m pytest -q tests
+
+test-rust:
+	cd rust && cargo test -q

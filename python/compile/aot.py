@@ -58,7 +58,7 @@ def dense_micro_specs():
 def build_all(out_dir: str) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     entries = dict(ENTRY_POINTS)
-    entries["dense_micro"] = (dense_micro, dense_micro_specs)
+    entries["dense_micro"] = (dense_micro, dense_micro_specs, {})
 
     manifest = {
         "format": "hlo-text",
@@ -67,6 +67,7 @@ def build_all(out_dir: str) -> dict:
             "img_pixels": common.IMG_PIXELS,
             "num_classes": common.NUM_CLASSES,
             "batch": common.BATCH,
+            "device_tiles": list(common.DEVICE_TILES),
             "mlp_hidden": common.MLP_HIDDEN,
             "cnn_channels": common.CNN_CHANNELS,
             "cnn_hidden": common.CNN_HIDDEN,
@@ -75,7 +76,7 @@ def build_all(out_dir: str) -> dict:
         "entries": {},
     }
 
-    for name, (fn, spec_builder) in entries.items():
+    for name, (fn, spec_builder, meta) in entries.items():
         specs = spec_builder()
         lowered = jax.jit(fn).lower(*specs)
         text = to_hlo_text(lowered)
@@ -87,6 +88,7 @@ def build_all(out_dir: str) -> dict:
             "file": f"{name}.hlo.txt",
             "inputs": [_spec_json(s) for s in specs],
             "outputs": [_spec_json(s) for s in out_specs],
+            **meta,
         }
         print(f"  {name}: {len(text)} chars, {len(specs)} inputs, "
               f"{len(out_specs)} outputs")

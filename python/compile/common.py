@@ -15,6 +15,13 @@ NUM_CLASSES = 10
 # per-interval workloads are chunked by the rust trainer.
 BATCH = 32
 
+# Compiled device-stack sizes for the batched multi-device train entries
+# (`<model>_train_many_d<D>`): one interval's local updates for up to D
+# devices execute as a single [D, BATCH, ...] PJRT call.  The rust runtime
+# picks the smallest D >= the number of actively-training devices and pads
+# idle slots with zero sample weights (see model.make_train_many).
+DEVICE_TILES = (4, 8, 16, 32)
+
 # MLP: 196 -> 128 -> 10
 MLP_HIDDEN = 128
 

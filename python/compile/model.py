@@ -25,6 +25,7 @@ from .common import (
     CNN_HIDDEN,
     CNN_KSIZE,
     CNN_POOLED,
+    DEVICE_TILES,
     IMG_PIXELS,
     IMG_SIDE,
     MLP_HIDDEN,
@@ -124,6 +125,25 @@ def cnn_eval_step(cw, cb, w1, b1, w2, b2, x):
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-device train steps: one stacked XLA call per interval
+# ---------------------------------------------------------------------------
+
+
+def make_train_many(step_fn, n_params):
+    """vmap a per-device train step over a leading device axis.
+
+    Per-device params and batches map over axis 0 (`[D, ...]`); the
+    learning rate stays a scalar broadcast to every device.  Idle device
+    slots are padded with all-zero sample weights: `softmax_xent` divides
+    by `max(sum(wt), 1)`, so a zero-weight slot produces loss 0 and exactly
+    zero gradients — its parameters pass through bit-unchanged.  This is
+    the same padding-invariance contract the scalar entry uses per row
+    (test_padding_invariance), lifted to whole device slots.
+    """
+    return jax.vmap(step_fn, in_axes=(0,) * (n_params + 3) + (None,))
+
+
+# ---------------------------------------------------------------------------
 # Shape specs for AOT lowering (shared with aot.py / manifest.json)
 # ---------------------------------------------------------------------------
 
@@ -146,22 +166,60 @@ def param_specs(shapes):
     return tuple(_f32(s) for _, s in shapes)
 
 
+def stacked_param_specs(shapes, d):
+    return tuple(_f32((d, *s)) for _, s in shapes)
+
+
+def stacked_batch_specs(d):
+    """(x, onehot, wt, lr) specs with a leading device axis (lr stays scalar)."""
+    return (
+        _f32((d, BATCH, IMG_PIXELS)),
+        _f32((d, BATCH, NUM_CLASSES)),
+        _f32((d, BATCH)),
+        _f32(()),
+    )
+
+
+def _train_many_entries():
+    """One `<base>_train_many_d<D>` entry per model per compiled tile size."""
+    entries = {}
+    bases = {
+        "mlp_train": (MLP_PARAM_SHAPES, mlp_train_step),
+        "cnn_train": (CNN_PARAM_SHAPES, cnn_train_step),
+    }
+    for base, (shapes, step) in bases.items():
+        for d in DEVICE_TILES:
+            entries[f"{base}_many_d{d}"] = (
+                make_train_many(step, len(shapes)),
+                lambda shapes=shapes, d=d: (
+                    stacked_param_specs(shapes, d) + stacked_batch_specs(d)
+                ),
+                {"base": base, "devices": d, "devices_axis": 0},
+            )
+    return entries
+
+
 ENTRY_POINTS = {
-    # name -> (fn, example-arg builder)
+    # name -> (fn, example-arg builder, manifest metadata)
     "mlp_train": (
         mlp_train_step,
         lambda: param_specs(MLP_PARAM_SHAPES) + batch_specs(),
+        {},
     ),
     "mlp_eval": (
         mlp_eval_step,
         lambda: param_specs(MLP_PARAM_SHAPES) + (_f32((BATCH, IMG_PIXELS)),),
+        {},
     ),
     "cnn_train": (
         cnn_train_step,
         lambda: param_specs(CNN_PARAM_SHAPES) + batch_specs(),
+        {},
     ),
     "cnn_eval": (
         cnn_eval_step,
         lambda: param_specs(CNN_PARAM_SHAPES) + (_f32((BATCH, IMG_PIXELS)),),
+        {},
     ),
+    **_train_many_entries(),
 }

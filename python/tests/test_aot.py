@@ -27,6 +27,11 @@ def test_manifest_constants(built):
 def test_all_entries_emitted(built):
     out, manifest = built
     expected = {"mlp_train", "mlp_eval", "cnn_train", "cnn_eval", "dense_micro"}
+    expected |= {
+        f"{base}_many_d{d}"
+        for base in ("mlp_train", "cnn_train")
+        for d in common.DEVICE_TILES
+    }
     assert set(manifest["entries"]) == expected
     for name, entry in manifest["entries"].items():
         path = os.path.join(out, entry["file"])
@@ -53,6 +58,32 @@ def test_train_entry_abi(built):
         assert ins[nparams + 2]["shape"] == [common.BATCH]
         assert ins[nparams + 3]["shape"] == []   # lr scalar
         assert outs[-1]["shape"] == []           # loss scalar
+
+
+def test_train_many_entry_abi(built):
+    """Stacked layout: params[D,...], x[D,B,P], onehot[D,B,C], wt[D,B], lr
+    scalar; outputs params[D,...], loss[D] — plus the sizing metadata the
+    rust runtime uses to pick a variant."""
+    _, manifest = built
+    assert manifest["constants"]["device_tiles"] == list(common.DEVICE_TILES)
+    for base, nparams in (("mlp_train", 4), ("cnn_train", 6)):
+        scalar = manifest["entries"][base]
+        for d in common.DEVICE_TILES:
+            entry = manifest["entries"][f"{base}_many_d{d}"]
+            assert entry["devices"] == d
+            assert entry["devices_axis"] == 0
+            assert entry["base"] == base
+            ins, outs = entry["inputs"], entry["outputs"]
+            assert len(ins) == nparams + 4
+            assert len(outs) == nparams + 1
+            # every tensor is the scalar entry's with a leading D axis;
+            # lr stays scalar, loss becomes [D]
+            for i in range(nparams + 3):
+                assert ins[i]["shape"] == [d] + scalar["inputs"][i]["shape"]
+            assert ins[nparams + 3]["shape"] == []
+            for i in range(nparams):
+                assert outs[i]["shape"] == [d] + scalar["outputs"][i]["shape"]
+            assert outs[-1]["shape"] == [d]
 
 
 def test_eval_entry_abi(built):

@@ -104,9 +104,70 @@ def test_train_then_eval_improves_accuracy(name, shapes, train, evalf):
 
 
 def test_entry_points_cover_both_models():
-    assert set(model.ENTRY_POINTS) == {
-        "mlp_train", "mlp_eval", "cnn_train", "cnn_eval"
+    scalar = {"mlp_train", "mlp_eval", "cnn_train", "cnn_eval"}
+    many = {
+        f"{base}_many_d{d}"
+        for base in ("mlp_train", "cnn_train")
+        for d in common.DEVICE_TILES
     }
-    for name, (fn, spec_builder) in model.ENTRY_POINTS.items():
+    assert set(model.ENTRY_POINTS) == scalar | many
+    for name, (fn, spec_builder, meta) in model.ENTRY_POINTS.items():
         specs = spec_builder()
         assert all(s.dtype == jnp.float32 for s in specs), name
+        if name in many:
+            assert meta["devices_axis"] == 0, name
+            assert meta["base"] in scalar, name
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_train_many_matches_scalar_loop(name, shapes, train, evalf):
+    """Every device slot of the stacked step must reproduce the scalar
+    step on that device's batch — the equivalence contract the rust
+    batched train path relies on (tests/batched_equivalence.rs)."""
+    d = common.DEVICE_TILES[0]
+    many = model.make_train_many(train, len(shapes))
+    params = [
+        jnp.stack([_init_params(shapes, seed=s)[k] for s in range(d)])
+        for k in range(len(shapes))
+    ]
+    batches = [_toy_batch(seed=100 + s) for s in range(d)]
+    x = jnp.stack([b[0] for b in batches])
+    onehot = jnp.stack([b[1] for b in batches])
+    wt = jnp.stack([b[2] for b in batches])
+    lr = jnp.float32(0.05)
+
+    out = many(*params, x, onehot, wt, lr)
+    assert out[-1].shape == (d,)
+    for s in range(d):
+        ref = train(*(p[s] for p in params), x[s], onehot[s], wt[s], lr)
+        for a, b in zip(out, ref):
+            np.testing.assert_allclose(
+                np.asarray(a[s]), np.asarray(b), atol=1e-5
+            )
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_train_many_idle_slot_passthrough(name, shapes, train, evalf):
+    """A device slot padded with all-zero sample weights must come back
+    bit-identical (zero loss, zero gradient) — this is how the rust
+    trainer pads idle devices and exhausted chunk schedules."""
+    d = common.DEVICE_TILES[0]
+    many = model.make_train_many(train, len(shapes))
+    params = [
+        jnp.stack([_init_params(shapes, seed=s)[k] for s in range(d)])
+        for k in range(len(shapes))
+    ]
+    x, onehot, wt_one = _toy_batch(seed=3)
+    x = jnp.stack([x] * d)
+    onehot = jnp.stack([onehot] * d)
+    idle = 1
+    wt = jnp.stack(
+        [jnp.zeros_like(wt_one) if s == idle else wt_one for s in range(d)]
+    )
+
+    out = many(*params, x, onehot, wt, jnp.float32(0.05))
+    for k, p in enumerate(params):
+        assert bool(jnp.all(out[k][idle] == p[idle])), (name, k)
+    assert float(out[-1][idle]) == 0.0
+    # the live slots did move
+    assert bool(jnp.any(out[0][0] != params[0][0]))

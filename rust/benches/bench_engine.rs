@@ -1,15 +1,19 @@
 //! Engine-throughput benchmark: serial `fed::run` vs pooled
-//! `SimPool::run_many` over identical (config, seed) grids.
+//! `SimPool::run_many` over identical (config, seed) grids, plus the
+//! batched-vs-scalar multi-device comparison.
 //!
 //! This is the perf trajectory for the session/pool refactor (DESIGN.md
 //! §Perf): seed fan-outs of 1, 4 and 8 runs, timed end-to-end (substrate
-//! derivation + movement optimization + PJRT training + aggregation).
-//! Emits `BENCH_engine.json` (and a copy under `results/bench/`) so later
-//! PRs have numbers to beat.
+//! derivation + movement optimization + PJRT training + aggregation), and
+//! — since the batched train path landed — single runs at n ∈ {10, 30}
+//! with `TrainPath::Scalar` vs `TrainPath::Batched` (§Perf rule 7: the
+//! stacked `[D × BATCH]` entry amortizes PJRT dispatch over all devices
+//! training in an interval). Emits `BENCH_engine.json` (and a copy under
+//! `results/bench/`) so later PRs have numbers to beat.
 
 use std::time::Instant;
 
-use fogml::config::EngineConfig;
+use fogml::config::{EngineConfig, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::seed_sweep;
 use fogml::fed;
@@ -51,6 +55,46 @@ fn main() {
     // warm every pool service (run_many's work-stealing could leave one
     // service cold, putting its XLA compilation inside the timed window)
     pool.warm(&warm).expect("pooled warmup");
+
+    // -- batched vs scalar dispatch at growing device counts --------------
+    let mut multi_rows = Vec::new();
+    for n in [10usize, 30] {
+        let base = small().with(|c| c.n = n);
+        // warm both entry variants (scalar + the tile the batched path picks)
+        for path in [TrainPath::Scalar, TrainPath::Batched] {
+            fed::run(&warm.clone().with(|c| { c.n = n; c.train_path = path; }), &rt)
+                .expect("path warmup");
+        }
+        const REPS: usize = 3;
+        let mut secs = [0.0f64; 2];
+        for (k, path) in [TrainPath::Scalar, TrainPath::Batched].into_iter().enumerate() {
+            let cfg = base.clone().with(|c| c.train_path = path);
+            let start = Instant::now();
+            for rep in 0..REPS {
+                std::hint::black_box(
+                    fed::run(&cfg.clone().seeded(1 + rep as u64), &rt).expect("bench run"),
+                );
+            }
+            secs[k] = start.elapsed().as_secs_f64();
+        }
+        let scalar_rps = runs_per_sec(REPS, secs[0]);
+        let batched_rps = runs_per_sec(REPS, secs[1]);
+        let speedup = secs[0] / secs[1].max(1e-9);
+        println!(
+            "engine/n={n:<3} scalar {:>7.2}s ({scalar_rps:.2} runs/s)  \
+             batched {:>7.2}s ({batched_rps:.2} runs/s)  speedup {speedup:.2}×",
+            secs[0], secs[1]
+        );
+        multi_rows.push(Json::obj(vec![
+            ("n", Json::from(n)),
+            ("runs", Json::from(REPS)),
+            ("scalar_s", Json::from(secs[0])),
+            ("batched_s", Json::from(secs[1])),
+            ("scalar_runs_per_sec", Json::from(scalar_rps)),
+            ("batched_runs_per_sec", Json::from(batched_rps)),
+            ("batched_speedup", Json::from(speedup)),
+        ]));
+    }
 
     let mut rows = Vec::new();
     for seeds in [1usize, 4, 8] {
@@ -97,6 +141,7 @@ fn main() {
             ("n_train", Json::from(small().n_train)),
         ])),
         ("rows", Json::Arr(rows)),
+        ("multi_device", Json::Arr(multi_rows)),
     ]);
     let text = report.to_string();
     std::fs::write("BENCH_engine.json", &text).expect("write BENCH_engine.json");

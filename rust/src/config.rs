@@ -55,6 +55,36 @@ pub struct Churn {
     pub p_entry: f64,
 }
 
+/// Which execution path an interval's local updates take (DESIGN.md §Perf
+/// rule 7): stacked `[D × BATCH]` multi-device steps amortize PJRT dispatch
+/// across devices; the scalar path issues one call per device per chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrainPath {
+    /// Batched whenever more than one device trains in the interval,
+    /// scalar otherwise (the default).
+    #[default]
+    Auto,
+    /// Always route through the stacked multi-device entry (pads to the
+    /// smallest compiled device tile even for a single trainee).
+    Batched,
+    /// Always dispatch per device — the pre-batching behavior; also the
+    /// reference side of `tests/batched_equivalence.rs`.
+    Scalar,
+}
+
+impl TrainPath {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(TrainPath::Auto),
+            "batched" => Ok(TrainPath::Batched),
+            "scalar" => Ok(TrainPath::Scalar),
+            other => anyhow::bail!(
+                "unknown train path '{other}' (want auto|batched|scalar)"
+            ),
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -81,6 +111,8 @@ pub struct EngineConfig {
     pub error_profile: ErrorWeightProfile,
     /// Evaluate test accuracy at every aggregation (slower; for curves).
     pub eval_curve: bool,
+    /// Scalar vs stacked multi-device dispatch of local updates.
+    pub train_path: TrainPath,
     pub seed: u64,
 }
 
@@ -112,6 +144,7 @@ impl Default for EngineConfig {
             churn: None,
             error_profile: ErrorWeightProfile::default(),
             eval_curve: false,
+            train_path: TrainPath::Auto,
             seed: 1,
         }
     }
@@ -170,6 +203,15 @@ mod tests {
         assert_eq!(c.t_max, 100);
         assert_eq!(c.lr, 0.05);
         assert_eq!(c.mean_arrivals(), 8.0);
+    }
+
+    #[test]
+    fn train_path_parses() {
+        assert_eq!(TrainPath::parse("auto").unwrap(), TrainPath::Auto);
+        assert_eq!(TrainPath::parse("Batched").unwrap(), TrainPath::Batched);
+        assert_eq!(TrainPath::parse("scalar").unwrap(), TrainPath::Scalar);
+        assert!(TrainPath::parse("vectorized").is_err());
+        assert_eq!(EngineConfig::default().train_path, TrainPath::Auto);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::service::{Params, RuntimeHandle, RuntimeService};
 
-use crate::data::{Partitioner, SynthDigits};
+use crate::data::Partitioner;
 use crate::fed::aggregator;
 use crate::runtime::ModelKind;
 use crate::util::rng::Rng;
@@ -86,7 +86,8 @@ impl Cluster {
     /// Build the workloads, spawn the service + device actors, run all
     /// rounds, and return the accuracy trajectory.
     pub fn run(cfg: &ClusterConfig) -> Result<ClusterReport> {
-        let gen = SynthDigits::new(0xF0D5);
+        // shared fixed-task prototypes (derived once per process)
+        let gen = crate::fed::session::task_generator();
         let mut rng = Rng::new(cfg.seed);
         let (train, test) = gen.train_test(cfg.n_train, cfg.n_test, &mut rng);
         let t_max = cfg.rounds * cfg.tau;

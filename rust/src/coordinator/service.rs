@@ -26,7 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::dataset::Dataset;
 use crate::fed::session::Compute;
-use crate::fed::trainer::Trainer;
+use crate::fed::trainer::{DeviceWork, Trainer};
 use crate::runtime::{HostTensor, ModelKind, Runtime};
 
 /// Model parameters as they travel between threads.
@@ -51,6 +51,13 @@ enum Request {
         params: Params,
         samples: Vec<u32>,
         reply: Sender<Result<(Params, Option<f32>)>>,
+    },
+    TrainMany {
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        work: Vec<DeviceWork>,
+        reply: Sender<Result<Vec<DeviceWork>>>,
     },
     Evaluate {
         kind: ModelKind,
@@ -141,6 +148,28 @@ impl ServiceState {
         let train_ds = &self.datasets[&ds].0;
         let loss = trainer.train_interval(&mut params, train_ds, samples)?;
         Ok((params, loss))
+    }
+
+    /// Batched interval: all devices' updates execute as stacked
+    /// `[D × BATCH]` steps on the service thread (one queue round-trip and
+    /// one PJRT dispatch per lock-step for the whole fleet).
+    fn handle_train_many(
+        &mut self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        mut work: Vec<DeviceWork>,
+    ) -> Result<Vec<DeviceWork>> {
+        self.dataset(ds)?;
+        self.ensure_trainer(kind, lr)?;
+        let rt = match self.rt.as_ref() {
+            Some(Ok(rt)) => rt,
+            _ => return Err(anyhow!("runtime unavailable after trainer build")),
+        };
+        let trainer = &self.trainers[&(kind, lr.to_bits())];
+        let train_ds = &self.datasets[&ds].0;
+        trainer.train_interval_many(rt, train_ds, &mut work)?;
+        Ok(work)
     }
 
     fn handle_evaluate(
@@ -235,6 +264,9 @@ fn service_loop(rx: Receiver<Request>) {
             Request::Train { kind, lr, ds, params, samples, reply } => {
                 let _ = reply.send(state.handle_train(kind, lr, ds, params, &samples));
             }
+            Request::TrainMany { kind, lr, ds, work, reply } => {
+                let _ = reply.send(state.handle_train_many(kind, lr, ds, work));
+            }
             Request::Evaluate { kind, lr, ds, params, reply } => {
                 let _ = reply.send(state.handle_evaluate(kind, lr, ds, &params));
             }
@@ -287,6 +319,21 @@ impl ServiceClient {
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
     }
 
+    /// One batched interval: every device's local updates in stacked
+    /// multi-device executions; returns the work list with updated params
+    /// and per-device losses.
+    pub fn train_many(
+        &self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        work: Vec<DeviceWork>,
+    ) -> Result<Vec<DeviceWork>> {
+        let (tx, rx) = channel();
+        self.send(Request::TrainMany { kind, lr, ds, work, reply: tx })?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
     /// Test-set accuracy of the given parameters on dataset `ds`.
     pub fn evaluate(
         &self,
@@ -314,6 +361,11 @@ impl RuntimeHandle {
         self.client.train(self.kind, self.lr, self.ds, params, samples)
     }
 
+    /// Run one batched multi-device interval on the service thread.
+    pub fn train_many(&self, work: Vec<DeviceWork>) -> Result<Vec<DeviceWork>> {
+        self.client.train_many(self.kind, self.lr, self.ds, work)
+    }
+
     /// Test-set accuracy of the given parameters.
     pub fn evaluate(&self, params: Params) -> Result<f64> {
         self.client.evaluate(self.kind, self.lr, self.ds, params)
@@ -337,6 +389,21 @@ impl Compute for RuntimeHandle {
         let (updated, loss) = RuntimeHandle::train(self, owned, samples.to_vec())?;
         *params = updated;
         Ok(loss)
+    }
+
+    fn train_interval_many(&self, work: &mut [DeviceWork]) -> Result<()> {
+        let sent: Vec<DeviceWork> = work.iter_mut().map(std::mem::take).collect();
+        let updated = RuntimeHandle::train_many(self, sent)?;
+        anyhow::ensure!(
+            updated.len() == work.len(),
+            "train_many reply: {} items, sent {}",
+            updated.len(),
+            work.len()
+        );
+        for (w, u) in work.iter_mut().zip(updated) {
+            *w = u;
+        }
+        Ok(())
     }
 
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
@@ -389,6 +456,45 @@ mod tests {
         let agg = crate::fed::aggregator::aggregate(&[(&r1, 1.0), (&r2, 1.0)]).unwrap();
         let after = handle.evaluate(agg).unwrap();
         assert!(after > before + 0.15, "{before} -> {after}");
+        svc.shutdown();
+    }
+
+    /// The batched request must match per-device scalar requests through
+    /// the same service (tolerance per DESIGN.md §Perf rule 7).
+    #[test]
+    fn service_train_many_matches_scalar_requests() {
+        let gen = SynthDigits::new(0xF0D5);
+        let mut rng = Rng::new(5);
+        let (train, test) = gen.train_test(600, 100, &mut rng);
+        let mut svc = RuntimeService::spawn(ModelKind::Mlp, 0.05, train, test);
+        let handle = svc.handle();
+        let params = handle.init_params(9).unwrap();
+
+        let shard = |k: u32| -> Vec<u32> { (k * 150..k * 150 + 120).collect() };
+        let work: Vec<DeviceWork> = (0..3)
+            .map(|k| DeviceWork {
+                params: params.clone(),
+                samples: shard(k),
+                loss: None,
+            })
+            .collect();
+        let out = handle.train_many(work).unwrap();
+        assert_eq!(out.len(), 3);
+        for (k, w) in out.iter().enumerate() {
+            let (sp, sl) = handle.train(params.clone(), shard(k as u32)).unwrap();
+            let sl = sl.unwrap();
+            let bl = w.loss.unwrap();
+            assert!((sl - bl).abs() <= 1e-5 * (1.0 + sl.abs()), "{k}: {sl} vs {bl}");
+            for (a, b) in w.params.iter().zip(&sp) {
+                let max_diff = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0f32, f32::max);
+                assert!(max_diff <= 1e-4, "device {k}: max diff {max_diff}");
+            }
+        }
         svc.shutdown();
     }
 

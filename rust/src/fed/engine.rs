@@ -10,8 +10,12 @@
 //! fan-out.
 //!
 //! `run` keeps its original signature: one call = one experiment run (one
-//! cell of a paper table, one point of a figure), bit-identical to the
-//! pre-session engine under the same seed.
+//! cell of a paper table, one point of a figure). With
+//! `TrainPath::Scalar` it is bit-identical to the pre-session engine
+//! under the same seed; the default `TrainPath::Auto` routes
+//! multi-trainee intervals through the stacked multi-device entry, which
+//! is equivalent within the tolerance documented in DESIGN.md §Perf
+//! rule 7 (`tests/batched_equivalence.rs`).
 
 use anyhow::Result;
 

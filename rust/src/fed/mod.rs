@@ -16,4 +16,4 @@ pub mod trainer;
 pub use accounting::{IntervalStats, Ledger, MovementTotals};
 pub use engine::{run, EngineOutput};
 pub use session::{Compute, LocalCompute, Session, SessionState, Substrates};
-pub use trainer::Trainer;
+pub use trainer::{DeviceWork, Trainer};

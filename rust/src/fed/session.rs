@@ -27,16 +27,20 @@
 //! and contributes only after it re-synchronizes at the end of the ongoing
 //! aggregation period.
 
+use std::sync::OnceLock;
+
 use anyhow::Result;
 
-use crate::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind};
+use crate::config::{
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
+};
 use crate::costs::{estimator, traces, CapacityMode, CostSchedule};
 use crate::data::dataset::Dataset;
 use crate::data::{Arrivals, Partitioner, SynthDigits};
 use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use crate::fed::aggregator;
 use crate::fed::similarity;
-use crate::fed::trainer::Trainer;
+use crate::fed::trainer::{DeviceWork, Trainer};
 use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace};
 use crate::runtime::{HostTensor, Runtime};
 use crate::topology::{generators, ChurnProcess, Graph};
@@ -71,6 +75,16 @@ pub struct EngineOutput {
 /// partitioning, costs, topology and churn.
 pub const TASK_SEED: u64 = 0xF0D5;
 
+static TASK_GENERATOR: OnceLock<SynthDigits> = OnceLock::new();
+
+/// The fixed-task SynthDigits generator: because [`TASK_SEED`] never
+/// varies, the class prototypes are derived once per process and shared
+/// read-only by every session and [`crate::coordinator::pool::SimPool`]
+/// worker (per-run sampling noise still flows through each run's own RNG).
+pub fn task_generator() -> &'static SynthDigits {
+    TASK_GENERATOR.get_or_init(|| SynthDigits::new(TASK_SEED))
+}
+
 /// The training backend a [`Session`] schedules local updates through.
 ///
 /// Two implementations exist: [`LocalCompute`] (borrowed [`Trainer`] on the
@@ -86,6 +100,18 @@ pub trait Compute {
     /// One interval of local updates over `samples`; updates `params` in
     /// place and returns the sample-weighted mean loss (None if empty).
     fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>>;
+    /// One interval of local updates for several devices at once. The
+    /// default implementation dispatches scalar [`Compute::train_interval`]
+    /// calls in device order; PJRT-backed implementations override it to
+    /// stack all devices into lock-stepped `[D × BATCH]` executions of the
+    /// batched train entry (DESIGN.md §Perf rule 7). Either way the result
+    /// must be deterministic in the work list alone.
+    fn train_interval_many(&self, work: &mut [DeviceWork]) -> Result<()> {
+        for w in work.iter_mut() {
+            w.loss = self.train_interval(&mut w.params, &w.samples)?;
+        }
+        Ok(())
+    }
     /// Test-set accuracy of `params`.
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64>;
 }
@@ -106,6 +132,10 @@ impl Compute for LocalCompute<'_> {
 
     fn train_interval(&self, params: &mut Params, samples: &[u32]) -> Result<Option<f32>> {
         self.trainer.train_interval(params, self.train, samples)
+    }
+
+    fn train_interval_many(&self, work: &mut [DeviceWork]) -> Result<()> {
+        self.trainer.train_interval_many(self.rt, self.train, work)
     }
 
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
@@ -148,7 +178,9 @@ impl Substrates {
         let churn_rng = root.split();
         let init_seed = root.next_u64();
 
-        let gen = SynthDigits::new(TASK_SEED);
+        // the fixed-seed class prototypes are derived once per process and
+        // shared across all runs (per-run sampling stays on data_rng)
+        let gen = task_generator();
         let (train, test) = gen.train_test(cfg.n_train, cfg.n_test, &mut data_rng);
         let arrivals = Partitioner { n_devices: cfg.n, t_max: cfg.t_max, iid: cfg.iid }
             .partition(&train, &mut data_rng);
@@ -268,6 +300,13 @@ struct IntervalWorkspace {
     d: Vec<f64>,
     inbound_counts: Vec<f64>,
     workload: Vec<u32>,
+    /// Device index of each deferred trainee this interval (parallel to
+    /// the leading entries of `train_work`).
+    trainee_ids: Vec<usize>,
+    /// Deferred per-trainee workloads: `step_train` collects them first,
+    /// then dispatches all of them scalar or batched (sample buffers are
+    /// reused across intervals on the local path).
+    train_work: Vec<DeviceWork>,
     solver: SolverWorkspace,
     apportion: ApportionScratch,
     stats: IntervalStats,
@@ -282,6 +321,8 @@ impl IntervalWorkspace {
             d: Vec::with_capacity(n),
             inbound_counts: Vec::with_capacity(n),
             workload: Vec::new(),
+            trainee_ids: Vec::with_capacity(n),
+            train_work: Vec::new(),
             solver: SolverWorkspace::new(),
             apportion: ApportionScratch::default(),
             stats: IntervalStats::default(),
@@ -405,8 +446,15 @@ impl<'a, C: Compute> Session<'a, C> {
     /// Run local gradient updates (eq. 3) on every active, synchronized
     /// device's workload (inbound from last interval + kept collection),
     /// then rotate the pending offloads into the inbound queues.
+    ///
+    /// Workloads are collected first and dispatched together so that —
+    /// when more than one device trains and `cfg.train_path` allows it —
+    /// all of them execute as stacked `[D × BATCH]` steps through
+    /// [`Compute::train_interval_many`] (one PJRT dispatch per lock-step
+    /// for the whole interval instead of one per device per chunk).
     pub fn step_train(&mut self, t: usize) -> Result<()> {
         let n = self.cfg.n;
+        self.ws.trainee_ids.clear();
         for i in 0..n {
             self.ws.workload.clear();
             self.ws.workload.extend_from_slice(&self.state.inbound[i]);
@@ -428,22 +476,78 @@ impl<'a, C: Compute> Session<'a, C> {
                 self.ws.workload.len() as f64 * self.sub.actual_costs.c_node(t, i);
             self.state.processed_per_device[i].extend_from_slice(&self.ws.workload);
             if self.state.synced[i] {
-                if let Some(loss) = self
-                    .compute
-                    .train_interval(&mut self.state.device_params[i], &self.ws.workload)?
-                {
-                    self.state.per_device_loss[t][i] = Some(loss);
-                    self.state.h[i] += self.ws.workload.len() as f64;
+                let slot = self.ws.trainee_ids.len();
+                self.ws.trainee_ids.push(i);
+                if self.ws.train_work.len() <= slot {
+                    self.ws.train_work.push(DeviceWork::default());
                 }
+                let w = &mut self.ws.train_work[slot];
+                w.samples.clear();
+                w.samples.extend_from_slice(&self.ws.workload);
+                w.loss = None;
             }
             // unsynced devices process data (it is consumed) but their stale
             // update cannot be used — the processed points still count
             // toward resource usage, not toward aggregation weight.
         }
+        self.dispatch_train(t)?;
         // offloads sent this interval become next interval's inbound; the
         // drained inbound vectors become next interval's pending buffers.
         std::mem::swap(&mut self.state.inbound, &mut self.ws.pending);
         self.state.movement.push(self.ws.stats);
+        Ok(())
+    }
+
+    /// Dispatch the interval's deferred trainees: batched when the config
+    /// allows it (Auto requires >1 trainee), scalar otherwise. Both paths
+    /// apply losses and aggregation weights in device order.
+    fn dispatch_train(&mut self, t: usize) -> Result<()> {
+        let k = self.ws.trainee_ids.len();
+        if k == 0 {
+            return Ok(());
+        }
+        let batched = match self.cfg.train_path {
+            TrainPath::Scalar => false,
+            TrainPath::Batched => true,
+            TrainPath::Auto => k > 1,
+        };
+        if batched {
+            // params move into the work list for the duration of the call.
+            // The swap-back runs on the error path too, but a failed
+            // service round-trip (RuntimeHandle) loses the in-flight
+            // params — the error aborts the run, so the session must not
+            // be stepped further after a dispatch failure.
+            for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
+                std::mem::swap(
+                    &mut self.ws.train_work[slot].params,
+                    &mut self.state.device_params[i],
+                );
+            }
+            let res = self.compute.train_interval_many(&mut self.ws.train_work[..k]);
+            for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
+                std::mem::swap(
+                    &mut self.ws.train_work[slot].params,
+                    &mut self.state.device_params[i],
+                );
+            }
+            res?;
+            for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
+                if let Some(loss) = self.ws.train_work[slot].loss {
+                    self.state.per_device_loss[t][i] = Some(loss);
+                    self.state.h[i] += self.ws.train_work[slot].samples.len() as f64;
+                }
+            }
+        } else {
+            for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
+                if let Some(loss) = self.compute.train_interval(
+                    &mut self.state.device_params[i],
+                    &self.ws.train_work[slot].samples,
+                )? {
+                    self.state.per_device_loss[t][i] = Some(loss);
+                    self.state.h[i] += self.ws.train_work[slot].samples.len() as f64;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -822,6 +926,30 @@ mod tests {
             assert_eq!(a.per_device_loss, other.per_device_loss);
             assert_eq!(a.similarity, other.similarity);
             assert_eq!(a.mean_active, other.mean_active);
+        }
+    }
+
+    /// All three dispatch modes must agree bit-for-bit through a backend
+    /// whose `train_interval_many` is the default scalar loop: routing is
+    /// a perf decision, never a semantic one.
+    #[test]
+    fn train_path_routing_is_semantically_invisible() {
+        let base = stub_cfg(Method::NetworkAware).with(|c| {
+            c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 });
+        });
+        let sub = Substrates::derive(&base);
+        let outs: Vec<EngineOutput> = [TrainPath::Auto, TrainPath::Batched, TrainPath::Scalar]
+            .into_iter()
+            .map(|p| {
+                let cfg = base.clone().with(|c| c.train_path = p);
+                run_with(&cfg, &sub, StubCompute).unwrap()
+            })
+            .collect();
+        for other in &outs[1..] {
+            assert_eq!(outs[0].accuracy, other.accuracy);
+            assert_eq!(outs[0].per_device_loss, other.per_device_loss);
+            assert_eq!(outs[0].ledger, other.ledger);
+            assert_eq!(outs[0].movement.per_interval, other.movement.per_interval);
         }
     }
 

@@ -6,12 +6,44 @@
 //! provably does not affect loss or gradients — enforced by the python test
 //! `test_padding_invariance`), and workloads larger than `BATCH` are
 //! chunked into successive gradient steps.
+//!
+//! For multi-device intervals, [`Trainer::train_interval_many`] stacks all
+//! devices' chunk schedules into lock-stepped `[D × BATCH]` executions of a
+//! batched `*_train_many_d<D>` entry (one PJRT dispatch per step for the
+//! whole fleet instead of one per device). Devices whose schedules run out
+//! early — and idle pad slots of a partially-filled stack — get all-zero
+//! sample weights, which the same padding invariance turns into exact
+//! no-ops (loss 0, zero gradient). See DESIGN.md §Perf rule 7.
+
+use std::cell::RefCell;
 
 use anyhow::Result;
 
 use crate::data::dataset::{Dataset, IMG_PIXELS, NUM_CLASSES};
 use crate::runtime::model::Executable;
-use crate::runtime::{HostTensor, ModelKind, Runtime};
+use crate::runtime::{literal_from_slice, HostTensor, ModelKind, Runtime};
+
+/// One device's slice of a batched training interval: the trainer consumes
+/// `samples`, updates `params` in place and reports the device's
+/// sample-weighted mean loss (None when `samples` is empty).
+#[derive(Debug, Default)]
+pub struct DeviceWork {
+    pub params: Vec<HostTensor>,
+    pub samples: Vec<u32>,
+    pub loss: Option<f32>,
+}
+
+/// Reusable staging buffers for the batched path (sized on first use to the
+/// largest device tile a session actually selects; resident afterwards).
+#[derive(Debug, Default)]
+struct ManyScratch {
+    x: Vec<f32>,
+    y: Vec<f32>,
+    w: Vec<f32>,
+    stack: Vec<f32>,
+    counts: Vec<usize>,
+    loss: Vec<f64>,
+}
 
 /// Train/eval executor bound to one model kind.
 pub struct Trainer {
@@ -21,9 +53,10 @@ pub struct Trainer {
     pub lr: f32,
     pub batch: usize,
     // reusable input buffers (hot path: no per-step allocation)
-    x_buf: std::cell::RefCell<Vec<f32>>,
-    y_buf: std::cell::RefCell<Vec<f32>>,
-    w_buf: std::cell::RefCell<Vec<f32>>,
+    x_buf: RefCell<Vec<f32>>,
+    y_buf: RefCell<Vec<f32>>,
+    w_buf: RefCell<Vec<f32>>,
+    many: RefCell<ManyScratch>,
 }
 
 impl Trainer {
@@ -35,9 +68,10 @@ impl Trainer {
             kind,
             lr,
             batch,
-            x_buf: std::cell::RefCell::new(vec![0.0; batch * IMG_PIXELS]),
-            y_buf: std::cell::RefCell::new(vec![0.0; batch * NUM_CLASSES]),
-            w_buf: std::cell::RefCell::new(vec![0.0; batch]),
+            x_buf: RefCell::new(vec![0.0; batch * IMG_PIXELS]),
+            y_buf: RefCell::new(vec![0.0; batch * NUM_CLASSES]),
+            w_buf: RefCell::new(vec![0.0; batch]),
+            many: RefCell::new(ManyScratch::default()),
         })
     }
 
@@ -66,8 +100,7 @@ impl Trainer {
 
         let mut loss_acc = 0.0f64;
         for chunk in samples.chunks(self.batch) {
-            let (x, y, w) = self.fill_batch(ds, chunk);
-            let (xl, yl, wl) = (x.to_literal()?, y.to_literal()?, w.to_literal()?);
+            let (xl, yl, wl) = self.stage_chunk(ds, chunk)?;
             let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
             inputs.extend([&xl, &yl, &wl, &lr]);
             let mut out = self.train_exe.run_literals(&inputs)?;
@@ -78,6 +111,162 @@ impl Trainer {
         }
         *params = lit_params.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
         Ok(Some((loss_acc / samples.len() as f64) as f32))
+    }
+
+    /// One interval of local updates for several devices in lock-step:
+    /// stacked `[D × BATCH]` executions of the batched train entry, with
+    /// the stacked parameters literal-resident across all steps (exactly
+    /// like the scalar path, amortized over D devices). Devices are split
+    /// into groups of at most the largest compiled tile; each group uses
+    /// the smallest variant that fits, idle slots padded with zero sample
+    /// weights. Falls back to per-device scalar dispatch when the loaded
+    /// artifacts predate the batched entries.
+    pub fn train_interval_many(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        work: &mut [DeviceWork],
+    ) -> Result<()> {
+        for w in work.iter_mut() {
+            w.loss = None;
+        }
+        let todo: Vec<usize> =
+            (0..work.len()).filter(|&i| !work[i].samples.is_empty()).collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let max_tile = rt.manifest.device_tiles.last().copied().unwrap_or(0);
+        if max_tile == 0 {
+            return self.train_many_fallback(ds, &todo, work);
+        }
+        for group in todo.chunks(max_tile) {
+            match rt.train_many_executable(self.kind, group.len())? {
+                Some((d, exe)) => self.train_group(ds, &exe, d, group, work)?,
+                // tiles advertised but entries missing (hand-pruned
+                // artifact set): stay correct via the scalar path
+                None => self.train_many_fallback(ds, group, work)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn train_many_fallback(
+        &self,
+        ds: &Dataset,
+        group: &[usize],
+        work: &mut [DeviceWork],
+    ) -> Result<()> {
+        for &i in group {
+            let w = &mut work[i];
+            w.loss = self.train_interval(&mut w.params, ds, &w.samples)?;
+        }
+        Ok(())
+    }
+
+    /// Drive one device group through the sized batched entry: lock-step
+    /// count is the longest chunk schedule in the group; shorter schedules
+    /// ride along with zero weights (exact no-ops per padding invariance).
+    fn train_group(
+        &self,
+        ds: &Dataset,
+        exe: &Executable,
+        d: usize,
+        group: &[usize],
+        work: &mut [DeviceWork],
+    ) -> Result<()> {
+        let n_params = self.kind.num_params();
+        let b = self.batch;
+        let steps = group
+            .iter()
+            .map(|&i| work[i].samples.len().div_ceil(b))
+            .max()
+            .unwrap_or(0);
+        if steps == 0 {
+            return Ok(());
+        }
+
+        let mut ms = self.many.borrow_mut();
+        let ManyScratch { x, y, w, stack, counts, loss } = &mut *ms;
+
+        // stack per-device params into [d, ...] literals; pad slots zero
+        let mut lit_params: Vec<xla::Literal> = Vec::with_capacity(n_params);
+        for p in 0..n_params {
+            let shape = work[group[0]].params[p].shape.clone();
+            let plen: usize = shape.iter().product();
+            stack.clear();
+            stack.resize(d * plen, 0.0);
+            for (slot, &i) in group.iter().enumerate() {
+                stack[slot * plen..(slot + 1) * plen]
+                    .copy_from_slice(&work[i].params[p].data);
+            }
+            let mut stacked_shape = Vec::with_capacity(shape.len() + 1);
+            stacked_shape.push(d);
+            stacked_shape.extend_from_slice(&shape);
+            lit_params.push(literal_from_slice(&stacked_shape, stack)?);
+        }
+        let lr = HostTensor::scalar(self.lr).to_literal()?;
+
+        x.resize(d * b * IMG_PIXELS, 0.0);
+        y.resize(d * b * NUM_CLASSES, 0.0);
+        w.resize(d * b, 0.0);
+        counts.clear();
+        counts.resize(group.len(), 0);
+        loss.clear();
+        loss.resize(group.len(), 0.0);
+
+        for step in 0..steps {
+            x.fill(0.0);
+            y.fill(0.0);
+            w.fill(0.0);
+            for (slot, &i) in group.iter().enumerate() {
+                let samples = &work[i].samples;
+                let lo = step * b;
+                counts[slot] = 0;
+                if lo >= samples.len() {
+                    continue; // schedule exhausted: zero-weight no-op slot
+                }
+                let chunk = &samples[lo..(lo + b).min(samples.len())];
+                counts[slot] = chunk.len();
+                stage_rows(
+                    &mut x[slot * b * IMG_PIXELS..(slot + 1) * b * IMG_PIXELS],
+                    &mut y[slot * b * NUM_CLASSES..(slot + 1) * b * NUM_CLASSES],
+                    &mut w[slot * b..(slot + 1) * b],
+                    ds,
+                    chunk,
+                );
+            }
+            let xl = literal_from_slice(&[d, b, IMG_PIXELS], x)?;
+            let yl = literal_from_slice(&[d, b, NUM_CLASSES], y)?;
+            let wl = literal_from_slice(&[d, b], w)?;
+            let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
+            inputs.extend([&xl, &yl, &wl, &lr]);
+            let mut out = exe.run_literals(&inputs)?;
+            let losses = out[n_params].to_vec::<f32>()?;
+            for (slot, &c) in counts.iter().enumerate() {
+                if c > 0 {
+                    loss[slot] += losses[slot] as f64 * c as f64;
+                }
+            }
+            out.truncate(n_params);
+            lit_params = out;
+        }
+
+        // materialize the final stacked params back into each device
+        // (straight from the literal's data — no intermediate HostTensor)
+        for (p, lit) in lit_params.iter().enumerate() {
+            let full = lit.to_vec::<f32>()?;
+            let plen = full.len() / d;
+            for (slot, &i) in group.iter().enumerate() {
+                work[i].params[p]
+                    .data
+                    .copy_from_slice(&full[slot * plen..(slot + 1) * plen]);
+            }
+        }
+        for (slot, &i) in group.iter().enumerate() {
+            work[i].loss =
+                Some((loss[slot] / work[i].samples.len() as f64) as f32);
+        }
+        Ok(())
     }
 
     /// Test-set accuracy of `params` (argmax over logits, computed host-side).
@@ -101,8 +290,15 @@ impl Trainer {
             params.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
         let mut correct = 0usize;
         for chunk in samples.chunks(self.batch) {
-            let (x, _, _) = self.fill_batch(ds, chunk);
-            let xl = x.to_literal()?;
+            let xl = {
+                let mut x = self.x_buf.borrow_mut();
+                x.fill(0.0);
+                for (row, &idx) in chunk.iter().enumerate() {
+                    x[row * IMG_PIXELS..(row + 1) * IMG_PIXELS]
+                        .copy_from_slice(ds.image(idx as usize));
+                }
+                literal_from_slice(&[self.batch, IMG_PIXELS], &x)?
+            };
             let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
             inputs.push(&xl);
             let out = self.eval_exe.run_literals(&inputs)?;
@@ -122,26 +318,39 @@ impl Trainer {
         Ok(correct as f64 / samples.len() as f64)
     }
 
-    /// Fill (x, onehot, wt) tensors for a chunk, zero-padding to `batch`.
-    fn fill_batch(&self, ds: &Dataset, chunk: &[u32]) -> (HostTensor, HostTensor, HostTensor) {
+    /// Stage one chunk into the reusable (x, onehot, wt) buffers and build
+    /// the input literals straight from the borrowed buffers — no
+    /// intermediate `HostTensor` clone per chunk (DESIGN.md §Perf).
+    fn stage_chunk(
+        &self,
+        ds: &Dataset,
+        chunk: &[u32],
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
         let b = self.batch;
         let mut x = self.x_buf.borrow_mut();
         let mut y = self.y_buf.borrow_mut();
         let mut w = self.w_buf.borrow_mut();
-        x.iter_mut().for_each(|v| *v = 0.0);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        w.iter_mut().for_each(|v| *v = 0.0);
-        for (row, &idx) in chunk.iter().enumerate() {
-            let img = ds.image(idx as usize);
-            x[row * IMG_PIXELS..(row + 1) * IMG_PIXELS].copy_from_slice(img);
-            y[row * NUM_CLASSES + ds.labels[idx as usize] as usize] = 1.0;
-            w[row] = 1.0;
-        }
-        (
-            HostTensor::new(vec![b, IMG_PIXELS], x.clone()),
-            HostTensor::new(vec![b, NUM_CLASSES], y.clone()),
-            HostTensor::new(vec![b], w.clone()),
-        )
+        x.fill(0.0);
+        y.fill(0.0);
+        w.fill(0.0);
+        stage_rows(&mut x, &mut y, &mut w, ds, chunk);
+        Ok((
+            literal_from_slice(&[b, IMG_PIXELS], &x)?,
+            literal_from_slice(&[b, NUM_CLASSES], &y)?,
+            literal_from_slice(&[b], &w)?,
+        ))
+    }
+}
+
+/// Copy a chunk's images, one-hot labels and unit weights into the leading
+/// rows of pre-zeroed staging slices (shared by the scalar path and each
+/// device slot of the batched path).
+fn stage_rows(x: &mut [f32], y: &mut [f32], w: &mut [f32], ds: &Dataset, chunk: &[u32]) {
+    for (row, &idx) in chunk.iter().enumerate() {
+        x[row * IMG_PIXELS..(row + 1) * IMG_PIXELS]
+            .copy_from_slice(ds.image(idx as usize));
+        y[row * NUM_CLASSES + ds.labels[idx as usize] as usize] = 1.0;
+        w[row] = 1.0;
     }
 }
 
@@ -208,5 +417,91 @@ mod tests {
             .unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert_ne!(params[0].data, snapshot[0].data);
+    }
+
+    /// The batched path must reproduce the scalar path per device: ledger
+    /// equivalence is exact elsewhere; params and losses agree within the
+    /// tolerance documented in DESIGN.md §Perf rule 7.
+    #[test]
+    fn batched_interval_matches_scalar() {
+        let (rt, train, _) = setup();
+        let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
+        // ragged workloads: different sizes, one spanning multiple chunks,
+        // one empty (must come back loss=None, params untouched)
+        let sample_sets: Vec<Vec<u32>> = vec![
+            (0..70).collect(),
+            (100..117).collect(),
+            Vec::new(),
+            (200..232).collect(),
+            (300..305).collect(),
+        ];
+        let mut work: Vec<DeviceWork> = sample_sets
+            .iter()
+            .enumerate()
+            .map(|(k, s)| DeviceWork {
+                params: rt.init_params(ModelKind::Mlp, 40 + k as u64).unwrap(),
+                samples: s.clone(),
+                loss: None,
+            })
+            .collect();
+        let mut scalar_params: Vec<_> =
+            work.iter().map(|w| w.params.clone()).collect();
+
+        trainer.train_interval_many(&rt, &train, &mut work).unwrap();
+
+        for (k, w) in work.iter().enumerate() {
+            let loss = trainer
+                .train_interval(&mut scalar_params[k], &train, &sample_sets[k])
+                .unwrap();
+            match (loss, w.loss) {
+                (None, None) => {
+                    assert_eq!(w.params[0].data, scalar_params[k][0].data);
+                }
+                (Some(ls), Some(lb)) => {
+                    assert!(
+                        (ls - lb).abs() <= 1e-5 * (1.0 + ls.abs()),
+                        "device {k}: loss {ls} vs {lb}"
+                    );
+                    for (p, (a, b)) in
+                        w.params.iter().zip(&scalar_params[k]).enumerate()
+                    {
+                        let max_diff = a
+                            .data
+                            .iter()
+                            .zip(&b.data)
+                            .map(|(x, y)| (x - y).abs())
+                            .fold(0f32, f32::max);
+                        assert!(
+                            max_diff <= 1e-4,
+                            "device {k} param {p}: max diff {max_diff}"
+                        );
+                    }
+                }
+                other => panic!("device {k}: loss mismatch {other:?}"),
+            }
+        }
+    }
+
+    /// More devices than the largest compiled tile: the trainer must split
+    /// into several stacked executions and still update every device.
+    #[test]
+    fn batched_interval_splits_oversized_groups() {
+        let (rt, train, _) = setup();
+        let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
+        let max_tile = *rt.manifest.device_tiles.last().unwrap();
+        let n = max_tile + 3;
+        let mut work: Vec<DeviceWork> = (0..n)
+            .map(|k| DeviceWork {
+                params: rt.init_params(ModelKind::Mlp, 7).unwrap(),
+                samples: vec![(k % 64) as u32, (k % 64) as u32 + 1],
+                loss: None,
+            })
+            .collect();
+        let before = work[0].params[0].data.clone();
+        trainer.train_interval_many(&rt, &train, &mut work).unwrap();
+        for (k, w) in work.iter().enumerate() {
+            assert!(w.loss.unwrap().is_finite(), "device {k}");
+            assert_ne!(w.params[0].data, before, "device {k} did not train");
+        }
     }
 }

@@ -7,6 +7,7 @@
 //!             [--rho 0.5] [--costs testbed-lte|testbed-wifi|synthetic]
 //!             [--discard linear-r|linear-g|sqrt] [--capacity] [--estimated]
 //!             [--p-exit 0.02] [--p-entry 0.02] [--curve]
+//!             [--train-path auto|batched|scalar]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //! fogml cluster [--devices 4] [--rounds 5]
@@ -15,12 +16,18 @@
 //! `--jobs N` fans the sweep drivers' (config, seed) grids out over N
 //! pooled engine workers (see `coordinator::pool`); `--jobs 1` reproduces
 //! the serial numbers bit-for-bit.
+//!
+//! `--train-path` selects how an interval's local updates execute:
+//! `auto` (default) stacks all concurrently-training devices into one
+//! `[D × BATCH]` XLA call per chunk step whenever more than one device
+//! trains; `scalar` forces the per-device dispatch; `batched` forces the
+//! stacked entry even for a single trainee (see DESIGN.md §Perf rule 7).
 
 use anyhow::{bail, Result};
 
 use fogml::cli::Args;
 use fogml::config::{
-    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind,
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
 };
 use fogml::coordinator::{Cluster, ClusterConfig};
 use fogml::costs::{CostSource, Medium};
@@ -98,6 +105,9 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     }
     if args.flag("estimated") {
         cfg.info = InfoMode::Estimated(EngineConfig::DEFAULT_EST_WINDOWS);
+    }
+    if let Some(p) = args.get("train-path") {
+        cfg.train_path = TrainPath::parse(p)?;
     }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;

@@ -29,6 +29,9 @@ pub struct EntrySpec {
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Device-stack capacity `D` of a batched `*_train_many_d<D>` entry
+    /// (leading axis of every mapped tensor); `None` for scalar entries.
+    pub devices: Option<usize>,
 }
 
 /// Parsed manifest.
@@ -36,6 +39,9 @@ pub struct EntrySpec {
 pub struct Manifest {
     pub dir: PathBuf,
     pub batch: usize,
+    /// Compiled device-stack sizes of the batched train entries, ascending
+    /// (empty when the artifacts predate the batched path).
+    pub device_tiles: Vec<usize>,
     pub entries: BTreeMap<String, EntrySpec>,
 }
 
@@ -85,6 +91,14 @@ impl Manifest {
             );
         }
         let batch = get_const("batch")?;
+        // absent in pre-batching artifact sets: the runtime then serves
+        // scalar train entries only and the trainer falls back per device
+        let mut device_tiles: Vec<usize> = consts
+            .get("device_tiles")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        device_tiles.sort_unstable();
 
         let mut entries = BTreeMap::new();
         let raw_entries = json
@@ -126,10 +140,11 @@ impl Manifest {
                     file: dir.join(file),
                     inputs: parse_specs("inputs")?,
                     outputs: parse_specs("outputs")?,
+                    devices: e.get("devices").and_then(Json::as_usize),
                 },
             );
         }
-        Ok(Manifest { dir: dir.to_path_buf(), batch, entries })
+        Ok(Manifest { dir: dir.to_path_buf(), batch, device_tiles, entries })
     }
 
     pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
@@ -158,8 +173,19 @@ mod tests {
         let train = m.entry("mlp_train").unwrap();
         assert_eq!(train.inputs.len(), 8);
         assert_eq!(train.outputs.len(), 5);
+        assert_eq!(train.devices, None);
         let x = &train.inputs[4];
         assert_eq!(x.shape, vec![m.batch, IMG_PIXELS]);
+        // batched variants: every tile size present with a [D, B, ...] x
+        assert!(!m.device_tiles.is_empty());
+        assert!(m.device_tiles.windows(2).all(|w| w[0] < w[1]));
+        for &d in &m.device_tiles {
+            let many = m.entry(&format!("mlp_train_many_d{d}")).unwrap();
+            assert_eq!(many.devices, Some(d));
+            assert_eq!(many.inputs.len(), 8);
+            assert_eq!(many.inputs[4].shape, vec![d, m.batch, IMG_PIXELS]);
+            assert_eq!(many.outputs[4].shape, vec![d]);
+        }
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod tensor;
 
 pub use artifact::Manifest;
 pub use model::{ModelKind, Runtime};
-pub use tensor::HostTensor;
+pub use tensor::{literal_from_slice, HostTensor};

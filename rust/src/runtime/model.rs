@@ -32,6 +32,11 @@ impl ModelKind {
         }
     }
 
+    /// Name of the batched train entry compiled for a `d`-device stack.
+    pub fn train_many_entry(&self, d: usize) -> String {
+        format!("{}_many_d{d}", self.train_entry())
+    }
+
     /// Number of parameter tensors (leading inputs of the train entry).
     pub fn num_params(&self) -> usize {
         match self {
@@ -137,6 +142,28 @@ impl Runtime {
         let executable = std::rc::Rc::new(Executable { spec, exe });
         self.cache.borrow_mut().insert(name.to_string(), executable.clone());
         Ok(executable)
+    }
+
+    /// The batched train executable sized for `want` concurrently-training
+    /// devices: the smallest compiled variant with `D >= want`, or the
+    /// largest one when `want` exceeds every tile (the trainer then splits
+    /// the devices into several stacked executions). Returns `None` when
+    /// the artifact set predates the batched entries, so callers can fall
+    /// back to the scalar path against old artifacts.
+    pub fn train_many_executable(
+        &self,
+        kind: ModelKind,
+        want: usize,
+    ) -> Result<Option<(usize, std::rc::Rc<Executable>)>> {
+        let tiles = &self.manifest.device_tiles;
+        let Some(&d) = tiles.iter().find(|&&d| d >= want).or_else(|| tiles.last()) else {
+            return Ok(None);
+        };
+        let name = kind.train_many_entry(d);
+        if !self.manifest.entries.contains_key(&name) {
+            return Ok(None);
+        }
+        Ok(Some((d, self.executable(&name)?)))
     }
 
     /// He-style initialization of a model's parameter tensors, shaped per
@@ -253,6 +280,26 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape, vec![b, NUM_CLASSES]);
         assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_many_picks_smallest_sufficient_variant() {
+        let rt = runtime();
+        let tiles = rt.manifest.device_tiles.clone();
+        assert!(!tiles.is_empty(), "artifacts predate batched entries");
+        let (d, exe) = rt
+            .train_many_executable(ModelKind::Mlp, 3)
+            .unwrap()
+            .expect("batched variant");
+        assert_eq!(d, tiles.iter().copied().find(|&t| t >= 3).unwrap());
+        assert_eq!(exe.spec.devices, Some(d));
+        // beyond the largest tile: the largest variant (caller chunks)
+        let max = *tiles.last().unwrap();
+        let (d, _) = rt
+            .train_many_executable(ModelKind::Mlp, max + 1)
+            .unwrap()
+            .unwrap();
+        assert_eq!(d, max);
     }
 
     #[test]

@@ -42,17 +42,7 @@ impl HostTensor {
     /// untyped-data constructor; `vec1 + reshape` would copy twice — see
     /// DESIGN.md §Perf).
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let bytes = unsafe {
-            std::slice::from_raw_parts(
-                self.data.as_ptr() as *const u8,
-                self.data.len() * std::mem::size_of::<f32>(),
-            )
-        };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &self.shape,
-            bytes,
-        )?)
+        literal_from_slice(&self.shape, &self.data)
     }
 
     /// Read a literal back into host memory.
@@ -88,6 +78,29 @@ impl HostTensor {
     }
 }
 
+/// Build an f32 literal of `shape` directly from a borrowed slice: the
+/// zero-`HostTensor` path for staging buffers that are refilled every chunk
+/// (a single copy into the literal; cloning the buffer into a fresh
+/// `HostTensor` first would copy twice — DESIGN.md §Perf).
+pub fn literal_from_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    ensure!(
+        shape.iter().product::<usize>() == data.len(),
+        "shape {shape:?} does not match data length {}",
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +127,16 @@ mod tests {
         let lit = t.to_literal().unwrap();
         let back = HostTensor::from_literal(&lit).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn borrowed_slice_literal_matches_owned() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let lit = literal_from_slice(&[3, 2], &data).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![3, 2]);
+        assert_eq!(back.data, data);
+        assert!(literal_from_slice(&[4, 2], &data).is_err());
     }
 
     #[test]

@@ -1,0 +1,93 @@
+//! Batched ≡ scalar equivalence: a full session run must produce the same
+//! results whether local updates dispatch per device (`TrainPath::Scalar`)
+//! or as stacked `[D × BATCH]` multi-device executions
+//! (`TrainPath::Batched`). Requires `make artifacts`.
+//!
+//! What "the same" means (DESIGN.md §Perf rule 7): everything training
+//! numerics cannot reach — the ledger, movement totals, mean-active — is
+//! bit-identical, because the movement optimization never reads model
+//! parameters. Losses and accuracies agree within a small tolerance: the
+//! vmapped lowering computes the same per-device math, but XLA may order
+//! the batched reductions differently after optimization.
+
+use fogml::config::{Churn, EngineConfig, Method, TrainPath};
+use fogml::fed::{self, EngineOutput};
+use fogml::runtime::Runtime;
+
+const LOSS_TOL: f32 = 1e-4;
+const ACC_TOL: f64 = 5e-3;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        method: Method::NetworkAware,
+        n: 8,
+        t_max: 20,
+        tau: 5,
+        n_train: 1600,
+        n_test: 400,
+        eval_curve: true,
+        // churn makes some intervals single-trainee, exercising the
+        // scalar fallback inside the batched configuration too
+        churn: Some(Churn { p_exit: 0.05, p_entry: 0.05 }),
+        ..Default::default()
+    }
+}
+
+fn run_path(rt: &Runtime, path: TrainPath) -> EngineOutput {
+    let cfg = small().with(|c| c.train_path = path);
+    fed::run(&cfg, rt).expect("session run")
+}
+
+fn assert_equivalent(a: &EngineOutput, b: &EngineOutput, label: &str) {
+    // bookkeeping untouched by training numerics: exact
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger");
+    assert_eq!(a.movement.per_interval, b.movement.per_interval, "{label}: movement");
+    assert_eq!(a.mean_active, b.mean_active, "{label}: mean_active");
+    assert_eq!(a.total_collected, b.total_collected, "{label}: collected");
+    assert_eq!(a.similarity, b.similarity, "{label}: similarity");
+
+    // training numerics: tolerance
+    assert!(
+        (a.accuracy - b.accuracy).abs() <= ACC_TOL,
+        "{label}: accuracy {} vs {}",
+        a.accuracy,
+        b.accuracy
+    );
+    assert_eq!(a.accuracy_curve.len(), b.accuracy_curve.len(), "{label}: curve len");
+    for ((ta, aa), (tb, ab)) in a.accuracy_curve.iter().zip(&b.accuracy_curve) {
+        assert_eq!(ta, tb, "{label}: curve t");
+        assert!((aa - ab).abs() <= ACC_TOL, "{label}: curve t={ta}: {aa} vs {ab}");
+    }
+    assert_eq!(a.per_device_loss.len(), b.per_device_loss.len());
+    for (t, (ra, rb)) in a.per_device_loss.iter().zip(&b.per_device_loss).enumerate() {
+        for (i, (la, lb)) in ra.iter().zip(rb).enumerate() {
+            match (la, lb) {
+                (None, None) => {}
+                (Some(la), Some(lb)) => assert!(
+                    (la - lb).abs() <= LOSS_TOL * (1.0 + la.abs()),
+                    "{label}: loss t={t} dev={i}: {la} vs {lb}"
+                ),
+                other => panic!("{label}: loss presence t={t} dev={i}: {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_and_scalar_sessions_are_equivalent() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let scalar = run_path(&rt, TrainPath::Scalar);
+    let batched = run_path(&rt, TrainPath::Batched);
+    let auto = run_path(&rt, TrainPath::Auto);
+    assert_equivalent(&scalar, &batched, "scalar vs batched");
+    assert_equivalent(&scalar, &auto, "scalar vs auto");
+
+    // the run must have actually trained multiple devices at once for
+    // this test to mean anything
+    let multi_intervals = scalar
+        .per_device_loss
+        .iter()
+        .filter(|row| row.iter().filter(|l| l.is_some()).count() > 1)
+        .count();
+    assert!(multi_intervals > 5, "only {multi_intervals} multi-trainee intervals");
+}

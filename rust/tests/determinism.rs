@@ -4,7 +4,7 @@
 //! the contract that makes the pooled sweep drivers trustworthy: `--jobs`
 //! changes wall-clock, never numbers. Requires `make artifacts`.
 
-use fogml::config::{Churn, EngineConfig, Method};
+use fogml::config::{Churn, EngineConfig, Method, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::{run_avg_pool, seed_sweep};
 use fogml::fed::{self, EngineOutput};
@@ -71,6 +71,42 @@ fn serial_pool1_and_pool4_are_bit_identical() {
             s,
             &pooled_shared[k],
             &format!("seed #{k}, serial vs jobs=4/shared-service"),
+        );
+    }
+}
+
+/// The batched multi-device path must honor the same contract: with
+/// `TrainPath::Batched` forced, serial `fed::run` (LocalCompute →
+/// `Trainer::train_interval_many`) and pooled runs (RuntimeHandle →
+/// service-thread `TrainMany`) are bit-identical — both stack the same
+/// device work in the same order through the same executable. The default
+/// `small()` config above already exercises the Auto route; this pins the
+/// forced-batched one, including single-trainee intervals.
+#[test]
+fn batched_path_is_pool_invariant() {
+    let cfg = small().with(|c| {
+        c.n = 8;
+        c.train_path = TrainPath::Batched;
+    });
+    let cfgs = seed_sweep(&cfg, 2);
+
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let serial: Vec<EngineOutput> = cfgs
+        .iter()
+        .map(|c| fed::run(c, &rt).expect("serial batched run"))
+        .collect();
+
+    let pool = SimPool::new(4);
+    let pooled = pool.run_many(&cfgs).expect("pooled batched runs");
+    let shared = SimPool::with_services(4, 1);
+    let pooled_shared = shared.run_many(&cfgs).expect("shared-service batched runs");
+
+    for (k, s) in serial.iter().enumerate() {
+        assert_identical(s, &pooled[k], &format!("batched seed #{k}, serial vs jobs=4"));
+        assert_identical(
+            s,
+            &pooled_shared[k],
+            &format!("batched seed #{k}, serial vs shared-service"),
         );
     }
 }
