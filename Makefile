@@ -2,19 +2,44 @@
 #
 # `make artifacts` runs the L2 AOT pipeline (python/compile/aot.py): every
 # entry point — scalar train/eval steps plus the batched
-# `*_train_many_d<D>` device-stack variants — is lowered to HLO text under
-# rust/artifacts/, which is also where the rust runtime looks by default
-# when invoked from rust/ (override with FOGML_ARTIFACTS). The generated
-# artifacts are vendored in-repo so `cargo test` works without a JAX
-# toolchain; re-run this target after changing python/compile/.
+# `*_train_many_d<D>` and `*_eval_many_d<D>` device-stack variants — is
+# lowered to HLO text under rust/artifacts/, which is also where the rust
+# runtime looks by default when invoked from rust/ (override with
+# FOGML_ARTIFACTS). The generated artifacts are vendored in-repo so
+# `cargo test` works without a JAX toolchain; re-run this target after
+# changing python/compile/, and run `make check-artifacts` to verify the
+# vendored set is not stale relative to python/compile.
 
 PYTHON ?= python3
 ARTIFACTS_DIR := $(abspath rust/artifacts)
+CHECK_DIR := $(abspath rust/target/artifacts-check)
 
-.PHONY: artifacts test-python test-rust
+# every entry the rust runtime may request; `artifacts` fails loudly if
+# the pipeline stops emitting one of them
+REQUIRED_ENTRIES := mlp_train mlp_eval cnn_train cnn_eval dense_micro \
+	$(foreach d,4 8 16 32,mlp_train_many_d$(d) cnn_train_many_d$(d) \
+	mlp_eval_many_d$(d) cnn_eval_many_d$(d))
+
+.PHONY: artifacts check-artifacts test-python test-rust
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR)
+	@for e in $(REQUIRED_ENTRIES); do \
+		grep -q "\"$$e\": {" $(ARTIFACTS_DIR)/manifest.json || \
+		{ echo "FATAL: entry '$$e' missing from $(ARTIFACTS_DIR)/manifest.json"; exit 1; }; \
+	done
+	@echo "artifacts: all $(words $(REQUIRED_ENTRIES)) required entries present"
+
+# regenerate into a scratch dir and compare the ABI manifest against the
+# vendored one: a mismatch means rust/artifacts/ is stale relative to
+# python/compile — re-run `make artifacts` and commit the result
+check-artifacts:
+	rm -rf $(CHECK_DIR) && mkdir -p $(CHECK_DIR)
+	cd python && $(PYTHON) -m compile.aot --out-dir $(CHECK_DIR)
+	@diff -u $(ARTIFACTS_DIR)/manifest.json $(CHECK_DIR)/manifest.json || \
+	{ echo "FATAL: vendored rust/artifacts/manifest.json is STALE relative to python/compile —"; \
+	  echo "       run 'make artifacts' and commit the regenerated artifacts."; exit 1; }
+	@echo "check-artifacts: vendored manifest matches python/compile"
 
 test-python:
 	cd python && $(PYTHON) -m pytest -q tests

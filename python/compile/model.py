@@ -144,6 +144,37 @@ def make_train_many(step_fn, n_params):
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-params eval steps: one stacked XLA call per chunk group
+# ---------------------------------------------------------------------------
+
+
+def make_eval_many(step_fn, n_params):
+    """vmap a per-device eval step over a leading device axis, reducing to
+    weighted-correct counts on device.
+
+    Each slot carries its own parameter stack, test chunk, one-hot labels
+    and per-row weights; the slot's output is `sum(wt * (argmax(logits) ==
+    argmax(onehot)))` — the weighted number of correct predictions.  Padded
+    rows and whole idle slots carry zero weights, so they contribute
+    *exactly* zero to the count (no division is even involved — this is
+    the same weight-masking contract the train entries rely on through
+    `softmax_xent`'s `max(sum(wt), 1)`, here in its degenerate sum-only
+    form).  The host divides the accumulated counts by the true sample
+    totals, so a D-slot stack serves D distinct models, or one model over
+    D test chunks with the parameters replicated across slots.
+    """
+
+    def count_step(*args):
+        params, x, onehot, wt = args[:n_params], args[-3], args[-2], args[-1]
+        (logits,) = step_fn(*params, x)
+        pred = jnp.argmax(logits, axis=-1)
+        label = jnp.argmax(onehot, axis=-1)
+        return (jnp.sum(wt * (pred == label).astype(jnp.float32)),)
+
+    return jax.vmap(count_step, in_axes=0)
+
+
+# ---------------------------------------------------------------------------
 # Shape specs for AOT lowering (shared with aot.py / manifest.json)
 # ---------------------------------------------------------------------------
 
@@ -180,6 +211,15 @@ def stacked_batch_specs(d):
     )
 
 
+def stacked_eval_batch_specs(d):
+    """(x, onehot, wt) specs with a leading device axis (no lr for eval)."""
+    return (
+        _f32((d, BATCH, IMG_PIXELS)),
+        _f32((d, BATCH, NUM_CLASSES)),
+        _f32((d, BATCH)),
+    )
+
+
 def _train_many_entries():
     """One `<base>_train_many_d<D>` entry per model per compiled tile size."""
     entries = {}
@@ -193,6 +233,25 @@ def _train_many_entries():
                 make_train_many(step, len(shapes)),
                 lambda shapes=shapes, d=d: (
                     stacked_param_specs(shapes, d) + stacked_batch_specs(d)
+                ),
+                {"base": base, "devices": d, "devices_axis": 0},
+            )
+    return entries
+
+
+def _eval_many_entries():
+    """One `<base>_eval_many_d<D>` entry per model per compiled tile size."""
+    entries = {}
+    bases = {
+        "mlp_eval": (MLP_PARAM_SHAPES, mlp_eval_step),
+        "cnn_eval": (CNN_PARAM_SHAPES, cnn_eval_step),
+    }
+    for base, (shapes, step) in bases.items():
+        for d in DEVICE_TILES:
+            entries[f"{base}_many_d{d}"] = (
+                make_eval_many(step, len(shapes)),
+                lambda shapes=shapes, d=d: (
+                    stacked_param_specs(shapes, d) + stacked_eval_batch_specs(d)
                 ),
                 {"base": base, "devices": d, "devices_axis": 0},
             )
@@ -222,4 +281,5 @@ ENTRY_POINTS = {
         {},
     ),
     **_train_many_entries(),
+    **_eval_many_entries(),
 }

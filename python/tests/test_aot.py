@@ -29,7 +29,7 @@ def test_all_entries_emitted(built):
     expected = {"mlp_train", "mlp_eval", "cnn_train", "cnn_eval", "dense_micro"}
     expected |= {
         f"{base}_many_d{d}"
-        for base in ("mlp_train", "cnn_train")
+        for base in ("mlp_train", "cnn_train", "mlp_eval", "cnn_eval")
         for d in common.DEVICE_TILES
     }
     assert set(manifest["entries"]) == expected
@@ -93,6 +93,29 @@ def test_eval_entry_abi(built):
         assert len(entry["inputs"]) == nparams + 1
         assert entry["outputs"][0]["shape"] == [
             common.BATCH, common.NUM_CLASSES]
+
+
+def test_eval_many_entry_abi(built):
+    """Stacked eval layout: params[D,...], x[D,B,P], onehot[D,B,C],
+    wt[D,B]; single output correct[D] — weighted correct counts, one
+    scalar per slot (host-side division by the true sample totals)."""
+    _, manifest = built
+    for base, nparams in (("mlp_eval", 4), ("cnn_eval", 6)):
+        scalar = manifest["entries"][base]
+        for d in common.DEVICE_TILES:
+            entry = manifest["entries"][f"{base}_many_d{d}"]
+            assert entry["devices"] == d
+            assert entry["devices_axis"] == 0
+            assert entry["base"] == base
+            ins, outs = entry["inputs"], entry["outputs"]
+            assert len(ins) == nparams + 3
+            assert len(outs) == 1
+            for i in range(nparams + 1):
+                assert ins[i]["shape"] == [d] + scalar["inputs"][i]["shape"]
+            assert ins[nparams + 1]["shape"] == [
+                d, common.BATCH, common.NUM_CLASSES]
+            assert ins[nparams + 2]["shape"] == [d, common.BATCH]
+            assert outs[0]["shape"] == [d]
 
 
 def test_manifest_is_valid_json_on_disk(built):

@@ -11,6 +11,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+# property-based sweeps need hypothesis (python/requirements-dev.txt);
+# skip this module — not the whole session — where it is absent
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

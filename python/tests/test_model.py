@@ -107,7 +107,7 @@ def test_entry_points_cover_both_models():
     scalar = {"mlp_train", "mlp_eval", "cnn_train", "cnn_eval"}
     many = {
         f"{base}_many_d{d}"
-        for base in ("mlp_train", "cnn_train")
+        for base in ("mlp_train", "cnn_train", "mlp_eval", "cnn_eval")
         for d in common.DEVICE_TILES
     }
     assert set(model.ENTRY_POINTS) == scalar | many
@@ -144,6 +144,67 @@ def test_train_many_matches_scalar_loop(name, shapes, train, evalf):
             np.testing.assert_allclose(
                 np.asarray(a[s]), np.asarray(b), atol=1e-5
             )
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_eval_many_matches_scalar_count(name, shapes, train, evalf):
+    """Every slot of the stacked eval step must report the same weighted
+    correct count the scalar eval step + host argmax produces on that
+    slot's chunk — the contract `Trainer::evaluate_many` relies on
+    (rust/tests/eval_equivalence.rs)."""
+    d = common.DEVICE_TILES[0]
+    many = model.make_eval_many(evalf, len(shapes))
+    params = [
+        jnp.stack([_init_params(shapes, seed=s)[k] for s in range(d)])
+        for k in range(len(shapes))
+    ]
+    batches = [_toy_batch(seed=200 + s) for s in range(d)]
+    x = jnp.stack([b[0] for b in batches])
+    onehot = jnp.stack([b[1] for b in batches])
+    wt = jnp.stack([b[2] for b in batches])
+
+    (counts,) = many(*params, x, onehot, wt)
+    assert counts.shape == (d,)
+    for s in range(d):
+        (logits,) = evalf(*(p[s] for p in params), x[s])
+        pred = np.argmax(np.asarray(logits), axis=1)
+        label = np.argmax(np.asarray(onehot[s]), axis=1)
+        want = float(np.sum(np.asarray(wt[s]) * (pred == label)))
+        assert float(counts[s]) == want, (name, s)
+
+
+@pytest.mark.parametrize("name,shapes,train,evalf", CASES)
+def test_eval_many_zero_weight_rows_and_slots(name, shapes, train, evalf):
+    """Zero-weight rows and whole zero-weight slots contribute exactly
+    zero to the correct count, no matter what garbage their inputs hold —
+    how the rust eval path pads partial chunks and idle stack slots."""
+    d = common.DEVICE_TILES[0]
+    many = model.make_eval_many(evalf, len(shapes))
+    params = [
+        jnp.stack([_init_params(shapes, seed=s)[k] for s in range(d)])
+        for k in range(len(shapes))
+    ]
+    x_one, onehot_one, wt_one = _toy_batch(seed=9)
+    x = jnp.stack([x_one] * d)
+    onehot = jnp.stack([onehot_one] * d)
+    half = common.BATCH // 2
+    idle = 1
+    wt_rows = wt_one.at[half:].set(0.0)
+    wt = jnp.stack(
+        [jnp.zeros_like(wt_one) if s == idle else wt_rows for s in range(d)]
+    )
+    (counts_a,) = many(*params, x, onehot, wt)
+
+    # corrupt everything the weights mask out: counts must not move
+    x_b = x.at[:, half:].set(1e3)
+    x_b = x_b.at[idle].set(-1e3)
+    (counts_b,) = many(*params, x_b, onehot, wt)
+
+    assert float(counts_a[idle]) == 0.0
+    assert float(counts_b[idle]) == 0.0
+    np.testing.assert_array_equal(np.asarray(counts_a), np.asarray(counts_b))
+    # a live slot counts at most the surviving weight mass
+    assert 0.0 <= float(counts_a[0]) <= half
 
 
 @pytest.mark.parametrize("name,shapes,train,evalf", CASES)

@@ -8,7 +8,11 @@
 //! — since the batched train path landed — single runs at n ∈ {10, 30}
 //! with `TrainPath::Scalar` vs `TrainPath::Batched` (§Perf rule 7: the
 //! stacked `[D × BATCH]` entry amortizes PJRT dispatch over all devices
-//! training in an interval). Emits `BENCH_engine.json` (and a copy under
+//! training in an interval). The `eval` section covers the evaluation
+//! subsystem the same way (§Perf rule 8): a full test pass through the
+//! scalar chunk loop vs the stacked `*_eval_many_d<D>` entries, and
+//! curve-producing runs under the Full vs Subset eval schedules at
+//! n ∈ {10, 30}. Emits `BENCH_engine.json` (and a copy under
 //! `results/bench/`) so later PRs have numbers to beat.
 
 use std::time::Instant;
@@ -17,7 +21,9 @@ use fogml::config::{EngineConfig, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::seed_sweep;
 use fogml::fed;
-use fogml::runtime::Runtime;
+use fogml::fed::eval::{EvalPath, EvalSchedule, EvalWork};
+use fogml::fed::{Substrates, Trainer};
+use fogml::runtime::{ModelKind, Runtime};
 use fogml::util::json::Json;
 
 const POOL_JOBS: usize = 4;
@@ -96,6 +102,111 @@ fn main() {
         ]));
     }
 
+    // -- eval: batched vs scalar full-pass dispatch ------------------------
+    // one model scored over the whole test set: the scalar path pays one
+    // PJRT call per BATCH chunk, the batched path ceil(chunks / D)
+    // stacked calls (DESIGN.md §Perf rule 8)
+    let eval_cfg = small().with(|c| {
+        c.n_train = 1600;
+        c.n_test = 2000;
+    });
+    let sub = Substrates::derive(&eval_cfg);
+    let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).expect("trainer");
+    let mut params = rt.init_params(ModelKind::Mlp, 1).expect("init");
+    let all_train: Vec<u32> = (0..sub.train.len() as u32).collect();
+    trainer
+        .train_interval(&mut params, &sub.train, &all_train)
+        .expect("train for non-uniform logits");
+    let full_test: Vec<u32> = (0..sub.test.len() as u32).collect();
+    let mut eval_work = vec![EvalWork {
+        params: params.clone(),
+        samples: full_test.clone(),
+        accuracy: None,
+    }];
+    // warm both eval entry variants
+    trainer.evaluate_subset(&params, &sub.test, &full_test).expect("warm scalar");
+    trainer
+        .evaluate_many(&rt, &sub.test, &mut eval_work, EvalPath::Batched)
+        .expect("warm batched");
+
+    const EVAL_REPS: usize = 10;
+    let start = Instant::now();
+    for _ in 0..EVAL_REPS {
+        std::hint::black_box(
+            trainer
+                .evaluate_subset(&params, &sub.test, &full_test)
+                .expect("scalar eval"),
+        );
+    }
+    let eval_scalar_s = start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    for _ in 0..EVAL_REPS {
+        trainer
+            .evaluate_many(&rt, &sub.test, &mut eval_work, EvalPath::Batched)
+            .expect("batched eval");
+        std::hint::black_box(eval_work[0].accuracy);
+    }
+    let eval_batched_s = start.elapsed().as_secs_f64();
+    let eval_speedup = eval_scalar_s / eval_batched_s.max(1e-9);
+    println!(
+        "eval/full-pass  scalar {eval_scalar_s:>7.2}s  batched {eval_batched_s:>7.2}s  \
+         speedup {eval_speedup:.2}×  ({} samples × {EVAL_REPS} reps)",
+        full_test.len()
+    );
+    let eval_full_pass = Json::obj(vec![
+        ("test_samples", Json::from(full_test.len())),
+        ("reps", Json::from(EVAL_REPS)),
+        ("scalar_s", Json::from(eval_scalar_s)),
+        ("batched_s", Json::from(eval_batched_s)),
+        ("batched_speedup", Json::from(eval_speedup)),
+    ]);
+
+    // -- eval: full vs subset schedule curve cost --------------------------
+    // a curve-producing run pays one evaluation per aggregation; the
+    // subset schedule cuts each to 1/shards of a test pass
+    const SHARDS: usize = 5;
+    let mut eval_curve_rows = Vec::new();
+    for n in [10usize, 30] {
+        let base = small().with(|c| {
+            c.n = n;
+            c.eval_curve = true;
+        });
+        const REPS: usize = 3;
+        let mut secs = [0.0f64; 2];
+        for (k, schedule) in [
+            EvalSchedule::Full,
+            EvalSchedule::Subset { shards: SHARDS },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let cfg = base.clone().with(|c| c.eval_schedule = schedule);
+            fed::run(&cfg, &rt).expect("schedule warmup");
+            let start = Instant::now();
+            for rep in 0..REPS {
+                std::hint::black_box(
+                    fed::run(&cfg.clone().seeded(1 + rep as u64), &rt)
+                        .expect("curve run"),
+                );
+            }
+            secs[k] = start.elapsed().as_secs_f64();
+        }
+        let speedup = secs[0] / secs[1].max(1e-9);
+        println!(
+            "eval/curve n={n:<3} full {:>7.2}s  subset:{SHARDS} {:>7.2}s  \
+             run speedup {speedup:.2}×",
+            secs[0], secs[1]
+        );
+        eval_curve_rows.push(Json::obj(vec![
+            ("n", Json::from(n)),
+            ("runs", Json::from(REPS)),
+            ("shards", Json::from(SHARDS)),
+            ("full_s", Json::from(secs[0])),
+            ("subset_s", Json::from(secs[1])),
+            ("subset_speedup", Json::from(speedup)),
+        ]));
+    }
+
     let mut rows = Vec::new();
     for seeds in [1usize, 4, 8] {
         let cfgs = seed_sweep(&small(), seeds);
@@ -142,6 +253,10 @@ fn main() {
         ])),
         ("rows", Json::Arr(rows)),
         ("multi_device", Json::Arr(multi_rows)),
+        ("eval", Json::obj(vec![
+            ("full_pass", eval_full_pass),
+            ("curve", Json::Arr(eval_curve_rows)),
+        ])),
     ]);
     let text = report.to_string();
     std::fs::write("BENCH_engine.json", &text).expect("write BENCH_engine.json");

@@ -3,6 +3,7 @@
 
 use crate::costs::traces::ErrorWeightProfile;
 use crate::costs::{CostSource, Medium};
+use crate::fed::eval::{EvalPath, EvalSchedule};
 use crate::movement::DiscardModel;
 use crate::runtime::ModelKind;
 
@@ -111,6 +112,12 @@ pub struct EngineConfig {
     pub error_profile: ErrorWeightProfile,
     /// Evaluate test accuracy at every aggregation (slower; for curves).
     pub eval_curve: bool,
+    /// Which test samples each curve point scores (full pass vs rotating
+    /// seeded shards — see `fed::eval::EvalSchedule`).
+    pub eval_schedule: EvalSchedule,
+    /// Scalar vs stacked chunk dispatch of curve evaluations
+    /// (`fed::eval::EvalPath`; DESIGN.md §Perf rule 8).
+    pub eval_path: EvalPath,
     /// Scalar vs stacked multi-device dispatch of local updates.
     pub train_path: TrainPath,
     pub seed: u64,
@@ -144,6 +151,11 @@ impl Default for EngineConfig {
             churn: None,
             error_profile: ErrorWeightProfile::default(),
             eval_curve: false,
+            eval_schedule: EvalSchedule::Full,
+            // Scalar (not Auto like train_path): default curves stay
+            // bit-identical to the pre-subsystem eval_curve; stacked
+            // eval is opt-in via --eval-path (DESIGN.md §Perf rule 8)
+            eval_path: EvalPath::Scalar,
             train_path: TrainPath::Auto,
             seed: 1,
         }
@@ -212,6 +224,18 @@ mod tests {
         assert_eq!(TrainPath::parse("scalar").unwrap(), TrainPath::Scalar);
         assert!(TrainPath::parse("vectorized").is_err());
         assert_eq!(EngineConfig::default().train_path, TrainPath::Auto);
+    }
+
+    #[test]
+    fn eval_defaults_preserve_legacy_curves() {
+        // Full schedule + Scalar path is exactly the historical
+        // per-aggregation full pass: default curves are bit-identical to
+        // pre-subsystem runs (tests/eval_equivalence.rs proves the
+        // bit-identity; this pins the default selection)
+        let c = EngineConfig::default();
+        assert_eq!(c.eval_schedule, EvalSchedule::Full);
+        assert_eq!(c.eval_path, EvalPath::Scalar);
+        assert!(!c.eval_curve);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::data::dataset::Dataset;
+use crate::fed::eval::{EvalPath, EvalWork};
 use crate::fed::session::Compute;
 use crate::fed::trainer::{DeviceWork, Trainer};
 use crate::runtime::{HostTensor, ModelKind, Runtime};
@@ -65,6 +66,14 @@ enum Request {
         ds: DatasetId,
         params: Params,
         reply: Sender<Result<f64>>,
+    },
+    EvalMany {
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        work: Vec<EvalWork>,
+        path: EvalPath,
+        reply: Sender<Result<Vec<EvalWork>>>,
     },
     InitParams {
         kind: ModelKind,
@@ -185,6 +194,30 @@ impl ServiceState {
         let test_ds = &self.datasets[&ds].1;
         trainer.evaluate(params, test_ds)
     }
+
+    /// Batched evaluation: the whole work list scores on the service
+    /// thread — one queue round-trip per `evaluate_many` call (i.e. one
+    /// per curve point for pooled sessions), with stacked `[D × BATCH]`
+    /// execution unless `path` forces the scalar chunks.
+    fn handle_eval_many(
+        &mut self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        mut work: Vec<EvalWork>,
+        path: EvalPath,
+    ) -> Result<Vec<EvalWork>> {
+        self.dataset(ds)?;
+        self.ensure_trainer(kind, lr)?;
+        let rt = match self.rt.as_ref() {
+            Some(Ok(rt)) => rt,
+            _ => return Err(anyhow!("runtime unavailable after trainer build")),
+        };
+        let trainer = &self.trainers[&(kind, lr.to_bits())];
+        let test_ds = &self.datasets[&ds].1;
+        trainer.evaluate_many(rt, test_ds, &mut work, path)?;
+        Ok(work)
+    }
 }
 
 impl RuntimeService {
@@ -270,6 +303,9 @@ fn service_loop(rx: Receiver<Request>) {
             Request::Evaluate { kind, lr, ds, params, reply } => {
                 let _ = reply.send(state.handle_evaluate(kind, lr, ds, &params));
             }
+            Request::EvalMany { kind, lr, ds, work, path, reply } => {
+                let _ = reply.send(state.handle_eval_many(kind, lr, ds, work, path));
+            }
             Request::InitParams { kind, seed, reply } => {
                 let res = state
                     .runtime()
@@ -347,6 +383,21 @@ impl ServiceClient {
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
     }
 
+    /// One batched evaluation round-trip: the whole work list scores on
+    /// the service thread; returns it with accuracies filled in.
+    pub fn eval_many(
+        &self,
+        kind: ModelKind,
+        lr: f32,
+        ds: DatasetId,
+        work: Vec<EvalWork>,
+        path: EvalPath,
+    ) -> Result<Vec<EvalWork>> {
+        let (tx, rx) = channel();
+        self.send(Request::EvalMany { kind, lr, ds, work, path, reply: tx })?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
     /// Seeded parameter initialization on the service thread.
     pub fn init_params(&self, kind: ModelKind, seed: u64) -> Result<Params> {
         let (tx, rx) = channel();
@@ -369,6 +420,11 @@ impl RuntimeHandle {
     /// Test-set accuracy of the given parameters.
     pub fn evaluate(&self, params: Params) -> Result<f64> {
         self.client.evaluate(self.kind, self.lr, self.ds, params)
+    }
+
+    /// Run one batched evaluation on the service thread.
+    pub fn eval_many(&self, work: Vec<EvalWork>, path: EvalPath) -> Result<Vec<EvalWork>> {
+        self.client.eval_many(self.kind, self.lr, self.ds, work, path)
     }
 
     /// Seeded parameter initialization on the service thread.
@@ -408,6 +464,36 @@ impl Compute for RuntimeHandle {
 
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
         RuntimeHandle::evaluate(self, params.to_vec())
+    }
+
+    fn evaluate_subset(&self, params: &[HostTensor], samples: &[u32]) -> Result<f64> {
+        // a single-unit scalar-path EvalMany: one round-trip, and the
+        // service executes through Trainer::evaluate_subset — bit-identical
+        // to the serial scalar path
+        let work = vec![EvalWork {
+            params: params.to_vec(),
+            samples: samples.to_vec(),
+            accuracy: None,
+        }];
+        let out = RuntimeHandle::eval_many(self, work, EvalPath::Scalar)?;
+        out.first()
+            .and_then(|w| w.accuracy)
+            .ok_or_else(|| anyhow!("eval_many reply missing accuracy"))
+    }
+
+    fn evaluate_many(&self, work: &mut [EvalWork], path: EvalPath) -> Result<()> {
+        let sent: Vec<EvalWork> = work.iter_mut().map(std::mem::take).collect();
+        let updated = RuntimeHandle::eval_many(self, sent, path)?;
+        anyhow::ensure!(
+            updated.len() == work.len(),
+            "eval_many reply: {} items, sent {}",
+            updated.len(),
+            work.len()
+        );
+        for (w, u) in work.iter_mut().zip(updated) {
+            *w = u;
+        }
+        Ok(())
     }
 }
 
@@ -494,6 +580,47 @@ mod tests {
                     .fold(0f32, f32::max);
                 assert!(max_diff <= 1e-4, "device {k}: max diff {max_diff}");
             }
+        }
+        svc.shutdown();
+    }
+
+    /// One EvalMany round-trip must score a whole work list; the batched
+    /// path agrees with per-item scalar requests within the DESIGN.md
+    /// §Perf rule 7 accuracy tolerance, and the scalar path is exact.
+    #[test]
+    fn service_eval_many_matches_scalar_requests() {
+        let gen = SynthDigits::new(0xF0D5);
+        let mut rng = Rng::new(8);
+        let (train, test) = gen.train_test(600, 200, &mut rng);
+        let mut svc = RuntimeService::spawn(ModelKind::Mlp, 0.05, train, test);
+        let handle = svc.handle();
+        let params = handle.init_params(4).unwrap();
+        let (trained, _) = handle.train(params.clone(), (0..600).collect()).unwrap();
+
+        let full: Vec<u32> = (0..200).collect();
+        let make_work = || -> Vec<EvalWork> {
+            vec![
+                EvalWork { params: trained.clone(), samples: full.clone(), accuracy: None },
+                EvalWork { params: params.clone(), samples: (0..50).collect(), accuracy: None },
+                EvalWork { params: trained.clone(), samples: Vec::new(), accuracy: None },
+            ]
+        };
+        let scalar_ref = handle.evaluate(trained.clone()).unwrap();
+
+        let batched = handle.eval_many(make_work(), EvalPath::Batched).unwrap();
+        assert_eq!(batched.len(), 3);
+        assert!((batched[0].accuracy.unwrap() - scalar_ref).abs() <= 5e-3);
+        assert_eq!(batched[2].accuracy, Some(0.0));
+
+        let scalar = handle.eval_many(make_work(), EvalPath::Scalar).unwrap();
+        assert_eq!(scalar[0].accuracy.unwrap(), scalar_ref);
+        for (a, b) in batched.iter().zip(&scalar) {
+            assert!(
+                (a.accuracy.unwrap() - b.accuracy.unwrap()).abs() <= 5e-3,
+                "{:?} vs {:?}",
+                a.accuracy,
+                b.accuracy
+            );
         }
         svc.shutdown();
     }

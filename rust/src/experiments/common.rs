@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use crate::config::EngineConfig;
 use crate::coordinator::SimPool;
+use crate::experiments::ExpOptions;
 use crate::fed::{self, EngineOutput};
 use crate::runtime::Runtime;
 use crate::util::stats;
@@ -29,6 +30,10 @@ pub struct Avg {
     pub similarity_before: f64,
     pub similarity_after: f64,
     pub mean_active: f64,
+    /// Seed-mean accuracy curve `(t, acc)` — populated only when the runs
+    /// carried `eval_curve` (all seeds of one config share aggregation
+    /// times, so the pointwise mean is well-defined).
+    pub curve: Vec<(usize, f64)>,
 }
 
 impl Avg {
@@ -57,8 +62,70 @@ impl Avg {
             a.similarity_after += o.similarity.1 / k;
             a.mean_active += o.mean_active / k;
         }
+        if !outs.is_empty() && outs.iter().all(|o| !o.accuracy_curve.is_empty()) {
+            let len = outs.iter().map(|o| o.accuracy_curve.len()).min().unwrap();
+            for p in 0..len {
+                let t = outs[0].accuracy_curve[p].0;
+                let mean =
+                    outs.iter().map(|o| o.accuracy_curve[p].1).sum::<f64>() / k;
+                a.curve.push((t, mean));
+            }
+        }
         a
     }
+}
+
+/// Apply the shared evaluation options to a driver's config: curve
+/// production on/off and the eval schedule every curve point follows
+/// (the session routes both through `fed::eval`'s planner).
+pub fn with_eval(cfg: EngineConfig, opts: &ExpOptions) -> EngineConfig {
+    cfg.with(|c| {
+        c.eval_curve = opts.curve;
+        c.eval_schedule = opts.eval_schedule;
+    })
+}
+
+/// [`emit_curves`] for a labeled iid/non-iid sweep: one
+/// `<param>=<label>/iid` and one `/non-iid` series per sweep point (the
+/// shape every `run_avg_iid_pairs` driver reports).
+pub fn emit_iid_pair_curves(
+    param_name: &str,
+    labels: &[&str],
+    pairs: &[(Avg, Avg)],
+    out_dir: &str,
+    name: &str,
+) -> Result<()> {
+    let series: Vec<(String, &[(usize, f64)])> = labels
+        .iter()
+        .zip(pairs)
+        .flat_map(|(label, (iid, noniid))| {
+            [
+                (format!("{param_name}={label}/iid"), iid.curve.as_slice()),
+                (format!("{param_name}={label}/non-iid"), noniid.curve.as_slice()),
+            ]
+        })
+        .collect();
+    emit_curves(&series, out_dir, name)
+}
+
+/// Write accuracy-curve series to `<out_dir>/<name>_curve.csv` as
+/// `label,t,accuracy` rows — one series per labeled config. No-op when
+/// every series is empty (curves were not requested).
+pub fn emit_curves(
+    series: &[(String, &[(usize, f64)])],
+    out_dir: &str,
+    name: &str,
+) -> Result<()> {
+    if series.iter().all(|(_, c)| c.is_empty()) {
+        return Ok(());
+    }
+    let mut csv = String::from("label,t,accuracy\n");
+    for (label, curve) in series {
+        for (t, acc) in curve.iter() {
+            csv.push_str(&format!("{label},{t},{acc}\n"));
+        }
+    }
+    emit_raw(&csv, out_dir, &format!("{name}_curve"))
 }
 
 /// The `seeds` configs a seed-averaged cell expands to: same config, seeds
@@ -169,5 +236,29 @@ mod tests {
         let a = Avg::from_outputs(&[]);
         assert_eq!(a.accuracy, 0.0);
         assert_eq!(a.total, 0.0);
+        assert!(a.curve.is_empty());
+    }
+
+    #[test]
+    fn avg_curves_are_pointwise_means() {
+        let mk = |curve: Vec<(usize, f64)>| crate::fed::EngineOutput {
+            accuracy: 0.5,
+            accuracy_curve: curve,
+            per_device_loss: Vec::new(),
+            ledger: Default::default(),
+            movement: Default::default(),
+            similarity: (0.0, 0.0),
+            mean_active: 0.0,
+            total_collected: 0,
+        };
+        // exactly-representable values so the pointwise mean is exact
+        let a = Avg::from_outputs(&[
+            mk(vec![(10, 0.25), (20, 0.5)]),
+            mk(vec![(10, 0.75), (20, 1.0)]),
+        ]);
+        assert_eq!(a.curve, vec![(10, 0.5), (20, 0.75)]);
+        // any run without a curve suppresses the mean (mixed grids)
+        let b = Avg::from_outputs(&[mk(vec![(10, 0.25)]), mk(Vec::new())]);
+        assert!(b.curve.is_empty());
     }
 }

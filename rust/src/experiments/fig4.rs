@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::experiments::common::{emit_raw, run_avg};
+use crate::experiments::common::{emit_curves, emit_raw, run_avg, with_eval};
 use crate::experiments::ExpOptions;
 use crate::fed;
 use crate::runtime::Runtime;
@@ -23,8 +23,15 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     }
 
     // --- (a) per-device loss trajectories (single representative run) ------
-    let cfg = base.clone().with(|c| c.iid = false);
+    // under --curve the same run also traces test accuracy through the
+    // fed::eval planner (fig4a_curve.csv)
+    let cfg = with_eval(base.clone().with(|c| c.iid = false), opts);
     let out = fed::run(&cfg, &rt)?;
+    emit_curves(
+        &[("network-aware/non-iid".to_string(), out.accuracy_curve.as_slice())],
+        &opts.out_dir,
+        "fig4a",
+    )?;
     let mut csv = String::from("t,device,loss\n");
     let mut first_window = Vec::new();
     let mut last_window = Vec::new();

@@ -18,11 +18,14 @@ use anyhow::Result;
 
 use crate::config::{EngineConfig, TopologyKind};
 use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, run_avg_iid_pairs};
+use crate::experiments::common::{emit, emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
 use crate::experiments::ExpOptions;
 use crate::util::table::{fnum, pct, Table};
 
-/// One sweep point = the four panels' numbers.
+/// One sweep point = the four panels' numbers. Under `--curve` each point
+/// additionally evaluates an accuracy curve through the `fed::eval`
+/// planner (honoring `--eval-schedule`) and the sweep emits
+/// `<csv_name>_curve.csv` with one iid + one non-iid series per point.
 fn sweep(
     title: &str,
     csv_name: &str,
@@ -31,7 +34,8 @@ fn sweep(
     opts: &ExpOptions,
     pool: &SimPool,
 ) -> Result<()> {
-    let cfgs: Vec<EngineConfig> = points.iter().map(|(_, cfg)| cfg.clone()).collect();
+    let cfgs: Vec<EngineConfig> =
+        points.iter().map(|(_, cfg)| with_eval(cfg.clone(), opts)).collect();
     let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
@@ -68,7 +72,9 @@ fn sweep(
             pct(avg_noniid.accuracy),
         ]);
     }
-    emit(&table, &opts.out_dir, csv_name)
+    emit(&table, &opts.out_dir, csv_name)?;
+    let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+    emit_iid_pair_curves(param_name, &labels, &pairs, &opts.out_dir, csv_name)
 }
 
 /// Figure 5: n ∈ {5, 10, ..., 50}, fully connected.

@@ -18,10 +18,14 @@ use anyhow::Result;
 
 use crate::config::{Churn, EngineConfig};
 use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, run_avg_iid_pairs};
+use crate::experiments::common::{emit, emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
 use crate::experiments::ExpOptions;
 use crate::util::table::{fnum, pct, Table};
 
+/// One churn sweep. Under `--curve` each point also evaluates an
+/// accuracy-vs-time curve through the `fed::eval` planner — the paper's
+/// §V-C dynamics question (how entry/exit bends the learning curve, not
+/// just the endpoint) — and the sweep emits `<csv_name>_curve.csv`.
 fn churn_sweep(
     title: &str,
     csv_name: &str,
@@ -37,7 +41,9 @@ fn churn_sweep(
 
     let cfgs: Vec<EngineConfig> = points
         .iter()
-        .map(|(_, churn)| base.clone().with(|c| c.churn = Some(*churn)))
+        .map(|(_, churn)| {
+            with_eval(base.clone().with(|c| c.churn = Some(*churn)), opts)
+        })
         .collect();
     let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
 
@@ -75,7 +81,9 @@ fn churn_sweep(
             pct(avg_noniid.accuracy),
         ]);
     }
-    emit(&table, &opts.out_dir, csv_name)
+    emit(&table, &opts.out_dir, csv_name)?;
+    let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+    emit_iid_pair_curves(param_name, &labels, &pairs, &opts.out_dir, csv_name)
 }
 
 /// Fig 9: vary p_exit, p_entry fixed at 2%.

@@ -22,6 +22,7 @@ pub mod theory;
 use anyhow::{bail, Result};
 
 use crate::coordinator::SimPool;
+use crate::fed::eval::EvalSchedule;
 use crate::runtime::ModelKind;
 
 /// Options shared by all drivers.
@@ -35,11 +36,26 @@ pub struct ExpOptions {
     pub out_dir: String,
     /// Concurrent engine runs for the pooled sweep drivers (`--jobs`).
     pub jobs: usize,
+    /// Evaluate an accuracy curve per run and emit `<name>_curve.csv`
+    /// (`--curve`). Off by default: curves cost one evaluation per
+    /// aggregation per run.
+    pub curve: bool,
+    /// What each curve point evaluates (`--eval-schedule`): a full test
+    /// pass, or rotating seeded subsets for ≈K× cheaper curves
+    /// (`fed::eval::EvalSchedule`).
+    pub eval_schedule: EvalSchedule,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { seeds: 3, model: None, out_dir: "results".into(), jobs: 1 }
+        ExpOptions {
+            seeds: 3,
+            model: None,
+            out_dir: "results".into(),
+            jobs: 1,
+            curve: false,
+            eval_schedule: EvalSchedule::Full,
+        }
     }
 }
 

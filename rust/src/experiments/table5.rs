@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::config::{Churn, EngineConfig};
-use crate::experiments::common::{emit, run_avg};
+use crate::experiments::common::{emit, emit_curves, run_avg, with_eval};
 use crate::experiments::ExpOptions;
 use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
@@ -24,11 +24,16 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         &["Setting", "Acc", "Nodes", "Process", "Transfer", "Discard", "Unit"],
     );
 
-    let static_cfg = base.clone();
-    let dynamic_cfg = base
-        .clone()
-        .with(|c| c.churn = Some(Churn { p_exit: 0.01, p_entry: 0.01 }));
+    let static_cfg = with_eval(base.clone(), opts);
+    let dynamic_cfg = with_eval(
+        base.clone()
+            .with(|c| c.churn = Some(Churn { p_exit: 0.01, p_entry: 0.01 })),
+        opts,
+    );
 
+    // under --curve this also traces accuracy over time for both settings
+    // (how churn bends the curve, not just the endpoint — §V-E)
+    let mut curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
     for (name, cfg) in [("Static", static_cfg), ("Dynamic", dynamic_cfg)] {
         let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
         table.row(vec![
@@ -40,7 +45,13 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             fnum(avg.discard, 0),
             fnum(avg.unit, 3),
         ]);
+        curves.push((name.to_string(), avg.curve));
     }
 
-    emit(&table, &opts.out_dir, "table5")
+    emit(&table, &opts.out_dir, "table5")?;
+    let series: Vec<(String, &[(usize, f64)])> = curves
+        .iter()
+        .map(|(label, c)| (label.clone(), c.as_slice()))
+        .collect();
+    emit_curves(&series, &opts.out_dir, "table5")
 }

@@ -1,0 +1,298 @@
+//! Evaluation planning and batched evaluation work units — the eval-side
+//! mirror of the PR-2 train-path refactor (DESIGN.md §Perf rule 8).
+//!
+//! Two orthogonal knobs govern how a session evaluates:
+//!
+//! * **What** to evaluate per curve point — [`EvalSchedule`]: the classic
+//!   full test pass per aggregation, or a seeded [`EvalSchedule::Subset`]
+//!   rotation of deterministic test shards (≈`shards`× cheaper curves at
+//!   matched noise; the shard rotation covers the whole test set every
+//!   `shards` aggregations, so curve bias averages out across points).
+//!   [`EvalPlan`] materializes the schedule for one run.
+//! * **How** to execute it — [`EvalPath`]: one PJRT call per `BATCH`
+//!   chunk (`Scalar`, bit-identical to the pre-subsystem `eval_curve`),
+//!   or chunks stacked into `[D × BATCH]` executions of the batched
+//!   `*_eval_many_d<D>` entries (`Batched`; `Auto` picks stacking
+//!   whenever more than one chunk is in flight).
+//!
+//! [`EvalWork`] is the transport unit (the eval twin of
+//! [`crate::fed::trainer::DeviceWork`]): one parameter set plus the test
+//! indices to score it on. A work list travels through
+//! [`crate::fed::session::Compute::evaluate_many`] — a scalar loop by
+//! default, stacked on PJRT-backed backends, and one `EvalMany` service
+//! round-trip per call for pooled sessions.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fed::session::{Compute, Params};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// Which test samples a curve point evaluates (CLI `--eval-schedule`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvalSchedule {
+    /// Full test pass at every aggregation — the historical behavior.
+    #[default]
+    Full,
+    /// Rotate over `shards` seeded, disjoint test shards, one per curve
+    /// point: each evaluation costs `1/shards` of a full pass; every
+    /// sample is still visited once per `shards` aggregations.
+    Subset { shards: usize },
+}
+
+impl EvalSchedule {
+    /// Default shard count for a bare `subset` (≈5× cheaper curves).
+    pub const DEFAULT_SHARDS: usize = 5;
+
+    /// Parse `full`, `subset` or `subset:K` (K ≥ 2).
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "full" => Ok(EvalSchedule::Full),
+            "subset" => Ok(EvalSchedule::Subset { shards: Self::DEFAULT_SHARDS }),
+            _ => match lower.strip_prefix("subset:") {
+                Some(k) => {
+                    let shards: usize = k
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--eval-schedule subset:{k}: {e}"))?;
+                    if shards < 2 {
+                        bail!("subset schedule needs at least 2 shards (got {shards})");
+                    }
+                    Ok(EvalSchedule::Subset { shards })
+                }
+                None => bail!("unknown eval schedule '{s}' (want full|subset|subset:K)"),
+            },
+        }
+    }
+}
+
+/// Which execution path evaluation takes (CLI `--eval-path`), mirroring
+/// [`crate::config::TrainPath`] for the train side. Routing is a perf
+/// decision: batched and scalar agree within the DESIGN.md §Perf rule 7
+/// accuracy tolerance (`tests/eval_equivalence.rs`). Unlike the train
+/// side, the *default* is `Scalar`: curves are reported artifacts, and
+/// the scalar path keeps them bit-identical to the pre-subsystem
+/// `eval_curve` under unchanged configs — stacking is one flag away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvalPath {
+    /// Stacked whenever an evaluation spans more than one `BATCH` chunk,
+    /// scalar otherwise.
+    Auto,
+    /// Always stack chunks into the batched `*_eval_many_d<D>` entry.
+    Batched,
+    /// One PJRT call per chunk — bit-identical to the pre-subsystem
+    /// `eval_curve` (the default), and the reference side of
+    /// `tests/eval_equivalence.rs`.
+    #[default]
+    Scalar,
+}
+
+impl EvalPath {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(EvalPath::Auto),
+            "batched" => Ok(EvalPath::Batched),
+            "scalar" => Ok(EvalPath::Scalar),
+            other => bail!("unknown eval path '{other}' (want auto|batched|scalar)"),
+        }
+    }
+}
+
+/// One evaluation work unit: score `params` over the test indices in
+/// `samples`. The eval twin of [`crate::fed::trainer::DeviceWork`] — the
+/// executor fills `accuracy` (`Some(0.0)` for an empty sample list, like
+/// `Trainer::evaluate_subset`).
+#[derive(Debug, Default)]
+pub struct EvalWork {
+    pub params: Vec<HostTensor>,
+    pub samples: Vec<u32>,
+    pub accuracy: Option<f64>,
+}
+
+/// A run's materialized evaluation schedule: which test indices each
+/// curve point scores. Derived deterministically from `(schedule, n_test,
+/// seed)` alone, so serial and pooled runs of the same config share the
+/// exact same shards (`tests/determinism.rs`).
+#[derive(Debug, Clone)]
+pub struct EvalPlan {
+    shards: Vec<Vec<u32>>,
+}
+
+/// Domain-separation constant for the shard shuffle: the plan draws from
+/// its own `Rng::new(seed ^ EVAL_PLAN_SALT)` stream so introducing the
+/// planner does not perturb the load-bearing RNG split order of
+/// [`crate::fed::session::Substrates::derive`].
+const EVAL_PLAN_SALT: u64 = 0xE7A1_5C0F_D157_0BEB;
+
+impl EvalPlan {
+    /// Materialize a schedule over a test set of `n_test` samples.
+    ///
+    /// `Subset` shards are a seeded permutation of the test indices cut
+    /// into `shards` near-equal slices (sizes differ by at most one), so
+    /// every index appears in exactly one shard and each shard is an
+    /// unbiased sample of the test distribution.
+    pub fn new(schedule: EvalSchedule, n_test: usize, seed: u64) -> EvalPlan {
+        let shards = match schedule {
+            EvalSchedule::Full => vec![(0..n_test as u32).collect()],
+            EvalSchedule::Subset { shards } => {
+                let mut idx: Vec<u32> = (0..n_test as u32).collect();
+                let mut rng = Rng::new(seed ^ EVAL_PLAN_SALT);
+                rng.shuffle(&mut idx);
+                let k = shards.max(1).min(n_test.max(1));
+                // near-equal contiguous slices of the permutation
+                let base = n_test / k;
+                let extra = n_test % k;
+                let mut out = Vec::with_capacity(k);
+                let mut lo = 0usize;
+                for s in 0..k {
+                    let len = base + usize::from(s < extra);
+                    let mut shard = idx[lo..lo + len].to_vec();
+                    // sorted within the shard: chunk staging walks the
+                    // dataset in index order (cache-friendlier, and the
+                    // accuracy is order-invariant)
+                    shard.sort_unstable();
+                    out.push(shard);
+                    lo += len;
+                }
+                out
+            }
+        };
+        EvalPlan { shards }
+    }
+
+    /// Whether this plan evaluates the full test set at every point.
+    pub fn is_full(&self) -> bool {
+        self.shards.len() == 1
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The test indices the `k`-th curve point scores (rotating through
+    /// the shards).
+    pub fn shard(&self, k: usize) -> &[u32] {
+        &self.shards[k % self.shards.len()]
+    }
+}
+
+/// Score one curve point through a [`Compute`] backend: the `k`-th shard
+/// of the plan against `global`, in a single `evaluate_many` dispatch
+/// (one `EvalMany` round-trip on pooled backends). The parameters are
+/// swapped into the reusable `work` buffer for the duration of the call
+/// — no per-point clone. Like the train dispatch, the swap-back runs on
+/// the error path too, but a failed service round-trip loses the
+/// in-flight params; the error aborts the run.
+pub fn curve_point<C: Compute>(
+    compute: &C,
+    plan: &EvalPlan,
+    path: EvalPath,
+    work: &mut Vec<EvalWork>,
+    global: &mut Params,
+    k: usize,
+) -> Result<f64> {
+    if work.is_empty() {
+        work.push(EvalWork::default());
+    }
+    let w = &mut work[0];
+    w.samples.clear();
+    w.samples.extend_from_slice(plan.shard(k));
+    w.accuracy = None;
+    std::mem::swap(&mut w.params, global);
+    let res = compute.evaluate_many(&mut work[..1], path);
+    std::mem::swap(&mut work[0].params, global);
+    res?;
+    work[0]
+        .accuracy
+        .ok_or_else(|| anyhow!("evaluate_many left accuracy unset"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parses() {
+        assert_eq!(EvalSchedule::parse("full").unwrap(), EvalSchedule::Full);
+        assert_eq!(
+            EvalSchedule::parse("Subset").unwrap(),
+            EvalSchedule::Subset { shards: EvalSchedule::DEFAULT_SHARDS }
+        );
+        assert_eq!(
+            EvalSchedule::parse("subset:4").unwrap(),
+            EvalSchedule::Subset { shards: 4 }
+        );
+        assert!(EvalSchedule::parse("subset:1").is_err());
+        assert!(EvalSchedule::parse("subset:x").is_err());
+        assert!(EvalSchedule::parse("half").is_err());
+        assert_eq!(EvalSchedule::default(), EvalSchedule::Full);
+    }
+
+    #[test]
+    fn path_parses() {
+        assert_eq!(EvalPath::parse("auto").unwrap(), EvalPath::Auto);
+        assert_eq!(EvalPath::parse("Batched").unwrap(), EvalPath::Batched);
+        assert_eq!(EvalPath::parse("scalar").unwrap(), EvalPath::Scalar);
+        assert!(EvalPath::parse("vectorized").is_err());
+        // Scalar by default: reported curves stay bit-identical across
+        // releases unless stacking is explicitly requested
+        assert_eq!(EvalPath::default(), EvalPath::Scalar);
+    }
+
+    #[test]
+    fn full_plan_is_identity() {
+        let plan = EvalPlan::new(EvalSchedule::Full, 100, 7);
+        assert!(plan.is_full());
+        assert_eq!(plan.num_shards(), 1);
+        let all: Vec<u32> = (0..100).collect();
+        for k in 0..5 {
+            assert_eq!(plan.shard(k), &all[..]);
+        }
+    }
+
+    #[test]
+    fn subset_plan_partitions_and_rotates() {
+        let n = 103;
+        let k = 5;
+        let plan = EvalPlan::new(EvalSchedule::Subset { shards: k }, n, 42);
+        assert!(!plan.is_full());
+        assert_eq!(plan.num_shards(), k);
+        // disjoint cover of 0..n with near-equal sizes
+        let mut seen: Vec<u32> = Vec::new();
+        for s in 0..k {
+            let shard = plan.shard(s);
+            assert!(shard.len() == n / k || shard.len() == n / k + 1, "{}", shard.len());
+            assert!(shard.windows(2).all(|w| w[0] < w[1]), "shard not sorted");
+            seen.extend_from_slice(shard);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u32).collect::<Vec<_>>());
+        // rotation wraps
+        assert_eq!(plan.shard(k), plan.shard(0));
+        assert_eq!(plan.shard(2 * k + 3), plan.shard(3));
+    }
+
+    #[test]
+    fn subset_plan_is_seed_deterministic() {
+        let a = EvalPlan::new(EvalSchedule::Subset { shards: 4 }, 200, 9);
+        let b = EvalPlan::new(EvalSchedule::Subset { shards: 4 }, 200, 9);
+        let c = EvalPlan::new(EvalSchedule::Subset { shards: 4 }, 200, 10);
+        for s in 0..4 {
+            assert_eq!(a.shard(s), b.shard(s));
+        }
+        assert!((0..4).any(|s| a.shard(s) != c.shard(s)));
+    }
+
+    #[test]
+    fn degenerate_sizes_stay_sane() {
+        // more shards than samples: clamp to one sample per shard
+        let plan = EvalPlan::new(EvalSchedule::Subset { shards: 8 }, 3, 1);
+        assert_eq!(plan.num_shards(), 3);
+        // empty test set: a single empty shard, never a panic
+        let empty = EvalPlan::new(EvalSchedule::Subset { shards: 4 }, 0, 1);
+        assert_eq!(empty.num_shards(), 1);
+        assert!(empty.shard(0).is_empty());
+        let full_empty = EvalPlan::new(EvalSchedule::Full, 0, 1);
+        assert!(full_empty.shard(7).is_empty());
+    }
+}

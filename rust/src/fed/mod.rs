@@ -4,16 +4,19 @@
 //!
 //! The loop itself lives in [`session`] as an explicit state machine over a
 //! pluggable [`session::Compute`] backend; [`engine`] is the thin
-//! single-threaded compatibility wrapper ([`run`]).
+//! single-threaded compatibility wrapper ([`run`]); [`eval`] owns the
+//! evaluation subsystem (schedules, plans and batched eval work units).
 
 pub mod accounting;
 pub mod aggregator;
 pub mod engine;
+pub mod eval;
 pub mod session;
 pub mod similarity;
 pub mod trainer;
 
 pub use accounting::{IntervalStats, Ledger, MovementTotals};
 pub use engine::{run, EngineOutput};
+pub use eval::{EvalPath, EvalPlan, EvalSchedule, EvalWork};
 pub use session::{Compute, LocalCompute, Session, SessionState, Substrates};
 pub use trainer::{DeviceWork, Trainer};

@@ -39,6 +39,7 @@ use crate::data::dataset::Dataset;
 use crate::data::{Arrivals, Partitioner, SynthDigits};
 use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use crate::fed::aggregator;
+use crate::fed::eval::{self, EvalPath, EvalPlan, EvalWork};
 use crate::fed::similarity;
 use crate::fed::trainer::{DeviceWork, Trainer};
 use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace};
@@ -114,6 +115,28 @@ pub trait Compute {
     }
     /// Test-set accuracy of `params`.
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64>;
+    /// Accuracy of `params` over an explicit test-index subset. The
+    /// default falls back to the full pass — correct for index-unaware
+    /// stub backends (their evaluate ignores the test set anyway);
+    /// dataset-backed implementations must override it.
+    fn evaluate_subset(&self, params: &[HostTensor], samples: &[u32]) -> Result<f64> {
+        let _ = samples;
+        self.evaluate(params)
+    }
+    /// Score a batch of evaluation work units in one dispatch. The
+    /// default is a scalar loop over [`Compute::evaluate_subset`] in work
+    /// order — so `StubCompute`-style backends are trivially
+    /// path-invariant — and ignores `path`; PJRT-backed implementations
+    /// honor it by stacking chunks into `[D × BATCH]` executions of the
+    /// batched eval entry (DESIGN.md §Perf rule 8). Either way the result
+    /// must be deterministic in the work list alone.
+    fn evaluate_many(&self, work: &mut [EvalWork], path: EvalPath) -> Result<()> {
+        let _ = path;
+        for w in work.iter_mut() {
+            w.accuracy = Some(self.evaluate_subset(&w.params, &w.samples)?);
+        }
+        Ok(())
+    }
 }
 
 /// Direct, single-threaded backend: borrows the runtime and trainer of the
@@ -140,6 +163,14 @@ impl Compute for LocalCompute<'_> {
 
     fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
         self.trainer.evaluate(params, self.test)
+    }
+
+    fn evaluate_subset(&self, params: &[HostTensor], samples: &[u32]) -> Result<f64> {
+        self.trainer.evaluate_subset(params, self.test, samples)
+    }
+
+    fn evaluate_many(&self, work: &mut [EvalWork], path: EvalPath) -> Result<()> {
+        self.trainer.evaluate_many(self.rt, self.test, work, path)
     }
 }
 
@@ -341,6 +372,11 @@ pub struct Session<'a, C: Compute> {
     churn_rng: Rng,
     pub state: SessionState,
     ws: IntervalWorkspace,
+    /// Which test shard each curve point scores (Full = the whole set);
+    /// only materialized when the run produces a curve.
+    eval_plan: Option<EvalPlan>,
+    /// Reusable single-slot buffer for curve evaluations.
+    eval_work: Vec<EvalWork>,
 }
 
 impl<'a, C: Compute> Session<'a, C> {
@@ -354,6 +390,10 @@ impl<'a, C: Compute> Session<'a, C> {
             churn_rng: sub.churn_rng.clone(),
             state: SessionState::new(cfg, global),
             ws: IntervalWorkspace::new(cfg.n),
+            eval_plan: cfg
+                .eval_curve
+                .then(|| EvalPlan::new(cfg.eval_schedule, sub.test.len(), cfg.seed)),
+            eval_work: Vec::new(),
         })
     }
 
@@ -573,8 +613,19 @@ impl<'a, C: Compute> Session<'a, C> {
             }
             self.state.h[i] = 0.0;
         }
-        if self.cfg.eval_curve {
-            let acc = self.compute.evaluate(&self.state.global)?;
+        if let Some(plan) = &self.eval_plan {
+            // through the eval planner: the k-th shard of the schedule, in
+            // one evaluate_many dispatch (one EvalMany round-trip per
+            // curve point on pooled backends)
+            let k = self.state.curve.len();
+            let acc = eval::curve_point(
+                &self.compute,
+                plan,
+                self.cfg.eval_path,
+                &mut self.eval_work,
+                &mut self.state.global,
+                k,
+            )?;
             self.state.curve.push((t + 1, acc));
         }
         Ok(())
@@ -642,6 +693,10 @@ fn run_centralized<C: Compute>(
     let mut collected = 0usize;
     let mut curve = Vec::new();
     let mut batch: Vec<u32> = Vec::new();
+    let eval_plan = cfg
+        .eval_curve
+        .then(|| EvalPlan::new(cfg.eval_schedule, sub.test.len(), cfg.seed));
+    let mut eval_work = Vec::new();
     for t in 0..cfg.t_max {
         batch.clear();
         for i in 0..cfg.n {
@@ -651,8 +706,17 @@ fn run_centralized<C: Compute>(
         if let Some(loss) = compute.train_interval(&mut params, &batch)? {
             per_device_loss[t][0] = Some(loss);
         }
-        if cfg.eval_curve && (t + 1) % cfg.tau == 0 {
-            curve.push((t + 1, compute.evaluate(&params)?));
+        if let (Some(plan), true) = (&eval_plan, (t + 1) % cfg.tau == 0) {
+            let k = curve.len();
+            let acc = eval::curve_point(
+                compute,
+                plan,
+                cfg.eval_path,
+                &mut eval_work,
+                &mut params,
+                k,
+            )?;
+            curve.push((t + 1, acc));
         }
     }
     let accuracy = compute.evaluate(&params)?;
@@ -747,6 +811,7 @@ pub fn apportion_into(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fed::eval::EvalSchedule;
 
     // -- apportionment ------------------------------------------------------
 
@@ -951,6 +1016,104 @@ mod tests {
             assert_eq!(outs[0].ledger, other.ledger);
             assert_eq!(outs[0].movement.per_interval, other.movement.per_interval);
         }
+    }
+
+    /// Eval schedules and paths must never touch anything but the curve:
+    /// through a backend whose evaluate ignores the sample subset (the
+    /// trait defaults), every (schedule, path) combination is bit-for-bit
+    /// identical — scheduling is a cost decision, never a semantic one
+    /// for the learning loop itself.
+    #[test]
+    fn eval_schedule_routing_is_semantically_invisible() {
+        let base = stub_cfg(Method::NetworkAware).with(|c| {
+            c.eval_curve = true;
+            c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 });
+        });
+        let sub = Substrates::derive(&base);
+        let mut outs = Vec::new();
+        for schedule in [EvalSchedule::Full, EvalSchedule::Subset { shards: 3 }] {
+            for path in [EvalPath::Auto, EvalPath::Batched, EvalPath::Scalar] {
+                let cfg = base.clone().with(|c| {
+                    c.eval_schedule = schedule;
+                    c.eval_path = path;
+                });
+                outs.push(run_with(&cfg, &sub, StubCompute).unwrap());
+            }
+        }
+        assert_eq!(outs[0].accuracy_curve.len(), base.t_max / base.tau);
+        for other in &outs[1..] {
+            assert_eq!(outs[0].accuracy, other.accuracy);
+            assert_eq!(outs[0].accuracy_curve, other.accuracy_curve);
+            assert_eq!(outs[0].per_device_loss, other.per_device_loss);
+            assert_eq!(outs[0].ledger, other.ledger);
+            assert_eq!(outs[0].movement.per_interval, other.movement.per_interval);
+        }
+    }
+
+    /// The session issues exactly one `evaluate_many` dispatch per curve
+    /// point — the contract that makes a pooled run cost one `EvalMany`
+    /// round-trip per point instead of one `evaluate` per chunk/device.
+    #[test]
+    fn one_eval_dispatch_per_curve_point() {
+        use std::cell::Cell;
+        struct CountingCompute<'a> {
+            many: &'a Cell<usize>,
+        }
+        impl Compute for CountingCompute<'_> {
+            fn init_params(&self, seed: u64) -> Result<Params> {
+                StubCompute.init_params(seed)
+            }
+            fn train_interval(
+                &self,
+                params: &mut Params,
+                samples: &[u32],
+            ) -> Result<Option<f32>> {
+                StubCompute.train_interval(params, samples)
+            }
+            fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
+                StubCompute.evaluate(params)
+            }
+            fn evaluate_many(
+                &self,
+                work: &mut [EvalWork],
+                _path: EvalPath,
+            ) -> Result<()> {
+                self.many.set(self.many.get() + 1);
+                for w in work.iter_mut() {
+                    w.accuracy = Some(self.evaluate(&w.params)?);
+                }
+                Ok(())
+            }
+        }
+
+        let cfg = stub_cfg(Method::NetworkAware).with(|c| {
+            c.eval_curve = true;
+            c.eval_schedule = EvalSchedule::Subset { shards: 2 };
+        });
+        let sub = Substrates::derive(&cfg);
+        let counter = Cell::new(0);
+        let points = cfg.t_max / cfg.tau;
+        let out =
+            run_with(&cfg, &sub, CountingCompute { many: &counter }).unwrap();
+        assert_eq!(out.accuracy_curve.len(), points);
+        assert_eq!(counter.get(), points, "one evaluate_many dispatch per point");
+    }
+
+    /// The centralized baseline routes its curve through the same planner.
+    #[test]
+    fn centralized_curve_goes_through_planner() {
+        let cfg = stub_cfg(Method::Centralized).with(|c| {
+            c.eval_curve = true;
+            c.eval_schedule = EvalSchedule::Subset { shards: 2 };
+        });
+        let sub = Substrates::derive(&cfg);
+        let out = run_with(&cfg, &sub, StubCompute).unwrap();
+        assert_eq!(out.accuracy_curve.len(), cfg.t_max / cfg.tau);
+        // stub evaluate is monotone in trained volume: curve non-decreasing
+        assert!(out
+            .accuracy_curve
+            .windows(2)
+            .all(|w| w[0].1 <= w[1].1));
     }
 
     #[test]

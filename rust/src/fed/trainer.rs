@@ -14,12 +14,19 @@
 //! early — and idle pad slots of a partially-filled stack — get all-zero
 //! sample weights, which the same padding invariance turns into exact
 //! no-ops (loss 0, zero gradient). See DESIGN.md §Perf rule 7.
+//!
+//! Evaluation mirrors the split: [`Trainer::evaluate_subset`] is the
+//! scalar one-call-per-chunk path, [`Trainer::evaluate_many`] stacks
+//! (params, chunk) slots through the batched `*_eval_many_d<D>` entries
+//! (§Perf rule 8), with zero-weight pad slots contributing exactly zero
+//! correct predictions.
 
 use std::cell::RefCell;
 
 use anyhow::Result;
 
 use crate::data::dataset::{Dataset, IMG_PIXELS, NUM_CLASSES};
+use crate::fed::eval::{EvalPath, EvalWork};
 use crate::runtime::model::Executable;
 use crate::runtime::{literal_from_slice, HostTensor, ModelKind, Runtime};
 
@@ -275,7 +282,9 @@ impl Trainer {
         self.evaluate_subset(params, ds, &all)
     }
 
-    /// Accuracy over an index subset.
+    /// Accuracy over an index subset (one PJRT call per chunk — the
+    /// scalar eval path, and the reference side of
+    /// `tests/eval_equivalence.rs`).
     pub fn evaluate_subset(
         &self,
         params: &[HostTensor],
@@ -290,32 +299,196 @@ impl Trainer {
             params.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
         let mut correct = 0usize;
         for chunk in samples.chunks(self.batch) {
-            let xl = {
-                let mut x = self.x_buf.borrow_mut();
-                x.fill(0.0);
-                for (row, &idx) in chunk.iter().enumerate() {
-                    x[row * IMG_PIXELS..(row + 1) * IMG_PIXELS]
-                        .copy_from_slice(ds.image(idx as usize));
-                }
-                literal_from_slice(&[self.batch, IMG_PIXELS], &x)?
-            };
-            let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
-            inputs.push(&xl);
-            let out = self.eval_exe.run_literals(&inputs)?;
-            let logits = out[0].to_vec::<f32>()?;
-            for (row, &idx) in chunk.iter().enumerate() {
-                let offs = row * NUM_CLASSES;
-                let pred = (0..NUM_CLASSES)
-                    .max_by(|&a, &b| {
-                        logits[offs + a].partial_cmp(&logits[offs + b]).unwrap()
-                    })
-                    .unwrap();
-                if pred == ds.labels[idx as usize] as usize {
-                    correct += 1;
-                }
-            }
+            correct += self.count_chunk(ds, chunk, &lit_params)?;
         }
         Ok(correct as f64 / samples.len() as f64)
+    }
+
+    /// Correct predictions in one chunk through the scalar eval entry
+    /// (host-side argmax over the returned logits).
+    fn count_chunk(
+        &self,
+        ds: &Dataset,
+        chunk: &[u32],
+        lit_params: &[xla::Literal],
+    ) -> Result<usize> {
+        let xl = {
+            let mut x = self.x_buf.borrow_mut();
+            x.fill(0.0);
+            for (row, &idx) in chunk.iter().enumerate() {
+                x[row * IMG_PIXELS..(row + 1) * IMG_PIXELS]
+                    .copy_from_slice(ds.image(idx as usize));
+            }
+            literal_from_slice(&[self.batch, IMG_PIXELS], &x)?
+        };
+        let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
+        inputs.push(&xl);
+        let out = self.eval_exe.run_literals(&inputs)?;
+        let logits = out[0].to_vec::<f32>()?;
+        let mut correct = 0usize;
+        for (row, &idx) in chunk.iter().enumerate() {
+            let offs = row * NUM_CLASSES;
+            let pred = (0..NUM_CLASSES)
+                .max_by(|&a, &b| {
+                    logits[offs + a].partial_cmp(&logits[offs + b]).unwrap()
+                })
+                .unwrap();
+            if pred == ds.labels[idx as usize] as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct)
+    }
+
+    /// Score a batch of evaluation work units, stacking `BATCH`-sized
+    /// chunks across the device axis of the batched `*_eval_many_d<D>`
+    /// entries: every slot carries one (params, chunk) pair — distinct
+    /// models, or one model replicated over many chunks — and comes back
+    /// as a weighted-correct count, so a full test pass costs
+    /// `ceil(chunks / D)` PJRT dispatches instead of `chunks`
+    /// (DESIGN.md §Perf rule 8).
+    ///
+    /// The stacked parameters are literal-resident across consecutive
+    /// groups with the same slot→work mapping (the common case: one model
+    /// evaluated over a long chunk run). Idle pad slots carry all-zero
+    /// sample weights, so they contribute exactly zero correct
+    /// predictions. `EvalPath::Scalar` — and artifact sets predating the
+    /// batched eval entries — fall back to [`Trainer::evaluate_subset`]
+    /// per unit, which is bit-identical to the pre-subsystem behavior.
+    pub fn evaluate_many(
+        &self,
+        rt: &Runtime,
+        ds: &Dataset,
+        work: &mut [EvalWork],
+        path: EvalPath,
+    ) -> Result<()> {
+        for w in work.iter_mut() {
+            w.accuracy = None;
+        }
+        let b = self.batch;
+        // flatten every work item into (item, chunk offset) units
+        let units: Vec<(usize, usize)> = work
+            .iter()
+            .enumerate()
+            .flat_map(|(i, w)| {
+                (0..w.samples.len().div_ceil(b)).map(move |c| (i, c * b))
+            })
+            .collect();
+        let batched = match path {
+            EvalPath::Scalar => false,
+            EvalPath::Batched => true,
+            EvalPath::Auto => units.len() > 1,
+        };
+        let max_tile = rt.manifest.device_tiles.last().copied().unwrap_or(0);
+        if !batched || max_tile == 0 {
+            return self.eval_many_fallback(ds, work);
+        }
+
+        let n_params = self.kind.num_params();
+        let mut correct = vec![0f64; work.len()];
+        // per-item scalar literals, built lazily for per-group fallback
+        let mut scalar_lits: Vec<Option<Vec<xla::Literal>>> =
+            work.iter().map(|_| None).collect();
+
+        let mut ms = self.many.borrow_mut();
+        let ManyScratch { x, y, w: wt, stack, .. } = &mut *ms;
+        let mut lit_params: Vec<xla::Literal> = Vec::new();
+        let mut lit_key: (usize, Vec<usize>) = (0, Vec::new());
+
+        for group in units.chunks(max_tile) {
+            let Some((d, exe)) = rt.eval_many_executable(self.kind, group.len())?
+            else {
+                // this tile's entries missing (hand-pruned artifact set):
+                // stay correct via the scalar path for the group
+                for &(i, lo) in group {
+                    if scalar_lits[i].is_none() {
+                        scalar_lits[i] = Some(
+                            work[i]
+                                .params
+                                .iter()
+                                .map(HostTensor::to_literal)
+                                .collect::<Result<_>>()?,
+                        );
+                    }
+                    let samples = &work[i].samples;
+                    let chunk = &samples[lo..(lo + b).min(samples.len())];
+                    correct[i] += self.count_chunk(
+                        ds,
+                        chunk,
+                        scalar_lits[i].as_ref().unwrap(),
+                    )? as f64;
+                }
+                continue;
+            };
+
+            // stack per-slot params; reuse the literals when this group's
+            // slot→item mapping matches the previous group's
+            let items: Vec<usize> = group.iter().map(|&(i, _)| i).collect();
+            if lit_params.is_empty() || lit_key.0 != d || lit_key.1 != items {
+                lit_params.clear();
+                for p in 0..n_params {
+                    let shape = work[items[0]].params[p].shape.clone();
+                    let plen: usize = shape.iter().product();
+                    stack.clear();
+                    stack.resize(d * plen, 0.0);
+                    for (slot, &i) in items.iter().enumerate() {
+                        stack[slot * plen..(slot + 1) * plen]
+                            .copy_from_slice(&work[i].params[p].data);
+                    }
+                    let mut stacked_shape = Vec::with_capacity(shape.len() + 1);
+                    stacked_shape.push(d);
+                    stacked_shape.extend_from_slice(&shape);
+                    lit_params.push(literal_from_slice(&stacked_shape, stack)?);
+                }
+                lit_key = (d, items);
+            }
+
+            x.resize(d * b * IMG_PIXELS, 0.0);
+            y.resize(d * b * NUM_CLASSES, 0.0);
+            wt.resize(d * b, 0.0);
+            x.fill(0.0);
+            y.fill(0.0);
+            wt.fill(0.0);
+            for (slot, &(i, lo)) in group.iter().enumerate() {
+                let samples = &work[i].samples;
+                let chunk = &samples[lo..(lo + b).min(samples.len())];
+                stage_rows(
+                    &mut x[slot * b * IMG_PIXELS..(slot + 1) * b * IMG_PIXELS],
+                    &mut y[slot * b * NUM_CLASSES..(slot + 1) * b * NUM_CLASSES],
+                    &mut wt[slot * b..(slot + 1) * b],
+                    ds,
+                    chunk,
+                );
+            }
+            let xl = literal_from_slice(&[d, b, IMG_PIXELS], x)?;
+            let yl = literal_from_slice(&[d, b, NUM_CLASSES], y)?;
+            let wl = literal_from_slice(&[d, b], wt)?;
+            let mut inputs: Vec<&xla::Literal> = lit_params.iter().collect();
+            inputs.extend([&xl, &yl, &wl]);
+            let out = exe.run_literals(&inputs)?;
+            let counts = out[0].to_vec::<f32>()?;
+            for (slot, &(i, _)) in group.iter().enumerate() {
+                correct[i] += counts[slot] as f64;
+            }
+        }
+
+        for (i, w) in work.iter_mut().enumerate() {
+            w.accuracy = Some(if w.samples.is_empty() {
+                0.0
+            } else {
+                correct[i] / w.samples.len() as f64
+            });
+        }
+        Ok(())
+    }
+
+    /// Scalar execution of an eval work list (the pre-subsystem behavior,
+    /// unit by unit).
+    fn eval_many_fallback(&self, ds: &Dataset, work: &mut [EvalWork]) -> Result<()> {
+        for w in work.iter_mut() {
+            w.accuracy = Some(self.evaluate_subset(&w.params, ds, &w.samples)?);
+        }
+        Ok(())
     }
 
     /// Stage one chunk into the reusable (x, onehot, wt) buffers and build
@@ -480,6 +653,107 @@ mod tests {
                 other => panic!("device {k}: loss mismatch {other:?}"),
             }
         }
+    }
+
+    /// Batched eval must agree with the scalar path per work item within
+    /// the DESIGN.md §Perf rule 7 accuracy tolerance, across ragged
+    /// sample sets (multi-chunk, partial-chunk, empty) and distinct
+    /// parameter sets — including a unit count past the largest tile.
+    #[test]
+    fn batched_eval_matches_scalar() {
+        let (rt, train, test) = setup();
+        let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
+        // lightly train one model so logits are not near-uniform
+        let mut trained = rt.init_params(ModelKind::Mlp, 21).unwrap();
+        let all: Vec<u32> = (0..train.len() as u32).collect();
+        trainer.train_interval(&mut trained, &train, &all).unwrap();
+
+        let max_tile = *rt.manifest.device_tiles.last().unwrap();
+        let full: Vec<u32> = (0..test.len() as u32).collect();
+        let sample_sets: Vec<Vec<u32>> = vec![
+            full.clone(),
+            full.clone(),
+            (0..17).collect(),
+            Vec::new(),
+            (100..260).collect(),
+        ];
+        // the unit total must exceed the largest tile so the group split
+        // (and the stacked-literal rebuild across groups) is exercised
+        let units: usize =
+            sample_sets.iter().map(|s| s.len().div_ceil(rt.batch())).sum();
+        assert!(units > max_tile, "{units} units <= tile {max_tile}");
+        let mut work: Vec<EvalWork> = sample_sets
+            .iter()
+            .enumerate()
+            .map(|(k, s)| EvalWork {
+                params: if k == 0 {
+                    trained.clone()
+                } else {
+                    rt.init_params(ModelKind::Mlp, 60 + k as u64).unwrap()
+                },
+                samples: s.clone(),
+                accuracy: None,
+            })
+            .collect();
+
+        trainer
+            .evaluate_many(&rt, &test, &mut work, EvalPath::Batched)
+            .unwrap();
+        for (k, w) in work.iter().enumerate() {
+            let scalar = trainer
+                .evaluate_subset(&w.params, &test, &sample_sets[k])
+                .unwrap();
+            let batched = w.accuracy.unwrap();
+            if sample_sets[k].is_empty() {
+                assert_eq!(batched, 0.0, "item {k}");
+            }
+            assert!(
+                (scalar - batched).abs() <= 5e-3,
+                "item {k}: scalar {scalar} vs batched {batched}"
+            );
+        }
+
+        // the scalar route through evaluate_many is bit-identical to
+        // evaluate_subset (it IS evaluate_subset per unit)
+        let mut scalar_work: Vec<EvalWork> = sample_sets
+            .iter()
+            .zip(&work)
+            .map(|(s, w)| EvalWork {
+                params: w.params.clone(),
+                samples: s.clone(),
+                accuracy: None,
+            })
+            .collect();
+        trainer
+            .evaluate_many(&rt, &test, &mut scalar_work, EvalPath::Scalar)
+            .unwrap();
+        for (k, w) in scalar_work.iter().enumerate() {
+            let want = trainer
+                .evaluate_subset(&w.params, &test, &sample_sets[k])
+                .unwrap();
+            assert_eq!(w.accuracy.unwrap(), want, "item {k}");
+        }
+    }
+
+    /// Auto routing: a single sub-chunk unit takes the scalar path (no
+    /// tile padding for one call), everything larger stacks — both must
+    /// produce accuracies, and the single-unit case bit-matches scalar.
+    #[test]
+    fn eval_auto_single_chunk_is_scalar_exact() {
+        let (rt, _train, test) = setup();
+        let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
+        let params = rt.init_params(ModelKind::Mlp, 2).unwrap();
+        let small: Vec<u32> = (0..20).collect();
+        let mut work = vec![EvalWork {
+            params: params.clone(),
+            samples: small.clone(),
+            accuracy: None,
+        }];
+        trainer
+            .evaluate_many(&rt, &test, &mut work, EvalPath::Auto)
+            .unwrap();
+        let want = trainer.evaluate_subset(&params, &test, &small).unwrap();
+        assert_eq!(work[0].accuracy.unwrap(), want);
     }
 
     /// More devices than the largest compiled tile: the trainer must split

@@ -26,7 +26,7 @@
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts.
 //! * [`fed`] — federated engine: the session state machine
 //!   ([`fed::session`]) over pluggable compute backends, local updates,
-//!   weighted aggregation, ledger.
+//!   evaluation planning ([`fed::eval`]), weighted aggregation, ledger.
 //! * [`coordinator`] — thread-based runtime service, the [`coordinator::pool::SimPool`]
 //!   (config, seed) fan-out, and the leader/worker cluster actors.
 //! * [`experiments`] — drivers that regenerate every table and figure

@@ -8,8 +8,11 @@
 //!             [--discard linear-r|linear-g|sqrt] [--capacity] [--estimated]
 //!             [--p-exit 0.02] [--p-entry 0.02] [--curve]
 //!             [--train-path auto|batched|scalar]
+//!             [--eval-schedule full|subset|subset:K]
+//!             [--eval-path auto|batched|scalar]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
+//!             [--curve] [--eval-schedule full|subset|subset:K]
 //! fogml cluster [--devices 4] [--rounds 5]
 //! ```
 //!
@@ -22,6 +25,14 @@
 //! `[D × BATCH]` XLA call per chunk step whenever more than one device
 //! trains; `scalar` forces the per-device dispatch; `batched` forces the
 //! stacked entry even for a single trainee (see DESIGN.md §Perf rule 7).
+//!
+//! `--eval-schedule` picks what each `--curve` point evaluates: `full`
+//! (the whole test set — the historical behavior) or `subset[:K]` (rotate
+//! K seeded test shards, ≈K× cheaper curves at matched noise);
+//! `--eval-path` picks how: stacked `[D × BATCH]` chunk groups (`auto`/
+//! `batched`) or one XLA call per chunk (`scalar`, the default — keeps
+//! curves bit-identical to previous releases) — DESIGN.md §Perf rule 8.
+//! On `exp`, `--curve` also emits `<name>_curve.csv` per driver.
 
 use anyhow::{bail, Result};
 
@@ -33,6 +44,7 @@ use fogml::coordinator::{Cluster, ClusterConfig};
 use fogml::costs::{CostSource, Medium};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed;
+use fogml::fed::eval::{EvalPath, EvalSchedule};
 use fogml::movement::DiscardModel;
 use fogml::runtime::{ModelKind, Runtime};
 
@@ -109,6 +121,12 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     if let Some(p) = args.get("train-path") {
         cfg.train_path = TrainPath::parse(p)?;
     }
+    if let Some(s) = args.get("eval-schedule") {
+        cfg.eval_schedule = EvalSchedule::parse(s)?;
+    }
+    if let Some(p) = args.get("eval-path") {
+        cfg.eval_path = EvalPath::parse(p)?;
+    }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;
     if p_exit > 0.0 || p_entry > 0.0 {
@@ -178,6 +196,11 @@ fn cmd_exp(args: &Args) -> Result<()> {
         },
         out_dir: args.get("out").unwrap_or("results").to_string(),
         jobs: args.get_or("jobs", 1usize)?,
+        curve: args.flag("curve"),
+        eval_schedule: match args.get("eval-schedule") {
+            Some(s) => EvalSchedule::parse(s)?,
+            None => EvalSchedule::Full,
+        },
     };
     experiments::dispatch(which, &opts)
 }

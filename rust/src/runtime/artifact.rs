@@ -186,6 +186,17 @@ mod tests {
             assert_eq!(many.inputs[4].shape, vec![d, m.batch, IMG_PIXELS]);
             assert_eq!(many.outputs[4].shape, vec![d]);
         }
+        // batched eval variants: params..., x, onehot, wt -> correct[D]
+        for &d in &m.device_tiles {
+            let many = m.entry(&format!("mlp_eval_many_d{d}")).unwrap();
+            assert_eq!(many.devices, Some(d));
+            assert_eq!(many.inputs.len(), 7);
+            assert_eq!(many.inputs[4].shape, vec![d, m.batch, IMG_PIXELS]);
+            assert_eq!(many.inputs[5].shape, vec![d, m.batch, NUM_CLASSES]);
+            assert_eq!(many.inputs[6].shape, vec![d, m.batch]);
+            assert_eq!(many.outputs.len(), 1);
+            assert_eq!(many.outputs[0].shape, vec![d]);
+        }
     }
 
     #[test]

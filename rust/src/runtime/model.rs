@@ -37,6 +37,11 @@ impl ModelKind {
         format!("{}_many_d{d}", self.train_entry())
     }
 
+    /// Name of the batched eval entry compiled for a `d`-slot stack.
+    pub fn eval_many_entry(&self, d: usize) -> String {
+        format!("{}_many_d{d}", self.eval_entry())
+    }
+
     /// Number of parameter tensors (leading inputs of the train entry).
     pub fn num_params(&self) -> usize {
         match self {
@@ -144,26 +149,46 @@ impl Runtime {
         Ok(executable)
     }
 
-    /// The batched train executable sized for `want` concurrently-training
-    /// devices: the smallest compiled variant with `D >= want`, or the
-    /// largest one when `want` exceeds every tile (the trainer then splits
-    /// the devices into several stacked executions). Returns `None` when
-    /// the artifact set predates the batched entries, so callers can fall
-    /// back to the scalar path against old artifacts.
-    pub fn train_many_executable(
+    /// Shared tile-selection policy of the batched entries: the smallest
+    /// compiled variant with `D >= want`, or the largest one when `want`
+    /// exceeds every tile (the caller then splits into several stacked
+    /// executions). Returns `None` when the artifact set predates the
+    /// requested batched entries, so callers can fall back to the scalar
+    /// path against old artifacts.
+    fn many_executable(
         &self,
-        kind: ModelKind,
         want: usize,
+        entry: impl Fn(usize) -> String,
     ) -> Result<Option<(usize, std::rc::Rc<Executable>)>> {
         let tiles = &self.manifest.device_tiles;
         let Some(&d) = tiles.iter().find(|&&d| d >= want).or_else(|| tiles.last()) else {
             return Ok(None);
         };
-        let name = kind.train_many_entry(d);
+        let name = entry(d);
         if !self.manifest.entries.contains_key(&name) {
             return Ok(None);
         }
         Ok(Some((d, self.executable(&name)?)))
+    }
+
+    /// The batched train executable sized for `want` concurrently-training
+    /// devices (see [`Runtime::many_executable`] for the policy).
+    pub fn train_many_executable(
+        &self,
+        kind: ModelKind,
+        want: usize,
+    ) -> Result<Option<(usize, std::rc::Rc<Executable>)>> {
+        self.many_executable(want, |d| kind.train_many_entry(d))
+    }
+
+    /// The batched eval executable sized for `want` concurrently-evaluated
+    /// chunk slots (see [`Runtime::many_executable`] for the policy).
+    pub fn eval_many_executable(
+        &self,
+        kind: ModelKind,
+        want: usize,
+    ) -> Result<Option<(usize, std::rc::Rc<Executable>)>> {
+        self.many_executable(want, |d| kind.eval_many_entry(d))
     }
 
     /// He-style initialization of a model's parameter tensors, shaped per
@@ -300,6 +325,52 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(d, max);
+    }
+
+    #[test]
+    fn eval_many_picks_smallest_sufficient_variant_and_counts() {
+        let rt = runtime();
+        let tiles = rt.manifest.device_tiles.clone();
+        let (d, exe) = rt
+            .eval_many_executable(ModelKind::Mlp, 2)
+            .unwrap()
+            .expect("batched eval variant");
+        assert_eq!(d, tiles.iter().copied().find(|&t| t >= 2).unwrap());
+        assert_eq!(exe.spec.devices, Some(d));
+
+        // zero-weight slots report exactly zero correct; all-weight slots
+        // report at most the batch size
+        let b = rt.batch();
+        let params = rt.init_params(ModelKind::Mlp, 3).unwrap();
+        let mut inputs = Vec::new();
+        for p in &params {
+            let mut shape = vec![d];
+            shape.extend_from_slice(&p.shape);
+            let mut data = Vec::with_capacity(d * p.data.len());
+            for _ in 0..d {
+                data.extend_from_slice(&p.data);
+            }
+            inputs.push(HostTensor::new(shape, data));
+        }
+        inputs.push(HostTensor::zeros(vec![d, b, IMG_PIXELS]));
+        let mut onehot = HostTensor::zeros(vec![d, b, NUM_CLASSES]);
+        for row in 0..d * b {
+            onehot.data[row * NUM_CLASSES] = 1.0;
+        }
+        inputs.push(onehot);
+        let mut wt = HostTensor::zeros(vec![d, b]);
+        for col in 0..b {
+            wt.data[col] = 1.0; // slot 0 live, all others idle
+        }
+        inputs.push(wt);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![d]);
+        assert!(out[0].data[0] >= 0.0 && out[0].data[0] <= b as f32);
+        assert_eq!(out[0].data[0].fract(), 0.0, "count must be integral");
+        for slot in 1..d {
+            assert_eq!(out[0].data[slot], 0.0, "idle slot {slot} counted");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use fogml::config::{Churn, EngineConfig, Method, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::{run_avg_pool, seed_sweep};
+use fogml::fed::eval::{EvalPath, EvalSchedule};
 use fogml::fed::{self, EngineOutput};
 use fogml::runtime::Runtime;
 
@@ -108,6 +109,43 @@ fn batched_path_is_pool_invariant() {
             &pooled_shared[k],
             &format!("batched seed #{k}, serial vs shared-service"),
         );
+    }
+}
+
+/// The subset eval schedule must honor the same contract: the seeded
+/// shard rotation and the stacked eval dispatch depend only on the
+/// config, so a curve-producing run is bit-identical whether the
+/// evaluations happen on the calling thread (LocalCompute →
+/// `Trainer::evaluate_many`) or through pooled `EvalMany` service
+/// round-trips — `assert_identical` covers `accuracy_curve`.
+#[test]
+fn subset_eval_schedule_is_pool_invariant() {
+    let cfg = small().with(|c| {
+        c.eval_curve = true;
+        c.eval_schedule = EvalSchedule::Subset { shards: 4 };
+        // force the stacked execution so the riskiest path (batched
+        // EvalMany on the service thread) is the one pinned here
+        c.eval_path = EvalPath::Batched;
+    });
+    let cfgs = seed_sweep(&cfg, 2);
+
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let serial: Vec<EngineOutput> = cfgs
+        .iter()
+        .map(|c| fed::run(c, &rt).expect("serial subset-eval run"))
+        .collect();
+    for s in &serial {
+        assert_eq!(s.accuracy_curve.len(), cfg.t_max / cfg.tau);
+    }
+
+    let pool1 = SimPool::new(1);
+    let pooled1 = pool1.run_many(&cfgs).expect("subset eval jobs=1");
+    let pool4 = SimPool::new(4);
+    let pooled4 = pool4.run_many(&cfgs).expect("subset eval jobs=4");
+
+    for (k, s) in serial.iter().enumerate() {
+        assert_identical(s, &pooled1[k], &format!("subset seed #{k}, serial vs jobs=1"));
+        assert_identical(s, &pooled4[k], &format!("subset seed #{k}, serial vs jobs=4"));
     }
 }
 

@@ -1,0 +1,154 @@
+//! Eval subsystem equivalence: the batched stacked eval path and the eval
+//! schedules must never change what a run *learns*, and must change what
+//! it *reports* only in the documented ways (DESIGN.md §Perf rule 8).
+//! Requires `make artifacts`.
+//!
+//! What "the same" means:
+//! * Everything outside the curve — ledger, movement, per-device losses,
+//!   final accuracy (always a full scalar pass) — is bit-identical across
+//!   every (schedule, path) combination: evaluation is read-only and
+//!   draws from no shared RNG stream.
+//! * `EvalPath::Scalar` + `EvalSchedule::Full` reproduces the
+//!   pre-subsystem `eval_curve` (one `Trainer::evaluate` per aggregation)
+//!   bit-for-bit.
+//! * Batched vs scalar curves agree within |Δaccuracy| ≤ 5e-3 (§Perf
+//!   rule 7's accuracy tolerance: identical per-slot math, but XLA may
+//!   reorder the vmapped lowering's reductions, and device/host argmax
+//!   tie-breaking can differ on exactly-tied logits).
+
+use fogml::config::{Churn, EngineConfig, Method};
+use fogml::fed::eval::{EvalPath, EvalSchedule};
+use fogml::fed::{self, EngineOutput, LocalCompute, Session, Substrates, Trainer};
+use fogml::runtime::Runtime;
+
+const ACC_TOL: f64 = 5e-3;
+
+fn small() -> EngineConfig {
+    EngineConfig {
+        method: Method::NetworkAware,
+        n: 8,
+        t_max: 20,
+        tau: 5,
+        n_train: 1600,
+        n_test: 400,
+        eval_curve: true,
+        // churn varies the trainee sets, so curve points see genuinely
+        // different global models
+        churn: Some(Churn { p_exit: 0.05, p_entry: 0.05 }),
+        ..Default::default()
+    }
+}
+
+fn run_cfg(rt: &Runtime, f: impl FnOnce(&mut EngineConfig)) -> EngineOutput {
+    fed::run(&small().with(f), rt).expect("session run")
+}
+
+fn assert_learning_identical(a: &EngineOutput, b: &EngineOutput, label: &str) {
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger");
+    assert_eq!(a.movement.per_interval, b.movement.per_interval, "{label}: movement");
+    assert_eq!(a.per_device_loss, b.per_device_loss, "{label}: losses");
+    assert_eq!(a.mean_active, b.mean_active, "{label}: mean_active");
+    assert_eq!(a.similarity, b.similarity, "{label}: similarity");
+    // the final evaluation is a full scalar pass on every configuration
+    assert_eq!(a.accuracy, b.accuracy, "{label}: final accuracy");
+}
+
+/// The Full/Scalar planner path is today's `eval_curve`, bit for bit:
+/// stepping the same session manually and calling the plain full-pass
+/// `Compute::evaluate` at every aggregation must reproduce the curve
+/// exactly.
+#[test]
+fn full_scalar_schedule_reproduces_legacy_eval_curve() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let cfg = small().with(|c| c.eval_path = EvalPath::Scalar);
+    let through_planner = fed::run(&cfg, &rt).expect("planner run");
+
+    // the legacy loop: no curve inside the session; evaluate by hand
+    let legacy_cfg = small().with(|c| c.eval_curve = false);
+    let sub = Substrates::derive(&legacy_cfg);
+    let trainer = Trainer::new(&rt, legacy_cfg.model, legacy_cfg.lr).unwrap();
+    let compute = LocalCompute {
+        rt: &rt,
+        trainer: &trainer,
+        train: &sub.train,
+        test: &sub.test,
+    };
+    let mut session = Session::new(&legacy_cfg, &sub, compute).unwrap();
+    let mut legacy_curve = Vec::new();
+    for t in 0..legacy_cfg.t_max {
+        session.step_churn(t);
+        session.step_collect(t);
+        session.step_movement(t);
+        session.step_train(t).unwrap();
+        session.step_aggregate(t).unwrap();
+        if (t + 1) % legacy_cfg.tau == 0 {
+            let acc = trainer.evaluate(&session.state.global, &sub.test).unwrap();
+            legacy_curve.push((t + 1, acc));
+        }
+    }
+    let legacy = session.finish().unwrap();
+
+    assert_learning_identical(&through_planner, &legacy, "planner vs legacy");
+    assert_eq!(
+        through_planner.accuracy_curve, legacy_curve,
+        "Full/Scalar curve must be bit-identical to the legacy loop"
+    );
+}
+
+/// Batched, auto and scalar eval paths: learning is bit-identical, the
+/// curve agrees within the accuracy tolerance.
+#[test]
+fn eval_paths_agree_within_tolerance() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let scalar = run_cfg(&rt, |c| c.eval_path = EvalPath::Scalar);
+    let batched = run_cfg(&rt, |c| c.eval_path = EvalPath::Batched);
+    let auto = run_cfg(&rt, |c| c.eval_path = EvalPath::Auto);
+
+    for (other, label) in [(&batched, "batched"), (&auto, "auto")] {
+        assert_learning_identical(&scalar, other, label);
+        assert_eq!(scalar.accuracy_curve.len(), other.accuracy_curve.len());
+        for ((ta, aa), (tb, ab)) in
+            scalar.accuracy_curve.iter().zip(&other.accuracy_curve)
+        {
+            assert_eq!(ta, tb, "{label}: curve t");
+            assert!(
+                (aa - ab).abs() <= ACC_TOL,
+                "{label}: curve t={ta}: scalar {aa} vs {ab}"
+            );
+        }
+    }
+    // the default full test set spans many chunks, so Auto stacks: its
+    // curve should be the batched one
+    assert_eq!(auto.accuracy_curve, batched.accuracy_curve);
+    assert!(!scalar.accuracy_curve.is_empty());
+}
+
+/// The subset schedule: learning bit-identical to Full, deterministic
+/// across reruns, shard-sized evaluations that stay statistically close
+/// to the full pass.
+#[test]
+fn subset_schedule_is_deterministic_and_tracks_full() {
+    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let full = run_cfg(&rt, |c| c.eval_schedule = EvalSchedule::Full);
+    let sub_a = run_cfg(&rt, |c| {
+        c.eval_schedule = EvalSchedule::Subset { shards: 4 };
+    });
+    let sub_b = run_cfg(&rt, |c| {
+        c.eval_schedule = EvalSchedule::Subset { shards: 4 };
+    });
+
+    assert_learning_identical(&full, &sub_a, "full vs subset");
+    assert_eq!(sub_a.accuracy_curve, sub_b.accuracy_curve, "subset rerun");
+    assert_eq!(full.accuracy_curve.len(), sub_a.accuracy_curve.len());
+    for ((ta, fa), (tb, sa)) in
+        full.accuracy_curve.iter().zip(&sub_a.accuracy_curve)
+    {
+        assert_eq!(ta, tb);
+        // a 100-sample shard of a 400-sample test set: binomial noise,
+        // ~3σ ≈ 0.15 — matched noise, not matched value
+        assert!(
+            (fa - sa).abs() <= 0.2,
+            "t={ta}: full {fa} vs subset {sa} drifted beyond shard noise"
+        );
+    }
+}
