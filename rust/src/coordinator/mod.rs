@@ -13,12 +13,17 @@
 //!   implements [`crate::fed::session::Compute`].
 //! * [`pool`] — [`SimPool`]: parallel fan-out of independent
 //!   (config, seed) engine runs across worker threads.
+//! * [`shard`] — cross-process sweep sharding: [`SweepCtx`] splits one
+//!   experiment grid across N `fogml` processes (`--shard I/N`) and
+//!   `fogml merge` reassembles bit-identical results.
 //! * [`cluster`] — device actors + aggregation server wired together.
 
 pub mod cluster;
 pub mod pool;
 pub mod service;
+pub mod shard;
 
 pub use cluster::{Cluster, ClusterConfig, ClusterReport};
 pub use pool::SimPool;
 pub use service::{DatasetId, RuntimeHandle, RuntimeService, ServiceClient};
+pub use shard::{ShardSpec, SweepCtx};

@@ -1,0 +1,905 @@
+//! Cross-process sweep sharding: split one experiment's (config, seed)
+//! grid across N `fogml` processes and merge the results exactly.
+//!
+//! The paper's evaluation is built from grids of independent engine runs
+//! (every table cell and figure point averages several seeds).
+//! [`crate::coordinator::SimPool`] parallelizes those runs *within* one
+//! process; this module shards them *across* processes or machines:
+//!
+//! ```text
+//! machine 1:  fogml exp table3 --shard 1/4 --out shards   # runs 0,4,8,…
+//! machine 2:  fogml exp table3 --shard 2/4 --out shards   # runs 1,5,9,…
+//! machine 3:  fogml exp table3 --shard 3/4 --out shards   # runs 2,6,10,…
+//! machine 4:  fogml exp table3 --shard 4/4 --out shards   # runs 3,7,11,…
+//! anywhere:   fogml merge shards --out results            # ≡ serial run
+//! ```
+//!
+//! # The determinism / merge contract
+//!
+//! 1. **Canonical expansion order.** A driver's grid is the sequence of
+//!    configs it passes to [`SweepCtx::run_many`], concatenated in call
+//!    order. Drivers are deterministic functions of their options, so
+//!    every process — shard 1, shard N, the merge — enumerates the exact
+//!    same sequence and assigns each run the same global index.
+//! 2. **Round-robin assignment.** Run `j` belongs to shard
+//!    `(j mod N) + 1`. Shards are disjoint by construction and their
+//!    union is the full grid, so completeness is checkable without any
+//!    coordination between processes.
+//! 3. **Fingerprints.** Every run records a fingerprint of its config
+//!    (FNV-1a 64 over the canonical [`Debug`] encoding); the shard file
+//!    additionally records the whole-grid fingerprint (the per-run
+//!    fingerprints folded in order). [`load_shard_set`] refuses to mix
+//!    files from different grids, and the merge replay re-fingerprints
+//!    every config it expands against the recorded value — options or
+//!    code drift between shard time and merge time fails loudly instead
+//!    of silently mislabeling rows.
+//! 4. **Exact reassembly.** [`SimPool::run_many`] returns outputs in
+//!    input order regardless of worker scheduling (the pool's
+//!    determinism contract), and the shard files round-trip every float
+//!    exactly (Rust's shortest-roundtrip formatting on both sides), so
+//!    a merge's tables and curve CSVs are **byte-identical** to an
+//!    unsharded serial run (`tests/shard_merge.rs`).
+//!
+//! [`SweepCtx`] is the mechanism: drivers route both their engine runs
+//! and their output (tables, CSVs, console lines) through it, and the
+//! context either executes everything (run mode), executes only its
+//! shard and writes `shard_I_of_N.json` instead of artifacts (shard
+//! mode), or replays recorded outputs and emits the real artifacts
+//! (merge mode).
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::SimPool;
+use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
+use crate::fed::EngineOutput;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Version stamp written into every shard file; [`load_shard_set`]
+/// rejects files from incompatible future formats.
+pub const SHARD_FORMAT_VERSION: usize = 1;
+
+/// Which slice of the grid this process runs: `--shard I/N` (1-based
+/// index `I`, total shard count `N`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 1-based shard index `I` (`1 ≤ I ≤ N`).
+    pub index: usize,
+    /// Total number of shards `N`.
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// Parse the CLI form `I/N` (e.g. `2/4`).
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("--shard wants I/N (e.g. 2/4), got '{s}'"))?;
+        let index: usize =
+            i.trim().parse().map_err(|e| anyhow!("--shard index '{i}': {e}"))?;
+        let count: usize =
+            n.trim().parse().map_err(|e| anyhow!("--shard count '{n}': {e}"))?;
+        if count == 0 {
+            bail!("--shard count must be at least 1 (got {s})");
+        }
+        if index == 0 || index > count {
+            bail!("--shard index must be in 1..={count} (got {index})");
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Round-robin ownership: does this shard execute global run `j`?
+    pub fn owns(&self, run: usize) -> bool {
+        run % self.count == self.index - 1
+    }
+
+    /// The file this shard serializes to: `shard_I_of_N.json`.
+    pub fn file_name(&self) -> String {
+        format!("shard_{}_of_{}.json", self.index, self.count)
+    }
+
+    /// Inverse of [`ShardSpec::file_name`]; `None` when `name` is not a
+    /// shard file.
+    pub fn parse_file_name(name: &str) -> Option<ShardSpec> {
+        let rest = name.strip_prefix("shard_")?.strip_suffix(".json")?;
+        let (i, n) = rest.split_once("_of_")?;
+        let spec = ShardSpec { index: i.parse().ok()?, count: n.parse().ok()? };
+        (spec.index >= 1 && spec.index <= spec.count).then_some(spec)
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprints
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
+}
+
+/// Deterministic fingerprint of a config: FNV-1a 64 over the canonical
+/// `Debug` encoding (covers every field, including floats via their
+/// shortest-roundtrip representation). Identical across processes and
+/// platforms for identical configs; any drift in options, base config or
+/// the `EngineConfig` definition itself changes the value — which is
+/// exactly what the merge validation wants to catch.
+pub fn config_fingerprint(cfg: &EngineConfig) -> u64 {
+    fnv1a(FNV_OFFSET, format!("{cfg:?}").as_bytes())
+}
+
+fn fingerprint_to_json(fp: u64) -> Json {
+    // u64 does not fit losslessly in a JSON number (f64) — hex string
+    Json::Str(format!("{fp:016x}"))
+}
+
+fn fingerprint_from_json(j: &Json, what: &str) -> Result<u64> {
+    let s = j.as_str().ok_or_else(|| anyhow!("{what}: expected hex string"))?;
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("{what}: '{s}': {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// EngineOutput <-> JSON (exact float round-trip)
+// ---------------------------------------------------------------------------
+
+/// Encode a float so parsing returns the identical value: finite values
+/// use JSON numbers (Rust's shortest-roundtrip formatting on both
+/// sides); non-finite values and negative zero (which the writer's
+/// integer shortcut would flatten to `0`) fall back to tagged strings.
+fn json_f64(x: f64) -> Json {
+    if x == 0.0 && x.is_sign_negative() {
+        Json::Str("-0".into())
+    } else if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn f64_from(j: &Json, what: &str) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            other => bail!("{what}: unexpected float string '{other}'"),
+        },
+        other => bail!("{what}: expected number, got {other}"),
+    }
+}
+
+fn field<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("{what}: missing field '{key}'"))
+}
+
+fn usize_from(j: &Json, what: &str) -> Result<usize> {
+    j.as_usize().ok_or_else(|| anyhow!("{what}: expected integer"))
+}
+
+/// Serialize one run's full [`EngineOutput`] (every field an averaging
+/// driver can consume, including curves and per-device losses).
+pub fn output_to_json(o: &EngineOutput) -> Json {
+    Json::obj(vec![
+        ("accuracy", json_f64(o.accuracy)),
+        (
+            "accuracy_curve",
+            Json::Arr(
+                o.accuracy_curve
+                    .iter()
+                    .map(|(t, a)| Json::Arr(vec![Json::from(*t), json_f64(*a)]))
+                    .collect(),
+            ),
+        ),
+        (
+            "per_device_loss",
+            Json::Arr(
+                o.per_device_loss
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(
+                            row.iter()
+                                .map(|l| match l {
+                                    None => Json::Null,
+                                    Some(x) => json_f64(*x as f64),
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "ledger",
+            Json::obj(vec![
+                ("process", json_f64(o.ledger.process)),
+                ("transfer", json_f64(o.ledger.transfer)),
+                ("discard", json_f64(o.ledger.discard)),
+            ]),
+        ),
+        (
+            "movement",
+            Json::Arr(
+                o.movement
+                    .per_interval
+                    .iter()
+                    .map(|s| {
+                        Json::Arr(vec![
+                            Json::from(s.collected),
+                            Json::from(s.processed),
+                            Json::from(s.offloaded),
+                            Json::from(s.discarded),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "similarity",
+            Json::Arr(vec![json_f64(o.similarity.0), json_f64(o.similarity.1)]),
+        ),
+        ("mean_active", json_f64(o.mean_active)),
+        ("total_collected", Json::from(o.total_collected)),
+    ])
+}
+
+/// Inverse of [`output_to_json`]. Exact: every float parses back to the
+/// identical value (`f32` losses round-trip through `f64` losslessly).
+pub fn output_from_json(j: &Json) -> Result<EngineOutput> {
+    const W: &str = "shard run output";
+    let mut accuracy_curve = Vec::new();
+    for p in field(j, "accuracy_curve", W)?.as_arr().unwrap_or(&[]) {
+        let pair = p.as_arr().ok_or_else(|| anyhow!("{W}: curve point not a pair"))?;
+        if pair.len() != 2 {
+            bail!("{W}: curve point not a (t, acc) pair");
+        }
+        accuracy_curve.push((usize_from(&pair[0], W)?, f64_from(&pair[1], W)?));
+    }
+    let mut per_device_loss = Vec::new();
+    for row in field(j, "per_device_loss", W)?.as_arr().unwrap_or(&[]) {
+        let row = row.as_arr().ok_or_else(|| anyhow!("{W}: loss row not an array"))?;
+        let mut out_row = Vec::with_capacity(row.len());
+        for l in row {
+            out_row.push(match l {
+                Json::Null => None,
+                other => Some(f64_from(other, W)? as f32),
+            });
+        }
+        per_device_loss.push(out_row);
+    }
+    let ledger_j = field(j, "ledger", W)?;
+    let ledger = Ledger {
+        process: f64_from(field(ledger_j, "process", W)?, W)?,
+        transfer: f64_from(field(ledger_j, "transfer", W)?, W)?,
+        discard: f64_from(field(ledger_j, "discard", W)?, W)?,
+    };
+    let mut movement = MovementTotals::default();
+    for s in field(j, "movement", W)?.as_arr().unwrap_or(&[]) {
+        let q = s.as_arr().ok_or_else(|| anyhow!("{W}: interval not an array"))?;
+        if q.len() != 4 {
+            bail!("{W}: interval stats want 4 counts, got {}", q.len());
+        }
+        movement.push(IntervalStats {
+            collected: usize_from(&q[0], W)?,
+            processed: usize_from(&q[1], W)?,
+            offloaded: usize_from(&q[2], W)?,
+            discarded: usize_from(&q[3], W)?,
+        });
+    }
+    let sim = field(j, "similarity", W)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{W}: similarity not a pair"))?;
+    if sim.len() != 2 {
+        bail!("{W}: similarity wants 2 values");
+    }
+    Ok(EngineOutput {
+        accuracy: f64_from(field(j, "accuracy", W)?, W)?,
+        accuracy_curve,
+        per_device_loss,
+        ledger,
+        movement,
+        similarity: (f64_from(&sim[0], W)?, f64_from(&sim[1], W)?),
+        mean_active: f64_from(field(j, "mean_active", W)?, W)?,
+        total_collected: usize_from(field(j, "total_collected", W)?, W)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shard files
+// ---------------------------------------------------------------------------
+
+/// One recorded run: its global grid index, config fingerprint, and full
+/// output.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// 0-based position in the canonical expansion order.
+    pub index: usize,
+    /// [`config_fingerprint`] of the config that produced this run.
+    pub fingerprint: u64,
+    /// The run's complete result.
+    pub output: EngineOutput,
+}
+
+/// One serialized shard: the subset of a grid's runs owned by
+/// `spec.index`, plus everything needed to validate a merge.
+#[derive(Debug, Clone)]
+pub struct ShardFile {
+    /// Which experiment driver produced the grid (`table3`, `fig9`, …).
+    pub experiment: String,
+    /// This file's position in the shard set.
+    pub spec: ShardSpec,
+    /// Size of the *whole* grid (across all shards).
+    pub total_runs: usize,
+    /// Per-run fingerprints folded in canonical order — identical in
+    /// every file of a consistent shard set.
+    pub grid_fingerprint: u64,
+    /// The driver options the grid was expanded under (opaque blob owned
+    /// by `experiments::ExpOptions`; must agree across the set).
+    pub opts: Json,
+    /// The runs this shard owns, in canonical order.
+    pub runs: Vec<RunRecord>,
+}
+
+impl ShardFile {
+    /// Serialize to the versioned on-disk JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::from("fogml-shard")),
+            ("version", Json::from(SHARD_FORMAT_VERSION)),
+            ("experiment", Json::from(self.experiment.as_str())),
+            (
+                "shard",
+                Json::obj(vec![
+                    ("index", Json::from(self.spec.index)),
+                    ("count", Json::from(self.spec.count)),
+                ]),
+            ),
+            ("total_runs", Json::from(self.total_runs)),
+            ("grid_fingerprint", fingerprint_to_json(self.grid_fingerprint)),
+            ("opts", self.opts.clone()),
+            (
+                "runs",
+                Json::Arr(
+                    self.runs
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("index", Json::from(r.index)),
+                                ("config_fingerprint", fingerprint_to_json(r.fingerprint)),
+                                ("output", output_to_json(&r.output)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse and validate one shard file body.
+    pub fn from_json(j: &Json) -> Result<ShardFile> {
+        const W: &str = "shard file";
+        match field(j, "kind", W)?.as_str() {
+            Some("fogml-shard") => {}
+            other => bail!("{W}: not a fogml shard file (kind = {other:?})"),
+        }
+        let version = usize_from(field(j, "version", W)?, W)?;
+        if version != SHARD_FORMAT_VERSION {
+            bail!("{W}: unsupported format version {version} (this build reads {SHARD_FORMAT_VERSION})");
+        }
+        let shard_j = field(j, "shard", W)?;
+        let spec = ShardSpec {
+            index: usize_from(field(shard_j, "index", W)?, W)?,
+            count: usize_from(field(shard_j, "count", W)?, W)?,
+        };
+        if spec.count == 0 || spec.index == 0 || spec.index > spec.count {
+            bail!("{W}: invalid shard position {}/{}", spec.index, spec.count);
+        }
+        let total_runs = usize_from(field(j, "total_runs", W)?, W)?;
+        let mut runs = Vec::new();
+        for r in field(j, "runs", W)?.as_arr().unwrap_or(&[]) {
+            let index = usize_from(field(r, "index", W)?, W)?;
+            if index >= total_runs {
+                bail!("{W}: run index {index} out of range (total_runs = {total_runs})");
+            }
+            if !spec.owns(index) {
+                bail!(
+                    "{W}: run {index} does not belong to shard {spec} under round-robin assignment — the file was tampered with or mislabeled"
+                );
+            }
+            runs.push(RunRecord {
+                index,
+                fingerprint: fingerprint_from_json(
+                    field(r, "config_fingerprint", W)?,
+                    "config_fingerprint",
+                )?,
+                output: output_from_json(field(r, "output", W)?)?,
+            });
+        }
+        Ok(ShardFile {
+            experiment: field(j, "experiment", W)?
+                .as_str()
+                .ok_or_else(|| anyhow!("{W}: experiment not a string"))?
+                .to_string(),
+            spec,
+            total_runs,
+            grid_fingerprint: fingerprint_from_json(
+                field(j, "grid_fingerprint", W)?,
+                "grid_fingerprint",
+            )?,
+            opts: field(j, "opts", W)?.clone(),
+            runs,
+        })
+    }
+
+    /// Write to `dir/shard_I_of_N.json` (creating `dir` if needed) and
+    /// return the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating shard dir {}", dir.display()))?;
+        let path = dir.join(self.spec.file_name());
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Read and validate `path`.
+    pub fn load(path: &Path) -> Result<ShardFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// A complete, validated shard set loaded from one directory: every shard
+/// present, mutually consistent, and jointly covering the whole grid.
+#[derive(Debug, Clone)]
+pub struct ShardSet {
+    /// The experiment the grid belongs to.
+    pub experiment: String,
+    /// The recorded driver-options blob (agreed on by every file).
+    pub opts: Json,
+    /// Shard count `N` of the set.
+    pub count: usize,
+    /// All runs of the grid, reassembled in canonical order
+    /// (`runs[j].index == j` for every `j`).
+    pub runs: Vec<RunRecord>,
+}
+
+/// Load every `shard_I_of_N.json` under `dir` and validate the set:
+/// exactly one file per shard 1..=N, no mixed shard counts, identical
+/// experiment/options/total/grid-fingerprint everywhere, and a run for
+/// every grid index. Any violation is a hard error naming the offender —
+/// a merge must never silently proceed from an incomplete or mixed set.
+pub fn load_shard_set(dir: &Path) -> Result<ShardSet> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading shard dir {}", dir.display()))?;
+    let mut files: Vec<(ShardSpec, PathBuf)> = Vec::new();
+    for e in entries {
+        let e = e?;
+        let name = e.file_name();
+        if let Some(spec) = name.to_str().and_then(ShardSpec::parse_file_name) {
+            files.push((spec, e.path()));
+        }
+    }
+    if files.is_empty() {
+        bail!("no shard files (shard_I_of_N.json) found in {}", dir.display());
+    }
+    files.sort_by_key(|(spec, _)| spec.index);
+    let count = files[0].0.count;
+    if let Some((spec, path)) = files.iter().find(|(s, _)| s.count != count) {
+        bail!(
+            "mixed shard sets in {}: found both /{} and /{} files (e.g. {})",
+            dir.display(),
+            count,
+            spec.count,
+            path.display()
+        );
+    }
+    let missing: Vec<usize> =
+        (1..=count).filter(|i| !files.iter().any(|(s, _)| s.index == *i)).collect();
+    if !missing.is_empty() {
+        bail!(
+            "incomplete shard set in {}: missing shard(s) {:?} of {count}",
+            dir.display(),
+            missing
+        );
+    }
+
+    let mut experiment: Option<String> = None;
+    let mut opts: Option<Json> = None;
+    let mut total: Option<usize> = None;
+    let mut grid: Option<u64> = None;
+    let mut slots: Vec<Option<RunRecord>> = Vec::new();
+    for (spec, path) in &files {
+        let f = ShardFile::load(path)?;
+        if f.spec != *spec {
+            bail!(
+                "{}: file body claims shard {} but the file name says {spec}",
+                path.display(),
+                f.spec
+            );
+        }
+        match &experiment {
+            None => experiment = Some(f.experiment.clone()),
+            Some(e) if *e != f.experiment => bail!(
+                "{}: experiment '{}' disagrees with the rest of the set ('{e}')",
+                path.display(),
+                f.experiment
+            ),
+            Some(_) => {}
+        }
+        match &opts {
+            None => opts = Some(f.opts.clone()),
+            Some(o) if *o != f.opts => bail!(
+                "{}: recorded options disagree with the rest of the set",
+                path.display()
+            ),
+            Some(_) => {}
+        }
+        match total {
+            None => {
+                total = Some(f.total_runs);
+                slots = (0..f.total_runs).map(|_| None).collect();
+            }
+            Some(t) if t != f.total_runs => bail!(
+                "{}: total_runs {} disagrees with the rest of the set ({t})",
+                path.display(),
+                f.total_runs
+            ),
+            Some(_) => {}
+        }
+        match grid {
+            None => grid = Some(f.grid_fingerprint),
+            Some(g) if g != f.grid_fingerprint => bail!(
+                "{}: grid fingerprint {:016x} does not match the rest of the set ({:016x}) — the shards were produced from different grids or options",
+                path.display(),
+                f.grid_fingerprint,
+                g
+            ),
+            Some(_) => {}
+        }
+        for rec in f.runs {
+            if slots[rec.index].is_some() {
+                bail!("{}: duplicate record for run {}", path.display(), rec.index);
+            }
+            slots[rec.index] = Some(rec);
+        }
+    }
+    let total = total.unwrap_or(0);
+    let missing_runs: Vec<usize> =
+        slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(j, _)| j).collect();
+    if !missing_runs.is_empty() {
+        bail!(
+            "shard set in {} is missing {} of {total} runs (first missing: run {}) — a shard file was truncated",
+            dir.display(),
+            missing_runs.len(),
+            missing_runs[0]
+        );
+    }
+    Ok(ShardSet {
+        experiment: experiment.unwrap_or_default(),
+        opts: opts.unwrap_or(Json::Null),
+        count,
+        runs: slots.into_iter().map(|s| s.unwrap()).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// SweepCtx — the driver-facing execution + output sink
+// ---------------------------------------------------------------------------
+
+struct ShardState {
+    /// Next global run index (== runs enumerated so far).
+    next: usize,
+    /// Per-run fingerprints folded in canonical order.
+    grid: u64,
+    /// Owned runs recorded so far.
+    records: Vec<RunRecord>,
+}
+
+struct MergeState {
+    /// Next record to replay.
+    cursor: usize,
+    /// The full grid in canonical order (from [`load_shard_set`]).
+    runs: Vec<RunRecord>,
+}
+
+enum Mode {
+    /// Execute everything, emit artifacts — the classic behavior.
+    Full,
+    /// Execute only the owned round-robin subset, suppress artifacts,
+    /// record results for a later merge.
+    Shard { spec: ShardSpec, state: RefCell<ShardState> },
+    /// Execute nothing: replay recorded outputs (validating fingerprints
+    /// run by run) and emit artifacts exactly as a serial run would.
+    Merge { state: RefCell<MergeState> },
+}
+
+/// The execution and output context every pooled experiment driver runs
+/// against. Encapsulates the three sweep modes (full / shard / merge) so
+/// driver code is written once: drivers request engine runs through
+/// [`SweepCtx::run_many`] and route every artifact through
+/// [`SweepCtx::emit_table`] / [`SweepCtx::emit_raw`] /
+/// [`SweepCtx::say`]; the mode decides what actually executes and what
+/// actually gets written (module docs have the full contract).
+pub struct SweepCtx<'a> {
+    pool: &'a SimPool,
+    mode: Mode,
+}
+
+impl<'a> SweepCtx<'a> {
+    /// Full mode: run the whole grid through `pool`, emit everything.
+    pub fn full(pool: &'a SimPool) -> SweepCtx<'a> {
+        SweepCtx { pool, mode: Mode::Full }
+    }
+
+    /// Shard mode: run only `spec`'s round-robin subset through `pool`,
+    /// suppress artifacts, record results for [`SweepCtx::write_shard_file`].
+    pub fn sharded(pool: &'a SimPool, spec: ShardSpec) -> SweepCtx<'a> {
+        SweepCtx {
+            pool,
+            mode: Mode::Shard {
+                spec,
+                state: RefCell::new(ShardState {
+                    next: 0,
+                    grid: FNV_OFFSET,
+                    records: Vec::new(),
+                }),
+            },
+        }
+    }
+
+    /// Merge mode: replay `runs` (a complete grid from
+    /// [`load_shard_set`]) instead of executing; emit everything. Call
+    /// [`SweepCtx::finish_merge`] after the driver returns.
+    pub fn merged(pool: &'a SimPool, runs: Vec<RunRecord>) -> SweepCtx<'a> {
+        SweepCtx {
+            pool,
+            mode: Mode::Merge { state: RefCell::new(MergeState { cursor: 0, runs }) },
+        }
+    }
+
+    /// True in shard mode — artifacts and console output are suppressed.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.mode, Mode::Shard { .. })
+    }
+
+    /// Run `cfgs` (one grid segment, in canonical order) and return their
+    /// outputs in input order.
+    ///
+    /// * Full mode: all of them, via [`SimPool::run_many`].
+    /// * Shard mode: only the owned subset executes (still pooled, still
+    ///   in order); unowned positions return placeholder
+    ///   [`EngineOutput::default`]s, which is sound because shard mode
+    ///   suppresses every artifact derived from them.
+    /// * Merge mode: nothing executes; recorded outputs are replayed in
+    ///   grid order after re-validating each config's fingerprint.
+    pub fn run_many(&self, cfgs: &[EngineConfig]) -> Result<Vec<EngineOutput>> {
+        match &self.mode {
+            Mode::Full => self.pool.run_many(cfgs),
+            Mode::Shard { spec, state } => {
+                let (start, fps) = {
+                    let mut st = state.borrow_mut();
+                    let start = st.next;
+                    st.next += cfgs.len();
+                    let mut fps = Vec::with_capacity(cfgs.len());
+                    for cfg in cfgs {
+                        let fp = config_fingerprint(cfg);
+                        st.grid = fnv1a(st.grid, &fp.to_le_bytes());
+                        fps.push(fp);
+                    }
+                    (start, fps)
+                };
+                let owned: Vec<usize> = (0..cfgs.len())
+                    .filter(|k| spec.owns(start + k))
+                    .collect();
+                let owned_cfgs: Vec<EngineConfig> =
+                    owned.iter().map(|&k| cfgs[k].clone()).collect();
+                let outs = self.pool.run_many(&owned_cfgs)?;
+                let mut results = vec![EngineOutput::default(); cfgs.len()];
+                let mut st = state.borrow_mut();
+                for (&k, out) in owned.iter().zip(outs) {
+                    st.records.push(RunRecord {
+                        index: start + k,
+                        fingerprint: fps[k],
+                        output: out.clone(),
+                    });
+                    results[k] = out;
+                }
+                Ok(results)
+            }
+            Mode::Merge { state } => {
+                let mut st = state.borrow_mut();
+                let mut outs = Vec::with_capacity(cfgs.len());
+                for cfg in cfgs {
+                    let j = st.cursor;
+                    let rec = st.runs.get(j).ok_or_else(|| {
+                        anyhow!(
+                            "merge replay expanded run {j} but the shard set only recorded {} runs — the driver or its options drifted since sharding",
+                            st.runs.len()
+                        )
+                    })?;
+                    let fp = config_fingerprint(cfg);
+                    if fp != rec.fingerprint {
+                        bail!(
+                            "run {j}: expanded config fingerprint {fp:016x} != recorded {:016x} — the shard files were produced from a different grid (options, base config, or code revision)",
+                            rec.fingerprint
+                        );
+                    }
+                    outs.push(rec.output.clone());
+                    st.cursor += 1;
+                }
+                Ok(outs)
+            }
+        }
+    }
+
+    /// Print `table` and persist `<out_dir>/<name>.csv` — suppressed in
+    /// shard mode (the merge regenerates it from the reassembled grid).
+    pub fn emit_table(&self, table: &Table, out_dir: &str, name: &str) -> Result<()> {
+        if self.is_sharded() {
+            return Ok(());
+        }
+        table.print();
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(format!("{out_dir}/{name}.csv"), table.to_csv())?;
+        Ok(())
+    }
+
+    /// Write raw CSV lines to `<out_dir>/<name>.csv` — suppressed in
+    /// shard mode.
+    pub fn emit_raw(&self, lines: &str, out_dir: &str, name: &str) -> Result<()> {
+        if self.is_sharded() {
+            return Ok(());
+        }
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(format!("{out_dir}/{name}.csv"), lines)?;
+        Ok(())
+    }
+
+    /// Console narration (`println!`) — suppressed in shard mode, where
+    /// the values being narrated are partial.
+    pub fn say(&self, line: &str) {
+        if !self.is_sharded() {
+            println!("{line}");
+        }
+    }
+
+    /// Shard-mode epilogue: serialize the recorded subset (plus grid
+    /// metadata and the caller-supplied `opts` blob) to
+    /// `dir/shard_I_of_N.json`. Errors outside shard mode.
+    pub fn write_shard_file(
+        &self,
+        experiment: &str,
+        opts: Json,
+        dir: &Path,
+    ) -> Result<PathBuf> {
+        match &self.mode {
+            Mode::Shard { spec, state } => {
+                let mut st = state.borrow_mut();
+                let file = ShardFile {
+                    experiment: experiment.to_string(),
+                    spec: *spec,
+                    total_runs: st.next,
+                    grid_fingerprint: st.grid,
+                    opts,
+                    runs: std::mem::take(&mut st.records),
+                };
+                file.save(dir)
+            }
+            _ => bail!("write_shard_file called outside shard mode"),
+        }
+    }
+
+    /// Merge-mode epilogue: verify the replay consumed every recorded
+    /// run (a shorter-than-recorded expansion means driver drift and
+    /// must not pass silently). Errors outside merge mode.
+    pub fn finish_merge(&self) -> Result<()> {
+        match &self.mode {
+            Mode::Merge { state } => {
+                let st = state.borrow();
+                if st.cursor != st.runs.len() {
+                    bail!(
+                        "merge replay consumed {} of {} recorded runs — the driver or its options drifted since sharding",
+                        st.cursor,
+                        st.runs.len()
+                    );
+                }
+                Ok(())
+            }
+            _ => bail!("finish_merge called outside merge mode"),
+        }
+    }
+
+    /// How many runs this context has recorded so far: the owned subset
+    /// in shard mode, the replayed count in merge mode, 0 in full mode
+    /// (nothing is recorded there). Diagnostic only.
+    pub fn runs_owned(&self) -> usize {
+        match &self.mode {
+            Mode::Full => 0,
+            Mode::Shard { state, .. } => state.borrow().records.len(),
+            Mode::Merge { state } => state.borrow().cursor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_parse_and_ownership() {
+        let s = ShardSpec::parse("2/4").unwrap();
+        assert_eq!(s, ShardSpec { index: 2, count: 4 });
+        assert!(ShardSpec::parse("0/4").is_err());
+        assert!(ShardSpec::parse("5/4").is_err());
+        assert!(ShardSpec::parse("1/0").is_err());
+        assert!(ShardSpec::parse("nope").is_err());
+        // round-robin: shard 2 of 4 owns 1, 5, 9, …
+        assert!(!s.owns(0));
+        assert!(s.owns(1));
+        assert!(!s.owns(2));
+        assert!(s.owns(5));
+        // the full set partitions every index exactly once
+        for j in 0..20 {
+            let owners = (1..=4)
+                .filter(|&i| ShardSpec { index: i, count: 4 }.owns(j))
+                .count();
+            assert_eq!(owners, 1, "run {j} must have exactly one owner");
+        }
+    }
+
+    #[test]
+    fn file_name_round_trip() {
+        let s = ShardSpec { index: 3, count: 8 };
+        assert_eq!(s.file_name(), "shard_3_of_8.json");
+        assert_eq!(ShardSpec::parse_file_name(&s.file_name()), Some(s));
+        assert_eq!(ShardSpec::parse_file_name("table3.csv"), None);
+        assert_eq!(ShardSpec::parse_file_name("shard_9_of_8.json"), None);
+    }
+
+    #[test]
+    fn config_fingerprint_is_field_sensitive() {
+        let a = EngineConfig::default();
+        let b = a.clone().with(|c| c.n = 11);
+        let c = a.clone().seeded(2);
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&a.clone()));
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+
+    #[test]
+    fn non_finite_floats_round_trip() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.1 + 0.2, -1e-17, -0.0] {
+            let j = json_f64(x);
+            let text = j.to_string();
+            let back = f64_from(&Json::parse(&text).unwrap(), "t").unwrap();
+            if x.is_nan() {
+                assert!(back.is_nan());
+            } else {
+                assert_eq!(back.to_bits(), x.to_bits(), "exact round-trip for {x}");
+            }
+        }
+    }
+}

@@ -1,10 +1,10 @@
-//! Shared experiment machinery: multi-seed averaging (serial and pooled)
-//! and result output.
+//! Shared experiment machinery: multi-seed averaging (serial, pooled, and
+//! shard-aware via [`SweepCtx`]) and result output.
 
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::coordinator::SimPool;
+use crate::coordinator::{SimPool, SweepCtx};
 use crate::experiments::ExpOptions;
 use crate::fed::{self, EngineOutput};
 use crate::runtime::Runtime;
@@ -89,6 +89,7 @@ pub fn with_eval(cfg: EngineConfig, opts: &ExpOptions) -> EngineConfig {
 /// `<param>=<label>/iid` and one `/non-iid` series per sweep point (the
 /// shape every `run_avg_iid_pairs` driver reports).
 pub fn emit_iid_pair_curves(
+    ctx: &SweepCtx,
     param_name: &str,
     labels: &[&str],
     pairs: &[(Avg, Avg)],
@@ -105,13 +106,15 @@ pub fn emit_iid_pair_curves(
             ]
         })
         .collect();
-    emit_curves(&series, out_dir, name)
+    emit_curves(ctx, &series, out_dir, name)
 }
 
 /// Write accuracy-curve series to `<out_dir>/<name>_curve.csv` as
 /// `label,t,accuracy` rows — one series per labeled config. No-op when
-/// every series is empty (curves were not requested).
+/// every series is empty (curves were not requested); suppressed in
+/// shard mode like every artifact.
 pub fn emit_curves(
+    ctx: &SweepCtx,
     series: &[(String, &[(usize, f64)])],
     out_dir: &str,
     name: &str,
@@ -125,7 +128,7 @@ pub fn emit_curves(
             csv.push_str(&format!("{label},{t},{acc}\n"));
         }
     }
-    emit_raw(&csv, out_dir, &format!("{name}_curve"))
+    ctx.emit_raw(&csv, out_dir, &format!("{name}_curve"))
 }
 
 /// The `seeds` configs a seed-averaged cell expands to: same config, seeds
@@ -138,8 +141,9 @@ pub fn seed_sweep(cfg: &EngineConfig, seeds: usize) -> Vec<EngineConfig> {
 }
 
 /// Run `cfg` under `seeds` different seeds and average — serial path on a
-/// borrowed runtime (used by the lighter drivers; the sweep drivers fan
-/// out through [`run_avg_pool`] / [`run_avg_batch`] instead).
+/// borrowed runtime (used by the non-shardable drivers table2/fig8; the
+/// sweep drivers fan out through [`run_avg_ctx`] / [`run_avg_batch`] on a
+/// [`SweepCtx`] instead).
 pub fn run_avg(rt: &Runtime, cfg: &EngineConfig, seeds: usize) -> Result<(Avg, Vec<EngineOutput>)> {
     let mut outs = Vec::with_capacity(seeds);
     for cfg_s in seed_sweep(cfg, seeds) {
@@ -159,27 +163,42 @@ pub fn run_avg_pool(
     Ok((Avg::from_outputs(&outs), outs))
 }
 
-/// Fan out a whole sweep at once: every config × every seed in one pooled
+/// [`run_avg_pool`] through a [`SweepCtx`]: the seed fan-out becomes one
+/// canonical grid segment, so the cell shards and merges like any batch
+/// (used by the lighter drivers — table5, fig4 — that average one cell at
+/// a time).
+pub fn run_avg_ctx(
+    ctx: &SweepCtx,
+    cfg: &EngineConfig,
+    seeds: usize,
+) -> Result<(Avg, Vec<EngineOutput>)> {
+    let outs = ctx.run_many(&seed_sweep(cfg, seeds))?;
+    Ok((Avg::from_outputs(&outs), outs))
+}
+
+/// Fan out a whole sweep at once: every config × every seed in one
 /// batch (so the pool stays saturated across sweep points, not just within
-/// one cell), averaged back per config in input order.
-pub fn run_avg_batch(pool: &SimPool, cfgs: &[EngineConfig], seeds: usize) -> Result<Vec<Avg>> {
+/// one cell), averaged back per config in input order. The expansion
+/// order — config-major, seed-minor — is the canonical order the
+/// sharding contract round-robins over (`coordinator::shard`).
+pub fn run_avg_batch(ctx: &SweepCtx, cfgs: &[EngineConfig], seeds: usize) -> Result<Vec<Avg>> {
     if seeds == 0 {
         // mirror run_avg's zero-seed behavior: a zeros row per config
         return Ok(cfgs.iter().map(|_| Avg::from_outputs(&[])).collect());
     }
     let expanded: Vec<EngineConfig> =
         cfgs.iter().flat_map(|c| seed_sweep(c, seeds)).collect();
-    let outs = pool.run_many(&expanded)?;
+    let outs = ctx.run_many(&expanded)?;
     Ok(outs.chunks(seeds).map(Avg::from_outputs).collect())
 }
 
 /// Expand each config into its (iid, non-iid) twin, fan the whole grid out
-/// in one pooled batch, and pair the averages back per input config — the
+/// in one batch, and pair the averages back per input config — the
 /// shape every paper table/figure reports. Centralizing the expansion and
 /// the pairing keeps drivers free of index arithmetic that could silently
 /// swap the iid/non-iid columns.
 pub fn run_avg_iid_pairs(
-    pool: &SimPool,
+    ctx: &SweepCtx,
     cfgs: &[EngineConfig],
     seeds: usize,
 ) -> Result<Vec<(Avg, Avg)>> {
@@ -189,7 +208,7 @@ pub fn run_avg_iid_pairs(
             [c.clone().with(|x| x.iid = true), c.clone().with(|x| x.iid = false)]
         })
         .collect();
-    let avgs = run_avg_batch(pool, &expanded, seeds)?;
+    let avgs = run_avg_batch(ctx, &expanded, seeds)?;
     let mut it = avgs.into_iter();
     let mut pairs = Vec::with_capacity(cfgs.len());
     while let (Some(iid), Some(noniid)) = (it.next(), it.next()) {
@@ -198,18 +217,15 @@ pub fn run_avg_iid_pairs(
     Ok(pairs)
 }
 
-/// Print a table and persist its CSV under `<out_dir>/<name>.csv`.
+/// Print a table and persist its CSV under `<out_dir>/<name>.csv` — the
+/// plain writer for the non-shardable drivers (table2/fig8/theory).
+/// Shardable drivers must go through [`SweepCtx::emit_table`] /
+/// [`SweepCtx::emit_raw`] instead, which suppress artifacts in shard
+/// mode.
 pub fn emit(table: &Table, out_dir: &str, name: &str) -> Result<()> {
     table.print();
     std::fs::create_dir_all(out_dir)?;
     std::fs::write(format!("{out_dir}/{name}.csv"), table.to_csv())?;
-    Ok(())
-}
-
-/// Write raw lines (e.g. per-interval series) to `<out_dir>/<name>.csv`.
-pub fn emit_raw(lines: &str, out_dir: &str, name: &str) -> Result<()> {
-    std::fs::create_dir_all(out_dir)?;
-    std::fs::write(format!("{out_dir}/{name}.csv"), lines)?;
     Ok(())
 }
 

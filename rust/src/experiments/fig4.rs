@@ -5,29 +5,31 @@
 //! Expected shape (paper): loss mean and variance decrease over time; the
 //! after-offloading similarity sits above the y = x diagonal in almost all
 //! runs (≈ +10% average).
+//!
+//! Every run — the representative trajectory and the similarity batch —
+//! goes through the shared [`crate::coordinator::SweepCtx`], so the
+//! driver shards across processes via `--shard I/N`
+//! ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
-use crate::config::EngineConfig;
-use crate::experiments::common::{emit_curves, emit_raw, run_avg, with_eval};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::{emit_curves, with_eval};
 use crate::experiments::ExpOptions;
-use crate::fed;
-use crate::runtime::Runtime;
 use crate::util::stats;
 
-pub fn run(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+/// Run Fig. 4. Routes runs and output through `ctx`, so the same code
+/// serves full, `--shard I/N` and `fogml merge` invocations.
+pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
 
     // --- (a) per-device loss trajectories (single representative run) ------
     // under --curve the same run also traces test accuracy through the
     // fed::eval planner (fig4a_curve.csv)
     let cfg = with_eval(base.clone().with(|c| c.iid = false), opts);
-    let out = fed::run(&cfg, &rt)?;
+    let out = ctx.run_many(std::slice::from_ref(&cfg))?.remove(0);
     emit_curves(
+        ctx,
         &[("network-aware/non-iid".to_string(), out.accuracy_curve.as_slice())],
         &opts.out_dir,
         "fig4a",
@@ -47,46 +49,53 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             }
         }
     }
-    emit_raw(&csv, &opts.out_dir, "fig4a_loss")?;
-    println!("== Fig 4a — per-device training loss (network-aware, non-iid) ==");
-    println!(
+    ctx.emit_raw(&csv, &opts.out_dir, "fig4a_loss")?;
+    ctx.say("== Fig 4a — per-device training loss (network-aware, non-iid) ==");
+    ctx.say(&format!(
         "first fifth: mean {:.3} (σ {:.3});  last fifth: mean {:.3} (σ {:.3})",
         stats::mean(&first_window),
         stats::std_dev(&first_window),
         stats::mean(&last_window),
         stats::std_dev(&last_window),
-    );
-    println!();
+    ));
+    ctx.say("");
 
     // --- (b) similarity before vs after over many short runs ----------------
-    // the paper uses 100 experiments; scale by --seeds (seeds × 8 runs)
+    // the paper uses 100 experiments; scale by --seeds (seeds × 8 runs),
+    // fanned out as ONE batch so --jobs (and --shard) actually parallelize
     let runs = (opts.seeds * 8).max(8);
+    let cfgs: Vec<_> = (0..runs)
+        .map(|r| {
+            base.clone()
+                .with(|c| {
+                    c.iid = false;
+                    // keep these cheap: similarity needs no long horizon
+                    c.t_max = 40;
+                    c.n_train = 3200;
+                })
+                .seeded(2000 + r as u64)
+        })
+        .collect();
+    let outs = ctx.run_many(&cfgs)?;
     let mut csv = String::from("run,before,after\n");
     let mut improved = 0usize;
     let mut deltas = Vec::new();
-    for r in 0..runs {
-        let cfg_r = base
-            .clone()
-            .with(|c| {
-                c.iid = false;
-                // keep these cheap: similarity needs no long horizon
-                c.t_max = 40;
-                c.n_train = 3200;
-            })
-            .seeded(2000 + r as u64);
-        let (avg, _) = run_avg(&rt, &cfg_r, 1)?;
-        csv.push_str(&format!("{r},{},{}\n", avg.similarity_before, avg.similarity_after));
-        if avg.similarity_after > avg.similarity_before {
+    for (r, o) in outs.iter().enumerate() {
+        let (before, after) = o.similarity;
+        csv.push_str(&format!("{r},{before},{after}\n"));
+        if after > before {
             improved += 1;
         }
-        deltas.push(avg.similarity_after - avg.similarity_before);
+        deltas.push(after - before);
     }
-    emit_raw(&csv, &opts.out_dir, "fig4b_similarity")?;
-    println!("== Fig 4b — data similarity before vs after offloading ({runs} runs, non-iid) ==");
-    println!(
+    ctx.emit_raw(&csv, &opts.out_dir, "fig4b_similarity")?;
+    ctx.say(&format!(
+        "== Fig 4b — data similarity before vs after offloading ({runs} runs, non-iid) =="
+    ));
+    ctx.say(&format!(
         "improved in {improved}/{runs} runs; mean improvement {:+.1}%",
         100.0 * stats::mean(&deltas)
-    );
-    println!();
+    ));
+    ctx.say("");
     Ok(())
 }

@@ -12,13 +12,14 @@
 //! lowers cost but hurts accuracy (especially non-iid).
 //!
 //! Each figure's whole (point × {iid, non-iid} × seed) grid fans out
-//! through one [`SimPool`] batch.
+//! through one [`crate::coordinator::SimPool`] batch, and shards across
+//! processes via `--shard I/N` ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
 use crate::config::{EngineConfig, TopologyKind};
-use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::{emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
 use crate::experiments::ExpOptions;
 use crate::util::table::{fnum, pct, Table};
 
@@ -32,11 +33,11 @@ fn sweep(
     param_name: &str,
     points: Vec<(String, EngineConfig)>,
     opts: &ExpOptions,
-    pool: &SimPool,
+    ctx: &SweepCtx,
 ) -> Result<()> {
     let cfgs: Vec<EngineConfig> =
         points.iter().map(|(_, cfg)| with_eval(cfg.clone(), opts)).collect();
-    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
+    let pairs = run_avg_iid_pairs(ctx, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         title,
@@ -72,17 +73,14 @@ fn sweep(
             pct(avg_noniid.accuracy),
         ]);
     }
-    emit(&table, &opts.out_dir, csv_name)?;
+    ctx.emit_table(&table, &opts.out_dir, csv_name)?;
     let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
-    emit_iid_pair_curves(param_name, &labels, &pairs, &opts.out_dir, csv_name)
+    emit_iid_pair_curves(ctx, param_name, &labels, &pairs, &opts.out_dir, csv_name)
 }
 
 /// Figure 5: n ∈ {5, 10, ..., 50}, fully connected.
-pub fn run_fig5(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+pub fn run_fig5(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
     let points = (1..=10)
         .map(|k| {
             let n = 5 * k;
@@ -95,16 +93,13 @@ pub fn run_fig5(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         "n",
         points,
         opts,
-        pool,
+        ctx,
     )
 }
 
 /// Figure 6: connectivity ρ ∈ {0, 0.2, ..., 1.0}, ER random graph.
-pub fn run_fig6(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+pub fn run_fig6(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
     let points = (0..=5)
         .map(|k| {
             let rho = 0.2 * k as f64;
@@ -120,16 +115,13 @@ pub fn run_fig6(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         "rho",
         points,
         opts,
-        pool,
+        ctx,
     )
 }
 
 /// Figure 7: aggregation period τ ∈ {2, 5, 10, 20, 25, 50}.
-pub fn run_fig7(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+pub fn run_fig7(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
     let points = [2usize, 5, 10, 20, 25, 50]
         .iter()
         .map(|&tau| (tau.to_string(), base.clone().with(|c| c.tau = tau)))
@@ -140,6 +132,6 @@ pub fn run_fig7(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         "tau",
         points,
         opts,
-        pool,
+        ctx,
     )
 }

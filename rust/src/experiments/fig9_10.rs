@@ -12,13 +12,14 @@
 //! hardest by exits).
 //!
 //! Each figure's (churn point × {iid, non-iid} × seed) grid fans out
-//! through one [`SimPool`] batch.
+//! through one [`crate::coordinator::SimPool`] batch, and shards across
+//! processes via `--shard I/N` ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
 use crate::config::{Churn, EngineConfig};
-use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::{emit_iid_pair_curves, run_avg_iid_pairs, with_eval};
 use crate::experiments::ExpOptions;
 use crate::util::table::{fnum, pct, Table};
 
@@ -32,12 +33,9 @@ fn churn_sweep(
     param_name: &str,
     points: Vec<(String, Churn)>,
     opts: &ExpOptions,
-    pool: &SimPool,
+    ctx: &SweepCtx,
 ) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+    let base = opts.base_config();
 
     let cfgs: Vec<EngineConfig> = points
         .iter()
@@ -45,7 +43,7 @@ fn churn_sweep(
             with_eval(base.clone().with(|c| c.churn = Some(*churn)), opts)
         })
         .collect();
-    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
+    let pairs = run_avg_iid_pairs(ctx, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         title,
@@ -81,13 +79,13 @@ fn churn_sweep(
             pct(avg_noniid.accuracy),
         ]);
     }
-    emit(&table, &opts.out_dir, csv_name)?;
+    ctx.emit_table(&table, &opts.out_dir, csv_name)?;
     let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
-    emit_iid_pair_curves(param_name, &labels, &pairs, &opts.out_dir, csv_name)
+    emit_iid_pair_curves(ctx, param_name, &labels, &pairs, &opts.out_dir, csv_name)
 }
 
 /// Fig 9: vary p_exit, p_entry fixed at 2%.
-pub fn run_fig9(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
+pub fn run_fig9(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
     let points = (0..=5)
         .map(|k| {
             let p = k as f64 / 100.0;
@@ -100,12 +98,12 @@ pub fn run_fig9(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         "p_exit",
         points,
         opts,
-        pool,
+        ctx,
     )
 }
 
 /// Fig 10: vary p_entry, p_exit fixed at 2%.
-pub fn run_fig10(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
+pub fn run_fig10(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
     let points = (0..=5)
         .map(|k| {
             let p = k as f64 / 100.0;
@@ -118,6 +116,6 @@ pub fn run_fig10(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         "p_entry",
         points,
         opts,
-        pool,
+        ctx,
     )
 }

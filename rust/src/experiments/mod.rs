@@ -3,10 +3,17 @@
 //! rows/series as console tables and writes CSV under `results/`.
 //!
 //! See DESIGN.md §4 for the experiment index mapping every driver to the
-//! paper artifact it regenerates and the expected qualitative shape. The
-//! sweep drivers (Tables III–IV, Figs. 5–7, 9–10) fan their (config, seed)
-//! grids out through [`crate::coordinator::SimPool`]; `--jobs N` controls
-//! the worker count (`--jobs 1` reproduces serial numbers bit-for-bit).
+//! paper artifact it regenerates and the expected qualitative shape, and
+//! EXPERIMENTS.md for the command ↔ output-file table. The sweep drivers
+//! (Tables III–V, Figs. 4–7, 9–10) fan their (config, seed) grids out
+//! through [`crate::coordinator::SimPool`]; `--jobs N` controls the
+//! worker count (`--jobs 1` reproduces serial numbers bit-for-bit).
+//!
+//! The same drivers also shard across processes: `fogml exp <name>
+//! --shard I/N --out DIR` runs the I-th round-robin slice of the grid and
+//! serializes it to `DIR/shard_I_of_N.json`; `fogml merge DIR` validates
+//! the set and regenerates artifacts byte-identical to an unsharded run
+//! (the contract lives in [`crate::coordinator::shard`]).
 
 pub mod common;
 pub mod fig4;
@@ -19,11 +26,16 @@ pub mod table4;
 pub mod table5;
 pub mod theory;
 
-use anyhow::{bail, Result};
+use std::path::Path;
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::shard::{self, ShardSpec, SweepCtx};
 use crate::coordinator::SimPool;
 use crate::fed::eval::EvalSchedule;
 use crate::runtime::ModelKind;
+use crate::util::json::Json;
 
 /// Options shared by all drivers.
 #[derive(Debug, Clone)]
@@ -33,6 +45,8 @@ pub struct ExpOptions {
     pub seeds: usize,
     /// Override the model for sweep drivers (Table II always runs both).
     pub model: Option<ModelKind>,
+    /// Output directory for CSV artifacts — and for `shard_I_of_N.json`
+    /// when sharding.
     pub out_dir: String,
     /// Concurrent engine runs for the pooled sweep drivers (`--jobs`).
     pub jobs: usize,
@@ -44,6 +58,16 @@ pub struct ExpOptions {
     /// pass, or rotating seeded subsets for ≈K× cheaper curves
     /// (`fed::eval::EvalSchedule`).
     pub eval_schedule: EvalSchedule,
+    /// Run only this round-robin slice of the grid and write a shard
+    /// file instead of artifacts (`--shard I/N`; see
+    /// [`crate::coordinator::shard`]). Only the pool-backed drivers
+    /// ([`SHARDABLE`]) support it.
+    pub shard: Option<ShardSpec>,
+    /// Override the base config the pool-backed drivers expand their
+    /// grids from (library/test hook — no CLI flag; scaled-down smoke
+    /// grids and `tests/shard_merge.rs` use it). `None` means
+    /// [`EngineConfig::default`], the paper protocol.
+    pub base: Option<EngineConfig>,
 }
 
 impl Default for ExpOptions {
@@ -55,44 +79,217 @@ impl Default for ExpOptions {
             jobs: 1,
             curve: false,
             eval_schedule: EvalSchedule::Full,
+            shard: None,
+            base: None,
         }
     }
 }
 
+impl ExpOptions {
+    /// The base config a driver expands its grid from: the `base`
+    /// override (or the paper defaults) with the `--model` override
+    /// applied on top.
+    pub fn base_config(&self) -> EngineConfig {
+        let base = self.base.clone().unwrap_or_default();
+        match self.model {
+            Some(m) => base.with_model(m),
+            None => base,
+        }
+    }
+}
+
+/// The experiments whose grids shard across processes: every pool-backed
+/// driver. `table2`, `fig8` and `theory` run serial cells on a local
+/// runtime and stay single-process.
+pub const SHARDABLE: &[&str] = &[
+    "table3", "table4", "table5", "fig4", "fig5", "fig6", "fig7", "fig9", "fig10",
+];
+
 /// Run one named experiment (or `all`). One [`SimPool`] is shared by every
 /// pooled driver of this invocation, so `exp all --jobs N` compiles the XLA
 /// entry points once per worker instead of once per driver (DESIGN.md §Perf
-/// "compile once").
+/// "compile once"). With `opts.shard` set, runs only that slice of a
+/// [`SHARDABLE`] experiment's grid and writes `shard_I_of_N.json` under
+/// `opts.out_dir` instead of artifacts.
 pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
+    if opts.shard.is_some() && !SHARDABLE.contains(&which) {
+        bail!(
+            "experiment '{which}' is not shardable — --shard supports one of: {}",
+            SHARDABLE.join(", ")
+        );
+    }
     let pool = SimPool::new(opts.jobs);
-    dispatch_with(which, opts, &pool)
+    match opts.shard {
+        None => dispatch_with(which, opts, &SweepCtx::full(&pool)),
+        Some(spec) => {
+            let ctx = SweepCtx::sharded(&pool, spec);
+            dispatch_with(which, opts, &ctx)?;
+            let owned = ctx.runs_owned();
+            let path =
+                ctx.write_shard_file(which, opts_to_json(opts), Path::new(&opts.out_dir))?;
+            eprintln!("[shard {spec} of {which}: {owned} runs -> {}]", path.display());
+            Ok(())
+        }
+    }
 }
 
-fn dispatch_with(which: &str, opts: &ExpOptions, pool: &SimPool) -> Result<()> {
+/// Merge a shard directory produced by `fogml exp <name> --shard I/N`:
+/// validate the set, then replay the driver against the recorded runs so
+/// every artifact lands in `out_dir` (default: the shard directory
+/// itself) byte-identical to an unsharded run. Driver options are
+/// reconstructed from the shard files.
+pub fn merge(dir: &str, out_dir: Option<&str>) -> Result<()> {
+    let set = shard::load_shard_set(Path::new(dir))?;
+    let mut opts = opts_from_json(&set.opts)
+        .map_err(|e| anyhow!("reconstructing options from {dir}: {e}"))?;
+    opts.out_dir = out_dir.unwrap_or(dir).to_string();
+    merge_set(set, &opts)
+}
+
+/// [`merge`] with caller-supplied options — the library/test entry point
+/// for grids that were sharded under an `ExpOptions::base` override
+/// (which the shard files record only by fingerprint). The options must
+/// reproduce the sharded grid exactly; any drift fails the per-run
+/// fingerprint validation.
+pub fn merge_with_opts(dir: &str, opts: &ExpOptions) -> Result<()> {
+    merge_set(shard::load_shard_set(Path::new(dir))?, opts)
+}
+
+fn merge_set(set: shard::ShardSet, opts: &ExpOptions) -> Result<()> {
+    if !SHARDABLE.contains(&set.experiment.as_str()) {
+        bail!("shard set names experiment '{}', which is not shardable", set.experiment);
+    }
+    eprintln!(
+        "[merging {} runs of {} from {} shard(s)]",
+        set.runs.len(),
+        set.experiment,
+        set.count
+    );
+    // merge replays recorded outputs — the pool spawns no PJRT runtime
+    // because no compute request ever reaches it
+    let pool = SimPool::new(1);
+    let ctx = SweepCtx::merged(&pool, set.runs);
+    dispatch_with(&set.experiment, opts, &ctx)?;
+    ctx.finish_merge()
+}
+
+fn opts_to_json(o: &ExpOptions) -> Json {
+    Json::obj(vec![
+        ("seeds", Json::from(o.seeds)),
+        (
+            "model",
+            match o.model {
+                None => Json::Null,
+                Some(ModelKind::Mlp) => Json::from("mlp"),
+                Some(ModelKind::Cnn) => Json::from("cnn"),
+            },
+        ),
+        ("curve", Json::from(o.curve)),
+        (
+            "eval_schedule",
+            Json::from(match o.eval_schedule {
+                EvalSchedule::Full => "full".to_string(),
+                EvalSchedule::Subset { shards } => format!("subset:{shards}"),
+            }),
+        ),
+    ])
+}
+
+fn opts_from_json(j: &Json) -> Result<ExpOptions> {
+    let mut opts = ExpOptions::default();
+    opts.seeds = j
+        .get("seeds")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("shard opts: missing 'seeds'"))?;
+    opts.model = match j.get("model") {
+        None | Some(Json::Null) => None,
+        Some(m) => Some(ModelKind::parse(
+            m.as_str().ok_or_else(|| anyhow!("shard opts: 'model' not a string"))?,
+        )?),
+    };
+    opts.curve = matches!(j.get("curve"), Some(Json::Bool(true)));
+    opts.eval_schedule = EvalSchedule::parse(
+        j.get("eval_schedule").and_then(Json::as_str).unwrap_or("full"),
+    )?;
+    Ok(opts)
+}
+
+fn dispatch_with(which: &str, opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
     let started = std::time::Instant::now();
     match which {
         "table2" => table2::run(opts)?,
-        "table3" => table3::run(opts, pool)?,
-        "table4" => table4::run(opts, pool)?,
-        "table5" => table5::run(opts)?,
-        "fig4" => fig4::run(opts)?,
-        "fig5" => fig5_7::run_fig5(opts, pool)?,
-        "fig6" => fig5_7::run_fig6(opts, pool)?,
-        "fig7" => fig5_7::run_fig7(opts, pool)?,
+        "table3" => table3::run(opts, ctx)?,
+        "table4" => table4::run(opts, ctx)?,
+        "table5" => table5::run(opts, ctx)?,
+        "fig4" => fig4::run(opts, ctx)?,
+        "fig5" => fig5_7::run_fig5(opts, ctx)?,
+        "fig6" => fig5_7::run_fig6(opts, ctx)?,
+        "fig7" => fig5_7::run_fig7(opts, ctx)?,
         "fig8" => fig8::run(opts)?,
-        "fig9" => fig9_10::run_fig9(opts, pool)?,
-        "fig10" => fig9_10::run_fig10(opts, pool)?,
+        "fig9" => fig9_10::run_fig9(opts, ctx)?,
+        "fig10" => fig9_10::run_fig10(opts, ctx)?,
         "theory" => theory::run(opts)?,
         "all" => {
             for name in [
                 "table2", "table3", "table4", "table5", "fig4", "fig5", "fig6",
                 "fig7", "fig8", "fig9", "fig10", "theory",
             ] {
-                dispatch_with(name, opts, pool)?;
+                dispatch_with(name, opts, ctx)?;
             }
         }
         other => bail!("unknown experiment '{other}'"),
     }
     eprintln!("[{which} done in {:.1?}]", started.elapsed());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opts_round_trip_through_json() {
+        let mut o = ExpOptions::default();
+        o.seeds = 5;
+        o.model = Some(ModelKind::Cnn);
+        o.curve = true;
+        o.eval_schedule = EvalSchedule::Subset { shards: 4 };
+        let back = opts_from_json(&opts_to_json(&o)).unwrap();
+        assert_eq!(back.seeds, 5);
+        assert_eq!(back.model, Some(ModelKind::Cnn));
+        assert!(back.curve);
+        assert_eq!(back.eval_schedule, EvalSchedule::Subset { shards: 4 });
+
+        let d = opts_from_json(&opts_to_json(&ExpOptions::default())).unwrap();
+        assert_eq!(d.seeds, 3);
+        assert_eq!(d.model, None);
+        assert!(!d.curve);
+        assert_eq!(d.eval_schedule, EvalSchedule::Full);
+    }
+
+    #[test]
+    fn shard_rejects_non_shardable() {
+        let opts = ExpOptions {
+            shard: Some(ShardSpec { index: 1, count: 2 }),
+            ..Default::default()
+        };
+        for which in ["table2", "fig8", "theory", "all"] {
+            let err = dispatch(which, &opts).unwrap_err().to_string();
+            assert!(err.contains("not shardable") || err.contains("unknown"), "{which}: {err}");
+        }
+    }
+
+    #[test]
+    fn base_config_applies_model_on_top() {
+        let tiny = EngineConfig::default().with(|c| c.n = 4);
+        let opts = ExpOptions {
+            base: Some(tiny),
+            model: Some(ModelKind::Cnn),
+            ..Default::default()
+        };
+        let base = opts.base_config();
+        assert_eq!(base.n, 4);
+        assert_eq!(base.model, ModelKind::Cnn);
+        assert_eq!(base.lr, crate::config::default_lr(ModelKind::Cnn));
+    }
 }

@@ -12,13 +12,14 @@
 //! A ≈ B ≈ C > D ≈ E, with non-iid uniformly below iid.
 //!
 //! All (setting × {iid, non-iid} × seed) runs fan out through one
-//! [`SimPool`] batch.
+//! [`crate::coordinator::SimPool`] batch, and shard across processes
+//! via `--shard I/N` ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
 use crate::config::{CapacityPolicy, EngineConfig, InfoMode, Method};
-use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, run_avg_iid_pairs};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::run_avg_iid_pairs;
 use crate::experiments::ExpOptions;
 use crate::util::table::{fnum, pct, Table};
 
@@ -43,15 +44,14 @@ pub fn settings(base: &EngineConfig) -> Vec<(&'static str, EngineConfig)> {
     ]
 }
 
-pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+/// Run Table III. Routes runs and output through `ctx`, so the same code
+/// serves full, `--shard I/N` and `fogml merge` invocations.
+pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
 
     let named = settings(&base);
     let cfgs: Vec<EngineConfig> = named.iter().map(|(_, cfg)| cfg.clone()).collect();
-    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
+    let pairs = run_avg_iid_pairs(ctx, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         "Table III — settings A–E: accuracy and network costs",
@@ -73,5 +73,5 @@ pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         ]);
     }
 
-    emit(&table, &opts.out_dir, "table3")
+    ctx.emit_table(&table, &opts.out_dir, "table3")
 }

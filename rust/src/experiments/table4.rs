@@ -6,22 +6,22 @@
 //! `f/√G` on both cost and accuracy.
 //!
 //! All (model × setting × {iid, non-iid} × seed) runs fan out through one
-//! [`SimPool`] batch.
+//! [`crate::coordinator::SimPool`] batch, and shard across processes
+//! via `--shard I/N` ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
 use crate::config::{CapacityPolicy, EngineConfig};
-use crate::coordinator::SimPool;
-use crate::experiments::common::{emit, run_avg_iid_pairs};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::run_avg_iid_pairs;
 use crate::experiments::ExpOptions;
 use crate::movement::DiscardModel;
 use crate::util::table::{fnum, pct, Table};
 
-pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+/// Run Table IV. Routes runs and output through `ctx`, so the same code
+/// serves full, `--shard I/N` and `fogml merge` invocations.
+pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
 
     let mut rows: Vec<(&'static str, &'static str, EngineConfig)> = Vec::new();
     for (model, label) in [
@@ -41,7 +41,7 @@ pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
     }
 
     let cfgs: Vec<EngineConfig> = rows.iter().map(|(_, _, cfg)| cfg.clone()).collect();
-    let pairs = run_avg_iid_pairs(pool, &cfgs, opts.seeds)?;
+    let pairs = run_avg_iid_pairs(ctx, &cfgs, opts.seeds)?;
 
     let mut table = Table::new(
         "Table IV — discard-cost model comparison (settings B and D)",
@@ -61,5 +61,5 @@ pub fn run(opts: &ExpOptions, pool: &SimPool) -> Result<()> {
         ]);
     }
 
-    emit(&table, &opts.out_dir, "table4")
+    ctx.emit_table(&table, &opts.out_dir, "table4")
 }

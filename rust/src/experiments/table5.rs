@@ -3,21 +3,23 @@
 //!
 //! Expected shape (paper): ~20% fewer active nodes per period, ≈ 6% higher
 //! unit cost, ≈ 1% accuracy decline.
+//!
+//! Both cells run through the shared [`crate::coordinator::SweepCtx`],
+//! so the driver shards across processes via `--shard I/N`
+//! ([`crate::coordinator::shard`]).
 
 use anyhow::Result;
 
 use crate::config::{Churn, EngineConfig};
-use crate::experiments::common::{emit, emit_curves, run_avg, with_eval};
+use crate::coordinator::SweepCtx;
+use crate::experiments::common::{emit_curves, run_avg_ctx, with_eval};
 use crate::experiments::ExpOptions;
-use crate::runtime::Runtime;
 use crate::util::table::{fnum, pct, Table};
 
-pub fn run(opts: &ExpOptions) -> Result<()> {
-    let rt = Runtime::load_default()?;
-    let mut base = EngineConfig::default();
-    if let Some(m) = opts.model {
-        base = base.with_model(m);
-    }
+/// Run Table V. Routes runs and output through `ctx`, so the same code
+/// serves full, `--shard I/N` and `fogml merge` invocations.
+pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
+    let base = opts.base_config();
 
     let mut table = Table::new(
         "Table V — static vs dynamic networks (p_exit = p_entry = 1%)",
@@ -35,7 +37,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     // (how churn bends the curve, not just the endpoint — §V-E)
     let mut curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
     for (name, cfg) in [("Static", static_cfg), ("Dynamic", dynamic_cfg)] {
-        let (avg, _) = run_avg(&rt, &cfg, opts.seeds)?;
+        let (avg, _) = run_avg_ctx(ctx, &cfg, opts.seeds)?;
         table.row(vec![
             name.to_string(),
             pct(avg.accuracy),
@@ -48,10 +50,10 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         curves.push((name.to_string(), avg.curve));
     }
 
-    emit(&table, &opts.out_dir, "table5")?;
+    ctx.emit_table(&table, &opts.out_dir, "table5")?;
     let series: Vec<(String, &[(usize, f64)])> = curves
         .iter()
         .map(|(label, c)| (label.clone(), c.as_slice()))
         .collect();
-    emit_curves(&series, &opts.out_dir, "table5")
+    emit_curves(ctx, &series, &opts.out_dir, "table5")
 }

@@ -51,7 +51,12 @@ use crate::util::rng::Rng;
 pub type Params = Vec<HostTensor>;
 
 /// Everything an experiment driver needs from one run.
-#[derive(Debug, Clone)]
+///
+/// `Default` exists for the sweep-sharding placeholder path
+/// ([`crate::coordinator::shard::SweepCtx::run_many`] returns zeroed
+/// outputs for runs another shard owns) — a default output never feeds a
+/// real artifact.
+#[derive(Debug, Clone, Default)]
 pub struct EngineOutput {
     /// Final test accuracy of the global model.
     pub accuracy: f64,

@@ -28,9 +28,14 @@
 //!   ([`fed::session`]) over pluggable compute backends, local updates,
 //!   evaluation planning ([`fed::eval`]), weighted aggregation, ledger.
 //! * [`coordinator`] — thread-based runtime service, the [`coordinator::pool::SimPool`]
-//!   (config, seed) fan-out, and the leader/worker cluster actors.
+//!   (config, seed) fan-out, cross-process sweep sharding
+//!   ([`coordinator::shard`]: `--shard I/N` + `fogml merge` reassemble a
+//!   grid bit-identically across machines), and the leader/worker
+//!   cluster actors.
 //! * [`experiments`] — drivers that regenerate every table and figure
-//!   (sweeps fan out through the pool; `--jobs N`).
+//!   (sweeps fan out through the pool via `--jobs N`, and across
+//!   processes via `--shard`; see EXPERIMENTS.md for the command ↔
+//!   artifact map).
 
 pub mod bench;
 pub mod cli;

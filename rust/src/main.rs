@@ -13,12 +13,22 @@
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
+//!             [--shard I/N]
+//! fogml merge <shard-dir> [--out DIR]
 //! fogml cluster [--devices 4] [--rounds 5]
 //! ```
 //!
 //! `--jobs N` fans the sweep drivers' (config, seed) grids out over N
 //! pooled engine workers (see `coordinator::pool`); `--jobs 1` reproduces
 //! the serial numbers bit-for-bit.
+//!
+//! `--shard I/N` runs only the I-th round-robin slice of a pool-backed
+//! experiment's (config, seed) grid and writes `shard_I_of_N.json` under
+//! `--out` instead of tables/CSVs — run all N slices (any machines, any
+//! order, any `--jobs`), gather the files into one directory, then
+//! `fogml merge <dir>` validates the set (fingerprints, completeness)
+//! and regenerates every artifact byte-identical to an unsharded run
+//! (see `coordinator::shard` and EXPERIMENTS.md).
 //!
 //! `--train-path` selects how an interval's local updates execute:
 //! `auto` (default) stacks all concurrently-training devices into one
@@ -40,7 +50,7 @@ use fogml::cli::Args;
 use fogml::config::{
     CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
 };
-use fogml::coordinator::{Cluster, ClusterConfig};
+use fogml::coordinator::{Cluster, ClusterConfig, ShardSpec};
 use fogml::costs::{CostSource, Medium};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed;
@@ -60,11 +70,12 @@ fn run() -> Result<()> {
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("exp") => cmd_exp(&args),
+        Some("merge") => cmd_merge(&args),
         Some("cluster") => cmd_cluster(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (want train|exp|cluster)"),
+        Some(other) => bail!("unknown subcommand '{other}' (want train|exp|merge|cluster)"),
         None => {
             println!("fogml — Network-Aware Optimization of Distributed Learning for Fog Computing");
-            println!("usage: fogml <train|exp|cluster> [options]   (see README.md)");
+            println!("usage: fogml <train|exp|merge|cluster> [options]   (see README.md and EXPERIMENTS.md)");
             Ok(())
         }
     }
@@ -201,8 +212,20 @@ fn cmd_exp(args: &Args) -> Result<()> {
             Some(s) => EvalSchedule::parse(s)?,
             None => EvalSchedule::Full,
         },
+        shard: match args.get("shard") {
+            Some(s) => Some(ShardSpec::parse(s)?),
+            None => None,
+        },
+        base: None,
     };
     experiments::dispatch(which, &opts)
+}
+
+fn cmd_merge(args: &Args) -> Result<()> {
+    let Some(dir) = args.positional.get(1) else {
+        bail!("usage: fogml merge <shard-dir> [--out DIR]");
+    };
+    experiments::merge(dir, args.get("out"))
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {

@@ -1,0 +1,266 @@
+//! Cross-process sweep sharding: shard(N) + merge must reproduce an
+//! unsharded serial run **byte-identically** (tables and curve CSVs), and
+//! the merge must refuse incomplete or inconsistent shard sets loudly.
+//!
+//! The shard/serial equivalence tests drive real engines and therefore
+//! require `make artifacts` (like `tests/determinism.rs`); the format and
+//! validation tests are pure CPU.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use fogml::config::{EngineConfig, Method};
+use fogml::coordinator::shard::{self, RunRecord, ShardFile, ShardSpec};
+use fogml::experiments::{self, ExpOptions};
+use fogml::fed::{EngineOutput, IntervalStats, Ledger, MovementTotals};
+use fogml::util::json::Json;
+
+fn tiny_base() -> EngineConfig {
+    EngineConfig {
+        method: Method::NetworkAware,
+        n: 4,
+        t_max: 10,
+        tau: 5,
+        n_train: 400,
+        n_test: 100,
+        ..Default::default()
+    }
+}
+
+/// Fresh scratch directory per test case (removed up front so reruns
+/// never see stale shard files).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fogml_shard_{}_{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn opts(out: &Path, curve: bool) -> ExpOptions {
+    ExpOptions {
+        seeds: 2,
+        out_dir: out.to_string_lossy().into_owned(),
+        curve,
+        base: Some(tiny_base()),
+        ..Default::default()
+    }
+}
+
+fn read(dir: &Path, name: &str) -> String {
+    fs::read_to_string(dir.join(name))
+        .unwrap_or_else(|e| panic!("missing {name} in {}: {e}", dir.display()))
+}
+
+/// Serial run, N shard runs, merge — then byte-compare every artifact.
+fn assert_shard_merge_identical(which: &str, shards: usize, curve: bool, files: &[&str]) {
+    let root = scratch(&format!("{which}_{shards}"));
+
+    let serial_dir = root.join("serial");
+    experiments::dispatch(which, &opts(&serial_dir, curve)).expect("serial run");
+
+    let shard_dir = root.join("shards");
+    for i in 1..=shards {
+        let mut o = opts(&shard_dir, curve);
+        o.shard = Some(ShardSpec { index: i, count: shards });
+        experiments::dispatch(which, &o).expect("shard run");
+        assert!(
+            shard_dir.join(format!("shard_{i}_of_{shards}.json")).exists(),
+            "shard {i}/{shards} file missing"
+        );
+    }
+    // shard mode suppresses artifacts — only shard files appear
+    for f in files {
+        assert!(!shard_dir.join(f).exists(), "shard mode must not write {f}");
+    }
+
+    let merged_dir = root.join("merged");
+    experiments::merge_with_opts(shard_dir.to_str().unwrap(), &opts(&merged_dir, curve))
+        .expect("merge");
+
+    for f in files {
+        assert_eq!(
+            read(&serial_dir, f),
+            read(&merged_dir, f),
+            "{which} sharded {shards} ways: {f} not byte-identical to serial"
+        );
+    }
+}
+
+#[test]
+fn table3_shard2_and_shard3_merge_equal_serial() {
+    assert_shard_merge_identical("table3", 2, false, &["table3.csv"]);
+    assert_shard_merge_identical("table3", 3, false, &["table3.csv"]);
+}
+
+#[test]
+fn fig9_curves_shard3_merge_equal_serial() {
+    // fig9 emits both a table and a curve CSV (--curve), so this covers
+    // the curve-reassembly path end to end
+    assert_shard_merge_identical("fig9", 3, true, &["fig9_pexit.csv", "fig9_pexit_curve.csv"]);
+}
+
+// ---------------------------------------------------------------------------
+// Format round-trip + validation (pure CPU)
+// ---------------------------------------------------------------------------
+
+fn awkward_output() -> EngineOutput {
+    let mut movement = MovementTotals::default();
+    movement.push(IntervalStats { collected: 10, processed: 7, offloaded: 2, discarded: 1 });
+    movement.push(IntervalStats { collected: 0, processed: 3, offloaded: 0, discarded: 0 });
+    EngineOutput {
+        accuracy: 0.1 + 0.2, // 0.30000000000000004 — shortest-roundtrip torture
+        accuracy_curve: vec![(5, 1.0 / 3.0), (10, 0.999_999_999_999_999_9)],
+        per_device_loss: vec![
+            vec![Some(0.333_333_34_f32), None],
+            vec![None, Some(f32::NAN)],
+        ],
+        ledger: Ledger { process: 1e-17, transfer: 123_456_789.25, discard: 0.0 },
+        movement,
+        similarity: (0.25, f64::INFINITY),
+        mean_active: 3.7,
+        total_collected: 987_654_321,
+    }
+}
+
+fn assert_output_eq(a: &EngineOutput, b: &EngineOutput) {
+    assert_eq!(a.accuracy, b.accuracy, "accuracy");
+    assert_eq!(a.accuracy_curve, b.accuracy_curve, "curve");
+    assert_eq!(a.per_device_loss.len(), b.per_device_loss.len(), "loss rows");
+    for (ra, rb) in a.per_device_loss.iter().zip(&b.per_device_loss) {
+        let bits = |r: &Vec<Option<f32>>| -> Vec<Option<u32>> {
+            r.iter().map(|l| l.map(f32::to_bits)).collect()
+        };
+        // bit-compare so NaN losses count as equal too
+        assert_eq!(bits(ra), bits(rb), "losses");
+    }
+    assert_eq!(a.ledger, b.ledger, "ledger");
+    assert_eq!(a.movement.per_interval, b.movement.per_interval, "movement");
+    assert_eq!(a.similarity, b.similarity, "similarity");
+    assert_eq!(a.mean_active, b.mean_active, "mean_active");
+    assert_eq!(a.total_collected, b.total_collected, "total_collected");
+}
+
+fn opts_blob() -> Json {
+    Json::obj(vec![
+        ("seeds", Json::from(1usize)),
+        ("model", Json::Null),
+        ("curve", Json::from(false)),
+        ("eval_schedule", Json::from("full")),
+    ])
+}
+
+fn mk_file(experiment: &str, index: usize, count: usize, total: usize, grid: u64) -> ShardFile {
+    let spec = ShardSpec { index, count };
+    ShardFile {
+        experiment: experiment.into(),
+        spec,
+        total_runs: total,
+        grid_fingerprint: grid,
+        opts: opts_blob(),
+        runs: (0..total)
+            .filter(|j| spec.owns(*j))
+            .map(|j| RunRecord {
+                index: j,
+                fingerprint: 0x42 + j as u64,
+                output: EngineOutput::default(),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn shard_file_serde_round_trip() {
+    let f = ShardFile {
+        experiment: "fig9".into(),
+        spec: ShardSpec { index: 2, count: 3 },
+        total_runs: 5,
+        grid_fingerprint: u64::MAX,
+        opts: opts_blob(),
+        runs: vec![
+            RunRecord { index: 1, fingerprint: 0xdead_beef, output: awkward_output() },
+            RunRecord { index: 4, fingerprint: 7, output: EngineOutput::default() },
+        ],
+    };
+    let dir = scratch("serde");
+    let path = f.save(&dir).unwrap();
+    assert_eq!(path.file_name().unwrap().to_str(), Some("shard_2_of_3.json"));
+
+    let back = ShardFile::load(&path).unwrap();
+    assert_eq!(back.experiment, "fig9");
+    assert_eq!(back.spec, f.spec);
+    assert_eq!(back.total_runs, 5);
+    assert_eq!(back.grid_fingerprint, u64::MAX);
+    assert_eq!(back.opts, f.opts);
+    assert_eq!(back.runs.len(), 2);
+    for (a, b) in f.runs.iter().zip(&back.runs) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_output_eq(&a.output, &b.output);
+    }
+}
+
+#[test]
+fn load_shard_set_accepts_complete_sets() {
+    let dir = scratch("validate_ok");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    mk_file("table3", 2, 2, 4, 7).save(&dir).unwrap();
+    let set = shard::load_shard_set(&dir).unwrap();
+    assert_eq!(set.experiment, "table3");
+    assert_eq!(set.count, 2);
+    assert_eq!(set.runs.len(), 4);
+    // reassembled in canonical order regardless of per-file grouping
+    for (j, r) in set.runs.iter().enumerate() {
+        assert_eq!(r.index, j);
+        assert_eq!(r.fingerprint, 0x42 + j as u64);
+    }
+}
+
+#[test]
+fn load_shard_set_rejects_missing_shard() {
+    let dir = scratch("validate_missing");
+    mk_file("table3", 1, 3, 6, 7).save(&dir).unwrap();
+    mk_file("table3", 3, 3, 6, 7).save(&dir).unwrap();
+    let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing shard"), "unhelpful error: {err}");
+}
+
+#[test]
+fn load_shard_set_rejects_fingerprint_mismatch() {
+    let dir = scratch("validate_fp");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    mk_file("table3", 2, 2, 4, 8).save(&dir).unwrap();
+    let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+    assert!(err.contains("grid fingerprint"), "unhelpful error: {err}");
+}
+
+#[test]
+fn load_shard_set_rejects_truncated_shard() {
+    let dir = scratch("validate_trunc");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    let mut f2 = mk_file("table3", 2, 2, 4, 7);
+    f2.runs.pop();
+    f2.save(&dir).unwrap();
+    let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing"), "unhelpful error: {err}");
+}
+
+#[test]
+fn load_shard_set_rejects_mixed_counts_and_empty_dirs() {
+    let dir = scratch("validate_mixed");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    mk_file("table3", 2, 3, 4, 7).save(&dir).unwrap();
+    let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+    assert!(err.contains("mixed"), "unhelpful error: {err}");
+
+    let empty = scratch("validate_empty");
+    let err = shard::load_shard_set(&empty).unwrap_err().to_string();
+    assert!(err.contains("no shard files"), "unhelpful error: {err}");
+}
+
+#[test]
+fn merge_rejects_experiment_it_cannot_replay() {
+    let dir = scratch("validate_exp");
+    mk_file("theory", 1, 1, 1, 7).save(&dir).unwrap();
+    let err = experiments::merge(dir.to_str().unwrap(), None).unwrap_err().to_string();
+    assert!(err.contains("not shardable"), "unhelpful error: {err}");
+}
