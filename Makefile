@@ -20,7 +20,7 @@ REQUIRED_ENTRIES := mlp_train mlp_eval cnn_train cnn_eval dense_micro \
 	$(foreach d,4 8 16 32,mlp_train_many_d$(d) cnn_train_many_d$(d) \
 	mlp_eval_many_d$(d) cnn_eval_many_d$(d))
 
-.PHONY: artifacts check-artifacts test-python test-rust
+.PHONY: artifacts check-artifacts test-python test-rust bench
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR)
@@ -46,3 +46,10 @@ test-python:
 
 test-rust:
 	cd rust && cargo test -q
+
+# Engine perf trajectory (DESIGN.md §Perf rule 6): emits BENCH_engine.json
+# in rust/ (plus a copy under rust/results/bench/) — serial vs pooled,
+# batched vs scalar train/eval dispatch, and the coalesced vs per-session
+# `service` section. Later perf PRs should beat and re-emit it.
+bench:
+	cd rust && cargo bench --bench bench_engine

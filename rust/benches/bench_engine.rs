@@ -12,8 +12,12 @@
 //! subsystem the same way (§Perf rule 8): a full test pass through the
 //! scalar chunk loop vs the stacked `*_eval_many_d<D>` entries, and
 //! curve-producing runs under the Full vs Subset eval schedules at
-//! n ∈ {10, 30}. Emits `BENCH_engine.json` (and a copy under
-//! `results/bench/`) so later PRs have numbers to beat.
+//! n ∈ {10, 30}. The `service` section covers the cross-session
+//! coalescing scheduler (§Perf rule 10): identical seed fan-outs through
+//! K shared services with the classic one-request-at-a-time loop vs the
+//! coalescing one, at seeds ∈ {4, 8} and services ∈ {1, 2}. Emits
+//! `BENCH_engine.json` (and a copy under `results/bench/`) so later PRs
+//! have numbers to beat.
 
 use std::time::Instant;
 
@@ -207,6 +211,45 @@ fn main() {
         ]));
     }
 
+    // -- service: coalesced vs per-session dispatch through shared
+    // services — the cross-session scheduler's reason to exist: with
+    // K < jobs services, the classic loop serializes each session's
+    // under-filled stack while the coalescer packs them into full
+    // largest-tile dispatches (§Perf rule 10)
+    let mut service_rows = Vec::new();
+    for seeds in [4usize, 8] {
+        // multi-trainee intervals so TrainMany requests actually stack
+        let cfgs = seed_sweep(&small().with(|c| c.n = 10), seeds);
+        for services in [1usize, 2] {
+            let shared = SimPool::with_services(POOL_JOBS, services);
+            shared.warm(&warm).expect("shared warmup");
+            let start = Instant::now();
+            std::hint::black_box(shared.run_many(&cfgs).expect("shared run"));
+            let shared_s = start.elapsed().as_secs_f64();
+
+            let coalesced = SimPool::coalescing(POOL_JOBS, services);
+            coalesced.warm(&warm).expect("coalesced warmup");
+            let start = Instant::now();
+            std::hint::black_box(coalesced.run_many(&cfgs).expect("coalesced run"));
+            let coalesced_s = start.elapsed().as_secs_f64();
+
+            let speedup = shared_s / coalesced_s.max(1e-9);
+            println!(
+                "service/seeds={seeds:<2} services={services} \
+                 per-session {shared_s:>7.2}s  coalesced {coalesced_s:>7.2}s  \
+                 speedup {speedup:.2}×"
+            );
+            service_rows.push(Json::obj(vec![
+                ("seeds", Json::from(seeds)),
+                ("services", Json::from(services)),
+                ("jobs", Json::from(POOL_JOBS)),
+                ("per_session_s", Json::from(shared_s)),
+                ("coalesced_s", Json::from(coalesced_s)),
+                ("coalesced_speedup", Json::from(speedup)),
+            ]));
+        }
+    }
+
     let mut rows = Vec::new();
     for seeds in [1usize, 4, 8] {
         let cfgs = seed_sweep(&small(), seeds);
@@ -257,6 +300,7 @@ fn main() {
             ("full_pass", eval_full_pass),
             ("curve", Json::Arr(eval_curve_rows)),
         ])),
+        ("service", Json::Arr(service_rows)),
     ]);
     let text = report.to_string();
     std::fs::write("BENCH_engine.json", &text).expect("write BENCH_engine.json");

@@ -197,6 +197,9 @@ mod tests {
     /// chance and every device must have contributed.
     #[test]
     fn cluster_round_trip_learns() {
+        if !crate::runtime::backend_available() {
+            return;
+        }
         let cfg = ClusterConfig { rounds: 4, ..Default::default() };
         let report = Cluster::run(&cfg).expect("cluster run");
         assert_eq!(report.round_accuracy.len(), 4);

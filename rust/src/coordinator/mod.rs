@@ -10,9 +10,14 @@
 //!
 //! * [`service`] — the runtime-service thread: model/dataset-agnostic,
 //!   with a raw [`ServiceClient`] and a bound [`RuntimeHandle`] that
-//!   implements [`crate::fed::session::Compute`].
+//!   implements [`crate::fed::session::Compute`]. Its loop is a
+//!   **coalescing scheduler** ([`ServiceConfig`]): when enabled, pending
+//!   `TrainMany`/`EvalMany` requests from different sessions pack into
+//!   shared largest-tile dispatches (DESIGN.md §Perf rule 10).
 //! * [`pool`] — [`SimPool`]: parallel fan-out of independent
-//!   (config, seed) engine runs across worker threads.
+//!   (config, seed) engine runs across worker threads — each with its own
+//!   service ([`SimPool::new`]) or over `K` shared coalescing services
+//!   ([`SimPool::coalescing`], CLI `--services K`).
 //! * [`shard`] — cross-process sweep sharding: [`SweepCtx`] splits one
 //!   experiment grid across N `fogml` processes (`--shard I/N`) and
 //!   `fogml merge` reassembles bit-identical results.
@@ -25,5 +30,5 @@ pub mod shard;
 
 pub use cluster::{Cluster, ClusterConfig, ClusterReport};
 pub use pool::SimPool;
-pub use service::{DatasetId, RuntimeHandle, RuntimeService, ServiceClient};
+pub use service::{DatasetId, RuntimeHandle, RuntimeService, ServiceClient, ServiceConfig};
 pub use shard::{ShardSpec, SweepCtx};

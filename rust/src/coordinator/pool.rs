@@ -14,6 +14,17 @@
 //! which worker or service executed it or in which order. `jobs = 1`
 //! therefore reproduces the serial `fed::run` numbers bit-for-bit, and
 //! `jobs = N` reproduces `jobs = 1` (see `tests/determinism.rs`).
+//!
+//! Shared services are the headline scale-out shape since the coalescing
+//! scheduler landed: [`SimPool::coalescing`] keeps `K < jobs` service
+//! threads whose schedulers pack concurrent sessions' `TrainMany`/
+//! `EvalMany` requests into shared largest-tile dispatches (CLI
+//! `--services K`; DESIGN.md §Perf rule 10). Outputs stay invariant to
+//! the partner sessions, the service count and the job count — only the
+//! default per-worker-service pool ([`SimPool::new`]) is additionally
+//! bit-identical to serial `fed::run` (coalesced runs agree with it
+//! within the §Perf rule 7/8 tolerances, because the tile policy
+//! differs).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -21,7 +32,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::config::EngineConfig;
-use crate::coordinator::service::{RuntimeService, ServiceClient};
+use crate::coordinator::service::{RuntimeService, ServiceClient, ServiceConfig};
 use crate::fed::session::{self, EngineOutput, Substrates};
 
 /// A pool of engine workers over shared runtime services.
@@ -39,16 +50,34 @@ impl SimPool {
         Self::with_services(jobs, jobs)
     }
 
-    /// Explicit service count: `services < jobs` makes workers share
-    /// service threads (less memory and compilation, but training requests
-    /// serialize per service — useful when the movement optimizer, not
-    /// training, dominates). `services = 1` is the fully-shared shape.
+    /// Explicit service count with the classic (non-coalescing)
+    /// scheduler: `services < jobs` makes workers share service threads
+    /// (less memory and compilation, but training requests serialize per
+    /// service). Kept for bit-compatibility with pre-scheduler releases;
+    /// the shared-service shape you normally want is
+    /// [`SimPool::coalescing`].
     pub fn with_services(jobs: usize, services: usize) -> SimPool {
+        Self::with_service_config(jobs, services, ServiceConfig::default())
+    }
+
+    /// `K` shared **coalescing** services (CLI `--services K`): each
+    /// service's scheduler drains its queue and packs concurrent
+    /// sessions' batched requests into shared largest-tile dispatches, so
+    /// under-filled per-session stacks merge into full ones instead of
+    /// serializing. Outputs are invariant to `jobs`, `services` and the
+    /// co-scheduled partners (`tests/determinism.rs`).
+    pub fn coalescing(jobs: usize, services: usize) -> SimPool {
+        Self::with_service_config(jobs, services, ServiceConfig::coalescing())
+    }
+
+    /// The general constructor: `jobs` workers over `services` service
+    /// threads, each spawned with `cfg`.
+    pub fn with_service_config(jobs: usize, services: usize, cfg: ServiceConfig) -> SimPool {
         let jobs = jobs.max(1);
         let services = services.clamp(1, jobs);
         SimPool {
             jobs,
-            services: (0..services).map(|_| RuntimeService::spawn_shared()).collect(),
+            services: (0..services).map(|_| RuntimeService::spawn_with(cfg)).collect(),
         }
     }
 
@@ -148,6 +177,9 @@ mod tests {
     /// of the same configs bit-for-bit.
     #[test]
     fn pool_preserves_order_and_determinism() {
+        if !crate::runtime::backend_available() {
+            return;
+        }
         let cfgs: Vec<EngineConfig> = (1..=4).map(tiny).collect();
         let pool = SimPool::new(2);
         let pooled = pool.run_many(&cfgs).expect("pooled runs");

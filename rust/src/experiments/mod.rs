@@ -58,6 +58,17 @@ pub struct ExpOptions {
     /// pass, or rotating seeded subsets for ≈K× cheaper curves
     /// (`fed::eval::EvalSchedule`).
     pub eval_schedule: EvalSchedule,
+    /// Share `K` **coalescing** runtime services across the pool's
+    /// workers instead of one classic service per worker
+    /// (`--services K`; [`SimPool::coalescing`]): concurrent sessions'
+    /// batched train/eval requests pack into shared largest-tile
+    /// dispatches. Outputs are invariant to `K`, to `jobs` and to the
+    /// co-scheduled partners, and agree with the default per-worker
+    /// services within the DESIGN.md §Perf rule 7/8 tolerances (the tile
+    /// policy differs) — which is why the value is recorded in the shard
+    /// opts blob: `fogml merge` refuses to mix shards run under
+    /// different service modes.
+    pub services: Option<usize>,
     /// Run only this round-robin slice of the grid and write a shard
     /// file instead of artifacts (`--shard I/N`; see
     /// [`crate::coordinator::shard`]). Only the pool-backed drivers
@@ -79,6 +90,7 @@ impl Default for ExpOptions {
             jobs: 1,
             curve: false,
             eval_schedule: EvalSchedule::Full,
+            services: None,
             shard: None,
             base: None,
         }
@@ -118,7 +130,10 @@ pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
             SHARDABLE.join(", ")
         );
     }
-    let pool = SimPool::new(opts.jobs);
+    let pool = match opts.services {
+        None => SimPool::new(opts.jobs),
+        Some(k) => SimPool::coalescing(opts.jobs, k),
+    };
     match opts.shard {
         None => dispatch_with(which, opts, &SweepCtx::full(&pool)),
         Some(spec) => {
@@ -192,6 +207,13 @@ fn opts_to_json(o: &ExpOptions) -> Json {
                 EvalSchedule::Subset { shards } => format!("subset:{shards}"),
             }),
         ),
+        (
+            "services",
+            match o.services {
+                None => Json::Null,
+                Some(k) => Json::from(k),
+            },
+        ),
     ])
 }
 
@@ -211,6 +233,9 @@ fn opts_from_json(j: &Json) -> Result<ExpOptions> {
     opts.eval_schedule = EvalSchedule::parse(
         j.get("eval_schedule").and_then(Json::as_str).unwrap_or("full"),
     )?;
+    // absent (pre-scheduler shard files) and explicit null both mean the
+    // default per-worker services
+    opts.services = j.get("services").and_then(Json::as_usize);
     Ok(opts)
 }
 
@@ -254,17 +279,20 @@ mod tests {
         o.model = Some(ModelKind::Cnn);
         o.curve = true;
         o.eval_schedule = EvalSchedule::Subset { shards: 4 };
+        o.services = Some(2);
         let back = opts_from_json(&opts_to_json(&o)).unwrap();
         assert_eq!(back.seeds, 5);
         assert_eq!(back.model, Some(ModelKind::Cnn));
         assert!(back.curve);
         assert_eq!(back.eval_schedule, EvalSchedule::Subset { shards: 4 });
+        assert_eq!(back.services, Some(2));
 
         let d = opts_from_json(&opts_to_json(&ExpOptions::default())).unwrap();
         assert_eq!(d.seeds, 3);
         assert_eq!(d.model, None);
         assert!(!d.curve);
         assert_eq!(d.eval_schedule, EvalSchedule::Full);
+        assert_eq!(d.services, None);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::data::dataset::Dataset;
 use crate::fed::session::{Compute, Params};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
@@ -107,6 +108,16 @@ pub struct EvalWork {
     pub params: Vec<HostTensor>,
     pub samples: Vec<u32>,
     pub accuracy: Option<f64>,
+}
+
+/// A batched eval work unit from any origin: the test set its chunks
+/// stage from plus the work, scored in place. The eval twin of
+/// [`crate::fed::trainer::TrainUnit`] — one stacked dispatch can mix
+/// evaluations from several sessions' test sets (the coalescing
+/// runtime-service scheduler, DESIGN.md §Perf rule 10).
+pub struct EvalUnit<'a> {
+    pub ds: &'a Dataset,
+    pub work: &'a mut EvalWork,
 }
 
 /// A run's materialized evaluation schedule: which test indices each

@@ -17,6 +17,6 @@ pub mod trainer;
 
 pub use accounting::{IntervalStats, Ledger, MovementTotals};
 pub use engine::{run, EngineOutput};
-pub use eval::{EvalPath, EvalPlan, EvalSchedule, EvalWork};
+pub use eval::{EvalPath, EvalPlan, EvalSchedule, EvalUnit, EvalWork};
 pub use session::{Compute, LocalCompute, Session, SessionState, Substrates};
-pub use trainer::{DeviceWork, Trainer};
+pub use trainer::{DeviceWork, TileFill, TrainUnit, Trainer};

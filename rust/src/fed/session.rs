@@ -1104,6 +1104,55 @@ mod tests {
         assert_eq!(counter.get(), points, "one evaluate_many dispatch per point");
     }
 
+    /// Under a batched train path the session issues exactly one
+    /// `train_interval_many` dispatch per interval with trainees — the
+    /// contract the coalescing runtime-service scheduler builds on: one
+    /// `TrainMany` request per session-interval is what the service can
+    /// pack across sessions (DESIGN.md §Perf rule 10).
+    #[test]
+    fn one_train_dispatch_per_interval() {
+        use std::cell::Cell;
+        struct CountingCompute<'a> {
+            many: &'a Cell<usize>,
+        }
+        impl Compute for CountingCompute<'_> {
+            fn init_params(&self, seed: u64) -> Result<Params> {
+                StubCompute.init_params(seed)
+            }
+            fn train_interval(
+                &self,
+                params: &mut Params,
+                samples: &[u32],
+            ) -> Result<Option<f32>> {
+                StubCompute.train_interval(params, samples)
+            }
+            fn train_interval_many(&self, work: &mut [DeviceWork]) -> Result<()> {
+                self.many.set(self.many.get() + 1);
+                for w in work.iter_mut() {
+                    w.loss = self.train_interval(&mut w.params, &w.samples)?;
+                }
+                Ok(())
+            }
+            fn evaluate(&self, params: &[HostTensor]) -> Result<f64> {
+                StubCompute.evaluate(params)
+            }
+        }
+
+        let cfg = stub_cfg(Method::NetworkAware)
+            .with(|c| c.train_path = TrainPath::Batched);
+        let sub = Substrates::derive(&cfg);
+        let counter = Cell::new(0);
+        let out = run_with(&cfg, &sub, CountingCompute { many: &counter }).unwrap();
+        // every interval with at least one trainee dispatched exactly once
+        let training_intervals = out
+            .per_device_loss
+            .iter()
+            .filter(|row| row.iter().any(Option::is_some))
+            .count();
+        assert!(training_intervals > 0);
+        assert_eq!(counter.get(), training_intervals);
+    }
+
     /// The centralized baseline routes its curve through the same planner.
     #[test]
     fn centralized_curve_goes_through_planner() {

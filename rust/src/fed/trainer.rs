@@ -15,6 +15,16 @@
 //! sample weights, which the same padding invariance turns into exact
 //! no-ops (loss 0, zero gradient). See DESIGN.md §Perf rule 7.
 //!
+//! Slot packing is **origin-agnostic**: the general entry points
+//! ([`Trainer::train_interval_units`], [`Trainer::evaluate_units`]) take
+//! [`TrainUnit`]/[`EvalUnit`] lists where every slot carries its own
+//! dataset reference, so one stacked dispatch can mix work from multiple
+//! sessions (the coalescing runtime-service scheduler, DESIGN.md §Perf
+//! rule 10). The single-session methods are thin wrappers that tag every
+//! slot with the same dataset. [`TileFill`] picks the tile policy:
+//! `Smallest` (per-session default) or `Largest` (the coalescer's
+//! partner-invariance contract).
+//!
 //! Evaluation mirrors the split: [`Trainer::evaluate_subset`] is the
 //! scalar one-call-per-chunk path, [`Trainer::evaluate_many`] stacks
 //! (params, chunk) slots through the batched `*_eval_many_d<D>` entries
@@ -26,7 +36,7 @@ use std::cell::RefCell;
 use anyhow::Result;
 
 use crate::data::dataset::{Dataset, IMG_PIXELS, NUM_CLASSES};
-use crate::fed::eval::{EvalPath, EvalWork};
+use crate::fed::eval::{EvalPath, EvalUnit, EvalWork};
 use crate::runtime::model::Executable;
 use crate::runtime::{literal_from_slice, HostTensor, ModelKind, Runtime};
 
@@ -38,6 +48,60 @@ pub struct DeviceWork {
     pub params: Vec<HostTensor>,
     pub samples: Vec<u32>,
     pub loss: Option<f32>,
+}
+
+/// A batched train work unit from any origin: the dataset its chunks stage
+/// from plus the device work, updated in place. The cross-session
+/// generalization of a `&mut [DeviceWork]` slice — every slot of a stacked
+/// dispatch can come from a different session's dataset (DESIGN.md §Perf
+/// rule 10).
+pub struct TrainUnit<'a> {
+    pub ds: &'a Dataset,
+    pub work: &'a mut DeviceWork,
+}
+
+/// Tile-selection policy for the batched `*_many_d<D>` entries.
+///
+/// Routing through a different compiled tile is a perf decision with the
+/// rule-7/8 equivalence tolerances, never a semantic one — but *within*
+/// one policy, a slot's result is a pure function of the slot input, which
+/// is what makes `Largest` the coalescing scheduler's bit-stability
+/// contract (§Perf rule 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TileFill {
+    /// Smallest compiled tile `D >= slots` per dispatch — the per-session
+    /// default (least padding).
+    #[default]
+    Smallest,
+    /// Always the largest compiled tile: every slot executes through the
+    /// same executable no matter how many co-scheduled slots share the
+    /// dispatch, so results are invariant to partner sessions.
+    Largest,
+}
+
+/// Dispatch plan for `n` slots over the compiled tile sizes: each entry is
+/// `(slots, tile)` — how many live slots the dispatch carries and which
+/// compiled tile it requests. Pure (unit-tested without a runtime); empty
+/// when `n == 0` or no tiles are compiled (callers fall back to the scalar
+/// path).
+pub fn plan_tiles(n: usize, tiles: &[usize], fill: TileFill) -> Vec<(usize, usize)> {
+    let Some(&max) = tiles.last() else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let slots = left.min(max);
+        let tile = match fill {
+            TileFill::Smallest => {
+                tiles.iter().copied().find(|&t| t >= slots).unwrap_or(max)
+            }
+            TileFill::Largest => max,
+        };
+        out.push((slots, tile));
+        left -= slots;
+    }
+    out
 }
 
 /// Reusable staging buffers for the batched path (sized on first use to the
@@ -120,72 +184,86 @@ impl Trainer {
         Ok(Some((loss_acc / samples.len() as f64) as f32))
     }
 
-    /// One interval of local updates for several devices in lock-step:
-    /// stacked `[D × BATCH]` executions of the batched train entry, with
-    /// the stacked parameters literal-resident across all steps (exactly
-    /// like the scalar path, amortized over D devices). Devices are split
-    /// into groups of at most the largest compiled tile; each group uses
-    /// the smallest variant that fits, idle slots padded with zero sample
-    /// weights. Falls back to per-device scalar dispatch when the loaded
-    /// artifacts predate the batched entries.
+    /// One interval of local updates for several devices of *one* session
+    /// in lock-step (every slot stages from the same dataset). Thin
+    /// wrapper over [`Trainer::train_interval_units`] with the
+    /// per-session `Smallest` tile policy — bit-identical to the
+    /// pre-coalescing behavior.
     pub fn train_interval_many(
         &self,
         rt: &Runtime,
         ds: &Dataset,
         work: &mut [DeviceWork],
     ) -> Result<()> {
-        for w in work.iter_mut() {
-            w.loss = None;
+        let mut units: Vec<TrainUnit> =
+            work.iter_mut().map(|w| TrainUnit { ds, work: w }).collect();
+        self.train_interval_units(rt, &mut units, TileFill::Smallest)
+    }
+
+    /// One interval of local updates for any mix of work units in
+    /// lock-step: stacked `[D × BATCH]` executions of the batched train
+    /// entry, with the stacked parameters literal-resident across all
+    /// steps (exactly like the scalar path, amortized over D slots).
+    /// Units are split into dispatches by [`plan_tiles`] under `fill`;
+    /// idle slots are padded with zero sample weights. Each slot stages
+    /// its chunks from its own dataset, so one dispatch can carry several
+    /// sessions' devices (§Perf rule 10). Falls back to per-unit scalar
+    /// dispatch when the loaded artifacts predate the batched entries.
+    pub fn train_interval_units(
+        &self,
+        rt: &Runtime,
+        units: &mut [TrainUnit],
+        fill: TileFill,
+    ) -> Result<()> {
+        for u in units.iter_mut() {
+            u.work.loss = None;
         }
         let todo: Vec<usize> =
-            (0..work.len()).filter(|&i| !work[i].samples.is_empty()).collect();
+            (0..units.len()).filter(|&i| !units[i].work.samples.is_empty()).collect();
         if todo.is_empty() {
             return Ok(());
         }
-        let max_tile = rt.manifest.device_tiles.last().copied().unwrap_or(0);
-        if max_tile == 0 {
-            return self.train_many_fallback(ds, &todo, work);
+        let plan = plan_tiles(todo.len(), &rt.manifest.device_tiles, fill);
+        if plan.is_empty() {
+            return self.train_units_fallback(&todo, units);
         }
-        for group in todo.chunks(max_tile) {
-            match rt.train_many_executable(self.kind, group.len())? {
-                Some((d, exe)) => self.train_group(ds, &exe, d, group, work)?,
+        let mut lo = 0usize;
+        for (slots, tile) in plan {
+            let group = &todo[lo..lo + slots];
+            lo += slots;
+            match rt.train_many_executable(self.kind, tile)? {
+                Some((d, exe)) => self.train_group(&exe, d, group, units)?,
                 // tiles advertised but entries missing (hand-pruned
                 // artifact set): stay correct via the scalar path
-                None => self.train_many_fallback(ds, group, work)?,
+                None => self.train_units_fallback(group, units)?,
             }
         }
         Ok(())
     }
 
-    fn train_many_fallback(
-        &self,
-        ds: &Dataset,
-        group: &[usize],
-        work: &mut [DeviceWork],
-    ) -> Result<()> {
+    fn train_units_fallback(&self, group: &[usize], units: &mut [TrainUnit]) -> Result<()> {
         for &i in group {
-            let w = &mut work[i];
-            w.loss = self.train_interval(&mut w.params, ds, &w.samples)?;
+            let u = &mut units[i];
+            u.work.loss = self.train_interval(&mut u.work.params, u.ds, &u.work.samples)?;
         }
         Ok(())
     }
 
-    /// Drive one device group through the sized batched entry: lock-step
+    /// Drive one slot group through the sized batched entry: lock-step
     /// count is the longest chunk schedule in the group; shorter schedules
     /// ride along with zero weights (exact no-ops per padding invariance).
     fn train_group(
         &self,
-        ds: &Dataset,
         exe: &Executable,
         d: usize,
         group: &[usize],
-        work: &mut [DeviceWork],
+        units: &mut [TrainUnit],
     ) -> Result<()> {
         let n_params = self.kind.num_params();
         let b = self.batch;
         let steps = group
             .iter()
-            .map(|&i| work[i].samples.len().div_ceil(b))
+            .map(|&i| units[i].work.samples.len().div_ceil(b))
             .max()
             .unwrap_or(0);
         if steps == 0 {
@@ -195,16 +273,16 @@ impl Trainer {
         let mut ms = self.many.borrow_mut();
         let ManyScratch { x, y, w, stack, counts, loss } = &mut *ms;
 
-        // stack per-device params into [d, ...] literals; pad slots zero
+        // stack per-slot params into [d, ...] literals; pad slots zero
         let mut lit_params: Vec<xla::Literal> = Vec::with_capacity(n_params);
         for p in 0..n_params {
-            let shape = work[group[0]].params[p].shape.clone();
+            let shape = units[group[0]].work.params[p].shape.clone();
             let plen: usize = shape.iter().product();
             stack.clear();
             stack.resize(d * plen, 0.0);
             for (slot, &i) in group.iter().enumerate() {
                 stack[slot * plen..(slot + 1) * plen]
-                    .copy_from_slice(&work[i].params[p].data);
+                    .copy_from_slice(&units[i].work.params[p].data);
             }
             let mut stacked_shape = Vec::with_capacity(shape.len() + 1);
             stacked_shape.push(d);
@@ -226,7 +304,7 @@ impl Trainer {
             y.fill(0.0);
             w.fill(0.0);
             for (slot, &i) in group.iter().enumerate() {
-                let samples = &work[i].samples;
+                let samples = &units[i].work.samples;
                 let lo = step * b;
                 counts[slot] = 0;
                 if lo >= samples.len() {
@@ -238,7 +316,7 @@ impl Trainer {
                     &mut x[slot * b * IMG_PIXELS..(slot + 1) * b * IMG_PIXELS],
                     &mut y[slot * b * NUM_CLASSES..(slot + 1) * b * NUM_CLASSES],
                     &mut w[slot * b..(slot + 1) * b],
-                    ds,
+                    units[i].ds,
                     chunk,
                 );
             }
@@ -258,20 +336,20 @@ impl Trainer {
             lit_params = out;
         }
 
-        // materialize the final stacked params back into each device
+        // materialize the final stacked params back into each slot
         // (straight from the literal's data — no intermediate HostTensor)
         for (p, lit) in lit_params.iter().enumerate() {
             let full = lit.to_vec::<f32>()?;
             let plen = full.len() / d;
             for (slot, &i) in group.iter().enumerate() {
-                work[i].params[p]
+                units[i].work.params[p]
                     .data
                     .copy_from_slice(&full[slot * plen..(slot + 1) * plen]);
             }
         }
         for (slot, &i) in group.iter().enumerate() {
-            work[i].loss =
-                Some((loss[slot] / work[i].samples.len() as f64) as f32);
+            units[i].work.loss =
+                Some((loss[slot] / units[i].work.samples.len() as f64) as f32);
         }
         Ok(())
     }
@@ -340,21 +418,13 @@ impl Trainer {
         Ok(correct)
     }
 
-    /// Score a batch of evaluation work units, stacking `BATCH`-sized
-    /// chunks across the device axis of the batched `*_eval_many_d<D>`
-    /// entries: every slot carries one (params, chunk) pair — distinct
-    /// models, or one model replicated over many chunks — and comes back
-    /// as a weighted-correct count, so a full test pass costs
-    /// `ceil(chunks / D)` PJRT dispatches instead of `chunks`
-    /// (DESIGN.md §Perf rule 8).
-    ///
-    /// The stacked parameters are literal-resident across consecutive
-    /// groups with the same slot→work mapping (the common case: one model
-    /// evaluated over a long chunk run). Idle pad slots carry all-zero
-    /// sample weights, so they contribute exactly zero correct
-    /// predictions. `EvalPath::Scalar` — and artifact sets predating the
-    /// batched eval entries — fall back to [`Trainer::evaluate_subset`]
-    /// per unit, which is bit-identical to the pre-subsystem behavior.
+    /// Score a batch of one session's evaluation work units (every unit
+    /// reads the same test set), honoring `path`. Thin wrapper over
+    /// [`Trainer::evaluate_units`] with the per-session `Smallest` tile
+    /// policy — bit-identical to the pre-coalescing behavior.
+    /// `EvalPath::Scalar` — and artifact sets predating the batched eval
+    /// entries — fall back to [`Trainer::evaluate_subset`] per unit,
+    /// which is bit-identical to the pre-subsystem behavior.
     pub fn evaluate_many(
         &self,
         rt: &Runtime,
@@ -362,58 +432,103 @@ impl Trainer {
         work: &mut [EvalWork],
         path: EvalPath,
     ) -> Result<()> {
-        for w in work.iter_mut() {
-            w.accuracy = None;
-        }
         let b = self.batch;
-        // flatten every work item into (item, chunk offset) units
-        let units: Vec<(usize, usize)> = work
-            .iter()
-            .enumerate()
-            .flat_map(|(i, w)| {
-                (0..w.samples.len().div_ceil(b)).map(move |c| (i, c * b))
-            })
-            .collect();
+        let n_units: usize =
+            work.iter().map(|w| w.samples.len().div_ceil(b)).sum();
         let batched = match path {
             EvalPath::Scalar => false,
             EvalPath::Batched => true,
-            EvalPath::Auto => units.len() > 1,
+            EvalPath::Auto => n_units > 1,
         };
-        let max_tile = rt.manifest.device_tiles.last().copied().unwrap_or(0);
-        if !batched || max_tile == 0 {
+        if !batched {
+            for w in work.iter_mut() {
+                w.accuracy = None;
+            }
             return self.eval_many_fallback(ds, work);
+        }
+        let mut units: Vec<EvalUnit> =
+            work.iter_mut().map(|w| EvalUnit { ds, work: w }).collect();
+        self.evaluate_units(rt, &mut units, TileFill::Smallest)
+    }
+
+    /// Score eval work units from any mix of origins, stacking
+    /// `BATCH`-sized chunks across the device axis of the batched
+    /// `*_eval_many_d<D>` entries: every slot carries one (params, chunk)
+    /// pair — distinct models, or one model replicated over many chunks —
+    /// and comes back as a weighted-correct count, so a full test pass
+    /// costs `ceil(chunks / D)` PJRT dispatches instead of `chunks`
+    /// (DESIGN.md §Perf rule 8). Each slot stages from its own unit's
+    /// dataset, so one dispatch can carry several sessions' evaluations
+    /// (§Perf rule 10); `fill` picks the tile policy.
+    ///
+    /// The stacked parameters are literal-resident across consecutive
+    /// groups with the same slot→unit mapping (the common case: one model
+    /// evaluated over a long chunk run). Idle pad slots carry all-zero
+    /// sample weights, so they contribute exactly zero correct
+    /// predictions. Artifact sets predating the batched eval entries fall
+    /// back to the scalar path per unit.
+    pub fn evaluate_units(
+        &self,
+        rt: &Runtime,
+        units: &mut [EvalUnit],
+        fill: TileFill,
+    ) -> Result<()> {
+        for u in units.iter_mut() {
+            u.work.accuracy = None;
+        }
+        let b = self.batch;
+        // flatten every unit into (unit, chunk offset) slots
+        let slots: Vec<(usize, usize)> = units
+            .iter()
+            .enumerate()
+            .flat_map(|(i, u)| {
+                (0..u.work.samples.len().div_ceil(b)).map(move |c| (i, c * b))
+            })
+            .collect();
+        let plan = plan_tiles(slots.len(), &rt.manifest.device_tiles, fill);
+        if plan.is_empty() && !slots.is_empty() {
+            // no compiled tiles at all: scalar per unit
+            for u in units.iter_mut() {
+                u.work.accuracy =
+                    Some(self.evaluate_subset(&u.work.params, u.ds, &u.work.samples)?);
+            }
+            return Ok(());
         }
 
         let n_params = self.kind.num_params();
-        let mut correct = vec![0f64; work.len()];
-        // per-item scalar literals, built lazily for per-group fallback
+        let mut correct = vec![0f64; units.len()];
+        // per-unit scalar literals, built lazily for per-group fallback
         let mut scalar_lits: Vec<Option<Vec<xla::Literal>>> =
-            work.iter().map(|_| None).collect();
+            units.iter().map(|_| None).collect();
 
         let mut ms = self.many.borrow_mut();
         let ManyScratch { x, y, w: wt, stack, .. } = &mut *ms;
         let mut lit_params: Vec<xla::Literal> = Vec::new();
         let mut lit_key: (usize, Vec<usize>) = (0, Vec::new());
 
-        for group in units.chunks(max_tile) {
-            let Some((d, exe)) = rt.eval_many_executable(self.kind, group.len())?
+        let mut cursor = 0usize;
+        for (count, tile) in plan {
+            let group = &slots[cursor..cursor + count];
+            cursor += count;
+            let Some((d, exe)) = rt.eval_many_executable(self.kind, tile)?
             else {
                 // this tile's entries missing (hand-pruned artifact set):
                 // stay correct via the scalar path for the group
                 for &(i, lo) in group {
                     if scalar_lits[i].is_none() {
                         scalar_lits[i] = Some(
-                            work[i]
+                            units[i]
+                                .work
                                 .params
                                 .iter()
                                 .map(HostTensor::to_literal)
                                 .collect::<Result<_>>()?,
                         );
                     }
-                    let samples = &work[i].samples;
+                    let samples = &units[i].work.samples;
                     let chunk = &samples[lo..(lo + b).min(samples.len())];
                     correct[i] += self.count_chunk(
-                        ds,
+                        units[i].ds,
                         chunk,
                         scalar_lits[i].as_ref().unwrap(),
                     )? as f64;
@@ -422,18 +537,18 @@ impl Trainer {
             };
 
             // stack per-slot params; reuse the literals when this group's
-            // slot→item mapping matches the previous group's
+            // slot→unit mapping matches the previous group's
             let items: Vec<usize> = group.iter().map(|&(i, _)| i).collect();
             if lit_params.is_empty() || lit_key.0 != d || lit_key.1 != items {
                 lit_params.clear();
                 for p in 0..n_params {
-                    let shape = work[items[0]].params[p].shape.clone();
+                    let shape = units[items[0]].work.params[p].shape.clone();
                     let plen: usize = shape.iter().product();
                     stack.clear();
                     stack.resize(d * plen, 0.0);
                     for (slot, &i) in items.iter().enumerate() {
                         stack[slot * plen..(slot + 1) * plen]
-                            .copy_from_slice(&work[i].params[p].data);
+                            .copy_from_slice(&units[i].work.params[p].data);
                     }
                     let mut stacked_shape = Vec::with_capacity(shape.len() + 1);
                     stacked_shape.push(d);
@@ -450,13 +565,13 @@ impl Trainer {
             y.fill(0.0);
             wt.fill(0.0);
             for (slot, &(i, lo)) in group.iter().enumerate() {
-                let samples = &work[i].samples;
+                let samples = &units[i].work.samples;
                 let chunk = &samples[lo..(lo + b).min(samples.len())];
                 stage_rows(
                     &mut x[slot * b * IMG_PIXELS..(slot + 1) * b * IMG_PIXELS],
                     &mut y[slot * b * NUM_CLASSES..(slot + 1) * b * NUM_CLASSES],
                     &mut wt[slot * b..(slot + 1) * b],
-                    ds,
+                    units[i].ds,
                     chunk,
                 );
             }
@@ -472,11 +587,11 @@ impl Trainer {
             }
         }
 
-        for (i, w) in work.iter_mut().enumerate() {
-            w.accuracy = Some(if w.samples.is_empty() {
+        for (i, u) in units.iter_mut().enumerate() {
+            u.work.accuracy = Some(if u.work.samples.is_empty() {
                 0.0
             } else {
-                correct[i] / w.samples.len() as f64
+                correct[i] / u.work.samples.len() as f64
             });
         }
         Ok(())
@@ -531,19 +646,66 @@ fn stage_rows(x: &mut [f32], y: &mut [f32], w: &mut [f32], ds: &Dataset, chunk: 
 mod tests {
     use super::*;
     use crate::data::dataset::SynthDigits;
+    use crate::fed::eval::EvalPath;
     use crate::util::rng::Rng;
 
-    fn setup() -> (Runtime, Dataset, Dataset) {
-        let rt = Runtime::load_default().expect("run `make artifacts` first");
+    fn setup() -> Option<(Runtime, Dataset, Dataset)> {
+        let rt = crate::runtime::test_runtime()?;
         let gen = SynthDigits::new(0xF0D5);
         let mut rng = Rng::new(11);
         let (train, test) = gen.train_test(2000, 500, &mut rng);
-        (rt, train, test)
+        Some((rt, train, test))
+    }
+
+    // -- pure tile planning (no runtime needed) -----------------------------
+
+    #[test]
+    fn plan_tiles_smallest_matches_legacy_grouping() {
+        let tiles = [4usize, 8, 16, 32];
+        // n <= max tile: one dispatch through the smallest fitting tile
+        assert_eq!(plan_tiles(1, &tiles, TileFill::Smallest), vec![(1, 4)]);
+        assert_eq!(plan_tiles(4, &tiles, TileFill::Smallest), vec![(4, 4)]);
+        assert_eq!(plan_tiles(5, &tiles, TileFill::Smallest), vec![(5, 8)]);
+        assert_eq!(plan_tiles(17, &tiles, TileFill::Smallest), vec![(17, 32)]);
+        // n > max tile: chunks of the max tile, remainder smallest-fitted
+        assert_eq!(
+            plan_tiles(35, &tiles, TileFill::Smallest),
+            vec![(32, 32), (3, 4)]
+        );
+        assert_eq!(
+            plan_tiles(70, &tiles, TileFill::Smallest),
+            vec![(32, 32), (32, 32), (6, 8)]
+        );
     }
 
     #[test]
+    fn plan_tiles_largest_is_partner_invariant() {
+        let tiles = [4usize, 8, 16, 32];
+        // every dispatch requests the same (largest) tile regardless of
+        // slot count — the per-slot executable never varies with partners
+        for n in [1usize, 3, 8, 32, 33, 100] {
+            let plan = plan_tiles(n, &tiles, TileFill::Largest);
+            assert!(plan.iter().all(|&(_, t)| t == 32), "{plan:?}");
+            assert_eq!(plan.iter().map(|&(s, _)| s).sum::<usize>(), n);
+            assert!(plan.iter().all(|&(s, _)| s <= 32));
+        }
+    }
+
+    #[test]
+    fn plan_tiles_degenerate_cases() {
+        assert!(plan_tiles(0, &[4, 8], TileFill::Smallest).is_empty());
+        assert!(plan_tiles(5, &[], TileFill::Smallest).is_empty());
+        assert!(plan_tiles(5, &[], TileFill::Largest).is_empty());
+        // single compiled tile
+        assert_eq!(plan_tiles(5, &[4], TileFill::Smallest), vec![(4, 4), (1, 4)]);
+        assert_eq!(plan_tiles(5, &[4], TileFill::Largest), vec![(4, 4), (1, 4)]);
+    }
+
+    // -- runtime-backed (skip under the pure-CPU xla stub) ------------------
+
+    #[test]
     fn training_beats_chance_and_improves() {
-        let (rt, train, test) = setup();
+        let Some((rt, train, test)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         let mut params = rt.init_params(ModelKind::Mlp, 3).unwrap();
         let before = trainer.evaluate(&params, &test).unwrap();
@@ -569,7 +731,7 @@ mod tests {
 
     #[test]
     fn empty_interval_is_noop() {
-        let (rt, train, _) = setup();
+        let Some((rt, train, _)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.01).unwrap();
         let mut params = rt.init_params(ModelKind::Mlp, 4).unwrap();
         let snapshot = params.clone();
@@ -579,7 +741,7 @@ mod tests {
 
     #[test]
     fn partial_batch_trains() {
-        let (rt, train, _) = setup();
+        let Some((rt, train, _)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         let mut params = rt.init_params(ModelKind::Mlp, 5).unwrap();
         let snapshot = params.clone();
@@ -597,7 +759,7 @@ mod tests {
     /// tolerance documented in DESIGN.md §Perf rule 7.
     #[test]
     fn batched_interval_matches_scalar() {
-        let (rt, train, _) = setup();
+        let Some((rt, train, _)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         // ragged workloads: different sizes, one spanning multiple chunks,
         // one empty (must come back loss=None, params untouched)
@@ -655,13 +817,93 @@ mod tests {
         }
     }
 
+    /// Cross-origin units: the same slot input must produce bit-identical
+    /// results under `TileFill::Largest` no matter which partner slots
+    /// (from another dataset) share the dispatch — the coalescing
+    /// scheduler's §Perf rule 10 contract at the trainer level.
+    #[test]
+    fn largest_fill_units_are_partner_invariant() {
+        let Some((rt, train, test)) = setup() else { return };
+        let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
+        let samples: Vec<u32> = (0..50).collect();
+        let mk = |seed: u64| DeviceWork {
+            params: rt.init_params(ModelKind::Mlp, seed).unwrap(),
+            samples: samples.clone(),
+            loss: None,
+        };
+
+        // alone: one unit through the largest tile
+        let mut alone = mk(77);
+        {
+            let mut units = vec![TrainUnit { ds: &train, work: &mut alone }];
+            trainer
+                .train_interval_units(&rt, &mut units, TileFill::Largest)
+                .unwrap();
+        }
+
+        // with partners: same unit packed beside units from ANOTHER
+        // dataset (`test` doubles as a second session's train split here)
+        let mut together = mk(77);
+        let mut partner_a = mk(78);
+        let mut partner_b = DeviceWork {
+            params: rt.init_params(ModelKind::Mlp, 79).unwrap(),
+            samples: (0..90).collect(), // longer schedule: extra lock-steps
+            loss: None,
+        };
+        {
+            let mut units = vec![
+                TrainUnit { ds: &test, work: &mut partner_a },
+                TrainUnit { ds: &train, work: &mut together },
+                TrainUnit { ds: &test, work: &mut partner_b },
+            ];
+            trainer
+                .train_interval_units(&rt, &mut units, TileFill::Largest)
+                .unwrap();
+        }
+
+        assert_eq!(alone.loss, together.loss, "loss not partner-invariant");
+        for (p, (a, b)) in alone.params.iter().zip(&together.params).enumerate() {
+            assert_eq!(a.data, b.data, "param {p} not partner-invariant");
+        }
+
+        // and the eval twin: a unit's accuracy is invariant to partners
+        let full: Vec<u32> = (0..test.len() as u32).collect();
+        let mut ew_alone = EvalWork {
+            params: alone.params.clone(),
+            samples: full.clone(),
+            accuracy: None,
+        };
+        {
+            let mut units = vec![EvalUnit { ds: &test, work: &mut ew_alone }];
+            trainer.evaluate_units(&rt, &mut units, TileFill::Largest).unwrap();
+        }
+        let mut ew_together = EvalWork {
+            params: alone.params.clone(),
+            samples: full.clone(),
+            accuracy: None,
+        };
+        let mut ew_partner = EvalWork {
+            params: partner_a.params.clone(),
+            samples: (0..200).collect(),
+            accuracy: None,
+        };
+        {
+            let mut units = vec![
+                EvalUnit { ds: &train, work: &mut ew_partner },
+                EvalUnit { ds: &test, work: &mut ew_together },
+            ];
+            trainer.evaluate_units(&rt, &mut units, TileFill::Largest).unwrap();
+        }
+        assert_eq!(ew_alone.accuracy, ew_together.accuracy);
+    }
+
     /// Batched eval must agree with the scalar path per work item within
     /// the DESIGN.md §Perf rule 7 accuracy tolerance, across ragged
     /// sample sets (multi-chunk, partial-chunk, empty) and distinct
     /// parameter sets — including a unit count past the largest tile.
     #[test]
     fn batched_eval_matches_scalar() {
-        let (rt, train, test) = setup();
+        let Some((rt, train, test)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         // lightly train one model so logits are not near-uniform
         let mut trained = rt.init_params(ModelKind::Mlp, 21).unwrap();
@@ -740,7 +982,7 @@ mod tests {
     /// produce accuracies, and the single-unit case bit-matches scalar.
     #[test]
     fn eval_auto_single_chunk_is_scalar_exact() {
-        let (rt, _train, test) = setup();
+        let Some((rt, _train, test)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         let params = rt.init_params(ModelKind::Mlp, 2).unwrap();
         let small: Vec<u32> = (0..20).collect();
@@ -760,7 +1002,7 @@ mod tests {
     /// into several stacked executions and still update every device.
     #[test]
     fn batched_interval_splits_oversized_groups() {
-        let (rt, train, _) = setup();
+        let Some((rt, train, _)) = setup() else { return };
         let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).unwrap();
         let max_tile = *rt.manifest.device_tiles.last().unwrap();
         let n = max_tile + 3;

@@ -27,11 +27,14 @@
 //! * [`fed`] — federated engine: the session state machine
 //!   ([`fed::session`]) over pluggable compute backends, local updates,
 //!   evaluation planning ([`fed::eval`]), weighted aggregation, ledger.
-//! * [`coordinator`] — thread-based runtime service, the [`coordinator::pool::SimPool`]
-//!   (config, seed) fan-out, cross-process sweep sharding
-//!   ([`coordinator::shard`]: `--shard I/N` + `fogml merge` reassemble a
-//!   grid bit-identically across machines), and the leader/worker
-//!   cluster actors.
+//! * [`coordinator`] — thread-based runtime service with a coalescing
+//!   request scheduler ([`coordinator::service::ServiceConfig`]:
+//!   `--services K` packs concurrent sessions' batched train/eval
+//!   requests into shared largest-tile dispatches, partner-invariantly),
+//!   the [`coordinator::pool::SimPool`] (config, seed) fan-out,
+//!   cross-process sweep sharding ([`coordinator::shard`]: `--shard I/N`
+//!   + `fogml merge` reassemble a grid bit-identically across machines),
+//!   and the leader/worker cluster actors.
 //! * [`experiments`] — drivers that regenerate every table and figure
 //!   (sweeps fan out through the pool via `--jobs N`, and across
 //!   processes via `--shard`; see EXPERIMENTS.md for the command ↔

@@ -10,10 +10,11 @@
 //!             [--train-path auto|batched|scalar]
 //!             [--eval-schedule full|subset|subset:K]
 //!             [--eval-path auto|batched|scalar]
+//!             [--services K]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
-//!             [--shard I/N]
+//!             [--services K] [--shard I/N]
 //! fogml merge <shard-dir> [--out DIR]
 //! fogml cluster [--devices 4] [--rounds 5]
 //! ```
@@ -21,6 +22,17 @@
 //! `--jobs N` fans the sweep drivers' (config, seed) grids out over N
 //! pooled engine workers (see `coordinator::pool`); `--jobs 1` reproduces
 //! the serial numbers bit-for-bit.
+//!
+//! `--services K` shares K **coalescing** runtime services across the
+//! pool instead of one classic service per worker: concurrent sessions'
+//! batched train/eval requests pack into shared largest-tile XLA
+//! dispatches (DESIGN.md §Perf rule 10). Outputs are invariant to K, to
+//! `--jobs` and to whichever runs share the dispatches, and agree with
+//! the default service mode within the §Perf rule 7/8 tolerances. On
+//! `train`, `--services K` routes the single run through a coalescing
+//! service so its numbers match pooled `--services` runs bit-for-bit.
+//! The flag is recorded in shard files: `fogml merge` refuses to mix
+//! shards run under different service modes.
 //!
 //! `--shard I/N` runs only the I-th round-robin slice of a pool-backed
 //! experiment's (config, seed) grid and writes `shard_I_of_N.json` under
@@ -50,7 +62,7 @@ use fogml::cli::Args;
 use fogml::config::{
     CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
 };
-use fogml::coordinator::{Cluster, ClusterConfig, ShardSpec};
+use fogml::coordinator::{Cluster, ClusterConfig, ShardSpec, SimPool};
 use fogml::costs::{CostSource, Medium};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed;
@@ -148,9 +160,20 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::load_default()?;
     let started = std::time::Instant::now();
-    let out = fed::run(&cfg, &rt)?;
+    let out = match args.get_parsed::<usize>("services")? {
+        // route the run through a shared coalescing service: numbers
+        // match pooled `--services` runs bit-for-bit (the tile policy is
+        // the largest-fill one, not the serial smallest-fill)
+        Some(k) => {
+            let pool = SimPool::coalescing(1, k);
+            pool.run_many(std::slice::from_ref(&cfg))?.remove(0)
+        }
+        None => {
+            let rt = Runtime::load_default()?;
+            fed::run(&cfg, &rt)?
+        }
+    };
     let elapsed = started.elapsed();
 
     println!("== fogml train ==");
@@ -212,6 +235,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             Some(s) => EvalSchedule::parse(s)?,
             None => EvalSchedule::Full,
         },
+        services: args.get_parsed("services")?,
         shard: match args.get("shard") {
             Some(s) => Some(ShardSpec::parse(s)?),
             None => None,

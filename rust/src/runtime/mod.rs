@@ -15,5 +15,5 @@ pub mod model;
 pub mod tensor;
 
 pub use artifact::Manifest;
-pub use model::{ModelKind, Runtime};
+pub use model::{backend_available, test_runtime, ModelKind, Runtime};
 pub use tensor::{literal_from_slice, HostTensor};

@@ -75,7 +75,7 @@ fn assert_equivalent(a: &EngineOutput, b: &EngineOutput, label: &str) {
 
 #[test]
 fn batched_and_scalar_sessions_are_equivalent() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let scalar = run_path(&rt, TrainPath::Scalar);
     let batched = run_path(&rt, TrainPath::Batched);
     let auto = run_path(&rt, TrainPath::Auto);

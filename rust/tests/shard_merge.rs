@@ -52,7 +52,12 @@ fn read(dir: &Path, name: &str) -> String {
 }
 
 /// Serial run, N shard runs, merge — then byte-compare every artifact.
+/// Skips (returns) without an XLA backend: shard/merge drives real
+/// engines; the format and validation tests below stay pure CPU.
 fn assert_shard_merge_identical(which: &str, shards: usize, curve: bool, files: &[&str]) {
+    if !fogml::runtime::backend_available() {
+        return;
+    }
     let root = scratch(&format!("{which}_{shards}"));
 
     let serial_dir = root.join("serial");
