@@ -15,20 +15,35 @@
 //! n ∈ {10, 30}. The `service` section covers the cross-session
 //! coalescing scheduler (§Perf rule 10): identical seed fan-outs through
 //! K shared services with the classic one-request-at-a-time loop vs the
-//! coalescing one, at seeds ∈ {4, 8} and services ∈ {1, 2}. Emits
-//! `BENCH_engine.json` (and a copy under `results/bench/`) so later PRs
-//! have numbers to beat.
+//! coalescing one, at seeds ∈ {4, 8} and services ∈ {1, 2}.
+//!
+//! The `scaling` section is pure CPU — it runs (and the report is
+//! written) even when no XLA runtime artifacts are present. It sweeps the
+//! movement engine over random-geometric fog topologies at
+//! N ∈ {10², 10³, 10⁴, 10⁵} devices with 5% interval churn (§Perf rule
+//! 11): the edge-indexed sparse path at every size, the dense n×n path
+//! only where its plan still fits (N ≤ 10⁴, ~800 MB), asserting bitwise
+//! dense≡sparse agreement wherever both run, and reporting devices/sec
+//! plus resident plan bytes (O(E) vs O(n²)).
+//!
+//! Emits `BENCH_engine.json` (and a copy under `results/bench/`) so later
+//! PRs have numbers to beat.
 
 use std::time::Instant;
 
 use fogml::config::{EngineConfig, TrainPath};
 use fogml::coordinator::SimPool;
+use fogml::costs::MovementCosts;
 use fogml::experiments::common::seed_sweep;
 use fogml::fed;
 use fogml::fed::eval::{EvalPath, EvalSchedule, EvalWork};
 use fogml::fed::{Substrates, Trainer};
+use fogml::movement::{self, convex, DiscardModel, MovementProblem, SolverWorkspace};
 use fogml::runtime::{ModelKind, Runtime};
+use fogml::topology::generators::random_geometric_with_positions;
+use fogml::topology::{ActiveView, ChurnProcess, Graph};
 use fogml::util::json::Json;
+use fogml::util::rng::Rng;
 
 const POOL_JOBS: usize = 4;
 
@@ -51,8 +66,200 @@ fn runs_per_sec(runs: usize, secs: f64) -> f64 {
     }
 }
 
-fn main() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+// -- scaling: sparse movement engine at fog-population sizes ----------------
+
+/// Procedural cost oracle for the scaling sweep: O(n) memory where a dense
+/// `CostSchedule` would need `T · n²` link entries (hopeless at N = 10⁵).
+/// Link costs derive from the random-geometric node positions (longer
+/// links are pricier); capacities are unconstrained.
+#[derive(Debug)]
+struct GeoCosts {
+    compute: Vec<f64>,
+    error: Vec<f64>,
+    pos: Vec<(f64, f64)>,
+}
+
+impl MovementCosts for GeoCosts {
+    fn c_node(&self, t: usize, i: usize) -> f64 {
+        self.compute[i] * (1.0 + 0.1 * (t % 3) as f64)
+    }
+    fn c_link(&self, _t: usize, i: usize, j: usize) -> f64 {
+        let (xi, yi) = self.pos[i];
+        let (xj, yj) = self.pos[j];
+        2.0 * ((xi - xj).powi(2) + (yi - yj).powi(2)).sqrt()
+    }
+    fn f(&self, _t: usize, i: usize) -> f64 {
+        self.error[i]
+    }
+    fn cap_node_at(&self, _t: usize, _i: usize) -> f64 {
+        f64::INFINITY
+    }
+    fn cap_link_at(&self, _t: usize, _i: usize, _j: usize) -> f64 {
+        f64::INFINITY
+    }
+}
+
+const SCALING_T: usize = 5;
+/// Largest N the dense n×n plan is still benchmarked at (the plan alone is
+/// `8 n²` bytes: ~800 MB at 10⁴, 80 GB at 10⁵).
+const DENSE_MAX_N: usize = 10_000;
+
+struct ScaleOutcome {
+    secs: f64,
+    plan_bytes: usize,
+    /// Sum of per-interval objectives — exact-equality witness between the
+    /// dense and sparse paths (bit-identical solvers ⇒ identical sums).
+    checksum: f64,
+}
+
+/// Run `SCALING_T` churned movement intervals over `graph` with either
+/// backend. Both backends see identical churn and arrival streams (their
+/// RNGs are re-seeded per call).
+fn scale_run(graph: &Graph, costs: &GeoCosts, sparse: bool, ws: &mut SolverWorkspace) -> ScaleOutcome {
+    let n = graph.n();
+    let mut churn = ChurnProcess::new(n, 0.05, 0.05);
+    let mut churn_rng = Rng::new(7);
+    let mut d_rng = Rng::new(9);
+    let mut active = ActiveView::all_active(n);
+    let mut d = vec![0.0; n];
+    let inbound = vec![0.0; n];
+    let mut checksum = 0.0;
+    let start = Instant::now();
+    for t in 0..SCALING_T {
+        active.apply(churn.step(&mut churn_rng));
+        for x in d.iter_mut() {
+            *x = (d_rng.f64() * 20.0).floor();
+        }
+        let p = MovementProblem {
+            t,
+            graph,
+            active: active.as_slice(),
+            d: &d,
+            inbound_prev: &inbound,
+            costs,
+            discard_model: DiscardModel::LinearR,
+        };
+        if sparse {
+            movement::solve_sparse_with(&p, ws);
+            checksum += ws.sparse.objective(&p);
+        } else {
+            movement::solve_with(&p, ws);
+            checksum += ws.plan.objective(&p);
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let plan_bytes = if sparse { ws.sparse.heap_bytes() } else { ws.plan.heap_bytes() };
+    ScaleOutcome { secs, plan_bytes, checksum }
+}
+
+fn scaling_section() -> Json {
+    let mut rows = Vec::new();
+    for n in [100usize, 1_000, 10_000, 100_000] {
+        let mut rng = Rng::new(42);
+        // radius targets mean degree ≈ 12, so |E| = O(V) at every size
+        let radius = (12.0 / (std::f64::consts::PI * n as f64)).sqrt().min(1.0);
+        let (graph, pos) = random_geometric_with_positions(n, radius, &mut rng);
+        let costs = GeoCosts {
+            compute: (0..n).map(|_| rng.uniform(0.05, 0.6)).collect(),
+            error: (0..n).map(|_| rng.uniform(0.2, 0.9)).collect(),
+            pos,
+        };
+
+        let mut ws = SolverWorkspace::new();
+        let sparse = scale_run(&graph, &costs, true, &mut ws);
+        let sparse_dps = runs_per_sec(n * SCALING_T, sparse.secs);
+
+        let dense = (n <= DENSE_MAX_N).then(|| scale_run(&graph, &costs, false, &mut ws));
+        if let Some(dense) = &dense {
+            assert_eq!(
+                dense.checksum, sparse.checksum,
+                "dense/sparse objective sums diverged at n={n}"
+            );
+        }
+        let (dense_s, dense_bytes, speedup) = match &dense {
+            Some(d) => (Json::from(d.secs), Json::from(d.plan_bytes), Json::from(d.secs / sparse.secs.max(1e-9))),
+            None => (Json::Null, Json::from(n * n * 8 + n * 8), Json::Null),
+        };
+        println!(
+            "scaling/n={n:<6} edges={:<7} sparse {:>8.3}s ({sparse_dps:.0} devices/s, {} plan bytes)  dense {}",
+            graph.num_edges(),
+            sparse.secs,
+            sparse.plan_bytes,
+            match &dense {
+                Some(d) => format!("{:.3}s ({} plan bytes, {:.1}× slower)", d.secs, d.plan_bytes, d.secs / sparse.secs.max(1e-9)),
+                None => "skipped (plan would not fit)".to_string(),
+            }
+        );
+        rows.push(Json::obj(vec![
+            ("n", Json::from(n)),
+            ("edges", Json::from(graph.num_edges())),
+            ("intervals", Json::from(SCALING_T)),
+            ("sparse_s", Json::from(sparse.secs)),
+            ("sparse_devices_per_sec", Json::from(sparse_dps)),
+            ("sparse_plan_bytes", Json::from(sparse.plan_bytes)),
+            ("dense_s", dense_s),
+            ("dense_plan_bytes", dense_bytes),
+            ("dense_over_sparse", speedup),
+        ]));
+    }
+
+    // PGD (Sqrt model) demo at n = 1000: the convex solver's sparse mirror
+    // must match the dense one bitwise and beat it on wall clock
+    let n = 1_000;
+    let mut rng = Rng::new(43);
+    let radius = (12.0 / (std::f64::consts::PI * n as f64)).sqrt();
+    let (graph, pos) = random_geometric_with_positions(n, radius, &mut rng);
+    let costs = GeoCosts {
+        compute: (0..n).map(|_| rng.uniform(0.05, 0.6)).collect(),
+        error: (0..n).map(|_| rng.uniform(0.2, 0.9)).collect(),
+        pos,
+    };
+    let d: Vec<f64> = (0..n).map(|_| (rng.f64() * 20.0).floor()).collect();
+    let inbound = vec![0.0; n];
+    let active = vec![true; n];
+    let p = MovementProblem {
+        t: 0,
+        graph: &graph,
+        active: &active,
+        d: &d,
+        inbound_prev: &inbound,
+        costs: &costs,
+        discard_model: DiscardModel::Sqrt,
+    };
+    let opts = convex::PgdOptions { iterations: 60, step0: 0.0, tol: 0.0 };
+    let mut ws = SolverWorkspace::new();
+    let start = Instant::now();
+    convex::solve_sparse_with(&p, opts, &mut ws);
+    let pgd_sparse_s = start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    convex::solve_with(&p, opts, &mut ws);
+    let pgd_dense_s = start.elapsed().as_secs_f64();
+    assert_eq!(ws.sparse.to_dense(), ws.plan, "PGD dense/sparse plans diverged");
+    println!(
+        "scaling/pgd n={n} iters=60  sparse {pgd_sparse_s:>7.3}s  dense {pgd_dense_s:>7.3}s  \
+         speedup {:.1}×  (plans bit-identical)",
+        pgd_dense_s / pgd_sparse_s.max(1e-9)
+    );
+
+    Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("pgd_n", Json::from(n)),
+        ("pgd_iterations", Json::from(60usize)),
+        ("pgd_sparse_s", Json::from(pgd_sparse_s)),
+        ("pgd_dense_s", Json::from(pgd_dense_s)),
+    ])
+}
+
+// -- runtime-backed sections (skipped when no XLA artifacts) ----------------
+
+struct RuntimeSections {
+    rows: Vec<Json>,
+    multi_rows: Vec<Json>,
+    eval: Json,
+    service_rows: Vec<Json>,
+}
+
+fn runtime_sections(rt: &Runtime) -> RuntimeSections {
     let pool = SimPool::new(POOL_JOBS);
 
     // warmup: compile the executables on both paths before timing
@@ -61,7 +268,7 @@ fn main() {
         c.n_train = 400;
         c.n_test = 100;
     });
-    fed::run(&warm, &rt).expect("serial warmup");
+    fed::run(&warm, rt).expect("serial warmup");
     // warm every pool service (run_many's work-stealing could leave one
     // service cold, putting its XLA compilation inside the timed window)
     pool.warm(&warm).expect("pooled warmup");
@@ -72,7 +279,7 @@ fn main() {
         let base = small().with(|c| c.n = n);
         // warm both entry variants (scalar + the tile the batched path picks)
         for path in [TrainPath::Scalar, TrainPath::Batched] {
-            fed::run(&warm.clone().with(|c| { c.n = n; c.train_path = path; }), &rt)
+            fed::run(&warm.clone().with(|c| { c.n = n; c.train_path = path; }), rt)
                 .expect("path warmup");
         }
         const REPS: usize = 3;
@@ -82,7 +289,7 @@ fn main() {
             let start = Instant::now();
             for rep in 0..REPS {
                 std::hint::black_box(
-                    fed::run(&cfg.clone().seeded(1 + rep as u64), &rt).expect("bench run"),
+                    fed::run(&cfg.clone().seeded(1 + rep as u64), rt).expect("bench run"),
                 );
             }
             secs[k] = start.elapsed().as_secs_f64();
@@ -115,7 +322,7 @@ fn main() {
         c.n_test = 2000;
     });
     let sub = Substrates::derive(&eval_cfg);
-    let trainer = Trainer::new(&rt, ModelKind::Mlp, 0.05).expect("trainer");
+    let trainer = Trainer::new(rt, ModelKind::Mlp, 0.05).expect("trainer");
     let mut params = rt.init_params(ModelKind::Mlp, 1).expect("init");
     let all_train: Vec<u32> = (0..sub.train.len() as u32).collect();
     trainer
@@ -130,7 +337,7 @@ fn main() {
     // warm both eval entry variants
     trainer.evaluate_subset(&params, &sub.test, &full_test).expect("warm scalar");
     trainer
-        .evaluate_many(&rt, &sub.test, &mut eval_work, EvalPath::Batched)
+        .evaluate_many(rt, &sub.test, &mut eval_work, EvalPath::Batched)
         .expect("warm batched");
 
     const EVAL_REPS: usize = 10;
@@ -146,7 +353,7 @@ fn main() {
     let start = Instant::now();
     for _ in 0..EVAL_REPS {
         trainer
-            .evaluate_many(&rt, &sub.test, &mut eval_work, EvalPath::Batched)
+            .evaluate_many(rt, &sub.test, &mut eval_work, EvalPath::Batched)
             .expect("batched eval");
         std::hint::black_box(eval_work[0].accuracy);
     }
@@ -185,11 +392,11 @@ fn main() {
         .enumerate()
         {
             let cfg = base.clone().with(|c| c.eval_schedule = schedule);
-            fed::run(&cfg, &rt).expect("schedule warmup");
+            fed::run(&cfg, rt).expect("schedule warmup");
             let start = Instant::now();
             for rep in 0..REPS {
                 std::hint::black_box(
-                    fed::run(&cfg.clone().seeded(1 + rep as u64), &rt)
+                    fed::run(&cfg.clone().seeded(1 + rep as u64), rt)
                         .expect("curve run"),
                 );
             }
@@ -256,7 +463,7 @@ fn main() {
 
         let start = Instant::now();
         for cfg in &cfgs {
-            std::hint::black_box(fed::run(cfg, &rt).expect("serial run"));
+            std::hint::black_box(fed::run(cfg, rt).expect("serial run"));
         }
         let serial_s = start.elapsed().as_secs_f64();
 
@@ -285,7 +492,31 @@ fn main() {
         ]));
     }
 
-    let report = Json::obj(vec![
+    RuntimeSections {
+        rows,
+        multi_rows,
+        eval: Json::obj(vec![
+            ("full_pass", eval_full_pass),
+            ("curve", Json::Arr(eval_curve_rows)),
+        ]),
+        service_rows,
+    }
+}
+
+fn main() {
+    // pure-CPU movement scaling sweep first: it runs (and the report is
+    // written) even without runtime artifacts
+    let scaling = scaling_section();
+
+    let runtime = match Runtime::load_default() {
+        Ok(rt) => Some(runtime_sections(&rt)),
+        Err(e) => {
+            println!("runtime unavailable ({e}); skipping engine/eval/service sections");
+            None
+        }
+    };
+
+    let mut fields = vec![
         ("bench", Json::from("bench_engine")),
         ("pool_jobs", Json::from(POOL_JOBS)),
         ("config", Json::obj(vec![
@@ -294,14 +525,16 @@ fn main() {
             ("tau", Json::from(small().tau)),
             ("n_train", Json::from(small().n_train)),
         ])),
-        ("rows", Json::Arr(rows)),
-        ("multi_device", Json::Arr(multi_rows)),
-        ("eval", Json::obj(vec![
-            ("full_pass", eval_full_pass),
-            ("curve", Json::Arr(eval_curve_rows)),
-        ])),
-        ("service", Json::Arr(service_rows)),
-    ]);
+        ("runtime", Json::from(runtime.is_some())),
+        ("scaling", scaling),
+    ];
+    if let Some(rt) = runtime {
+        fields.push(("rows", Json::Arr(rt.rows)));
+        fields.push(("multi_device", Json::Arr(rt.multi_rows)));
+        fields.push(("eval", rt.eval));
+        fields.push(("service", Json::Arr(rt.service_rows)));
+    }
+    let report = Json::obj(fields);
     let text = report.to_string();
     std::fs::write("BENCH_engine.json", &text).expect("write BENCH_engine.json");
     if std::fs::create_dir_all("results/bench").is_ok() {

@@ -86,6 +86,53 @@ impl TrainPath {
     }
 }
 
+/// Which movement-plan representation the engine solves on (DESIGN.md
+/// §Perf rule 11). Both produce bit-identical plans; the sparse path does
+/// O(V + E) work and storage per interval instead of O(n²).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MovementBackend {
+    /// Dense below [`MovementBackend::AUTO_THRESHOLD`] devices, sparse at
+    /// or above it (the default).
+    #[default]
+    Auto,
+    /// Always the n×n [`crate::movement::MovementPlan`].
+    Dense,
+    /// Always the edge-indexed [`crate::movement::SparsePlan`].
+    Sparse,
+}
+
+impl MovementBackend {
+    /// `Auto` switches to sparse at this device count: below it the dense
+    /// n² plan fits comfortably in cache and the paper-scale experiments
+    /// (n ≤ 50) keep their historical code path.
+    pub const AUTO_THRESHOLD: usize = 512;
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(MovementBackend::Auto),
+            "dense" => Ok(MovementBackend::Dense),
+            "sparse" => Ok(MovementBackend::Sparse),
+            other => anyhow::bail!(
+                "unknown movement backend '{other}' (want auto|dense|sparse)"
+            ),
+        }
+    }
+
+    /// Concrete backend for an `n`-device run.
+    pub fn resolve(self, n: usize) -> MovementBackend {
+        match self {
+            MovementBackend::Auto => {
+                if n < Self::AUTO_THRESHOLD {
+                    MovementBackend::Dense
+                } else {
+                    MovementBackend::Sparse
+                }
+            }
+            other => other,
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -120,6 +167,14 @@ pub struct EngineConfig {
     pub eval_path: EvalPath,
     /// Scalar vs stacked multi-device dispatch of local updates.
     pub train_path: TrainPath,
+    /// Dense n×n vs edge-indexed movement plans (bit-identical outputs;
+    /// DESIGN.md §Perf rule 11).
+    pub movement_backend: MovementBackend,
+    /// Warm-start the PGD movement solver from the previous interval's
+    /// plan (reprojected onto the new active set). Off by default: warm
+    /// starts change PGD's trajectory, so defaults stay bit-identical to
+    /// the cold-start solver.
+    pub warm_start: bool,
     pub seed: u64,
 }
 
@@ -157,6 +212,8 @@ impl Default for EngineConfig {
             // eval is opt-in via --eval-path (DESIGN.md §Perf rule 8)
             eval_path: EvalPath::Scalar,
             train_path: TrainPath::Auto,
+            movement_backend: MovementBackend::Auto,
+            warm_start: false,
             seed: 1,
         }
     }
@@ -236,6 +293,28 @@ mod tests {
         assert_eq!(c.eval_schedule, EvalSchedule::Full);
         assert_eq!(c.eval_path, EvalPath::Scalar);
         assert!(!c.eval_curve);
+    }
+
+    #[test]
+    fn movement_backend_parses_and_resolves() {
+        assert_eq!(MovementBackend::parse("auto").unwrap(), MovementBackend::Auto);
+        assert_eq!(MovementBackend::parse("Dense").unwrap(), MovementBackend::Dense);
+        assert_eq!(MovementBackend::parse("sparse").unwrap(), MovementBackend::Sparse);
+        assert!(MovementBackend::parse("csr").is_err());
+        assert_eq!(MovementBackend::Auto.resolve(10), MovementBackend::Dense);
+        assert_eq!(MovementBackend::Auto.resolve(100_000), MovementBackend::Sparse);
+        assert_eq!(MovementBackend::Dense.resolve(100_000), MovementBackend::Dense);
+        assert_eq!(MovementBackend::Sparse.resolve(10), MovementBackend::Sparse);
+    }
+
+    #[test]
+    fn movement_defaults_stay_bit_identical() {
+        // Auto resolves Dense at every paper scale (n <= 50) and warm
+        // starts are off: default runs keep the historical solver exactly
+        let c = EngineConfig::default();
+        assert_eq!(c.movement_backend, MovementBackend::Auto);
+        assert_eq!(c.movement_backend.resolve(c.n), MovementBackend::Dense);
+        assert!(!c.warm_start);
     }
 
     #[test]

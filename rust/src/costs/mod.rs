@@ -7,5 +7,5 @@ pub mod estimator;
 pub mod model;
 pub mod traces;
 
-pub use model::{CapacityMode, CostSchedule};
+pub use model::{CapacityMode, CostSchedule, MovementCosts};
 pub use traces::{CostSource, Medium};

@@ -11,6 +11,47 @@
 //! The schedule is dense: n ≤ ~50 devices and T ≤ ~200 intervals in every
 //! experiment, so `[t][i][j]` storage is at most a few MB and O(1) access
 //! keeps the movement optimizer tight.
+//!
+//! The movement solvers address costs only through the [`MovementCosts`]
+//! trait, so scaling runs (N = 10⁵ devices, where a dense `[t][i*n+j]` link
+//! table would be 10¹⁰ entries) can plug in procedural O(n)-memory models
+//! (see `bench_engine`'s geometric cost model) without touching solver
+//! code.
+
+/// Cost/capacity oracle consumed by the movement optimizer. Mirrors the
+/// inherent accessors of [`CostSchedule`] (the canonical dense
+/// implementation); every method must be pure in `(t, i, j)` so solver
+/// passes can re-query freely.
+pub trait MovementCosts: std::fmt::Debug {
+    /// Processing cost `c_i(t)`.
+    fn c_node(&self, t: usize, i: usize) -> f64;
+    /// Link cost `c_ij(t)`.
+    fn c_link(&self, t: usize, i: usize, j: usize) -> f64;
+    /// Error weight `f_i(t)`.
+    fn f(&self, t: usize, i: usize) -> f64;
+    /// Node capacity `C_i(t)` (`f64::INFINITY` when unconstrained).
+    fn cap_node_at(&self, t: usize, i: usize) -> f64;
+    /// Link capacity `C_ij(t)` (`f64::INFINITY` when unconstrained).
+    fn cap_link_at(&self, t: usize, i: usize, j: usize) -> f64;
+}
+
+impl MovementCosts for CostSchedule {
+    fn c_node(&self, t: usize, i: usize) -> f64 {
+        CostSchedule::c_node(self, t, i)
+    }
+    fn c_link(&self, t: usize, i: usize, j: usize) -> f64 {
+        CostSchedule::c_link(self, t, i, j)
+    }
+    fn f(&self, t: usize, i: usize) -> f64 {
+        CostSchedule::f(self, t, i)
+    }
+    fn cap_node_at(&self, t: usize, i: usize) -> f64 {
+        CostSchedule::cap_node_at(self, t, i)
+    }
+    fn cap_link_at(&self, t: usize, i: usize, j: usize) -> f64 {
+        CostSchedule::cap_link_at(self, t, i, j)
+    }
+}
 
 /// Full cost/capacity schedule over `n` devices and `t_max` intervals.
 #[derive(Debug, Clone)]

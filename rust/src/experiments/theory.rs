@@ -89,7 +89,7 @@ fn theorem4(opts: &ExpOptions) -> Result<()> {
         costs: &costs,
         discard_model: DiscardModel::Sqrt,
     };
-    let plan = convex::solve(&p, PgdOptions { iterations: 4000, step0: 0.0 });
+    let plan = convex::solve(&p, PgdOptions { iterations: 4000, step0: 0.0, tol: 0.0 });
     let closed = mv_theory::theorem4_closed_form(gamma, &c_dev, c_server, c_t, &vec![d_i; n_dev]);
     for i in 0..n_dev {
         table.row(vec![

@@ -32,7 +32,8 @@ use std::sync::OnceLock;
 use anyhow::Result;
 
 use crate::config::{
-    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, TopologyKind,
+    TrainPath,
 };
 use crate::costs::{estimator, traces, CapacityMode, CostSchedule};
 use crate::data::dataset::Dataset;
@@ -42,9 +43,9 @@ use crate::fed::aggregator;
 use crate::fed::eval::{self, EvalPath, EvalPlan, EvalWork};
 use crate::fed::similarity;
 use crate::fed::trainer::{DeviceWork, Trainer};
-use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace};
+use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace, SparsePlan};
 use crate::runtime::{HostTensor, Runtime};
-use crate::topology::{generators, ChurnProcess, Graph};
+use crate::topology::{generators, ActiveView, ChurnProcess, Graph};
 use crate::util::rng::Rng;
 
 /// Model parameters as one tensor per layer.
@@ -323,10 +324,13 @@ impl SessionState {
 }
 
 /// Preallocated per-interval buffers, reused across all `t` (DESIGN.md
-/// §Perf): the hot loops never allocate per interval except where an
-/// algorithm intrinsically must (topology restriction, solver plan clones).
+/// §Perf): the hot loops never allocate per interval — churn flips bits in
+/// `active` in place, and the movement solvers reuse `solver`'s plans and
+/// scratch (warm-start clones are the opt-in exception).
 struct IntervalWorkspace {
-    active: Vec<bool>,
+    /// Incrementally-maintained active mask (flipped per churn delta
+    /// instead of recopied from the churn process every interval).
+    active: ActiveView,
     /// Collected-this-interval sample queues (after movement: the kept
     /// prefix only).
     new_data: Vec<Vec<u32>>,
@@ -351,7 +355,8 @@ struct IntervalWorkspace {
 impl IntervalWorkspace {
     fn new(n: usize) -> IntervalWorkspace {
         IntervalWorkspace {
-            active: Vec::with_capacity(n),
+            // matches the churn process's all-active start (§V-E)
+            active: ActiveView::all_active(n),
             new_data: vec![Vec::new(); n],
             pending: vec![Vec::new(); n],
             d: Vec::with_capacity(n),
@@ -375,6 +380,9 @@ pub struct Session<'a, C: Compute> {
     compute: C,
     churn: ChurnProcess,
     churn_rng: Rng,
+    /// Concrete plan representation for this run (`cfg.movement_backend`
+    /// resolved against `cfg.n`).
+    backend: MovementBackend,
     pub state: SessionState,
     ws: IntervalWorkspace,
     /// Which test shard each curve point scores (Full = the whole set);
@@ -387,14 +395,17 @@ pub struct Session<'a, C: Compute> {
 impl<'a, C: Compute> Session<'a, C> {
     pub fn new(cfg: &'a EngineConfig, sub: &'a Substrates, compute: C) -> Result<Session<'a, C>> {
         let global = compute.init_params(sub.init_seed)?;
+        let mut ws = IntervalWorkspace::new(cfg.n);
+        ws.solver.warm_start = cfg.warm_start;
         Ok(Session {
             cfg,
             sub,
             compute,
             churn: sub.churn.clone(),
             churn_rng: sub.churn_rng.clone(),
+            backend: cfg.movement_backend.resolve(cfg.n),
             state: SessionState::new(cfg, global),
-            ws: IntervalWorkspace::new(cfg.n),
+            ws,
             eval_plan: cfg
                 .eval_curve
                 .then(|| EvalPlan::new(cfg.eval_schedule, sub.test.len(), cfg.seed)),
@@ -405,19 +416,23 @@ impl<'a, C: Compute> Session<'a, C> {
     /// Advance the churn process and reset state for exits/entries: a
     /// re-entering device is present but unsynchronized; an exited device
     /// loses the updates it could not transmit.
+    ///
+    /// Only the interval's churn **delta** is touched — O(|Δ|) instead of
+    /// O(n): flipping the active view per delta reproduces the full mask
+    /// copy exactly, and zeroing `h` for exits only is equivalent to the
+    /// old every-inactive-device sweep because a device's `h` can only
+    /// become nonzero while it is active (so it is already 0 for devices
+    /// that stayed inactive).
     pub fn step_churn(&mut self, _t: usize) {
-        let entered = self.churn.step(&mut self.churn_rng);
-        for &i in &entered {
+        let delta = self.churn.step(&mut self.churn_rng);
+        for &i in &delta.entered {
             self.state.synced[i] = false;
             self.state.h[i] = 0.0;
         }
-        self.ws.active.clear();
-        self.ws.active.extend_from_slice(self.churn.active());
-        for i in 0..self.cfg.n {
-            if !self.ws.active[i] {
-                self.state.h[i] = 0.0;
-            }
+        for &i in &delta.exited {
+            self.state.h[i] = 0.0;
         }
+        self.ws.active.apply(delta);
     }
 
     /// Materialize this interval's arrivals `D_i(t)` for active devices.
@@ -442,22 +457,29 @@ impl<'a, C: Compute> Session<'a, C> {
         self.ws.inbound_counts.clear();
         self.ws.inbound_counts.extend(self.state.inbound.iter().map(|s| s.len() as f64));
 
+        let use_sparse =
+            self.cfg.method == Method::NetworkAware && self.backend == MovementBackend::Sparse;
         match self.cfg.method {
             Method::NetworkAware => {
-                // restricting rebuilds neighbor lists in sorted edge order,
-                // which the tie-breaking of best_neighbor depends on — always
-                // restrict, even on an all-active interval
-                let restricted = self.sub.graph.restrict(&self.ws.active);
+                // The solvers filter on the active mask themselves, and the
+                // base graph's adjacency is natively sorted, so solving over
+                // (base graph, mask) is bit-identical to the historical
+                // per-interval `Graph::restrict` — without rebuilding the
+                // topology every interval (O(V + E) saved per t).
                 let problem = MovementProblem {
                     t,
-                    graph: &restricted,
-                    active: &self.ws.active,
+                    graph: &self.sub.graph,
+                    active: self.ws.active.as_slice(),
                     d: &self.ws.d,
                     inbound_prev: &self.ws.inbound_counts,
                     costs: &self.sub.belief_costs,
                     discard_model: self.cfg.discard_model,
                 };
-                movement::solve_with(&problem, &mut self.ws.solver);
+                if use_sparse {
+                    movement::solve_sparse_with(&problem, &mut self.ws.solver);
+                } else {
+                    movement::solve_with(&problem, &mut self.ws.solver);
+                }
             }
             Method::Federated => self.ws.solver.plan.reset_keep_all(n),
             Method::Centralized => unreachable!("centralized runs bypass Session"),
@@ -470,7 +492,11 @@ impl<'a, C: Compute> Session<'a, C> {
             if count == 0 {
                 continue;
             }
-            let keep = apportion_into(&self.ws.solver.plan, i, count, &mut self.ws.apportion);
+            let keep = if use_sparse {
+                apportion_sparse_into(&self.ws.solver.sparse, i, count, &mut self.ws.apportion)
+            } else {
+                apportion_into(&self.ws.solver.plan, i, count, &mut self.ws.apportion)
+            };
             // offloads, ascending j (deterministic)
             let mut cursor = keep;
             for &(j, sent) in &self.ws.apportion.offloads {
@@ -759,7 +785,6 @@ pub fn apportion_into(
     ws: &mut ApportionScratch,
 ) -> usize {
     let n = plan.n;
-    ws.offloads.clear();
     // options: 0 = keep, 1..=n = offload to j-1, n+1 = discard
     ws.fracs.clear();
     ws.fracs.push((0, plan.s(i, i)));
@@ -769,7 +794,36 @@ pub fn apportion_into(
         }
     }
     ws.fracs.push((n + 1, plan.r[i]));
+    apportion_fracs(n, count, ws)
+}
 
+/// Sparse mirror of [`apportion_into`]: gathers the same option sequence —
+/// keep, then nonzero offload targets ascending (the dense `j = 0..n` scan
+/// only ever sees nonzeros on stored edges), then discard — so the
+/// largest-remainder assignment, including its stable tie-breaks, is
+/// identical to the dense path on equal plans.
+pub fn apportion_sparse_into(
+    sp: &SparsePlan,
+    i: usize,
+    count: usize,
+    ws: &mut ApportionScratch,
+) -> usize {
+    let n = sp.n;
+    ws.fracs.clear();
+    ws.fracs.push((0, sp.local[i]));
+    for e in sp.offsets[i]..sp.offsets[i + 1] {
+        if sp.s_edge[e] > 0.0 {
+            ws.fracs.push((sp.targets[e] + 1, sp.s_edge[e]));
+        }
+    }
+    ws.fracs.push((n + 1, sp.discard[i]));
+    apportion_fracs(n, count, ws)
+}
+
+/// Shared tail of the apportionment: largest-remainder assignment over the
+/// gathered `ws.fracs` option list.
+fn apportion_fracs(n: usize, count: usize, ws: &mut ApportionScratch) -> usize {
+    ws.offloads.clear();
     let total: f64 = ws.fracs.iter().map(|&(_, f)| f).sum();
     if total <= 0.0 {
         // degenerate all-zero row (e.g. from an inactive device): discard
@@ -1021,6 +1075,72 @@ mod tests {
             assert_eq!(outs[0].ledger, other.ledger);
             assert_eq!(outs[0].movement.per_interval, other.movement.per_interval);
         }
+    }
+
+    /// Dense and sparse movement backends must be bit-for-bit identical
+    /// through the whole session loop — same ledgers, same losses, same
+    /// sample movements — under churn and for every discard model
+    /// (DESIGN.md §Perf rule 11).
+    #[test]
+    fn movement_backend_routing_is_semantically_invisible() {
+        use crate::movement::DiscardModel;
+        for model in [DiscardModel::LinearR, DiscardModel::LinearG, DiscardModel::Sqrt] {
+            let base = stub_cfg(Method::NetworkAware).with(|c| {
+                c.discard_model = model;
+                c.topology = crate::config::TopologyKind::Random(0.5);
+                c.churn = Some(Churn { p_exit: 0.15, p_entry: 0.15 });
+            });
+            let sub = Substrates::derive(&base);
+            let outs: Vec<EngineOutput> =
+                [MovementBackend::Dense, MovementBackend::Sparse, MovementBackend::Auto]
+                    .into_iter()
+                    .map(|b| {
+                        let cfg = base.clone().with(|c| c.movement_backend = b);
+                        run_with(&cfg, &sub, StubCompute).unwrap()
+                    })
+                    .collect();
+            for other in &outs[1..] {
+                assert_eq!(outs[0].accuracy, other.accuracy, "{model:?}");
+                assert_eq!(outs[0].per_device_loss, other.per_device_loss, "{model:?}");
+                assert_eq!(outs[0].ledger, other.ledger, "{model:?}");
+                assert_eq!(
+                    outs[0].movement.per_interval, other.movement.per_interval,
+                    "{model:?}"
+                );
+                assert_eq!(outs[0].similarity, other.similarity, "{model:?}");
+            }
+        }
+    }
+
+    /// Warm starts change PGD trajectories but must keep the session sound:
+    /// datapoints stay conserved, runs stay deterministic, and the flag has
+    /// zero effect on greedy (closed-form) models.
+    #[test]
+    fn warm_start_conserves_and_is_inert_for_greedy() {
+        use crate::movement::DiscardModel;
+        // greedy models: warm start must be a bitwise no-op
+        let base = stub_cfg(Method::NetworkAware).with(|c| {
+            c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 });
+        });
+        let sub = Substrates::derive(&base);
+        let cold = run_with(&base, &sub, StubCompute).unwrap();
+        let warm_cfg = base.clone().with(|c| c.warm_start = true);
+        let warm = run_with(&warm_cfg, &sub, StubCompute).unwrap();
+        assert_eq!(cold.ledger, warm.ledger);
+        assert_eq!(cold.movement.per_interval, warm.movement.per_interval);
+
+        // convex model: warm-started runs stay conserved + deterministic
+        let sqrt_cfg = base.clone().with(|c| {
+            c.discard_model = DiscardModel::Sqrt;
+            c.warm_start = true;
+        });
+        let sub = Substrates::derive(&sqrt_cfg);
+        let a = run_with(&sqrt_cfg, &sub, StubCompute).unwrap();
+        let b = run_with(&sqrt_cfg, &sub, StubCompute).unwrap();
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.movement.per_interval, b.movement.per_interval);
+        let m = &a.movement;
+        assert!(m.processed() + m.discarded() <= m.collected());
     }
 
     /// Eval schedules and paths must never touch anything but the curve:

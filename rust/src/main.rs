@@ -10,6 +10,7 @@
 //!             [--train-path auto|batched|scalar]
 //!             [--eval-schedule full|subset|subset:K]
 //!             [--eval-path auto|batched|scalar]
+//!             [--movement-backend auto|dense|sparse] [--warm-start]
 //!             [--services K]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
@@ -55,12 +56,21 @@
 //! `batched`) or one XLA call per chunk (`scalar`, the default — keeps
 //! curves bit-identical to previous releases) — DESIGN.md §Perf rule 8.
 //! On `exp`, `--curve` also emits `<name>_curve.csv` per driver.
+//!
+//! `--movement-backend` picks the movement-plan representation: `dense`
+//! (the n×n matrix), `sparse` (one value per topology edge — O(V + E)
+//! memory and solve time), or `auto` (default: dense below 512 devices,
+//! sparse at or above). The two are bit-identical (DESIGN.md §Perf rule
+//! 11). `--warm-start` starts each interval's PGD solve from the previous
+//! interval's plan reprojected onto the new active set (opt-in: it changes
+//! the solver trajectory, so defaults stay bit-identical).
 
 use anyhow::{bail, Result};
 
 use fogml::cli::Args;
 use fogml::config::{
-    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, TopologyKind, TrainPath,
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, TopologyKind,
+    TrainPath,
 };
 use fogml::coordinator::{Cluster, ClusterConfig, ShardSpec, SimPool};
 use fogml::costs::{CostSource, Medium};
@@ -149,6 +159,12 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     }
     if let Some(p) = args.get("eval-path") {
         cfg.eval_path = EvalPath::parse(p)?;
+    }
+    if let Some(b) = args.get("movement-backend") {
+        cfg.movement_backend = MovementBackend::parse(b)?;
+    }
+    if args.flag("warm-start") {
+        cfg.warm_start = true;
     }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;

@@ -21,16 +21,25 @@ use crate::movement::SolverWorkspace;
 /// Smoothing constant in `φ(G) = (G + SQRT_EPS)^{-1/2}`.
 pub const SQRT_EPS: f64 = 1.0;
 
+/// Consecutive no-improvement iterations before a `tol > 0` run stops.
+const STALL_LIMIT: usize = 25;
+
 /// PGD hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct PgdOptions {
     pub iterations: usize,
     pub step0: f64,
+    /// Early-exit tolerance: with `tol > 0`, the loop stops after
+    /// [`STALL_LIMIT`] consecutive iterations that fail to improve the
+    /// best objective by more than `tol`. `0.0` (the default) disables
+    /// early exit entirely, keeping iteration counts — and therefore
+    /// outputs — bit-identical to the original fixed-budget solver.
+    pub tol: f64,
 }
 
 impl Default for PgdOptions {
     fn default() -> Self {
-        PgdOptions { iterations: 400, step0: 0.0 } // step0 = 0 -> auto
+        PgdOptions { iterations: 400, step0: 0.0, tol: 0.0 } // step0 = 0 -> auto
     }
 }
 
@@ -47,7 +56,29 @@ pub fn solve(p: &MovementProblem, opts: PgdOptions) -> MovementPlan {
 /// result is bit-identical to a fresh [`solve`].
 pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspace) {
     let n = p.n();
-    crate::movement::greedy::solve_into(p, &mut ws.plan);
+    // Warm start (opt-in, DESIGN.md §Perf rule 11): reproject the previous
+    // interval's plan onto the new active set instead of re-deriving the
+    // greedy vertex. Churn flips few devices, so the previous optimum is a
+    // near-feasible near-optimum of the new problem.
+    let warm = ws.warm_start && ws.prev_valid && ws.prev.n == n;
+    if warm {
+        ws.plan.clone_from(&ws.prev);
+        for i in 0..n {
+            if !p.active[i] || p.d[i] == 0.0 {
+                // devices outside the problem revert to the vacuous
+                // keep-all row the solvers emit for them
+                for j in 0..n {
+                    ws.plan.s[i * n + j] = 0.0;
+                }
+                ws.plan.s[i * n + i] = 1.0;
+                ws.plan.r[i] = 0.0;
+            }
+        }
+        // drops stale mass aimed at now-inactive devices and renormalizes
+        project_rows(p, ws);
+    } else {
+        crate::movement::greedy::solve_into(p, &mut ws.plan);
+    }
 
     // auto step size: inversely proportional to the largest row scale
     let max_d = p.d.iter().cloned().fold(1.0, f64::max);
@@ -55,6 +86,7 @@ pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspac
 
     ws.best.clone_from(&ws.plan);
     let mut best_obj = ws.plan.objective(p);
+    let mut stall = 0usize;
 
     ws.grad_s.clear();
     ws.grad_s.resize(n * n, 0.0);
@@ -76,8 +108,17 @@ pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspac
         project_rows(p, ws);
         let obj = ws.plan.objective(p);
         if obj < best_obj {
+            if opts.tol > 0.0 && best_obj - obj > opts.tol {
+                stall = 0;
+            }
             best_obj = obj;
             ws.best.clone_from(&ws.plan);
+        }
+        if opts.tol > 0.0 {
+            stall += 1;
+            if stall > STALL_LIMIT {
+                break;
+            }
         }
     }
     ws.plan.clone_from(&ws.best);
@@ -159,6 +200,164 @@ fn project_rows(p: &MovementProblem, ws: &mut SolverWorkspace) {
             match target {
                 None => ws.plan.r[i] = v,
                 Some(j) => ws.plan.s[i * n + j] = v,
+            }
+        }
+    }
+}
+
+/// Sparse mirror of [`solve_with`]: PGD over the edge-indexed plan in
+/// `ws.sparse` — gradients, updates, and projections touch only stored
+/// edge slots, so one iteration is O(V + E) instead of O(n²).
+///
+/// Bitwise agreement with the dense solver (when `to_dense`d) holds
+/// because every float op the dense path performs on *off-edge* or
+/// inactive coordinates is an exact no-op: their gradient entries are
+/// never written (zeroed once), so the update subtracts `step·0.0`, and
+/// the G̃ accumulation adds `0.0·d_i` to nonnegative partial sums.
+pub fn solve_sparse_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspace) {
+    let n = p.n();
+    ws.sparse.rebuild(p.graph);
+    let warm = ws.warm_start
+        && ws.prev_sparse_valid
+        && ws.prev_sparse.n == n
+        && ws.prev_sparse.offsets == ws.sparse.offsets
+        && ws.prev_sparse.targets == ws.sparse.targets;
+    if warm {
+        ws.sparse.s_edge.copy_from_slice(&ws.prev_sparse.s_edge);
+        ws.sparse.local.copy_from_slice(&ws.prev_sparse.local);
+        ws.sparse.discard.copy_from_slice(&ws.prev_sparse.discard);
+        for i in 0..n {
+            if !p.active[i] || p.d[i] == 0.0 {
+                for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
+                    ws.sparse.s_edge[e] = 0.0;
+                }
+                ws.sparse.local[i] = 1.0;
+                ws.sparse.discard[i] = 0.0;
+            }
+        }
+        project_rows_sparse(p, ws);
+    } else {
+        crate::movement::greedy::solve_sparse_into(p, &mut ws.sparse);
+    }
+
+    let max_d = p.d.iter().cloned().fold(1.0, f64::max);
+    let step0 = if opts.step0 > 0.0 { opts.step0 } else { 0.5 / max_d };
+
+    ws.sparse_best.clone_from(&ws.sparse);
+    let mut best_obj = ws.sparse.objective(p);
+    let mut stall = 0usize;
+
+    let m = ws.sparse.num_edges();
+    ws.grad_edge.clear();
+    ws.grad_edge.resize(m, 0.0);
+    ws.grad_local.clear();
+    ws.grad_local.resize(n, 0.0);
+    for it in 0..opts.iterations {
+        gradient_sparse(p, &ws.sparse, &mut ws.grad_edge, &mut ws.grad_local, &mut ws.g_tilde);
+        let step = step0 / (1.0 + (it as f64 / 40.0)).sqrt();
+        for i in 0..n {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            ws.sparse.local[i] -= step * ws.grad_local[i];
+            for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
+                ws.sparse.s_edge[e] -= step * ws.grad_edge[e];
+            }
+        }
+        project_rows_sparse(p, ws);
+        let obj = ws.sparse.objective(p);
+        if obj < best_obj {
+            if opts.tol > 0.0 && best_obj - obj > opts.tol {
+                stall = 0;
+            }
+            best_obj = obj;
+            ws.sparse_best.clone_from(&ws.sparse);
+        }
+        if opts.tol > 0.0 {
+            stall += 1;
+            if stall > STALL_LIMIT {
+                break;
+            }
+        }
+    }
+    ws.sparse.clone_from(&ws.sparse_best);
+}
+
+/// Sparse mirror of [`gradient`]: per-edge-slot gradients. Entries whose
+/// target is inactive are never written (they stay at the initial 0.0),
+/// matching the dense solver's untouched coordinates.
+fn gradient_sparse(
+    p: &MovementProblem,
+    sp: &crate::movement::sparse::SparsePlan,
+    grad_edge: &mut [f64],
+    grad_local: &mut [f64],
+    g_tilde: &mut Vec<f64>,
+) {
+    let n = p.n();
+    g_tilde.clear();
+    g_tilde.resize(n, 0.0);
+    for i in 0..n {
+        g_tilde[i] = sp.local[i] * p.d[i] + p.inbound_prev[i];
+    }
+    for i in 0..n {
+        if p.d[i] == 0.0 {
+            continue;
+        }
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            g_tilde[sp.targets[e]] += sp.s_edge[e] * p.d[i];
+        }
+    }
+    let phi_prime = |g: f64| -0.5 * (g + SQRT_EPS).powf(-1.5);
+
+    for i in 0..n {
+        if !p.active[i] || p.d[i] == 0.0 {
+            continue;
+        }
+        grad_local[i] =
+            p.d[i] * (p.costs.c_node(p.t, i) + p.costs.f(p.t, i) * phi_prime(g_tilde[i]));
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            let j = sp.targets[e];
+            if !p.active[j] {
+                continue;
+            }
+            grad_edge[e] = p.d[i]
+                * (p.costs.c_link(p.t, i, j)
+                    + p.costs.c_node(p.t + 1, j)
+                    + p.costs.f(p.t, j) * phi_prime(g_tilde[j]));
+        }
+    }
+}
+
+/// Sparse mirror of [`project_rows`]: gathers each device row in the same
+/// order the dense path does — `r_i`, `s_ii`, then active out-neighbors
+/// ascending — so the Duchi projection sees an identical value sequence.
+fn project_rows_sparse(p: &MovementProblem, ws: &mut SolverWorkspace) {
+    let n = p.n();
+    for i in 0..n {
+        if !p.active[i] || p.d[i] == 0.0 {
+            continue;
+        }
+        ws.values.clear();
+        ws.values.push(ws.sparse.discard[i]); // r_i
+        ws.values.push(ws.sparse.local[i]); // s_ii
+        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
+            if p.active[ws.sparse.targets[e]] {
+                ws.values.push(ws.sparse.s_edge[e]);
+            }
+        }
+        project_simplex_into(&ws.values, &mut ws.scratch, &mut ws.projected);
+        // zero the whole row, then scatter back in gather order
+        ws.sparse.discard[i] = 0.0;
+        ws.sparse.local[i] = 0.0;
+        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
+            ws.sparse.s_edge[e] = 0.0;
+        }
+        let mut cursor = ws.projected.iter();
+        ws.sparse.discard[i] = *cursor.next().expect("r coordinate");
+        ws.sparse.local[i] = *cursor.next().expect("s_ii coordinate");
+        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
+            if p.active[ws.sparse.targets[e]] {
+                ws.sparse.s_edge[e] = *cursor.next().expect("edge coordinate");
             }
         }
     }
@@ -277,7 +476,7 @@ mod tests {
             costs: &costs,
             discard_model: DiscardModel::Sqrt,
         };
-        let plan = solve(&p, PgdOptions { iterations: 3000, step0: 0.0 });
+        let plan = solve(&p, PgdOptions { iterations: 3000, step0: 0.0, tol: 0.0 });
         plan.assert_feasible(&p, 1e-6);
 
         let closed = theory::theorem4_closed_form(
@@ -347,7 +546,7 @@ mod tests {
                 discard_model: DiscardModel::Sqrt,
             };
             let warm = crate::movement::greedy::solve(&p);
-            let plan = solve(&p, PgdOptions { iterations: 150, step0: 0.0 });
+            let plan = solve(&p, PgdOptions { iterations: 150, step0: 0.0, tol: 0.0 });
             plan.assert_feasible(&p, 1e-6);
             assert!(plan.objective(&p) <= warm.objective(&p) + 1e-9);
         });

@@ -19,6 +19,7 @@
 use crate::movement::greedy;
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
+use crate::movement::sparse::SparsePlan;
 
 /// One advertisement message on link (j -> i's inbox).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -97,6 +98,71 @@ pub fn solve(p: &MovementProblem) -> (MovementPlan, ProtocolStats) {
     (plan, stats)
 }
 
+/// Sparse mirror of [`solve`]: the decided plan lands in `sp` (structure
+/// rebuilt from `p.graph`), and only O(|E(t)|) work is done — no inbox
+/// vectors are materialized, because device `i`'s inbox is exactly its
+/// active out-neighbors' advertisements in ascending-id order (the dense
+/// builder's advertiser loop runs `j = 0..n`), so folding the minimum over
+/// the sorted edge row reproduces the same decision including tie-breaks
+/// (`min_by` keeps the first minimal element; so does the `c < best` fold).
+pub fn solve_sparse(p: &MovementProblem, sp: &mut SparsePlan) -> ProtocolStats {
+    sp.rebuild(p.graph);
+    let n = p.n();
+    let mut stats = ProtocolStats::default();
+
+    // Phase 1 — advertise: one message per active edge, counted per
+    // receiver row (identical total to the dense sender-side count).
+    for i in 0..n {
+        if !p.active[i] {
+            continue;
+        }
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            if p.active[sp.targets[e]] {
+                stats.messages += 1;
+            }
+        }
+    }
+
+    // Phase 2 — decide locally from the (implicit) inbox.
+    for i in 0..n {
+        if !p.active[i] || p.d[i] == 0.0 {
+            continue;
+        }
+        stats.deciding_devices += 1;
+        let mut best: Option<(usize, f64)> = None; // (edge slot, offload cost)
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            let j = sp.targets[e];
+            if !p.active[j] {
+                continue;
+            }
+            let c = p.offload_cost(i, j);
+            let better = match best {
+                None => true,
+                Some((_, bc)) => c < bc,
+            };
+            if better {
+                best = Some((e, c));
+            }
+        }
+        let process = p.process_cost(i);
+        let discard = p.discard_cost(i);
+
+        sp.local[i] = 0.0;
+        match best {
+            Some((slot, offload)) if offload < process && offload < discard => {
+                sp.s_edge[slot] = 1.0;
+            }
+            _ if process <= discard => {
+                sp.local[i] = 1.0;
+            }
+            _ => {
+                sp.discard[i] = 1.0;
+            }
+        }
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +213,48 @@ mod tests {
                 .filter(|&(i, j)| active[i] && active[j])
                 .count();
             assert_eq!(stats.messages, active_edges);
+        });
+    }
+
+    /// Property: the sparse protocol produces the same plan and the same
+    /// message counts as the dense one — over the base graph + mask (no
+    /// `restrict`), which is how the engine's sparse path runs it.
+    #[test]
+    fn prop_sparse_protocol_equals_dense() {
+        let mut sp = crate::movement::sparse::SparsePlan::empty();
+        for_all("distributed_sparse_eq_dense", 60, |g| {
+            let n = g.usize_in(2, 9);
+            let graph = erdos_renyi(n, g.f64_in(0.0, 1.0), g.rng());
+            let mut costs = CostSchedule::zeros(n, 2);
+            for t in 0..2 {
+                for i in 0..n {
+                    costs.compute[t][i] = g.f64_in(0.0, 1.0);
+                    costs.error_weight[t][i] = g.f64_in(0.0, 1.0);
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = g.f64_in(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+            let d: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 15.0)).collect();
+            let inbound = vec![0.0; n];
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.85)).collect();
+            let model = if g.bool(0.5) { DiscardModel::LinearR } else { DiscardModel::LinearG };
+            let p = MovementProblem {
+                t: 0,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let (dense, dense_stats) = solve(&p);
+            let sparse_stats = solve_sparse(&p, &mut sp);
+            assert_eq!(sp.to_dense(), dense, "sparse protocol diverged");
+            assert_eq!(sparse_stats.messages, dense_stats.messages);
+            assert_eq!(sparse_stats.deciding_devices, dense_stats.deciding_devices);
         });
     }
 

@@ -18,6 +18,7 @@
 
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
+use crate::movement::sparse::SparsePlan;
 
 /// Solve by the Theorem-3 rule. Inactive devices (or devices with no data)
 /// get `s_ii = 1` rows, which is vacuous since `D_i(t) = 0`.
@@ -50,6 +51,40 @@ pub fn solve_into(p: &MovementProblem, plan: &mut MovementPlan) {
             }
             _ => {
                 plan.r[i] = 1.0;
+            }
+        }
+    }
+}
+
+/// Sparse mirror of [`solve_into`]: rebuilds `sp`'s structure from
+/// `p.graph` and applies the Theorem-3 rule per device touching only that
+/// device's edge row — O(V + E) total, no n² scan.
+///
+/// `p.best_neighbor` iterates the graph's sorted out-neighbor slice, which
+/// is exactly the sparse row order, so tie-breaks are identical and
+/// `sp.to_dense()` equals [`solve`]'s plan bitwise.
+pub fn solve_sparse_into(p: &MovementProblem, sp: &mut SparsePlan) {
+    sp.rebuild(p.graph);
+    let n = p.n();
+    for i in 0..n {
+        if !p.active[i] || p.d[i] == 0.0 {
+            continue;
+        }
+        let process = p.process_cost(i);
+        let discard = p.discard_cost(i);
+        let best = p.best_neighbor(i);
+
+        sp.local[i] = 0.0;
+        match best {
+            Some((k, offload)) if offload < process && offload < discard => {
+                let slot = sp.slot(i, k).expect("best neighbor must be an edge");
+                sp.s_edge[slot] = 1.0;
+            }
+            _ if process <= discard => {
+                sp.local[i] = 1.0;
+            }
+            _ => {
+                sp.discard[i] = 1.0;
             }
         }
     }

@@ -7,13 +7,20 @@
 //! `f_i(t)`.
 //!
 //! * [`problem`] — the per-interval problem instance and discard-cost models.
-//! * [`plan`] — the decision variables, feasibility checks, cost evaluation.
+//! * [`plan`] — the dense decision variables, feasibility checks, cost
+//!   evaluation.
+//! * [`sparse`] — edge-indexed plans (O(V + E) storage) for large sparse
+//!   topologies; bit-identical to dense under `to_dense`.
 //! * [`greedy`] — Theorem 3's closed-form optimal solution for linear
 //!   discard costs (and the `-f·G` variant via modified link costs).
 //! * [`convex`] — projected-gradient solver for the convex `f/√G` model.
 //! * [`repair`] — capacity-constraint repair pass (§IV-B's "minimal
 //!   adjustment" procedure justified by Theorem 6).
 //! * [`theory`] — closed forms of Theorems 4, 5, 6 + their validators.
+//!
+//! Both [`solve_with`] (dense) and [`solve_sparse_with`] (edge-indexed)
+//! produce the same plan bitwise for the same instance; the engine picks
+//! per [`crate::config::MovementBackend`].
 
 pub mod convex;
 pub mod distributed;
@@ -21,27 +28,43 @@ pub mod greedy;
 pub mod plan;
 pub mod problem;
 pub mod repair;
+pub mod sparse;
 pub mod theory;
 
 pub use plan::{CostBreakdown, MovementPlan};
 pub use problem::{DiscardModel, MovementProblem};
+pub use sparse::SparsePlan;
 
 /// Reusable scratch for the per-interval solvers. The engine solves one
 /// movement problem per time interval; routing every solve through one
-/// workspace keeps the hot path free of the ~`n²`-sized allocations the
-/// solvers would otherwise make per call (plan rows, PGD gradients,
-/// projection buffers — DESIGN.md §Perf).
+/// workspace keeps the hot path free of the ~`n²`-sized (dense) or
+/// `O(V + E)`-sized (sparse) allocations the solvers would otherwise make
+/// per call (plan rows, PGD gradients, projection buffers, repair slacks —
+/// DESIGN.md §Perf).
 ///
 /// All buffers are zeroed or fully overwritten per solve, so reuse is
 /// bit-identical to fresh allocation.
+///
+/// With `warm_start` set (off by default — DESIGN.md §Perf rule 11), the
+/// workspace additionally remembers the previous interval's solution and
+/// the PGD solver starts from it (reprojected onto the new active set)
+/// instead of the greedy vertex. Greedy solves are closed-form and ignore
+/// the starting point, so warm starts only affect the `Sqrt` model.
 #[derive(Debug)]
 pub struct SolverWorkspace {
-    /// The most recent solution (valid after [`solve_with`]).
+    /// The most recent dense solution (valid after [`solve_with`]).
     pub plan: MovementPlan,
+    /// The most recent sparse solution (valid after [`solve_sparse_with`]).
+    pub sparse: SparsePlan,
+    /// Opt-in warm starting (set from `EngineConfig::warm_start`).
+    pub warm_start: bool,
     /// Best-iterate tracking buffer for the PGD solver.
     pub(crate) best: MovementPlan,
-    /// ∂F/∂s gradient buffer (n×n).
+    pub(crate) sparse_best: SparsePlan,
+    /// ∂F/∂s gradient buffers (dense n×n / per-edge + per-device).
     pub(crate) grad_s: Vec<f64>,
+    pub(crate) grad_edge: Vec<f64>,
+    pub(crate) grad_local: Vec<f64>,
     /// G̃ accumulator for the convex objective gradient.
     pub(crate) g_tilde: Vec<f64>,
     /// Free-coordinate gathering for per-row simplex projection.
@@ -49,20 +72,44 @@ pub struct SolverWorkspace {
     pub(crate) values: Vec<f64>,
     pub(crate) projected: Vec<f64>,
     pub(crate) scratch: Vec<f64>,
+    /// Capacity-repair scratch (excess/slack/option buffers).
+    pub(crate) repair: repair::RepairScratch,
+    /// Previous interval's solutions for warm starts.
+    pub(crate) prev: MovementPlan,
+    pub(crate) prev_valid: bool,
+    pub(crate) prev_sparse: SparsePlan,
+    pub(crate) prev_sparse_valid: bool,
 }
 
 impl SolverWorkspace {
     pub fn new() -> SolverWorkspace {
         SolverWorkspace {
             plan: MovementPlan::keep_all(0),
+            sparse: SparsePlan::empty(),
+            warm_start: false,
             best: MovementPlan::keep_all(0),
+            sparse_best: SparsePlan::empty(),
             grad_s: Vec::new(),
+            grad_edge: Vec::new(),
+            grad_local: Vec::new(),
             g_tilde: Vec::new(),
             coords: Vec::new(),
             values: Vec::new(),
             projected: Vec::new(),
             scratch: Vec::new(),
+            repair: repair::RepairScratch::default(),
+            prev: MovementPlan::keep_all(0),
+            prev_valid: false,
+            prev_sparse: SparsePlan::empty(),
+            prev_sparse_valid: false,
         }
+    }
+
+    /// Forget any remembered previous solution (e.g. between independent
+    /// runs sharing one workspace).
+    pub fn reset_warm_state(&mut self) {
+        self.prev_valid = false;
+        self.prev_sparse_valid = false;
     }
 }
 
@@ -88,14 +135,38 @@ pub fn solve_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
         DiscardModel::LinearR | DiscardModel::LinearG => greedy::solve_into(p, &mut ws.plan),
         DiscardModel::Sqrt => convex::solve_with(p, convex::PgdOptions::default(), ws),
     }
-    repair::repair(p, &mut ws.plan);
+    repair::repair_with(p, &mut ws.plan, &mut ws.repair);
+    if ws.warm_start {
+        ws.prev.clone_from(&ws.plan);
+        ws.prev_valid = true;
+    }
+}
+
+/// Edge-indexed mirror of [`solve_with`]: the solution lands in
+/// `ws.sparse` (already capacity-repaired). For the same instance this
+/// produces exactly `solve_with`'s plan under [`SparsePlan::to_dense`] —
+/// see the bit-identity contract in [`sparse`]'s module docs — while doing
+/// O(V + E) work and storage per interval instead of O(n²).
+pub fn solve_sparse_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
+    match p.discard_model {
+        DiscardModel::LinearR | DiscardModel::LinearG => {
+            greedy::solve_sparse_into(p, &mut ws.sparse)
+        }
+        DiscardModel::Sqrt => convex::solve_sparse_with(p, convex::PgdOptions::default(), ws),
+    }
+    repair::repair_sparse(p, &mut ws.sparse, &mut ws.repair);
+    if ws.warm_start {
+        ws.prev_sparse.clone_from(&ws.sparse);
+        ws.prev_sparse_valid = true;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::costs::CostSchedule;
-    use crate::topology::generators::fully_connected;
+    use crate::topology::generators::{erdos_renyi, fully_connected};
+    use crate::util::rng::Rng;
 
     #[test]
     fn solve_dispatches_and_is_feasible() {
@@ -172,5 +243,90 @@ mod tests {
             solve_with(&p, &mut ws);
             assert_eq!(fresh, ws.plan, "n={n} model={model:?}");
         }
+    }
+
+    /// The sparse entry point must agree with the dense one bitwise, with
+    /// and without capacities, across all three models.
+    #[test]
+    fn sparse_solve_matches_dense_solve() {
+        let mut rng = Rng::new(11);
+        let mut ws = SolverWorkspace::new();
+        for model in [DiscardModel::LinearR, DiscardModel::LinearG, DiscardModel::Sqrt] {
+            let n = 8;
+            let graph = erdos_renyi(n, 0.45, &mut rng);
+            let mut costs = CostSchedule::zeros(n, 3);
+            for t in 0..3 {
+                for i in 0..n {
+                    costs.compute[t][i] = 0.05 + 0.04 * i as f64;
+                    costs.error_weight[t][i] = 0.45;
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = 0.02 + 0.015 * j as f64;
+                        }
+                    }
+                }
+            }
+            let d: Vec<f64> = (0..n).map(|i| 2.0 + i as f64).collect();
+            let inbound = vec![0.3; n];
+            let active: Vec<bool> = (0..n).map(|i| i != 2).collect();
+            let p = MovementProblem {
+                t: 0,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            let dense = solve(&p);
+            solve_sparse_with(&p, &mut ws);
+            assert_eq!(ws.sparse.to_dense(), dense, "{model:?}");
+        }
+    }
+
+    /// Warm-started PGD still returns a feasible plan and the warm state
+    /// machinery only engages when the flag is set.
+    #[test]
+    fn warm_start_stays_feasible_and_is_opt_in() {
+        let n = 6;
+        let graph = fully_connected(n);
+        let mut costs = CostSchedule::zeros(n, 5);
+        for t in 0..5 {
+            for i in 0..n {
+                costs.compute[t][i] = 0.1 + 0.06 * i as f64;
+                costs.error_weight[t][i] = 0.5;
+                for j in 0..n {
+                    if i != j {
+                        costs.link[t][i * n + j] = 0.04;
+                    }
+                }
+            }
+        }
+        let d = vec![6.0; n];
+        let inbound = vec![0.0; n];
+
+        let mut cold = SolverWorkspace::new();
+        let mut warm = SolverWorkspace::new();
+        warm.warm_start = true;
+        for t in 0..3 {
+            // churn: one device drops out at t = 1, returns at t = 2
+            let active: Vec<bool> = (0..n).map(|i| !(t == 1 && i == 3)).collect();
+            let p = MovementProblem {
+                t,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: DiscardModel::Sqrt,
+            };
+            solve_with(&p, &mut cold);
+            solve_with(&p, &mut warm);
+            warm.plan.assert_feasible(&p, 1e-6);
+            assert!(!cold.prev_valid, "warm state must stay off by default");
+            assert!(warm.prev_valid);
+        }
+        // first interval has no previous plan -> both start cold and agree
+        // (checked implicitly: warm.prev_valid only flips after a solve)
     }
 }

@@ -73,6 +73,13 @@ impl MovementPlan {
         }
     }
 
+    /// Heap footprint in bytes — the O(n²) number the scaling bench
+    /// compares against [`crate::movement::SparsePlan::heap_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.s.capacity() * size_of::<f64>() + self.r.capacity() * size_of::<f64>()
+    }
+
     #[inline]
     pub fn s(&self, i: usize, j: usize) -> f64 {
         self.s[i * self.n + j]

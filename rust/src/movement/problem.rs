@@ -1,6 +1,6 @@
 //! Per-interval data-movement problem instance (§III-C).
 
-use crate::costs::CostSchedule;
+use crate::costs::MovementCosts;
 use crate::topology::Graph;
 
 /// The three discard-cost models compared in §IV-A2 / Table IV.
@@ -38,8 +38,10 @@ pub struct MovementProblem<'a> {
     /// `Σ_j s_ji(t-1) D_j(t-1)`: data offloaded *to* i last interval, which
     /// i processes now (enters `G_i(t)` and consumes node capacity).
     pub inbound_prev: &'a [f64],
-    /// Cost/capacity schedule the optimizer believes.
-    pub costs: &'a CostSchedule,
+    /// Cost/capacity oracle the optimizer believes. Usually a dense
+    /// [`crate::costs::CostSchedule`] (which coerces automatically at the
+    /// struct literal); scaling runs plug in procedural O(n)-memory models.
+    pub costs: &'a dyn MovementCosts,
     pub discard_model: DiscardModel,
 }
 
@@ -91,7 +93,11 @@ impl<'a> MovementProblem<'a> {
         let mut best: Option<(usize, f64)> = None;
         for j in self.active_neighbors(i) {
             let c = self.offload_cost(i, j);
-            if best.map_or(true, |(_, bc)| c < bc) {
+            let better = match best {
+                None => true,
+                Some((_, bc)) => c < bc,
+            };
+            if better {
                 best = Some((j, c));
             }
         }

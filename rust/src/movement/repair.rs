@@ -18,11 +18,49 @@
 
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
+use crate::movement::sparse::SparsePlan;
+
+/// One redistribution option for a displaced fraction: process locally or
+/// offload to neighbor `j` (whose edge slot, for the sparse path, is
+/// `slot`; the dense path ignores it).
+#[derive(Clone, Copy)]
+enum Opt {
+    Process,
+    Offload { j: usize, slot: usize },
+}
+
+/// Reusable buffers for the repair pass, so the per-interval hot path
+/// allocates nothing (the original implementation allocated `excess`,
+/// `recv_slack`, and — per device, per sweep — an option list plus a
+/// collected neighbor Vec).
+#[derive(Debug, Default)]
+pub struct RepairScratch {
+    excess: Vec<f64>,
+    recv_slack: Vec<f64>,
+    options: Vec<(f64, Opt)>,
+}
+
+impl std::fmt::Debug for Opt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Opt::Process => write!(f, "Process"),
+            Opt::Offload { j, .. } => write!(f, "Offload({j})"),
+        }
+    }
+}
 
 /// Repair `plan` in place to satisfy all capacity constraints of `p`.
+/// Convenience wrapper over [`repair_with`] with one-shot scratch.
 pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
+    repair_with(p, plan, &mut RepairScratch::default());
+}
+
+/// Scratch-reusing variant of [`repair`] — bit-identical results; the
+/// buffers are fully overwritten per call.
+pub fn repair_with(p: &MovementProblem, plan: &mut MovementPlan, ws: &mut RepairScratch) {
     let n = p.n();
-    let mut excess = vec![0.0; n]; // displaced fraction per sender
+    ws.excess.clear();
+    ws.excess.resize(n, 0.0); // displaced fraction per sender
 
     // --- 1. link capacities -------------------------------------------------
     for i in 0..n {
@@ -36,7 +74,7 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
             let cap = p.costs.cap_link_at(p.t, i, j);
             let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
             if plan.s(i, j) > max_frac {
-                excess[i] += plan.s(i, j) - max_frac;
+                ws.excess[i] += plan.s(i, j) - max_frac;
                 plan.set_s(i, j, max_frac);
             }
         }
@@ -58,7 +96,7 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
             for i in 0..n {
                 if i != j && p.d[i] > 0.0 && plan.s(i, j) > 0.0 {
                     let removed = plan.s(i, j) * (1.0 - scale);
-                    excess[i] += removed;
+                    ws.excess[i] += removed;
                     plan.set_s(i, j, plan.s(i, j) * scale);
                 }
             }
@@ -77,46 +115,42 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
         let avail = (cap - p.inbound_prev[i]).max(0.0);
         let max_frac = avail / p.d[i];
         if plan.s(i, i) > max_frac {
-            excess[i] += plan.s(i, i) - max_frac;
+            ws.excess[i] += plan.s(i, i) - max_frac;
             plan.set_s(i, i, max_frac);
         }
     }
 
     // --- 4. redistribute displaced fractions ---------------------------------
     // shared slacks after the clamping above
-    let mut recv_slack: Vec<f64> = (0..n)
-        .map(|j| {
-            let cap = p.costs.cap_node_at(p.t + 1, j);
-            if cap.is_infinite() {
-                return f64::INFINITY;
-            }
-            let inbound: f64 = (0..n)
-                .filter(|&i| i != j && p.d[i] > 0.0)
-                .map(|i| plan.s(i, j) * p.d[i])
-                .sum();
-            (cap - inbound).max(0.0)
-        })
-        .collect();
+    ws.recv_slack.clear();
+    ws.recv_slack.extend((0..n).map(|j| {
+        let cap = p.costs.cap_node_at(p.t + 1, j);
+        if cap.is_infinite() {
+            return f64::INFINITY;
+        }
+        let inbound: f64 = (0..n)
+            .filter(|&i| i != j && p.d[i] > 0.0)
+            .map(|i| plan.s(i, j) * p.d[i])
+            .sum();
+        (cap - inbound).max(0.0)
+    }));
 
     for i in 0..n {
-        if excess[i] <= 0.0 || p.d[i] <= 0.0 {
+        if ws.excess[i] <= 0.0 || p.d[i] <= 0.0 {
             continue;
         }
-        let mut remaining = excess[i];
+        let mut remaining = ws.excess[i];
 
-        // option list sorted by marginal cost: (cost, target)
-        #[derive(Clone, Copy)]
-        enum Opt {
-            Process,
-            Offload(usize),
+        // option list sorted by marginal cost: (cost, target); the
+        // neighbor iterator is consumed directly — no per-device collect
+        ws.options.clear();
+        ws.options.push((p.process_cost(i), Opt::Process));
+        for j in p.active_neighbors(i) {
+            ws.options.push((p.offload_cost(i, j), Opt::Offload { j, slot: 0 }));
         }
-        let mut options: Vec<(f64, Opt)> = vec![(p.process_cost(i), Opt::Process)];
-        for j in p.active_neighbors(i).collect::<Vec<_>>() {
-            options.push((p.offload_cost(i, j), Opt::Offload(j)));
-        }
-        options.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ws.options.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
-        for (cost, opt) in options {
+        for &(cost, opt) in ws.options.iter() {
             if remaining <= 1e-12 {
                 break;
             }
@@ -136,23 +170,23 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
                     plan.set_s(i, i, plan.s(i, i) + take);
                     remaining -= take;
                 }
-                Opt::Offload(j) => {
+                Opt::Offload { j, .. } => {
                     let link_cap = p.costs.cap_link_at(p.t, i, j);
                     let link_slack = if link_cap.is_infinite() {
                         f64::INFINITY
                     } else {
                         (link_cap / p.d[i] - plan.s(i, j)).max(0.0)
                     };
-                    let recv_frac = if recv_slack[j].is_infinite() {
+                    let recv_frac = if ws.recv_slack[j].is_infinite() {
                         f64::INFINITY
                     } else {
-                        recv_slack[j] / p.d[i]
+                        ws.recv_slack[j] / p.d[i]
                     };
                     let take = remaining.min(link_slack).min(recv_frac);
                     if take > 0.0 {
                         plan.set_s(i, j, plan.s(i, j) + take);
-                        if !recv_slack[j].is_infinite() {
-                            recv_slack[j] -= take * p.d[i];
+                        if !ws.recv_slack[j].is_infinite() {
+                            ws.recv_slack[j] -= take * p.d[i];
                         }
                         remaining -= take;
                     }
@@ -161,6 +195,161 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
         }
         // whatever could not be placed is discarded
         plan.r[i] += remaining;
+    }
+}
+
+/// Sparse mirror of [`repair_with`]: same four phases, same float-op
+/// sequence, but every scan touches only stored edge slots (O(V + E) per
+/// pass instead of O(n²)). Receiver-side sums walk the transpose rows,
+/// whose ascending-source order matches the dense `for i in 0..n` loop
+/// (off-edge dense terms are `+0.0` no-ops on nonnegative sums), so the
+/// repaired sparse plan densifies bit-identically.
+pub fn repair_sparse(p: &MovementProblem, sp: &mut SparsePlan, ws: &mut RepairScratch) {
+    let n = p.n();
+    assert_eq!(sp.n, n, "sparse plan size mismatch");
+    ws.excess.clear();
+    ws.excess.resize(n, 0.0);
+
+    // --- 1. link capacities -------------------------------------------------
+    for i in 0..n {
+        if p.d[i] <= 0.0 {
+            continue;
+        }
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            if sp.s_edge[e] == 0.0 {
+                continue;
+            }
+            let cap = p.costs.cap_link_at(p.t, i, sp.targets[e]);
+            let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
+            if sp.s_edge[e] > max_frac {
+                ws.excess[i] += sp.s_edge[e] - max_frac;
+                sp.s_edge[e] = max_frac;
+            }
+        }
+    }
+
+    // --- 2. receiver capacities ---------------------------------------------
+    for j in 0..n {
+        let cap = p.costs.cap_node_at(p.t + 1, j);
+        if cap.is_infinite() {
+            continue;
+        }
+        let mut inbound = 0.0;
+        for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+            let i = sp.t_sources[te];
+            if p.d[i] > 0.0 {
+                inbound += sp.s_edge[sp.t_slot[te]] * p.d[i];
+            }
+        }
+        if inbound > cap {
+            let scale = cap / inbound;
+            for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+                let i = sp.t_sources[te];
+                let slot = sp.t_slot[te];
+                if p.d[i] > 0.0 && sp.s_edge[slot] > 0.0 {
+                    let removed = sp.s_edge[slot] * (1.0 - scale);
+                    ws.excess[i] += removed;
+                    sp.s_edge[slot] *= scale;
+                }
+            }
+        }
+    }
+
+    // --- 3. sender local capacities ------------------------------------------
+    for i in 0..n {
+        if p.d[i] <= 0.0 {
+            continue;
+        }
+        let cap = p.costs.cap_node_at(p.t, i);
+        if cap.is_infinite() {
+            continue;
+        }
+        let avail = (cap - p.inbound_prev[i]).max(0.0);
+        let max_frac = avail / p.d[i];
+        if sp.local[i] > max_frac {
+            ws.excess[i] += sp.local[i] - max_frac;
+            sp.local[i] = max_frac;
+        }
+    }
+
+    // --- 4. redistribute displaced fractions ---------------------------------
+    ws.recv_slack.clear();
+    ws.recv_slack.extend((0..n).map(|j| {
+        let cap = p.costs.cap_node_at(p.t + 1, j);
+        if cap.is_infinite() {
+            return f64::INFINITY;
+        }
+        let mut inbound = 0.0;
+        for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+            let i = sp.t_sources[te];
+            if p.d[i] > 0.0 {
+                inbound += sp.s_edge[sp.t_slot[te]] * p.d[i];
+            }
+        }
+        (cap - inbound).max(0.0)
+    }));
+
+    for i in 0..n {
+        if ws.excess[i] <= 0.0 || p.d[i] <= 0.0 {
+            continue;
+        }
+        let mut remaining = ws.excess[i];
+
+        ws.options.clear();
+        ws.options.push((p.process_cost(i), Opt::Process));
+        // same filter as `p.active_neighbors(i)` (active target only), in
+        // the same ascending order
+        for e in sp.offsets[i]..sp.offsets[i + 1] {
+            let j = sp.targets[e];
+            if p.active[j] {
+                ws.options.push((p.offload_cost(i, j), Opt::Offload { j, slot: e }));
+            }
+        }
+        ws.options.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        for &(cost, opt) in ws.options.iter() {
+            if remaining <= 1e-12 {
+                break;
+            }
+            if cost >= p.discard_cost(i) {
+                break;
+            }
+            match opt {
+                Opt::Process => {
+                    let cap = p.costs.cap_node_at(p.t, i);
+                    let slack_frac = if cap.is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        ((cap - p.inbound_prev[i]).max(0.0) / p.d[i] - sp.local[i]).max(0.0)
+                    };
+                    let take = remaining.min(slack_frac);
+                    sp.local[i] += take;
+                    remaining -= take;
+                }
+                Opt::Offload { j, slot } => {
+                    let link_cap = p.costs.cap_link_at(p.t, i, j);
+                    let link_slack = if link_cap.is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        (link_cap / p.d[i] - sp.s_edge[slot]).max(0.0)
+                    };
+                    let recv_frac = if ws.recv_slack[j].is_infinite() {
+                        f64::INFINITY
+                    } else {
+                        ws.recv_slack[j] / p.d[i]
+                    };
+                    let take = remaining.min(link_slack).min(recv_frac);
+                    if take > 0.0 {
+                        sp.s_edge[slot] += take;
+                        if !ws.recv_slack[j].is_infinite() {
+                            ws.recv_slack[j] -= take * p.d[i];
+                        }
+                        remaining -= take;
+                    }
+                }
+            }
+        }
+        sp.discard[i] += remaining;
     }
 }
 
@@ -324,7 +513,7 @@ mod tests {
             };
             let mut plan = match model {
                 DiscardModel::Sqrt => {
-                    convex::solve(&p, convex::PgdOptions { iterations: 60, step0: 0.0 })
+                    convex::solve(&p, convex::PgdOptions { iterations: 60, step0: 0.0, tol: 0.0 })
                 }
                 _ => greedy::solve(&p),
             };

@@ -1,0 +1,478 @@
+//! Edge-indexed movement plans: O(E) storage for sparse topologies.
+//!
+//! The dense [`MovementPlan`] stores `s` as an `n×n` matrix — fine for the
+//! paper's n ≤ 50 experiments, hopeless at N = 10⁵ (10¹⁰ entries). A
+//! [`SparsePlan`] stores exactly one `f64` per **edge** of the topology
+//! (CSR layout over the graph's sorted out-neighbor rows) plus two per
+//! device (`local` = s_ii, `discard` = r_i): O(V + E) total, which on the
+//! random-geometric topologies the scaling bench uses is O(V).
+//!
+//! **Bit-identity contract** (DESIGN.md §Perf rule 11): every evaluation
+//! mirror here (`objective`, `cost`, `processed`, `inbound_next_into`) and
+//! every sparse solver pass iterates edges in the same order the dense
+//! code visits nonzero entries — rows ascending, targets ascending within
+//! a row (the graph keeps adjacency sorted) — and the dense code's
+//! visits to *off-edge* entries are exact float no-ops (adding `0.0` to a
+//! nonnegative partial sum, subtracting `step·0.0`). So a sparse solve and
+//! a dense solve of the same instance produce plans equal under
+//! [`SparsePlan::to_dense`] **bitwise**, enforced by the dense≡sparse
+//! property suite in `tests/solver_agreement.rs`.
+
+use crate::movement::plan::{CostBreakdown, MovementPlan};
+use crate::movement::problem::{DiscardModel, MovementProblem};
+use crate::topology::Graph;
+
+/// A movement plan stored per-edge. Structure (offsets/targets + the
+/// in-edge transpose) mirrors the topology; values (`s_edge`, `local`,
+/// `discard`) are the decision variables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsePlan {
+    pub n: usize,
+    /// CSR row offsets: row i's edge slots are `offsets[i]..offsets[i+1]`.
+    pub offsets: Vec<usize>,
+    /// Edge targets per slot, ascending within each row.
+    pub targets: Vec<usize>,
+    /// `s_ij` per edge slot.
+    pub s_edge: Vec<f64>,
+    /// `s_ii` per device.
+    pub local: Vec<f64>,
+    /// `r_i` per device.
+    pub discard: Vec<f64>,
+    /// Transpose row offsets: in-edges of j are `t_offsets[j]..t_offsets[j+1]`.
+    pub t_offsets: Vec<usize>,
+    /// Source device of each in-edge, ascending within each transpose row.
+    pub t_sources: Vec<usize>,
+    /// Forward edge slot of each in-edge (index into `s_edge`/`targets`).
+    pub t_slot: Vec<usize>,
+}
+
+impl SparsePlan {
+    /// An empty plan over zero devices (workspace initial state).
+    pub fn empty() -> Self {
+        SparsePlan {
+            n: 0,
+            offsets: vec![0],
+            targets: Vec::new(),
+            s_edge: Vec::new(),
+            local: Vec::new(),
+            discard: Vec::new(),
+            t_offsets: vec![0],
+            t_sources: Vec::new(),
+            t_slot: Vec::new(),
+        }
+    }
+
+    /// Keep-all plan with structure taken from `graph`.
+    pub fn keep_all(graph: &Graph) -> Self {
+        let mut sp = SparsePlan::empty();
+        sp.rebuild(graph);
+        sp
+    }
+
+    /// Rebuild structure from `graph` (reusing allocations) and reset the
+    /// values to keep-all (`local = 1`, everything else 0). O(V + E).
+    pub fn rebuild(&mut self, graph: &Graph) {
+        let n = graph.n();
+        self.n = n;
+        self.offsets.clear();
+        self.offsets.reserve(n + 1);
+        self.targets.clear();
+        self.offsets.push(0);
+        for i in 0..n {
+            self.targets.extend_from_slice(graph.out_neighbors(i));
+            self.offsets.push(self.targets.len());
+        }
+        let m = self.targets.len();
+        self.s_edge.clear();
+        self.s_edge.resize(m, 0.0);
+        self.local.clear();
+        self.local.resize(n, 1.0);
+        self.discard.clear();
+        self.discard.resize(n, 0.0);
+
+        // transpose by counting sort: forward slots are visited with i
+        // ascending, so each transpose row fills with sources ascending
+        self.t_offsets.clear();
+        self.t_offsets.resize(n + 1, 0);
+        for &j in &self.targets {
+            self.t_offsets[j + 1] += 1;
+        }
+        for j in 0..n {
+            self.t_offsets[j + 1] += self.t_offsets[j];
+        }
+        self.t_sources.clear();
+        self.t_sources.resize(m, 0);
+        self.t_slot.clear();
+        self.t_slot.resize(m, 0);
+        let mut cursor: Vec<usize> = self.t_offsets[..n].to_vec();
+        for i in 0..n {
+            for e in self.offsets[i]..self.offsets[i + 1] {
+                let j = self.targets[e];
+                let at = cursor[j];
+                self.t_sources[at] = i;
+                self.t_slot[at] = e;
+                cursor[j] += 1;
+            }
+        }
+    }
+
+    /// Reset the values (not the structure) to keep-all.
+    pub fn reset_keep_all(&mut self) {
+        self.s_edge.iter_mut().for_each(|v| *v = 0.0);
+        self.local.iter_mut().for_each(|v| *v = 1.0);
+        self.discard.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Number of edge slots.
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Edge slot of (i, j), if the edge exists.
+    pub fn slot(&self, i: usize, j: usize) -> Option<usize> {
+        let row = &self.targets[self.offsets[i]..self.offsets[i + 1]];
+        row.binary_search(&j).ok().map(|pos| self.offsets[i] + pos)
+    }
+
+    /// Row i's (targets, values) as parallel slices.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let span = self.offsets[i]..self.offsets[i + 1];
+        (&self.targets[span.clone()], &self.s_edge[span])
+    }
+
+    /// Heap footprint in bytes (the O(E)-vs-O(n²) number the scaling bench
+    /// reports).
+    pub fn heap_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.offsets.capacity() * size_of::<usize>()
+            + self.targets.capacity() * size_of::<usize>()
+            + self.s_edge.capacity() * size_of::<f64>()
+            + self.local.capacity() * size_of::<f64>()
+            + self.discard.capacity() * size_of::<f64>()
+            + self.t_offsets.capacity() * size_of::<usize>()
+            + self.t_sources.capacity() * size_of::<usize>()
+            + self.t_slot.capacity() * size_of::<usize>()
+    }
+
+    /// Lossless conversion to the dense representation.
+    pub fn to_dense(&self) -> MovementPlan {
+        let mut plan = MovementPlan::keep_all(self.n);
+        self.to_dense_into(&mut plan);
+        plan
+    }
+
+    /// In-place dense conversion (reuses `plan`'s buffers).
+    pub fn to_dense_into(&self, plan: &mut MovementPlan) {
+        let n = self.n;
+        plan.reset_keep_all(n);
+        for i in 0..n {
+            plan.set_s(i, i, self.local[i]);
+            plan.r[i] = self.discard[i];
+            for e in self.offsets[i]..self.offsets[i + 1] {
+                plan.set_s(i, self.targets[e], self.s_edge[e]);
+            }
+        }
+    }
+
+    /// Adopt the values of a dense plan whose support lies on this
+    /// structure's edges (+ diagonal). Debug-asserts that no off-edge mass
+    /// is lost, making the round-trip lossless.
+    pub fn from_dense(&mut self, plan: &MovementPlan) {
+        assert_eq!(plan.n, self.n, "dense plan size mismatch");
+        for i in 0..self.n {
+            self.local[i] = plan.s(i, i);
+            self.discard[i] = plan.r[i];
+            for e in self.offsets[i]..self.offsets[i + 1] {
+                self.s_edge[e] = plan.s(i, self.targets[e]);
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            let mut back = MovementPlan::keep_all(self.n);
+            self.to_dense_into(&mut back);
+            for i in 0..self.n {
+                for j in 0..self.n {
+                    debug_assert!(
+                        back.s(i, j) == plan.s(i, j),
+                        "dense plan carries off-edge mass at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// `G_i(t)` mirror of [`MovementPlan::processed`].
+    pub fn processed(&self, p: &MovementProblem) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| self.local[i] * p.d[i] + p.inbound_prev[i])
+            .collect()
+    }
+
+    /// Mirror of [`MovementPlan::inbound_next`] writing into `out`
+    /// (resized to n): data each device receives this interval. Bitwise
+    /// equal to the dense loop — the dense version adds `0.0 · d_i` for
+    /// every off-edge pair, an exact no-op on these nonnegative sums.
+    pub fn inbound_next_into(&self, p: &MovementProblem, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.n, 0.0);
+        for i in 0..self.n {
+            if p.d[i] == 0.0 {
+                continue;
+            }
+            for e in self.offsets[i]..self.offsets[i + 1] {
+                out[self.targets[e]] += self.s_edge[e] * p.d[i];
+            }
+        }
+    }
+
+    /// Mirror of [`MovementPlan::cost`] (same visit order over nonzero
+    /// entries ⇒ bit-identical breakdown).
+    pub fn cost(&self, p: &MovementProblem) -> CostBreakdown {
+        let mut c = CostBreakdown::default();
+        for i in 0..self.n {
+            let g = self.local[i] * p.d[i] + p.inbound_prev[i];
+            c.process += g * p.costs.c_node(p.t, i);
+            c.discard += p.costs.f(p.t, i) * p.d[i] * self.discard[i];
+            if p.d[i] > 0.0 {
+                for e in self.offsets[i]..self.offsets[i + 1] {
+                    if self.s_edge[e] > 0.0 {
+                        c.transfer += p.d[i]
+                            * self.s_edge[e]
+                            * p.costs.c_link(p.t, i, self.targets[e]);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Mirror of [`MovementPlan::objective`]. The dense LinearG branch
+    /// subtracts `f · d_i · 0.0` for off-edge pairs — an exact no-op — so
+    /// skipping them here preserves bits.
+    pub fn objective(&self, p: &MovementProblem) -> f64 {
+        let mut obj = 0.0;
+        for i in 0..self.n {
+            let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
+            obj += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for e in self.offsets[i]..self.offsets[i + 1] {
+                    if self.s_edge[e] > 0.0 {
+                        let j = self.targets[e];
+                        let amount = p.d[i] * self.s_edge[e];
+                        obj += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
+            }
+        }
+        match p.discard_model {
+            DiscardModel::LinearR => {
+                for i in 0..self.n {
+                    obj += p.costs.f(p.t, i) * p.d[i] * self.discard[i];
+                }
+            }
+            DiscardModel::LinearG => {
+                for i in 0..self.n {
+                    let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
+                    obj -= p.costs.f(p.t, i) * g_local;
+                    if p.d[i] > 0.0 {
+                        for e in self.offsets[i]..self.offsets[i + 1] {
+                            obj -= p.costs.f(p.t + 1, self.targets[e])
+                                * p.d[i]
+                                * self.s_edge[e];
+                        }
+                    }
+                }
+            }
+            DiscardModel::Sqrt => {
+                let mut inbound_now = Vec::new();
+                self.inbound_next_into(p, &mut inbound_now);
+                for i in 0..self.n {
+                    if !p.active[i] {
+                        continue;
+                    }
+                    let g = self.local[i] * p.d[i] + p.inbound_prev[i] + inbound_now[i];
+                    obj += p.costs.f(p.t, i)
+                        / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                }
+            }
+        }
+        obj
+    }
+
+    /// Mirror of [`MovementPlan::assert_feasible`] over the sparse support
+    /// (off-edge entries are structurally zero, so only the stored slots
+    /// need checking).
+    pub fn assert_feasible(&self, p: &MovementProblem, tol: f64) {
+        for i in 0..self.n {
+            let mut row = self.discard[i] + self.local[i];
+            assert!(self.local[i] >= -tol, "s[{i},{i}] = {} < 0", self.local[i]);
+            assert!(self.discard[i] >= -tol, "r[{i}] < 0");
+            for e in self.offsets[i]..self.offsets[i + 1] {
+                let sij = self.s_edge[e];
+                let j = self.targets[e];
+                assert!(sij >= -tol, "s[{i},{j}] = {sij} < 0");
+                row += sij;
+                if sij > tol {
+                    assert!(
+                        p.active[i] && p.active[j],
+                        "offload on inactive link ({i},{j})"
+                    );
+                    let cap = p.costs.cap_link_at(p.t, i, j);
+                    assert!(
+                        sij * p.d[i] <= cap + tol,
+                        "link cap violated on ({i},{j}): {} > {cap}",
+                        sij * p.d[i]
+                    );
+                }
+            }
+            if p.d[i] > 0.0 && p.active[i] {
+                assert!(
+                    (row - 1.0).abs() < tol.max(1e-9),
+                    "simplex violated at {i}: r+Σs = {row}"
+                );
+            }
+            let g = self.local[i] * p.d[i] + p.inbound_prev[i];
+            let cap = p.costs.cap_node_at(p.t, i);
+            assert!(g <= cap + tol, "node cap violated at {i}: G={g} > C={cap}");
+        }
+        // receiver capacities
+        for j in 0..self.n {
+            let cap = p.costs.cap_node_at(p.t + 1, j);
+            if cap.is_finite() {
+                let mut inbound = 0.0;
+                for te in self.t_offsets[j]..self.t_offsets[j + 1] {
+                    let i = self.t_sources[te];
+                    if p.d[i] > 0.0 {
+                        inbound += self.s_edge[self.t_slot[te]] * p.d[i];
+                    }
+                }
+                assert!(
+                    inbound <= cap + tol,
+                    "receiver cap violated at {j}: {inbound} > {cap}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::CostSchedule;
+    use crate::topology::generators::{erdos_renyi, fully_connected};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn structure_mirrors_graph() {
+        let mut rng = Rng::new(1);
+        let g = erdos_renyi(8, 0.4, &mut rng);
+        let sp = SparsePlan::keep_all(&g);
+        assert_eq!(sp.num_edges(), g.num_edges());
+        for i in 0..8 {
+            let (targets, vals) = sp.row(i);
+            assert_eq!(targets, g.out_neighbors(i));
+            assert!(vals.iter().all(|&v| v == 0.0));
+            assert_eq!(sp.local[i], 1.0);
+        }
+        // transpose agrees with in_neighbors and points at the right slots
+        for j in 0..8 {
+            let sources: Vec<usize> =
+                sp.t_sources[sp.t_offsets[j]..sp.t_offsets[j + 1]].to_vec();
+            assert_eq!(sources.as_slice(), g.in_neighbors(j));
+            for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+                assert_eq!(sp.targets[sp.t_slot[te]], j);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_round_trip_is_lossless() {
+        let mut rng = Rng::new(2);
+        let g = erdos_renyi(6, 0.5, &mut rng);
+        let mut sp = SparsePlan::keep_all(&g);
+        // put arbitrary mass on edges
+        let mut frac = 0.05;
+        for i in 0..6 {
+            let span = sp.offsets[i]..sp.offsets[i + 1];
+            for e in span {
+                sp.s_edge[e] = frac;
+                frac += 0.03;
+            }
+            sp.local[i] = 0.2;
+            sp.discard[i] = 0.1;
+        }
+        let dense = sp.to_dense();
+        let mut back = SparsePlan::keep_all(&g);
+        back.from_dense(&dense);
+        assert_eq!(sp, back);
+        assert_eq!(dense, back.to_dense());
+    }
+
+    #[test]
+    fn rebuild_reuses_and_resets() {
+        let g1 = fully_connected(5);
+        let mut rng = Rng::new(3);
+        let g2 = erdos_renyi(9, 0.3, &mut rng);
+        let mut sp = SparsePlan::keep_all(&g1);
+        sp.s_edge[0] = 0.7;
+        sp.rebuild(&g2);
+        assert_eq!(sp.n, 9);
+        assert_eq!(sp.num_edges(), g2.num_edges());
+        assert!(sp.s_edge.iter().all(|&v| v == 0.0));
+        assert!(sp.local.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn evaluation_mirrors_match_dense() {
+        use crate::movement::problem::{DiscardModel, MovementProblem};
+        let mut rng = Rng::new(4);
+        let g = erdos_renyi(7, 0.6, &mut rng);
+        let n = 7;
+        let mut costs = CostSchedule::zeros(n, 2);
+        for t in 0..2 {
+            for i in 0..n {
+                costs.compute[t][i] = 0.1 + 0.05 * i as f64;
+                costs.error_weight[t][i] = 0.4;
+                for j in 0..n {
+                    if i != j {
+                        costs.link[t][i * n + j] = 0.02 * (1 + j) as f64;
+                    }
+                }
+            }
+        }
+        let d: Vec<f64> = (0..n).map(|i| 3.0 + i as f64).collect();
+        let inbound = vec![0.5; n];
+        let active = vec![true; n];
+
+        let mut sp = SparsePlan::keep_all(&g);
+        let mut frac = 0.02;
+        for i in 0..n {
+            for e in sp.offsets[i]..sp.offsets[i + 1] {
+                sp.s_edge[e] = frac;
+                frac += 0.01;
+            }
+            let off: f64 = sp.row(i).1.iter().sum();
+            sp.local[i] = (1.0 - off).max(0.0) * 0.8;
+            sp.discard[i] = (1.0 - off - sp.local[i]).max(0.0);
+        }
+        let dense = sp.to_dense();
+        for model in [DiscardModel::LinearR, DiscardModel::LinearG, DiscardModel::Sqrt] {
+            let p = MovementProblem {
+                t: 0,
+                graph: &g,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: model,
+            };
+            assert_eq!(sp.objective(&p), dense.objective(&p), "{model:?} objective");
+            assert_eq!(sp.cost(&p), dense.cost(&p), "{model:?} cost");
+            assert_eq!(sp.processed(&p), dense.processed(&p));
+            let mut inb = Vec::new();
+            sp.inbound_next_into(&p, &mut inb);
+            assert_eq!(inb, dense.inbound_next(&p));
+        }
+    }
+}

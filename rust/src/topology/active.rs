@@ -1,0 +1,225 @@
+//! Incremental active-set view over a fixed device graph.
+//!
+//! Churn (§V-E) toggles a handful of devices per interval. The original
+//! engine rebuilt the whole topology every interval via
+//! [`Graph::restrict`] — O(V + E) allocation and reinsertion even when
+//! nothing changed. `ActiveView` replaces that with a persistent bit mask:
+//! entering/exiting devices flip bits in place (O(1) each, driven by the
+//! [`ChurnDelta`](crate::topology::dynamics::ChurnDelta) a churn step
+//! reports), and filtered adjacency is an O(degree) scan of the base
+//! graph's sorted neighbor slices.
+//!
+//! **Equivalence contract** (pinned by the tests below against the
+//! `restrict` oracle): for every device `i` active in the mask,
+//! `filtered_out(g, i)` yields exactly `g.restrict(mask).out_neighbors(i)`
+//! in the same ascending order — so a solver that iterates
+//! (base graph + mask) sees the identical edge sequence it would have seen
+//! on the restricted graph, and plans stay bit-identical
+//! (DESIGN.md §Perf rule 11).
+
+use crate::topology::dynamics::ChurnDelta;
+use crate::topology::graph::Graph;
+
+/// A mutable activity mask over device ids `0..n` with an O(1) active
+/// counter. Indexable like the `Vec<bool>` it replaces: `view[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActiveView {
+    bits: Vec<bool>,
+    n_active: usize,
+}
+
+impl ActiveView {
+    /// All devices active (the engine's initial state).
+    pub fn all_active(n: usize) -> Self {
+        ActiveView { bits: vec![true; n], n_active: n }
+    }
+
+    /// All devices inactive.
+    pub fn all_inactive(n: usize) -> Self {
+        ActiveView { bits: vec![false; n], n_active: 0 }
+    }
+
+    /// Adopt an explicit mask.
+    pub fn from_mask(mask: &[bool]) -> Self {
+        ActiveView {
+            bits: mask.to_vec(),
+            n_active: mask.iter().filter(|&&b| b).count(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Number of active devices — O(1), maintained across flips.
+    pub fn num_active(&self) -> usize {
+        self.n_active
+    }
+
+    pub fn is_active(&self, i: usize) -> bool {
+        self.bits[i]
+    }
+
+    /// Flip device `i` to `on`, maintaining the counter. Idempotent.
+    pub fn set(&mut self, i: usize, on: bool) {
+        if self.bits[i] != on {
+            self.bits[i] = on;
+            if on {
+                self.n_active += 1;
+            } else {
+                self.n_active -= 1;
+            }
+        }
+    }
+
+    /// Apply one churn interval's delta: exits then entries. The sets are
+    /// disjoint (a device cannot both exit and enter in one step), so the
+    /// order is immaterial; exits-first matches the churn semantics.
+    pub fn apply(&mut self, delta: &ChurnDelta) {
+        for &i in &delta.exited {
+            self.set(i, false);
+        }
+        for &i in &delta.entered {
+            self.set(i, true);
+        }
+    }
+
+    /// Overwrite from a full mask (used when a session resets).
+    pub fn copy_from(&mut self, mask: &[bool]) {
+        assert_eq!(mask.len(), self.bits.len());
+        self.bits.copy_from_slice(mask);
+        self.n_active = mask.iter().filter(|&&b| b).count();
+    }
+
+    /// Borrow the raw mask — the shape every movement solver takes as
+    /// `active: &[bool]`.
+    pub fn as_slice(&self) -> &[bool] {
+        &self.bits
+    }
+
+    /// Out-neighbors of `i` in the masked graph, ascending: exactly
+    /// `g.restrict(self.as_slice()).out_neighbors(i)` when `i` is active,
+    /// without materializing the restricted graph.
+    pub fn filtered_out<'a>(
+        &'a self,
+        g: &'a Graph,
+        i: usize,
+    ) -> impl Iterator<Item = usize> + 'a {
+        let live = self.bits[i];
+        g.out_neighbors(i)
+            .iter()
+            .copied()
+            .filter(move |&j| live && self.bits[j])
+    }
+
+    /// In-neighbors of `i` in the masked graph, ascending (the transpose
+    /// counterpart of [`filtered_out`](Self::filtered_out)).
+    pub fn filtered_in<'a>(
+        &'a self,
+        g: &'a Graph,
+        i: usize,
+    ) -> impl Iterator<Item = usize> + 'a {
+        let live = self.bits[i];
+        g.in_neighbors(i)
+            .iter()
+            .copied()
+            .filter(move |&j| live && self.bits[j])
+    }
+}
+
+impl std::ops::Index<usize> for ActiveView {
+    type Output = bool;
+    fn index(&self, i: usize) -> &bool {
+        &self.bits[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::dynamics::ChurnProcess;
+    use crate::topology::generators::{erdos_renyi, watts_strogatz};
+    use crate::util::rng::Rng;
+
+    fn assert_matches_restrict(g: &Graph, view: &ActiveView) {
+        let oracle = g.restrict(view.as_slice());
+        for i in 0..g.n() {
+            let got_out: Vec<usize> = view.filtered_out(g, i).collect();
+            assert_eq!(
+                got_out,
+                oracle.out_neighbors(i),
+                "out-neighbors of {i} diverge from restrict"
+            );
+            let got_in: Vec<usize> = view.filtered_in(g, i).collect();
+            assert_eq!(
+                got_in,
+                oracle.in_neighbors(i),
+                "in-neighbors of {i} diverge from restrict"
+            );
+        }
+    }
+
+    #[test]
+    fn counter_tracks_flips() {
+        let mut v = ActiveView::all_active(5);
+        assert_eq!(v.num_active(), 5);
+        v.set(2, false);
+        v.set(2, false); // idempotent
+        assert_eq!(v.num_active(), 4);
+        assert!(!v[2]);
+        v.set(2, true);
+        assert_eq!(v.num_active(), 5);
+        let m = ActiveView::from_mask(&[true, false, true]);
+        assert_eq!(v.n(), 5);
+        assert_eq!(m.num_active(), 2);
+    }
+
+    #[test]
+    fn enter_exit_reenter_matches_restrict_oracle() {
+        let mut rng = Rng::new(11);
+        let g = erdos_renyi(12, 0.4, &mut rng);
+        let mut view = ActiveView::all_active(12);
+        assert_matches_restrict(&g, &view);
+
+        // exit a few
+        for &i in &[3, 7, 0] {
+            view.set(i, false);
+        }
+        assert_matches_restrict(&g, &view);
+        // re-enter one, exit another
+        view.set(7, true);
+        view.set(5, false);
+        assert_matches_restrict(&g, &view);
+        // everyone back
+        for i in 0..12 {
+            view.set(i, true);
+        }
+        assert_matches_restrict(&g, &view);
+        assert_eq!(view.num_active(), 12);
+    }
+
+    #[test]
+    fn churn_delta_application_matches_full_mask_copy() {
+        let mut rng = Rng::new(21);
+        let g = watts_strogatz(20, 4, 0.3, &mut rng);
+        let mut churn = ChurnProcess::new(20, 0.2, 0.2);
+        let mut view = ActiveView::all_active(20);
+        let mut churn_rng = Rng::new(77);
+        for _ in 0..30 {
+            let delta = churn.step(&mut churn_rng).clone();
+            let mask = churn.active().to_vec();
+            view.apply(&delta);
+            assert_eq!(view.as_slice(), mask.as_slice(), "delta drifted from mask");
+            assert_eq!(view.num_active(), churn.num_active());
+            assert_matches_restrict(&g, &view);
+        }
+    }
+
+    #[test]
+    fn copy_from_resets_counter() {
+        let mut v = ActiveView::all_inactive(4);
+        v.copy_from(&[true, true, false, true]);
+        assert_eq!(v.num_active(), 3);
+        assert_eq!(v.as_slice(), &[true, true, false, true]);
+    }
+}

@@ -6,8 +6,39 @@
 //! node cannot ship its local update first, and a re-entering node waits for
 //! the next global aggregation before resuming (it is *present* but not
 //! *synchronized*; see [`crate::fed::engine`]).
+//!
+//! State is O(n) regardless of how long the process runs: `step()` reports
+//! the interval's delta through a reused scratch [`ChurnDelta`] (no per-call
+//! allocation), the active count is a maintained counter rather than a
+//! scan, and the trajectory mean is a running sum. The full per-step count
+//! history — unbounded by construction — is **opt-in** via
+//! [`ChurnProcess::record_history`] for analyses that genuinely need it.
 
 use crate::util::rng::Rng;
+
+/// The devices whose activity flipped in one churn interval. `entered` and
+/// `exited` are disjoint, each ascending by device id (the step scans ids
+/// in order).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChurnDelta {
+    /// Devices that re-entered this step (they must wait for the next
+    /// aggregation to sync).
+    pub entered: Vec<usize>,
+    /// Devices that exited this step (their unsent local state is lost).
+    pub exited: Vec<usize>,
+}
+
+impl ChurnDelta {
+    fn clear(&mut self) {
+        self.entered.clear();
+        self.exited.clear();
+    }
+
+    /// No device changed state this interval.
+    pub fn is_empty(&self) -> bool {
+        self.entered.is_empty() && self.exited.is_empty()
+    }
+}
 
 /// Markov on/off churn over `n` devices.
 #[derive(Debug, Clone)]
@@ -15,8 +46,15 @@ pub struct ChurnProcess {
     pub p_exit: f64,
     pub p_entry: f64,
     active: Vec<bool>,
-    /// history of active counts, one per step() call
-    active_counts: Vec<usize>,
+    /// maintained count of `true` entries in `active`
+    n_active: usize,
+    /// running sum/length of post-step active counts (for `mean_active`)
+    count_sum: u64,
+    steps: usize,
+    /// scratch delta reused across `step()` calls
+    delta: ChurnDelta,
+    /// opt-in full history of post-step active counts
+    history: Option<Vec<usize>>,
 }
 
 impl ChurnProcess {
@@ -27,7 +65,11 @@ impl ChurnProcess {
             p_exit,
             p_entry,
             active: vec![true; n],
-            active_counts: Vec::new(),
+            n_active: n,
+            count_sum: 0,
+            steps: 0,
+            delta: ChurnDelta::default(),
+            history: None,
         }
     }
 
@@ -36,38 +78,64 @@ impl ChurnProcess {
         Self::new(n, 0.0, 0.0)
     }
 
+    /// Start recording the per-step active-count trajectory (unbounded
+    /// memory — one usize per interval). Off by default.
+    pub fn record_history(&mut self) {
+        self.history.get_or_insert_with(Vec::new);
+    }
+
+    /// The recorded active-count trajectory, if
+    /// [`record_history`](Self::record_history) was enabled; empty slice
+    /// otherwise.
+    pub fn history(&self) -> &[usize] {
+        self.history.as_deref().unwrap_or(&[])
+    }
+
     pub fn active(&self) -> &[bool] {
         &self.active
     }
 
+    /// Number of active devices — O(1), maintained across steps.
     pub fn num_active(&self) -> usize {
-        self.active.iter().filter(|&&a| a).count()
+        self.n_active
     }
 
-    /// Advance one interval; returns the set of devices that re-entered
-    /// this step (they must wait for the next aggregation to sync).
-    pub fn step(&mut self, rng: &mut Rng) -> Vec<usize> {
-        let mut entered = Vec::new();
+    /// Advance one interval; returns the delta of devices that changed
+    /// state. The returned borrow is scratch reused by the next `step()`
+    /// call — clone it to keep it across steps.
+    ///
+    /// RNG discipline: ids are scanned ascending and every device draws
+    /// exactly one Bernoulli (`p_exit` if active, `p_entry` if not), so the
+    /// random stream is identical to the original implementation.
+    pub fn step(&mut self, rng: &mut Rng) -> &ChurnDelta {
+        self.delta.clear();
         for i in 0..self.active.len() {
             if self.active[i] {
                 if rng.bool(self.p_exit) {
                     self.active[i] = false;
+                    self.n_active -= 1;
+                    self.delta.exited.push(i);
                 }
             } else if rng.bool(self.p_entry) {
                 self.active[i] = true;
-                entered.push(i);
+                self.n_active += 1;
+                self.delta.entered.push(i);
             }
         }
-        self.active_counts.push(self.num_active());
-        entered
+        self.count_sum += self.n_active as u64;
+        self.steps += 1;
+        if let Some(h) = &mut self.history {
+            h.push(self.n_active);
+        }
+        &self.delta
     }
 
     /// Mean number of active devices over all steps so far.
     pub fn mean_active(&self) -> f64 {
-        if self.active_counts.is_empty() {
+        if self.steps == 0 {
             self.active.len() as f64
         } else {
-            self.active_counts.iter().sum::<usize>() as f64 / self.active_counts.len() as f64
+            self.count_sum as f64 / self.steps as f64
         }
     }
 
@@ -93,8 +161,8 @@ mod tests {
         let mut c = ChurnProcess::static_network(10);
         let mut rng = Rng::new(1);
         for _ in 0..50 {
-            let entered = c.step(&mut rng);
-            assert!(entered.is_empty());
+            let delta = c.step(&mut rng);
+            assert!(delta.is_empty());
             assert_eq!(c.num_active(), 10);
         }
         assert_eq!(c.mean_active(), 10.0);
@@ -104,7 +172,8 @@ mod tests {
     fn all_exit_with_p_one() {
         let mut c = ChurnProcess::new(10, 1.0, 0.0);
         let mut rng = Rng::new(2);
-        c.step(&mut rng);
+        let delta = c.step(&mut rng);
+        assert_eq!(delta.exited, (0..10).collect::<Vec<_>>());
         assert_eq!(c.num_active(), 0);
     }
 
@@ -128,7 +197,73 @@ mod tests {
         let mut rng = Rng::new(4);
         c.step(&mut rng); // everyone exits
         assert_eq!(c.num_active(), 0);
-        let entered = c.step(&mut rng); // everyone re-enters
+        let entered = c.step(&mut rng).entered.clone(); // everyone re-enters
         assert_eq!(entered.len(), 5);
+    }
+
+    /// The delta, maintained counter, and running mean must agree with a
+    /// from-scratch recount of the mask at every step.
+    #[test]
+    fn counter_and_mean_match_recount() {
+        let mut c = ChurnProcess::new(50, 0.1, 0.15);
+        c.record_history();
+        let mut rng = Rng::new(5);
+        let mut counts = Vec::new();
+        for _ in 0..200 {
+            let before: Vec<bool> = c.active().to_vec();
+            let delta = c.step(&mut rng).clone();
+            let recount = c.active().iter().filter(|&&a| a).count();
+            assert_eq!(c.num_active(), recount);
+            for &i in &delta.entered {
+                assert!(!before[i] && c.active()[i]);
+            }
+            for &i in &delta.exited {
+                assert!(before[i] && !c.active()[i]);
+            }
+            counts.push(recount);
+        }
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        assert_eq!(c.mean_active(), mean);
+        assert_eq!(c.history(), counts.as_slice());
+    }
+
+    /// History is opt-in; without it the process stores no trajectory.
+    #[test]
+    fn history_is_opt_in() {
+        let mut c = ChurnProcess::new(20, 0.1, 0.1);
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            c.step(&mut rng);
+        }
+        assert!(c.history().is_empty());
+        assert!(c.mean_active() > 0.0);
+    }
+
+    /// The reused-scratch step must draw the same RNG stream as the
+    /// original per-call-allocation implementation: ascending ids, one
+    /// Bernoulli per device.
+    #[test]
+    fn rng_stream_matches_reference() {
+        let mut c = ChurnProcess::new(30, 0.2, 0.3);
+        let mut rng = Rng::new(7);
+        // reference trajectory computed inline with a twin RNG
+        let mut ref_active = vec![true; 30];
+        let mut ref_rng = Rng::new(7);
+        for _ in 0..100 {
+            let mut entered = Vec::new();
+            for (i, a) in ref_active.iter_mut().enumerate() {
+                if *a {
+                    if ref_rng.bool(0.2) {
+                        *a = false;
+                    }
+                } else if ref_rng.bool(0.3) {
+                    *a = true;
+                    entered.push(i);
+                }
+            }
+            let delta = c.step(&mut rng);
+            assert_eq!(delta.entered, entered);
+            assert_eq!(c.active(), ref_active.as_slice());
+        }
     }
 }

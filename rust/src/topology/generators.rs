@@ -145,6 +145,55 @@ pub fn scale_free(n: usize, m: usize, rng: &mut Rng) -> Graph {
     g
 }
 
+/// Random geometric graph on the unit square: devices at uniform positions,
+/// bidirectionally linked when within `radius`. The standard model for
+/// physical-proximity fog deployments — expected degree ≈ nπr², so choosing
+/// `radius ∝ 1/√n` keeps the graph sparse (O(n) edges) as n grows, which is
+/// exactly what the million-device scaling bench needs. Built with a
+/// uniform grid of cell size `radius` (3×3 neighborhood scan), O(n + E)
+/// expected time — no O(n²) pair loop.
+pub fn random_geometric(n: usize, radius: f64, rng: &mut Rng) -> Graph {
+    random_geometric_with_positions(n, radius, rng).0
+}
+
+/// [`random_geometric`], also returning the sampled positions (used by the
+/// scaling bench to derive distance-based link costs).
+pub fn random_geometric_with_positions(
+    n: usize,
+    radius: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<(f64, f64)>) {
+    assert!(radius > 0.0, "radius must be positive");
+    let pos: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    let mut g = Graph::empty(n);
+    // grid bucketing: cell side = radius, so any pair within `radius` lies
+    // in the same or an adjacent cell
+    let cells = ((1.0 / radius).floor() as usize).clamp(1, n.max(1));
+    let cell_of = |x: f64| -> usize { ((x * cells as f64) as usize).min(cells - 1) };
+    let mut grid: Vec<Vec<usize>> = vec![Vec::new(); cells * cells];
+    for (i, &(x, y)) in pos.iter().enumerate() {
+        grid[cell_of(y) * cells + cell_of(x)].push(i);
+    }
+    let r2 = radius * radius;
+    for (i, &(x, y)) in pos.iter().enumerate() {
+        let (cx, cy) = (cell_of(x), cell_of(y));
+        for gy in cy.saturating_sub(1)..=(cy + 1).min(cells - 1) {
+            for gx in cx.saturating_sub(1)..=(cx + 1).min(cells - 1) {
+                for &j in &grid[gy * cells + gx] {
+                    if j <= i {
+                        continue; // handle each unordered pair once
+                    }
+                    let (dx, dy) = (pos[j].0 - x, pos[j].1 - y);
+                    if dx * dx + dy * dy <= r2 {
+                        g.add_undirected(i, j);
+                    }
+                }
+            }
+        }
+    }
+    (g, pos)
+}
+
 /// Star: devices 0..n-1 all bidirectionally linked to a hub (device n-1 by
 /// convention is NOT the hub — pass `hub` explicitly). Used for the
 /// Theorem-4 edge-server scenario where the hub is the server-class node.
@@ -249,6 +298,36 @@ mod tests {
             assert_eq!(g.out_degree(i), 1);
             assert!(g.has_edge(i, 0) && g.has_edge(0, i));
         }
+    }
+
+    #[test]
+    fn random_geometric_matches_brute_force() {
+        let mut rng = Rng::new(7);
+        let (g, pos) = random_geometric_with_positions(60, 0.25, &mut rng);
+        let mut brute = Graph::empty(60);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let (dx, dy) = (pos[i].0 - pos[j].0, pos[i].1 - pos[j].1);
+                if dx * dx + dy * dy <= 0.25 * 0.25 {
+                    brute.add_undirected(i, j);
+                }
+            }
+        }
+        assert_eq!(g, brute);
+        assert!(g.num_edges() > 0);
+    }
+
+    #[test]
+    fn random_geometric_sparse_at_scale() {
+        let mut rng = Rng::new(8);
+        let n = 5000;
+        // radius ~ sqrt(12/(pi*n)): expected degree ~ 12 independent of n
+        let radius = (12.0 / (std::f64::consts::PI * n as f64)).sqrt();
+        let g = random_geometric(n, radius, &mut rng);
+        let mean = g.avg_degree();
+        assert!(mean > 4.0 && mean < 24.0, "mean degree {mean}");
+        // O(n) edges, nowhere near dense
+        assert!(g.num_edges() < 20 * n);
     }
 
     #[test]

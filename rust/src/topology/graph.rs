@@ -5,22 +5,28 @@
 //! that traffic from the cost model). Edges are directed offloading links
 //! `(i, j)` with per-interval capacities and costs stored separately in
 //! [`crate::costs::CostSchedule`].
+//!
+//! Adjacency lists are kept **sorted ascending** at all times. That is a
+//! load-bearing invariant, not a nicety: the movement solvers break ties by
+//! neighbor-iteration order (first strict minimum wins in
+//! `MovementProblem::best_neighbor`), and the sparse solver path
+//! ([`crate::movement::sparse`]) promises bit-identical plans to the dense
+//! path by iterating the same sorted neighbor slices. Storage is O(V + E)
+//! with no per-edge set: `has_edge` is a binary search on the out-row.
 
-use std::collections::BTreeSet;
-
-/// Directed graph over `n` devices with O(1) edge queries and
-/// adjacency iteration.
+/// Directed graph over `n` devices with O(log deg) edge queries and
+/// O(degree) sorted adjacency iteration.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Graph {
     n: usize,
     out: Vec<Vec<usize>>,
     inn: Vec<Vec<usize>>,
-    edge_set: BTreeSet<(usize, usize)>,
+    m: usize,
 }
 
 impl Graph {
     pub fn empty(n: usize) -> Self {
-        Graph { n, out: vec![Vec::new(); n], inn: vec![Vec::new(); n], edge_set: BTreeSet::new() }
+        Graph { n, out: vec![Vec::new(); n], inn: vec![Vec::new(); n], m: 0 }
     }
 
     pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
@@ -32,14 +38,19 @@ impl Graph {
     }
 
     /// Add directed edge i -> j (idempotent; self-loops rejected).
+    /// Insertion keeps both adjacency rows sorted.
     pub fn add_edge(&mut self, i: usize, j: usize) {
         assert!(i < self.n && j < self.n, "edge ({i},{j}) out of range n={}", self.n);
-        if i == j || self.edge_set.contains(&(i, j)) {
+        if i == j {
             return;
         }
-        self.edge_set.insert((i, j));
-        self.out[i].push(j);
-        self.inn[j].push(i);
+        let Err(pos) = self.out[i].binary_search(&j) else {
+            return; // already present
+        };
+        self.out[i].insert(pos, j);
+        let ipos = self.inn[j].binary_search(&i).unwrap_err();
+        self.inn[j].insert(ipos, i);
+        self.m += 1;
     }
 
     /// Add both i -> j and j -> i.
@@ -53,19 +64,20 @@ impl Graph {
     }
 
     pub fn num_edges(&self) -> usize {
-        self.edge_set.len()
+        self.m
     }
 
     pub fn has_edge(&self, i: usize, j: usize) -> bool {
-        self.edge_set.contains(&(i, j))
+        i < self.n && self.out[i].binary_search(&j).is_ok()
     }
 
-    /// Out-neighborhood of i: devices i can offload to.
+    /// Out-neighborhood of i: devices i can offload to (sorted ascending).
     pub fn out_neighbors(&self, i: usize) -> &[usize] {
         &self.out[i]
     }
 
-    /// In-neighborhood `N_i = {j : (j, i) ∈ E}` (Theorem 3's notation).
+    /// In-neighborhood `N_i = {j : (j, i) ∈ E}` (Theorem 3's notation),
+    /// sorted ascending.
     pub fn in_neighbors(&self, i: usize) -> &[usize] {
         &self.inn[i]
     }
@@ -74,8 +86,10 @@ impl Graph {
         self.out[i].len()
     }
 
+    /// All edges in row-major sorted order: (0, j₀), (0, j₁), …, (1, ·), …
+    /// — the same order the old BTreeSet-backed representation produced.
     pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
-        self.edge_set.iter().copied()
+        (0..self.n).flat_map(move |i| self.out[i].iter().map(move |&j| (i, j)))
     }
 
     /// Average out-degree over all devices.
@@ -114,10 +128,14 @@ impl Graph {
 
     /// Restrict to the active subset: edges with both endpoints active.
     /// Vertex ids are preserved (inactive vertices become isolated).
+    ///
+    /// The hot path no longer calls this per interval — sessions use
+    /// [`crate::topology::ActiveView`] masks instead — but it stays as the
+    /// reference semantics (and test oracle) for what a mask must mean.
     pub fn restrict(&self, active: &[bool]) -> Graph {
         assert_eq!(active.len(), self.n);
         let mut g = Graph::empty(self.n);
-        for &(i, j) in &self.edge_set {
+        for (i, j) in self.edges() {
             if active[i] && active[j] {
                 g.add_edge(i, j);
             }
@@ -152,6 +170,25 @@ mod tests {
         assert!(!g.has_edge(1, 2));
         assert_eq!(g.out_neighbors(0), &[1]);
         assert_eq!(g.in_neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn adjacency_stays_sorted_regardless_of_insertion_order() {
+        let mut g = Graph::empty(6);
+        for &j in &[5, 1, 3, 2, 4] {
+            g.add_edge(0, j);
+        }
+        for &i in &[4, 2, 5] {
+            g.add_edge(i, 3);
+        }
+        assert_eq!(g.out_neighbors(0), &[1, 2, 3, 4, 5]);
+        assert_eq!(g.in_neighbors(3), &[0, 2, 4, 5]);
+        // edges() iterates in row-major sorted order
+        let e: Vec<_> = g.edges().collect();
+        let mut sorted = e.clone();
+        sorted.sort_unstable();
+        assert_eq!(e, sorted);
+        assert_eq!(g.num_edges(), e.len());
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! for every topology family the paper evaluates (Table I / §V-D), and the
 //! node churn process of §V-E.
 
+pub mod active;
 pub mod dynamics;
 pub mod generators;
 pub mod graph;
 
-pub use dynamics::ChurnProcess;
+pub use active::ActiveView;
+pub use dynamics::{ChurnDelta, ChurnProcess};
 pub use graph::Graph;

@@ -9,7 +9,7 @@
 //! rule 10). Requires `make artifacts`; skips without an XLA backend
 //! (the pure-CPU CI gate).
 
-use fogml::config::{Churn, EngineConfig, Method, TrainPath};
+use fogml::config::{Churn, EngineConfig, Method, MovementBackend, TrainPath};
 use fogml::coordinator::SimPool;
 use fogml::experiments::common::{run_avg_pool, seed_sweep};
 use fogml::fed::eval::{EvalPath, EvalSchedule};
@@ -214,6 +214,34 @@ fn coalesced_dispatch_is_partner_invariant() {
     }
     assert_identical(&reference[0], &mixed_out[1], "seed #0 vs alien-partner mix");
     assert_identical(&reference[1], &mixed_out[3], "seed #1 vs alien-partner mix");
+}
+
+/// The movement backend is a pure execution-strategy knob (DESIGN.md
+/// §Perf rule 11): with everything else equal, `Dense`, `Sparse`, and the
+/// default `Auto` runs are bit-identical end-to-end — the sparse engine
+/// mirrors the dense solvers exactly, through training, churn, and the
+/// plan-apportionment data movement. And with the default
+/// `warm_start: false`, a repeated run reproduces itself bitwise.
+#[test]
+fn movement_backend_and_warm_start_defaults_are_bit_identical() {
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
+    let base = small();
+    let dense = fed::run(
+        &base.clone().with(|c| c.movement_backend = MovementBackend::Dense),
+        &rt,
+    )
+    .expect("dense-backend run");
+    let sparse_cfg = base.clone().with(|c| c.movement_backend = MovementBackend::Sparse);
+    let sparse = fed::run(&sparse_cfg, &rt).expect("sparse-backend run");
+    let auto = fed::run(&base, &rt).expect("auto-backend run");
+
+    assert_identical(&dense, &sparse, "dense vs sparse backend");
+    assert_identical(&dense, &auto, "dense vs auto backend");
+
+    // warm_start defaults off: a fresh run of the same config is an exact
+    // replay (nothing solver-side carries over between runs)
+    let again = fed::run(&sparse_cfg, &rt).expect("sparse-backend rerun");
+    assert_identical(&sparse, &again, "sparse rerun, warm_start off");
 }
 
 /// The centralized baseline must round-trip through the pool identically

@@ -8,11 +8,17 @@
 //!    within float tolerance.
 //! 2. `repair::repair` may move mass around to satisfy capacities, but it
 //!    must never make a plan *more* infeasible, and always ends feasible.
+//! 3. The edge-indexed sparse pipeline (`movement::solve_sparse_with`,
+//!    DESIGN.md §Perf rule 11) is a *bit-identical* mirror of the dense
+//!    one: same greedy tie-breaks, same PGD iterates, same repair moves —
+//!    `to_dense()` of its plan equals the dense plan with `==`, across
+//!    topologies, churn masks, discard models, capacities, and warm
+//!    starts.
 
 use fogml::costs::{CapacityMode, CostSchedule};
 use fogml::movement::convex::{self, PgdOptions};
 use fogml::movement::problem::DiscardModel;
-use fogml::movement::{greedy, repair, MovementPlan, MovementProblem};
+use fogml::movement::{self, greedy, repair, MovementPlan, MovementProblem, SolverWorkspace};
 use fogml::prop::for_all;
 use fogml::topology::generators::erdos_renyi;
 use fogml::topology::Graph;
@@ -117,7 +123,7 @@ fn prop_greedy_and_pgd_agree_on_linear_instances() {
         let inst = random_instance(g, false);
         let p = inst.problem(DiscardModel::LinearR);
         let greedy_plan = greedy::solve(&p);
-        let pgd_plan = convex::solve(&p, PgdOptions { iterations: 200, step0: 0.0 });
+        let pgd_plan = convex::solve(&p, PgdOptions { iterations: 200, step0: 0.0, tol: 0.0 });
 
         let go = greedy_plan.objective(&p);
         let po = pgd_plan.objective(&p);
@@ -147,7 +153,7 @@ fn prop_repair_never_increases_infeasibility() {
         // solver output ignores capacities -> frequently infeasible here
         let mut plan = match model {
             DiscardModel::Sqrt => {
-                convex::solve(&p, PgdOptions { iterations: 60, step0: 0.0 })
+                convex::solve(&p, PgdOptions { iterations: 60, step0: 0.0, tol: 0.0 })
             }
             _ => greedy::solve(&p),
         };
@@ -160,5 +166,76 @@ fn prop_repair_never_increases_infeasibility() {
         );
         assert!(after <= 1e-6, "repair left violations: {after}");
         plan.assert_feasible(&p, 1e-6);
+    });
+}
+
+/// The sparse pipeline must be bit-identical to the dense one: random ER
+/// topologies × random churn masks × idle devices × all three discard
+/// models × with/without capacities, compared with exact `==` after
+/// `to_dense()`.
+#[test]
+fn prop_sparse_pipeline_is_bit_identical_to_dense() {
+    for_all("sparse_dense_identity", 80, |g| {
+        let capacitated = g.bool(0.5);
+        let mut inst = random_instance(g, capacitated);
+        // random churn mask and some idle devices (d = 0): both paths must
+        // make the exact same keep-everything decisions for those rows
+        for a in inst.active.iter_mut() {
+            *a = g.bool(0.75);
+        }
+        for x in inst.d.iter_mut() {
+            if g.bool(0.2) {
+                *x = 0.0;
+            }
+        }
+        let model = match g.usize_in(0, 2) {
+            0 => DiscardModel::LinearR,
+            1 => DiscardModel::LinearG,
+            _ => DiscardModel::Sqrt,
+        };
+        let p = inst.problem(model);
+
+        let mut dense_ws = SolverWorkspace::new();
+        movement::solve_with(&p, &mut dense_ws);
+        let mut sparse_ws = SolverWorkspace::new();
+        movement::solve_sparse_with(&p, &mut sparse_ws);
+
+        assert_eq!(
+            sparse_ws.sparse.to_dense(),
+            dense_ws.plan,
+            "sparse pipeline diverged from dense ({model:?}, capacitated={capacitated})"
+        );
+        sparse_ws.sparse.assert_feasible(&p, 1e-6);
+    });
+}
+
+/// Warm starts must preserve the identity too: with `warm_start` on in
+/// both workspaces, repeated solves reuse the previous plan as the PGD
+/// starting point, and every round must still match bitwise (round k's
+/// plans are equal by induction, so round k+1 starts from identical
+/// iterates).
+#[test]
+fn prop_warm_started_pgd_matches_across_backends() {
+    for_all("sparse_dense_warm_identity", 30, |g| {
+        let mut inst = random_instance(g, false);
+        for x in inst.d.iter_mut() {
+            if g.bool(0.2) {
+                *x = 0.0;
+            }
+        }
+        let p = inst.problem(DiscardModel::Sqrt);
+        let mut dense_ws = SolverWorkspace::new();
+        dense_ws.warm_start = true;
+        let mut sparse_ws = SolverWorkspace::new();
+        sparse_ws.warm_start = true;
+        for round in 0..3 {
+            movement::solve_with(&p, &mut dense_ws);
+            movement::solve_sparse_with(&p, &mut sparse_ws);
+            assert_eq!(
+                sparse_ws.sparse.to_dense(),
+                dense_ws.plan,
+                "warm-started backends diverged in round {round}"
+            );
+        }
     });
 }
