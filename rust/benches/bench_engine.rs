@@ -26,18 +26,28 @@
 //! dense≡sparse agreement wherever both run, and reporting devices/sec
 //! plus resident plan bytes (O(E) vs O(n²)).
 //!
+//! The `shard_io` section is pure CPU too — it times the sweep-sharding
+//! I/O path (§Perf rule 9) both ways: a synthetic 4-shard set of
+//! 12 000 full `EngineOutput` runs written and reassembled
+//! (`load_shard_set`, the merge-bound step) as JSON
+//! (`shard_I_of_N.json`, text serde) and as binary (`shard_I_of_N.fsb`,
+//! `coordinator::binfmt` raw bit patterns), reporting bytes on disk,
+//! runs/sec, and the binary-over-JSON speedups.
+//!
 //! Emits `BENCH_engine.json` (and a copy under `results/bench/`) so later
 //! PRs have numbers to beat.
 
 use std::time::Instant;
 
 use fogml::config::{EngineConfig, TrainPath};
+use fogml::coordinator::shard::{load_shard_set, RunRecord, ShardFile, ShardFormat, ShardSpec};
 use fogml::coordinator::SimPool;
 use fogml::costs::MovementCosts;
 use fogml::experiments::common::seed_sweep;
 use fogml::fed;
+use fogml::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use fogml::fed::eval::{EvalPath, EvalSchedule, EvalWork};
-use fogml::fed::{Substrates, Trainer};
+use fogml::fed::{EngineOutput, Substrates, Trainer};
 use fogml::movement::{self, convex, DiscardModel, MovementProblem, SolverWorkspace};
 use fogml::runtime::{ModelKind, Runtime};
 use fogml::topology::generators::random_geometric_with_positions;
@@ -247,6 +257,168 @@ fn scaling_section() -> Json {
         ("pgd_iterations", Json::from(60usize)),
         ("pgd_sparse_s", Json::from(pgd_sparse_s)),
         ("pgd_dense_s", Json::from(pgd_dense_s)),
+    ])
+}
+
+// -- shard_io: binary vs JSON shard write + merge reassembly ----------------
+
+/// Whole-grid run count of the synthetic shard set (≥ 10⁴ so the text
+/// serde cost dominates the JSON path the way a real sweep's does).
+const SHARD_IO_RUNS: usize = 12_000;
+const SHARD_IO_SHARDS: usize = 4;
+
+/// A representative full `EngineOutput`: a 12-point accuracy curve, 40
+/// intervals × 8 devices of optional f32 losses, and 40 interval stats —
+/// the shape a curve-producing sweep run actually serializes.
+fn synthetic_output(rng: &mut Rng) -> EngineOutput {
+    const INTERVALS: usize = 40;
+    const DEVICES: usize = 8;
+    let mut movement = MovementTotals::default();
+    for _ in 0..INTERVALS {
+        movement.push(IntervalStats {
+            collected: rng.below(200),
+            processed: rng.below(200),
+            offloaded: rng.below(50),
+            discarded: rng.below(20),
+        });
+    }
+    EngineOutput {
+        accuracy: rng.f64(),
+        accuracy_curve: (0..12).map(|k| (k * 10, rng.f64())).collect(),
+        per_device_loss: (0..INTERVALS)
+            .map(|_| {
+                (0..DEVICES)
+                    .map(|_| rng.bool(0.9).then(|| rng.f32()))
+                    .collect()
+            })
+            .collect(),
+        ledger: Ledger {
+            process: rng.uniform(0.0, 1e4),
+            transfer: rng.uniform(0.0, 1e4),
+            discard: rng.uniform(0.0, 1e3),
+        },
+        movement,
+        similarity: (rng.f64(), rng.f64()),
+        mean_active: rng.uniform(0.0, DEVICES as f64),
+        total_collected: rng.below(100_000),
+    }
+}
+
+/// The full synthetic set: SHARD_IO_SHARDS files jointly covering
+/// SHARD_IO_RUNS runs under round-robin ownership, mutually consistent
+/// so `load_shard_set` validates them exactly like a real merge would.
+fn synthetic_shard_set() -> Vec<ShardFile> {
+    let opts = Json::obj(vec![("synthetic", Json::Bool(true))]);
+    (1..=SHARD_IO_SHARDS)
+        .map(|i| {
+            let spec = ShardSpec { index: i, count: SHARD_IO_SHARDS };
+            let mut rng = Rng::new(1000 + i as u64);
+            let runs = (0..SHARD_IO_RUNS)
+                .filter(|&j| spec.owns(j))
+                .map(|j| RunRecord {
+                    index: j,
+                    fingerprint: rng.next_u64(),
+                    output: synthetic_output(&mut rng),
+                })
+                .collect();
+            ShardFile {
+                experiment: "fig9".to_string(),
+                spec,
+                total_runs: SHARD_IO_RUNS,
+                grid_fingerprint: 0x5EED_F00D_CAFE_D00D,
+                opts: opts.clone(),
+                runs,
+            }
+        })
+        .collect()
+}
+
+struct ShardIoOutcome {
+    write_s: f64,
+    load_s: f64,
+    bytes: u64,
+}
+
+fn shard_io_run(files: &[ShardFile], format: ShardFormat) -> ShardIoOutcome {
+    let dir = std::env::temp_dir().join(format!(
+        "fogml_bench_shard_io_{}_{}",
+        std::process::id(),
+        format.extension()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let start = Instant::now();
+    for f in files {
+        f.save_as(&dir, format).expect("write shard");
+    }
+    let write_s = start.elapsed().as_secs_f64();
+    let bytes: u64 = files
+        .iter()
+        .map(|f| {
+            std::fs::metadata(dir.join(f.spec.file_name(format)))
+                .map(|m| m.len())
+                .unwrap_or(0)
+        })
+        .sum();
+
+    // the merge-bound step: read, parse and validate every file, then
+    // reassemble the whole grid in canonical order (replaying the driver
+    // afterwards costs the same regardless of format)
+    let start = Instant::now();
+    let set = load_shard_set(&dir).expect("load shard set");
+    let load_s = start.elapsed().as_secs_f64();
+    assert_eq!(set.runs.len(), SHARD_IO_RUNS, "reassembly lost runs");
+    std::hint::black_box(&set);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    ShardIoOutcome { write_s, load_s, bytes }
+}
+
+fn shard_io_section() -> Json {
+    let files = synthetic_shard_set();
+    let json = shard_io_run(&files, ShardFormat::Json);
+    let bin = shard_io_run(&files, ShardFormat::Binary);
+    let write_speedup = json.write_s / bin.write_s.max(1e-9);
+    let load_speedup = json.load_s / bin.load_s.max(1e-9);
+    let bytes_ratio = json.bytes as f64 / bin.bytes.max(1) as f64;
+    println!(
+        "shard_io/runs={SHARD_IO_RUNS} shards={SHARD_IO_SHARDS}  \
+         json  write {:>6.2}s ({:.0} runs/s)  merge-load {:>6.2}s ({:.0} runs/s)  {} bytes",
+        json.write_s,
+        runs_per_sec(SHARD_IO_RUNS, json.write_s),
+        json.load_s,
+        runs_per_sec(SHARD_IO_RUNS, json.load_s),
+        json.bytes
+    );
+    println!(
+        "shard_io/runs={SHARD_IO_RUNS} shards={SHARD_IO_SHARDS}  \
+         binary write {:>6.2}s ({:.0} runs/s)  merge-load {:>6.2}s ({:.0} runs/s)  {} bytes",
+        bin.write_s,
+        runs_per_sec(SHARD_IO_RUNS, bin.write_s),
+        bin.load_s,
+        runs_per_sec(SHARD_IO_RUNS, bin.load_s),
+        bin.bytes
+    );
+    println!(
+        "shard_io/binary-over-json  write {write_speedup:.1}×  merge-load {load_speedup:.1}×  \
+         size {bytes_ratio:.1}× smaller"
+    );
+    Json::obj(vec![
+        ("total_runs", Json::from(SHARD_IO_RUNS)),
+        ("shards", Json::from(SHARD_IO_SHARDS)),
+        ("json_write_s", Json::from(json.write_s)),
+        ("json_load_s", Json::from(json.load_s)),
+        ("json_bytes", Json::from(json.bytes as usize)),
+        ("json_write_runs_per_sec", Json::from(runs_per_sec(SHARD_IO_RUNS, json.write_s))),
+        ("json_load_runs_per_sec", Json::from(runs_per_sec(SHARD_IO_RUNS, json.load_s))),
+        ("binary_write_s", Json::from(bin.write_s)),
+        ("binary_load_s", Json::from(bin.load_s)),
+        ("binary_bytes", Json::from(bin.bytes as usize)),
+        ("binary_write_runs_per_sec", Json::from(runs_per_sec(SHARD_IO_RUNS, bin.write_s))),
+        ("binary_load_runs_per_sec", Json::from(runs_per_sec(SHARD_IO_RUNS, bin.load_s))),
+        ("binary_write_speedup", Json::from(write_speedup)),
+        ("binary_load_speedup", Json::from(load_speedup)),
+        ("json_over_binary_bytes", Json::from(bytes_ratio)),
     ])
 }
 
@@ -504,9 +676,10 @@ fn runtime_sections(rt: &Runtime) -> RuntimeSections {
 }
 
 fn main() {
-    // pure-CPU movement scaling sweep first: it runs (and the report is
-    // written) even without runtime artifacts
+    // pure-CPU sections first: they run (and the report is written) even
+    // without runtime artifacts
     let scaling = scaling_section();
+    let shard_io = shard_io_section();
 
     let runtime = match Runtime::load_default() {
         Ok(rt) => Some(runtime_sections(&rt)),
@@ -527,6 +700,7 @@ fn main() {
         ])),
         ("runtime", Json::from(runtime.is_some())),
         ("scaling", scaling),
+        ("shard_io", shard_io),
     ];
     if let Some(rt) = runtime {
         fields.push(("rows", Json::Arr(rt.rows)));

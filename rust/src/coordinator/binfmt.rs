@@ -1,0 +1,529 @@
+//! The binary shard wire format (`shard_I_of_N.fsb`): versioned,
+//! length-prefixed, little-endian, zero text serde.
+//!
+//! The JSON shard path ([`crate::coordinator::shard`]) round-trips every
+//! float exactly but pays `Display`/parse on the full [`EngineOutput`]
+//! per run — at sweep scales of 10⁵–10⁶ runs the merge step is parse-
+//! bound. This module writes the same [`ShardFile`] payload as raw
+//! little-endian bytes through a streaming [`ByteWriter`] and reads it
+//! back with a forward-only zero-copy [`ByteReader`]: every `f64` is its
+//! raw bit pattern (`to_bits`/`from_bits`), so NaN payload bits, ±inf,
+//! `-0.0` and subnormals round-trip *bitwise* — strictly stronger than
+//! the JSON path, whose tagged-string escapes canonicalize NaN payloads.
+//!
+//! # Wire layout (all integers little-endian)
+//!
+//! ```text
+//! header:
+//!   magic             8 bytes   "FOGMLSB\0"
+//!   version           u32       BINARY_FORMAT_VERSION (currently 1)
+//!   experiment        str_lp    u32 byte length + UTF-8 bytes
+//!   shard_index       u32       1-based I
+//!   shard_count       u32       N
+//!   total_runs        u64       whole-grid run count
+//!   grid_fingerprint  u64       per-run FNV-1a fps folded in order
+//!   opts              str_lp    canonical JSON text of the opts blob
+//!   run_count         u64       records that follow
+//! per run record:
+//!   payload_len       u64       byte length of the record body
+//!   body:
+//!     index             u64     global grid index
+//!     fingerprint       u64     config fingerprint
+//!     accuracy          f64     raw bits
+//!     curve_len         u32     then curve_len × (t u64, acc f64)
+//!     loss_rows         u32     then per row:
+//!       cols            u32     then per cell: tag u8 (0 = None,
+//!                               1 = Some) + f32 raw bits iff Some
+//!     ledger            3 × f64 process, transfer, discard
+//!     movement_len      u32     then movement_len × 4 × u64
+//!                               (collected, processed, offloaded,
+//!                                discarded)
+//!     similarity        2 × f64 before, after
+//!     mean_active       f64
+//!     total_collected   u64
+//! ```
+//!
+//! The length prefix makes each record body self-delimiting: the reader
+//! parses it through a bounded [`ByteReader::sub_reader`] and rejects
+//! records that do not consume exactly their declared length, so a
+//! corrupt record cannot desynchronize its successors silently.
+//!
+//! The opts blob rides along as its canonical JSON *text* — it is an
+//! opaque handful of bytes owned by `experiments::ExpOptions`, read a
+//! single time per merge, and keeping it textual means the two formats
+//! share one options codec (and one equality check in
+//! [`crate::coordinator::shard::load_shard_set`]).
+//!
+//! # Contract
+//!
+//! `read_shard(write_shard(f)) == f` with every float bit-identical, and
+//! merging `.fsb` shards produces artifacts byte-identical to merging
+//! `.json` shards and to an unsharded run (DESIGN.md §Perf rule 9;
+//! `tests/shard_merge.rs`). JSON stays the debug/interop default —
+//! binary is the opt-in fast path (`fogml exp --shard-format binary`).
+
+use std::io::Write;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::shard::{RunRecord, ShardFile, ShardSpec};
+use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
+use crate::fed::EngineOutput;
+use crate::util::binio::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+
+/// First 8 bytes of every binary shard file.
+pub const BINARY_MAGIC: &[u8; 8] = b"FOGMLSB\0";
+
+/// Version stamp after the magic; readers reject anything else.
+pub const BINARY_FORMAT_VERSION: u32 = 1;
+
+/// Content sniff: does `bytes` start like a binary shard file? Used by
+/// the auto-detecting loaders (`ShardFile::load`, `fogml merge`) — the
+/// magic is not valid UTF-8-leading JSON, so the two formats can never
+/// be confused.
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.starts_with(BINARY_MAGIC)
+}
+
+fn to_u32(x: usize, what: &str) -> Result<u32> {
+    u32::try_from(x).map_err(|_| anyhow!("{what} {x} exceeds the u32 wire field"))
+}
+
+fn to_usize(x: u64, what: &str) -> Result<usize> {
+    usize::try_from(x).map_err(|_| anyhow!("{what} {x} does not fit in usize"))
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn put_output(w: &mut ByteWriter<&mut Vec<u8>>, o: &EngineOutput) -> Result<()> {
+    w.put_f64(o.accuracy)?;
+    w.put_u32(to_u32(o.accuracy_curve.len(), "curve length")?)?;
+    for &(t, acc) in &o.accuracy_curve {
+        w.put_u64(t as u64)?;
+        w.put_f64(acc)?;
+    }
+    w.put_u32(to_u32(o.per_device_loss.len(), "loss row count")?)?;
+    for row in &o.per_device_loss {
+        w.put_u32(to_u32(row.len(), "loss column count")?)?;
+        for cell in row {
+            match cell {
+                None => w.put_u8(0)?,
+                Some(x) => {
+                    w.put_u8(1)?;
+                    w.put_u32(x.to_bits())?;
+                }
+            }
+        }
+    }
+    w.put_f64(o.ledger.process)?;
+    w.put_f64(o.ledger.transfer)?;
+    w.put_f64(o.ledger.discard)?;
+    w.put_u32(to_u32(o.movement.per_interval.len(), "movement length")?)?;
+    for s in &o.movement.per_interval {
+        w.put_u64(s.collected as u64)?;
+        w.put_u64(s.processed as u64)?;
+        w.put_u64(s.offloaded as u64)?;
+        w.put_u64(s.discarded as u64)?;
+    }
+    w.put_f64(o.similarity.0)?;
+    w.put_f64(o.similarity.1)?;
+    w.put_f64(o.mean_active)?;
+    w.put_u64(o.total_collected as u64)?;
+    Ok(())
+}
+
+/// Stream `file` into `sink` in the binary wire format. Allocation stays
+/// O(max record size): the header goes straight to the sink and each run
+/// record is staged once in a reusable scratch buffer (its length prefix
+/// must precede bytes whose length is not known until serialized), then
+/// written through. Returns the total bytes written.
+pub fn write_shard<W: Write>(sink: W, file: &ShardFile) -> Result<u64> {
+    let mut w = ByteWriter::new(sink);
+    w.put_bytes(BINARY_MAGIC)?;
+    w.put_u32(BINARY_FORMAT_VERSION)?;
+    w.put_str_lp(&file.experiment)?;
+    w.put_u32(to_u32(file.spec.index, "shard index")?)?;
+    w.put_u32(to_u32(file.spec.count, "shard count")?)?;
+    w.put_u64(file.total_runs as u64)?;
+    w.put_u64(file.grid_fingerprint)?;
+    w.put_str_lp(&file.opts.to_string())?;
+    w.put_u64(file.runs.len() as u64)?;
+
+    let mut scratch: Vec<u8> = Vec::new();
+    for rec in &file.runs {
+        scratch.clear();
+        let mut body = ByteWriter::new(&mut scratch);
+        body.put_u64(rec.index as u64)?;
+        body.put_u64(rec.fingerprint)?;
+        put_output(&mut body, &rec.output)?;
+        w.put_u64(scratch.len() as u64)?;
+        w.put_bytes(&scratch)?;
+    }
+    let written = w.written();
+    w.into_inner()?;
+    Ok(written)
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+fn get_output(r: &mut ByteReader<'_>) -> Result<EngineOutput> {
+    let accuracy = r.get_f64("accuracy")?;
+    let curve_len = r.get_u32("curve length")? as usize;
+    let mut accuracy_curve = Vec::with_capacity(curve_len.min(1 << 16));
+    for _ in 0..curve_len {
+        let t = to_usize(r.get_u64("curve t")?, "curve t")?;
+        let acc = r.get_f64("curve accuracy")?;
+        accuracy_curve.push((t, acc));
+    }
+    let rows = r.get_u32("loss row count")? as usize;
+    let mut per_device_loss = Vec::with_capacity(rows.min(1 << 16));
+    for _ in 0..rows {
+        let cols = r.get_u32("loss column count")? as usize;
+        let mut row = Vec::with_capacity(cols.min(1 << 16));
+        for _ in 0..cols {
+            row.push(match r.get_u8("loss cell tag")? {
+                0 => None,
+                1 => Some(f32::from_bits(r.get_u32("loss cell")?)),
+                t => bail!("loss cell tag {t} at byte {} (want 0 or 1)", r.pos()),
+            });
+        }
+        per_device_loss.push(row);
+    }
+    let ledger = Ledger {
+        process: r.get_f64("ledger process")?,
+        transfer: r.get_f64("ledger transfer")?,
+        discard: r.get_f64("ledger discard")?,
+    };
+    let intervals = r.get_u32("movement length")? as usize;
+    let mut movement = MovementTotals::default();
+    for _ in 0..intervals {
+        movement.push(IntervalStats {
+            collected: to_usize(r.get_u64("collected")?, "collected")?,
+            processed: to_usize(r.get_u64("processed")?, "processed")?,
+            offloaded: to_usize(r.get_u64("offloaded")?, "offloaded")?,
+            discarded: to_usize(r.get_u64("discarded")?, "discarded")?,
+        });
+    }
+    let similarity = (r.get_f64("similarity before")?, r.get_f64("similarity after")?);
+    let mean_active = r.get_f64("mean_active")?;
+    let total_collected = to_usize(r.get_u64("total_collected")?, "total_collected")?;
+    Ok(EngineOutput {
+        accuracy,
+        accuracy_curve,
+        per_device_loss,
+        ledger,
+        movement,
+        similarity,
+        mean_active,
+        total_collected,
+    })
+}
+
+/// Parse one binary shard file from `bytes` (typically a whole-file
+/// `fs::read`). Forward-only and zero-copy until the final owned
+/// [`ShardFile`] is assembled; validation matches the JSON path
+/// ([`ShardFile::validate`]) so both formats reject the same malformed
+/// inputs.
+pub fn read_shard(bytes: &[u8]) -> Result<ShardFile> {
+    let mut r = ByteReader::new(bytes);
+    r.expect(BINARY_MAGIC, "magic")
+        .map_err(|e| anyhow!("not a fogml binary shard file: {e}"))?;
+    let version = r.get_u32("version")?;
+    if version != BINARY_FORMAT_VERSION {
+        bail!(
+            "unsupported binary shard version {version} (this build reads {BINARY_FORMAT_VERSION})"
+        );
+    }
+    let experiment = r.get_str_lp("experiment")?.to_string();
+    let spec = ShardSpec {
+        index: r.get_u32("shard index")? as usize,
+        count: r.get_u32("shard count")? as usize,
+    };
+    let total_runs = to_usize(r.get_u64("total_runs")?, "total_runs")?;
+    let grid_fingerprint = r.get_u64("grid_fingerprint")?;
+    let opts_text = r.get_str_lp("opts")?;
+    let opts = Json::parse(opts_text).context("opts blob")?;
+    let run_count = to_usize(r.get_u64("run_count")?, "run_count")?;
+
+    let mut runs = Vec::with_capacity(run_count.min(1 << 20));
+    for k in 0..run_count {
+        let len = to_usize(r.get_u64("record length")?, "record length")?;
+        let mut body = r
+            .sub_reader(len, "run record")
+            .map_err(|e| anyhow!("record {k}: {e}"))?;
+        let index = to_usize(body.get_u64("run index")?, "run index")?;
+        let fingerprint = body.get_u64("config fingerprint")?;
+        let output = get_output(&mut body).with_context(|| format!("record {k}"))?;
+        if !body.is_empty() {
+            bail!(
+                "record {k} declared {len} bytes but its body parsed {} short — corrupt length prefix",
+                body.remaining()
+            );
+        }
+        runs.push(RunRecord { index, fingerprint, output });
+    }
+    if !r.is_empty() {
+        bail!(
+            "{} trailing bytes after the last declared record — corrupt run_count or concatenated files",
+            r.remaining()
+        );
+    }
+    let file = ShardFile { experiment, spec, total_runs, grid_fingerprint, opts, runs };
+    file.validate()?;
+    Ok(file)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    /// An output exercising every wire branch: NaN payload bits, ±inf,
+    /// -0.0, subnormals, the 0.1+0.2 classic, None/Some loss cells, f32
+    /// NaN payloads, and an empty loss row.
+    fn torture_output() -> EngineOutput {
+        let mut movement = MovementTotals::default();
+        movement.push(IntervalStats { collected: 7, processed: 5, offloaded: 2, discarded: 0 });
+        movement.push(IntervalStats { collected: 0, processed: 0, offloaded: 0, discarded: 3 });
+        EngineOutput {
+            accuracy: 0.1 + 0.2,
+            accuracy_curve: vec![
+                (0, f64::from_bits(0x7FF8_DEAD_BEEF_CAFE)), // NaN payload
+                (10, f64::NEG_INFINITY),
+                (20, -0.0),
+                (30, 5e-324), // smallest subnormal
+            ],
+            per_device_loss: vec![
+                vec![None, Some(f32::from_bits(0x7FC0_1234)), Some(-0.0f32)],
+                vec![],
+                vec![Some(f32::INFINITY), None],
+            ],
+            ledger: Ledger { process: 1e-17, transfer: f64::INFINITY, discard: -3.5 },
+            movement,
+            similarity: (f64::NAN, 0.25),
+            mean_active: f64::MIN_POSITIVE,
+            total_collected: 12345,
+        }
+    }
+
+    fn torture_file() -> ShardFile {
+        ShardFile {
+            experiment: "fig9".to_string(),
+            spec: ShardSpec { index: 2, count: 3 },
+            total_runs: 7,
+            grid_fingerprint: 0xDEAD_BEEF_F00D_CAFE,
+            opts: Json::obj(vec![("seeds", Json::from(5usize))]),
+            runs: vec![
+                RunRecord { index: 1, fingerprint: 0x1111, output: torture_output() },
+                RunRecord { index: 4, fingerprint: 0x4444, output: EngineOutput::default() },
+            ],
+        }
+    }
+
+    fn assert_output_bits_eq(a: &EngineOutput, b: &EngineOutput) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.accuracy_curve.len(), b.accuracy_curve.len());
+        for (x, y) in a.accuracy_curve.iter().zip(&b.accuracy_curve) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        assert_eq!(a.per_device_loss.len(), b.per_device_loss.len());
+        for (ra, rb) in a.per_device_loss.iter().zip(&b.per_device_loss) {
+            assert_eq!(ra.len(), rb.len());
+            for (ca, cb) in ra.iter().zip(rb) {
+                assert_eq!(ca.map(f32::to_bits), cb.map(f32::to_bits));
+            }
+        }
+        assert_eq!(a.ledger.process.to_bits(), b.ledger.process.to_bits());
+        assert_eq!(a.ledger.transfer.to_bits(), b.ledger.transfer.to_bits());
+        assert_eq!(a.ledger.discard.to_bits(), b.ledger.discard.to_bits());
+        assert_eq!(a.movement.per_interval, b.movement.per_interval);
+        assert_eq!(a.similarity.0.to_bits(), b.similarity.0.to_bits());
+        assert_eq!(a.similarity.1.to_bits(), b.similarity.1.to_bits());
+        assert_eq!(a.mean_active.to_bits(), b.mean_active.to_bits());
+        assert_eq!(a.total_collected, b.total_collected);
+    }
+
+    fn encode(file: &ShardFile) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_shard(&mut buf, file).unwrap();
+        buf
+    }
+
+    #[test]
+    fn torture_round_trip_is_bitwise() {
+        let file = torture_file();
+        let buf = encode(&file);
+        let back = read_shard(&buf).unwrap();
+        assert_eq!(back.experiment, file.experiment);
+        assert_eq!(back.spec, file.spec);
+        assert_eq!(back.total_runs, file.total_runs);
+        assert_eq!(back.grid_fingerprint, file.grid_fingerprint);
+        assert_eq!(back.opts, file.opts);
+        assert_eq!(back.runs.len(), file.runs.len());
+        for (a, b) in file.runs.iter().zip(&back.runs) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.fingerprint, b.fingerprint);
+            assert_output_bits_eq(&a.output, &b.output);
+        }
+    }
+
+    #[test]
+    fn nan_payload_bits_survive_where_json_cannot() {
+        // the JSON path canonicalizes every NaN to the "NaN" tag; the
+        // binary path must preserve arbitrary payload bits
+        let payload = 0x7FF8_0BAD_F00D_BEEF_u64;
+        let mut file = torture_file();
+        file.runs[0].output.accuracy = f64::from_bits(payload);
+        let back = read_shard(&encode(&file)).unwrap();
+        assert_eq!(back.runs[0].output.accuracy.to_bits(), payload);
+    }
+
+    #[test]
+    fn write_shard_reports_exact_byte_count() {
+        let file = torture_file();
+        let mut buf = Vec::new();
+        let n = write_shard(&mut buf, &file).unwrap();
+        assert_eq!(n, buf.len() as u64);
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_rejected() {
+        let buf = encode(&torture_file());
+        // chopping the buffer anywhere must error, never panic or
+        // silently succeed — step 7 keeps the test fast, the prefix
+        // sweep below byte 64 covers every header field boundary
+        let cuts: Vec<usize> =
+            (0..64.min(buf.len())).chain((64..buf.len()).step_by(7)).collect();
+        for cut in cuts {
+            assert!(
+                read_shard(&buf[..cut]).is_err(),
+                "truncation to {cut} of {} bytes must be rejected",
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_garbage_are_rejected() {
+        let good = encode(&torture_file());
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let e = read_shard(&bad_magic).unwrap_err();
+        assert!(e.to_string().contains("not a fogml binary shard"), "{e}");
+
+        let mut bad_version = good.clone();
+        bad_version[8] = 99; // version u32 LE starts right after the magic
+        let e = read_shard(&bad_version).unwrap_err();
+        assert!(e.to_string().contains("version 99"), "{e}");
+
+        assert!(read_shard(b"").is_err());
+        assert!(read_shard(b"{\"kind\":\"fogml-shard\"}").is_err());
+    }
+
+    #[test]
+    fn record_length_mismatch_is_rejected() {
+        let file = torture_file();
+        let buf = encode(&file);
+        // locate the first record's length prefix: header is everything
+        // up to run_count, which sits 8 bytes before the first record
+        let header_len = 8 + 4 // magic + version
+            + 4 + file.experiment.len()
+            + 4 + 4 + 8 + 8
+            + 4 + file.opts.to_string().len()
+            + 8;
+        let mut bloated = buf.clone();
+        bloated[header_len] = bloated[header_len].wrapping_add(1);
+        let e = read_shard(&bloated).unwrap_err();
+        // a longer-than-actual length either truncates a later field or
+        // leaves the body short — both must surface as errors
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut buf = encode(&torture_file());
+        buf.push(0);
+        let e = read_shard(&buf).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn is_binary_sniffs_only_the_magic() {
+        assert!(is_binary(&encode(&torture_file())));
+        assert!(!is_binary(b"{\"kind\":\"fogml-shard\"}"));
+        assert!(!is_binary(b""));
+        assert!(!is_binary(b"FOGMLSB")); // 7 bytes: too short
+    }
+
+    #[test]
+    fn property_random_outputs_round_trip_bitwise() {
+        prop::for_all("binfmt random outputs", 64, |g| {
+            let rng = g.rng();
+            let n_curve = rng.below(6);
+            let n_rows = rng.below(4);
+            let n_intervals = rng.below(4);
+            let mut movement = MovementTotals::default();
+            for _ in 0..n_intervals {
+                movement.push(IntervalStats {
+                    collected: rng.below(100),
+                    processed: rng.below(100),
+                    offloaded: rng.below(100),
+                    discarded: rng.below(100),
+                });
+            }
+            let output = EngineOutput {
+                // raw u64 bit patterns: hits NaNs, infs, subnormals
+                accuracy: f64::from_bits(rng.next_u64()),
+                accuracy_curve: (0..n_curve)
+                    .map(|t| (t, f64::from_bits(rng.next_u64())))
+                    .collect(),
+                per_device_loss: (0..n_rows)
+                    .map(|_| {
+                        (0..rng.below(5))
+                            .map(|_| {
+                                rng.bool(0.3)
+                                    .then(|| f32::from_bits(rng.next_u64() as u32))
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                ledger: Ledger {
+                    process: f64::from_bits(rng.next_u64()),
+                    transfer: f64::from_bits(rng.next_u64()),
+                    discard: f64::from_bits(rng.next_u64()),
+                },
+                movement,
+                similarity: (
+                    f64::from_bits(rng.next_u64()),
+                    f64::from_bits(rng.next_u64()),
+                ),
+                mean_active: f64::from_bits(rng.next_u64()),
+                total_collected: rng.below(1 << 20),
+            };
+            let count = 1 + rng.below(8);
+            let index = rng.below(count); // shard (index+1)/count owns `index`
+            let file = ShardFile {
+                experiment: "prop".to_string(),
+                spec: ShardSpec { index: index + 1, count },
+                total_runs: count * 3,
+                grid_fingerprint: rng.next_u64(),
+                opts: Json::Null,
+                runs: vec![RunRecord {
+                    index,
+                    fingerprint: rng.next_u64(),
+                    output: output.clone(),
+                }],
+            };
+            let back = read_shard(&encode(&file)).unwrap();
+            assert_eq!(back.grid_fingerprint, file.grid_fingerprint);
+            assert_output_bits_eq(&output, &back.runs[0].output);
+        });
+    }
+}

@@ -21,8 +21,12 @@
 //! * [`shard`] — cross-process sweep sharding: [`SweepCtx`] splits one
 //!   experiment grid across N `fogml` processes (`--shard I/N`) and
 //!   `fogml merge` reassembles bit-identical results.
+//! * [`binfmt`] — the binary shard wire format (`shard_I_of_N.fsb`):
+//!   streaming little-endian writer + forward-only zero-copy reader,
+//!   raw f64 bit patterns instead of JSON text (`--shard-format binary`).
 //! * [`cluster`] — device actors + aggregation server wired together.
 
+pub mod binfmt;
 pub mod cluster;
 pub mod pool;
 pub mod service;
@@ -31,4 +35,4 @@ pub mod shard;
 pub use cluster::{Cluster, ClusterConfig, ClusterReport};
 pub use pool::SimPool;
 pub use service::{DatasetId, RuntimeHandle, RuntimeService, ServiceClient, ServiceConfig};
-pub use shard::{ShardSpec, SweepCtx};
+pub use shard::{ShardFormat, ShardSpec, SweepCtx};

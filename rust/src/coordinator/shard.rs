@@ -36,16 +36,23 @@
 //! 4. **Exact reassembly.** [`SimPool::run_many`] returns outputs in
 //!    input order regardless of worker scheduling (the pool's
 //!    determinism contract), and the shard files round-trip every float
-//!    exactly (Rust's shortest-roundtrip formatting on both sides), so
-//!    a merge's tables and curve CSVs are **byte-identical** to an
-//!    unsharded serial run (`tests/shard_merge.rs`).
+//!    exactly in **both** on-disk formats — JSON (`shard_I_of_N.json`,
+//!    Rust's shortest-roundtrip formatting plus tagged-string escapes)
+//!    and binary (`shard_I_of_N.fsb`, raw f64 bit patterns through
+//!    [`crate::coordinator::binfmt`]) — so a merge's tables and curve
+//!    CSVs are **byte-identical** to an unsharded serial run whichever
+//!    format the shards used (`tests/shard_merge.rs`).
 //!
 //! [`SweepCtx`] is the mechanism: drivers route both their engine runs
 //! and their output (tables, CSVs, console lines) through it, and the
 //! context either executes everything (run mode), executes only its
-//! shard and writes `shard_I_of_N.json` instead of artifacts (shard
-//! mode), or replays recorded outputs and emits the real artifacts
-//! (merge mode).
+//! shard and writes `shard_I_of_N.{json,fsb}` instead of artifacts
+//! (shard mode; [`ShardFormat`] picks the extension via
+//! `--shard-format`), or replays recorded outputs and emits the real
+//! artifacts (merge mode). [`ShardFile::load`] auto-detects the format
+//! per file by content, so `fogml merge` never needs a format flag —
+//! but [`load_shard_set`] still refuses mixed-format sets (convert with
+//! `fogml shard convert` first).
 
 use std::cell::RefCell;
 use std::path::{Path, PathBuf};
@@ -53,15 +60,58 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::EngineConfig;
+use crate::coordinator::binfmt;
 use crate::coordinator::SimPool;
 use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use crate::fed::EngineOutput;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-/// Version stamp written into every shard file; [`load_shard_set`]
-/// rejects files from incompatible future formats.
+/// Version stamp written into every JSON shard file; [`load_shard_set`]
+/// rejects files from incompatible future formats. (The binary format
+/// carries its own version — [`binfmt::BINARY_FORMAT_VERSION`].)
 pub const SHARD_FORMAT_VERSION: usize = 1;
+
+/// On-disk encoding of a shard file. JSON is the debug/interop default;
+/// binary ([`crate::coordinator::binfmt`]) is the opt-in fast path for
+/// large sweeps. Both round-trip every float exactly and merge
+/// byte-identically — the choice is pure I/O cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardFormat {
+    /// `shard_I_of_N.json` — human-readable, tagged-string float escapes.
+    #[default]
+    Json,
+    /// `shard_I_of_N.fsb` — length-prefixed little-endian, raw f64 bits.
+    Binary,
+}
+
+impl ShardFormat {
+    /// Parse the CLI form: `--shard-format json|binary`.
+    pub fn parse(s: &str) -> Result<ShardFormat> {
+        match s {
+            "json" => Ok(ShardFormat::Json),
+            "binary" | "fsb" => Ok(ShardFormat::Binary),
+            other => bail!("--shard-format wants json|binary, got '{other}'"),
+        }
+    }
+
+    /// The file extension this format writes (no leading dot).
+    pub fn extension(&self) -> &'static str {
+        match self {
+            ShardFormat::Json => "json",
+            ShardFormat::Binary => "fsb",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardFormat::Json => write!(f, "json"),
+            ShardFormat::Binary => write!(f, "binary"),
+        }
+    }
+}
 
 /// Which slice of the grid this process runs: `--shard I/N` (1-based
 /// index `I`, total shard count `N`).
@@ -97,18 +147,36 @@ impl ShardSpec {
         run % self.count == self.index - 1
     }
 
-    /// The file this shard serializes to: `shard_I_of_N.json`.
-    pub fn file_name(&self) -> String {
-        format!("shard_{}_of_{}.json", self.index, self.count)
+    /// The file this shard serializes to: `shard_I_of_N.json` or
+    /// `shard_I_of_N.fsb` depending on `format`.
+    pub fn file_name(&self, format: ShardFormat) -> String {
+        format!("shard_{}_of_{}.{}", self.index, self.count, format.extension())
     }
 
     /// Inverse of [`ShardSpec::file_name`]; `None` when `name` is not a
     /// shard file.
-    pub fn parse_file_name(name: &str) -> Option<ShardSpec> {
-        let rest = name.strip_prefix("shard_")?.strip_suffix(".json")?;
+    ///
+    /// Strict by design: only *canonical* names round-trip. Anything a
+    /// human or an editor derives from one — `shard_1_of_2.json.bak`,
+    /// `shard_1_of_2.json~`, `.#shard_1_of_2.json`, `shard_01_of_2.json`
+    /// (leading zeros), `shard_+1_of_2.json` — returns `None`, so stray
+    /// files sitting next to a shard set are ignored instead of
+    /// poisoning [`load_shard_set`]'s validation.
+    pub fn parse_file_name(name: &str) -> Option<(ShardSpec, ShardFormat)> {
+        let rest = name.strip_prefix("shard_")?;
+        let (rest, format) = if let Some(r) = rest.strip_suffix(".json") {
+            (r, ShardFormat::Json)
+        } else if let Some(r) = rest.strip_suffix(".fsb") {
+            (r, ShardFormat::Binary)
+        } else {
+            return None;
+        };
         let (i, n) = rest.split_once("_of_")?;
         let spec = ShardSpec { index: i.parse().ok()?, count: n.parse().ok()? };
-        (spec.index >= 1 && spec.index <= spec.count).then_some(spec)
+        // re-format and compare: rejects non-canonical spellings that
+        // usize::parse would accept ("+1", "01", …) in one stroke
+        (spec.index >= 1 && spec.index <= spec.count && spec.file_name(format) == name)
+            .then_some((spec, format))
     }
 }
 
@@ -411,23 +479,11 @@ impl ShardFile {
             index: usize_from(field(shard_j, "index", W)?, W)?,
             count: usize_from(field(shard_j, "count", W)?, W)?,
         };
-        if spec.count == 0 || spec.index == 0 || spec.index > spec.count {
-            bail!("{W}: invalid shard position {}/{}", spec.index, spec.count);
-        }
         let total_runs = usize_from(field(j, "total_runs", W)?, W)?;
         let mut runs = Vec::new();
         for r in field(j, "runs", W)?.as_arr().unwrap_or(&[]) {
-            let index = usize_from(field(r, "index", W)?, W)?;
-            if index >= total_runs {
-                bail!("{W}: run index {index} out of range (total_runs = {total_runs})");
-            }
-            if !spec.owns(index) {
-                bail!(
-                    "{W}: run {index} does not belong to shard {spec} under round-robin assignment — the file was tampered with or mislabeled"
-                );
-            }
             runs.push(RunRecord {
-                index,
+                index: usize_from(field(r, "index", W)?, W)?,
                 fingerprint: fingerprint_from_json(
                     field(r, "config_fingerprint", W)?,
                     "config_fingerprint",
@@ -435,7 +491,7 @@ impl ShardFile {
                 output: output_from_json(field(r, "output", W)?)?,
             });
         }
-        Ok(ShardFile {
+        let file = ShardFile {
             experiment: field(j, "experiment", W)?
                 .as_str()
                 .ok_or_else(|| anyhow!("{W}: experiment not a string"))?
@@ -448,25 +504,80 @@ impl ShardFile {
             )?,
             opts: field(j, "opts", W)?.clone(),
             runs,
-        })
+        };
+        file.validate()?;
+        Ok(file)
+    }
+
+    /// Semantic validation shared by both on-disk formats (the JSON
+    /// parser and [`binfmt::read_shard`] call this after structural
+    /// decoding): shard position sanity, run indices in range, and
+    /// round-robin ownership of every record.
+    pub fn validate(&self) -> Result<()> {
+        const W: &str = "shard file";
+        let spec = self.spec;
+        if spec.count == 0 || spec.index == 0 || spec.index > spec.count {
+            bail!("{W}: invalid shard position {}/{}", spec.index, spec.count);
+        }
+        for r in &self.runs {
+            if r.index >= self.total_runs {
+                bail!(
+                    "{W}: run index {} out of range (total_runs = {})",
+                    r.index,
+                    self.total_runs
+                );
+            }
+            if !spec.owns(r.index) {
+                bail!(
+                    "{W}: run {} does not belong to shard {spec} under round-robin assignment — the file was tampered with or mislabeled",
+                    r.index
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Write to `dir/shard_I_of_N.json` (creating `dir` if needed) and
-    /// return the path.
+    /// return the path. JSON shorthand for [`ShardFile::save_as`].
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        self.save_as(dir, ShardFormat::Json)
+    }
+
+    /// Write to `dir/shard_I_of_N.{json,fsb}` in `format` (creating
+    /// `dir` if needed) and return the path. The binary path streams
+    /// through a `BufWriter` — no full-file text buffer is built.
+    pub fn save_as(&self, dir: &Path, format: ShardFormat) -> Result<PathBuf> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating shard dir {}", dir.display()))?;
-        let path = dir.join(self.spec.file_name());
-        std::fs::write(&path, self.to_json().to_string())
-            .with_context(|| format!("writing {}", path.display()))?;
+        let path = dir.join(self.spec.file_name(format));
+        match format {
+            ShardFormat::Json => {
+                std::fs::write(&path, self.to_json().to_string())
+                    .with_context(|| format!("writing {}", path.display()))?;
+            }
+            ShardFormat::Binary => {
+                let f = std::fs::File::create(&path)
+                    .with_context(|| format!("creating {}", path.display()))?;
+                binfmt::write_shard(std::io::BufWriter::new(f), self)
+                    .with_context(|| format!("writing {}", path.display()))?;
+            }
+        }
         Ok(path)
     }
 
-    /// Read and validate `path`.
+    /// Read and validate `path`, auto-detecting the format from the
+    /// file's leading bytes (binary magic vs JSON text) — the extension
+    /// is advisory, the content decides.
     pub fn load(path: &Path) -> Result<ShardFile> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if binfmt::is_binary(&bytes) {
+            return binfmt::read_shard(&bytes)
+                .with_context(|| format!("parsing {}", path.display()));
+        }
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| anyhow!("{}: neither binary shard magic nor UTF-8 JSON: {e}", path.display()))?;
+        let j = Json::parse(text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
     }
 }
@@ -486,28 +597,45 @@ pub struct ShardSet {
     pub runs: Vec<RunRecord>,
 }
 
-/// Load every `shard_I_of_N.json` under `dir` and validate the set:
-/// exactly one file per shard 1..=N, no mixed shard counts, identical
-/// experiment/options/total/grid-fingerprint everywhere, and a run for
-/// every grid index. Any violation is a hard error naming the offender —
-/// a merge must never silently proceed from an incomplete or mixed set.
-pub fn load_shard_set(dir: &Path) -> Result<ShardSet> {
+/// Enumerate recognized shard files under `dir`, sorted by shard index.
+/// Only canonical names qualify (`shard_I_of_N.json` / `shard_I_of_N.fsb`
+/// — [`ShardSpec::parse_file_name`]); backups, editor temp files and
+/// anything else sitting in the directory are ignored. Shared by
+/// [`load_shard_set`] and `fogml shard convert`.
+pub fn discover_shard_files(dir: &Path) -> Result<Vec<(ShardSpec, ShardFormat, PathBuf)>> {
     let entries = std::fs::read_dir(dir)
         .with_context(|| format!("reading shard dir {}", dir.display()))?;
-    let mut files: Vec<(ShardSpec, PathBuf)> = Vec::new();
+    let mut files: Vec<(ShardSpec, ShardFormat, PathBuf)> = Vec::new();
     for e in entries {
         let e = e?;
+        if !e.file_type()?.is_file() {
+            continue; // e.g. a directory that happens to carry a shard name
+        }
         let name = e.file_name();
-        if let Some(spec) = name.to_str().and_then(ShardSpec::parse_file_name) {
-            files.push((spec, e.path()));
+        if let Some((spec, format)) = name.to_str().and_then(ShardSpec::parse_file_name) {
+            files.push((spec, format, e.path()));
         }
     }
+    files.sort_by_key(|(spec, _, _)| spec.index);
+    Ok(files)
+}
+
+/// Load every `shard_I_of_N.{json,fsb}` under `dir` and validate the
+/// set: exactly one file per shard 1..=N, no mixed shard counts, no
+/// mixed formats, identical experiment/options/total/grid-fingerprint
+/// everywhere, and a run for every grid index. Any violation is a hard
+/// error naming the offender — a merge must never silently proceed from
+/// an incomplete or mixed set.
+pub fn load_shard_set(dir: &Path) -> Result<ShardSet> {
+    let files = discover_shard_files(dir)?;
     if files.is_empty() {
-        bail!("no shard files (shard_I_of_N.json) found in {}", dir.display());
+        bail!(
+            "no shard files (shard_I_of_N.json or shard_I_of_N.fsb) found in {}",
+            dir.display()
+        );
     }
-    files.sort_by_key(|(spec, _)| spec.index);
     let count = files[0].0.count;
-    if let Some((spec, path)) = files.iter().find(|(s, _)| s.count != count) {
+    if let Some((spec, _, path)) = files.iter().find(|(s, _, _)| s.count != count) {
         bail!(
             "mixed shard sets in {}: found both /{} and /{} files (e.g. {})",
             dir.display(),
@@ -516,8 +644,18 @@ pub fn load_shard_set(dir: &Path) -> Result<ShardSet> {
             path.display()
         );
     }
+    let format = files[0].1;
+    if let Some((_, other, path)) = files.iter().find(|(_, f, _)| *f != format) {
+        bail!(
+            "mixed shard formats in {}: found both .{} and .{} files (e.g. {}) — normalize with `fogml shard convert` before merging",
+            dir.display(),
+            format.extension(),
+            other.extension(),
+            path.display()
+        );
+    }
     let missing: Vec<usize> =
-        (1..=count).filter(|i| !files.iter().any(|(s, _)| s.index == *i)).collect();
+        (1..=count).filter(|i| !files.iter().any(|(s, _, _)| s.index == *i)).collect();
     if !missing.is_empty() {
         bail!(
             "incomplete shard set in {}: missing shard(s) {:?} of {count}",
@@ -531,7 +669,7 @@ pub fn load_shard_set(dir: &Path) -> Result<ShardSet> {
     let mut total: Option<usize> = None;
     let mut grid: Option<u64> = None;
     let mut slots: Vec<Option<RunRecord>> = Vec::new();
-    for (spec, path) in &files {
+    for (spec, _, path) in &files {
         let f = ShardFile::load(path)?;
         if f.spec != *spec {
             bail!(
@@ -788,12 +926,14 @@ impl<'a> SweepCtx<'a> {
 
     /// Shard-mode epilogue: serialize the recorded subset (plus grid
     /// metadata and the caller-supplied `opts` blob) to
-    /// `dir/shard_I_of_N.json`. Errors outside shard mode.
+    /// `dir/shard_I_of_N.{json,fsb}` per `format`. Errors outside shard
+    /// mode.
     pub fn write_shard_file(
         &self,
         experiment: &str,
         opts: Json,
         dir: &Path,
+        format: ShardFormat,
     ) -> Result<PathBuf> {
         match &self.mode {
             Mode::Shard { spec, state } => {
@@ -806,7 +946,7 @@ impl<'a> SweepCtx<'a> {
                     opts,
                     runs: std::mem::take(&mut st.records),
                 };
-                file.save(dir)
+                file.save_as(dir, format)
             }
             _ => bail!("write_shard_file called outside shard mode"),
         }
@@ -873,10 +1013,52 @@ mod tests {
     #[test]
     fn file_name_round_trip() {
         let s = ShardSpec { index: 3, count: 8 };
-        assert_eq!(s.file_name(), "shard_3_of_8.json");
-        assert_eq!(ShardSpec::parse_file_name(&s.file_name()), Some(s));
+        assert_eq!(s.file_name(ShardFormat::Json), "shard_3_of_8.json");
+        assert_eq!(s.file_name(ShardFormat::Binary), "shard_3_of_8.fsb");
+        for format in [ShardFormat::Json, ShardFormat::Binary] {
+            assert_eq!(
+                ShardSpec::parse_file_name(&s.file_name(format)),
+                Some((s, format))
+            );
+        }
         assert_eq!(ShardSpec::parse_file_name("table3.csv"), None);
         assert_eq!(ShardSpec::parse_file_name("shard_9_of_8.json"), None);
+    }
+
+    #[test]
+    fn parse_file_name_ignores_unrelated_and_noncanonical_names() {
+        // derived / editor noise next to a real shard set must not parse
+        for name in [
+            "shard_1_of_2.json.bak",
+            "shard_1_of_2.json~",
+            "shard_1_of_2.json.swp",
+            ".#shard_1_of_2.json",
+            "#shard_1_of_2.json#",
+            "shard_1_of_2.fsb.partial",
+            "shard_1_of_2",
+            "shard_1_of_2.csv",
+            // non-canonical spellings usize::parse would happily accept
+            "shard_01_of_2.json",
+            "shard_1_of_02.json",
+            "shard_+1_of_2.json",
+            "shard_1_of_+2.fsb",
+            "shard_ 1_of_2.json",
+            "shard_0_of_2.json",
+            "shard_3_of_2.fsb",
+        ] {
+            assert_eq!(ShardSpec::parse_file_name(name), None, "{name} must not parse");
+        }
+    }
+
+    #[test]
+    fn shard_format_parse_and_extension() {
+        assert_eq!(ShardFormat::parse("json").unwrap(), ShardFormat::Json);
+        assert_eq!(ShardFormat::parse("binary").unwrap(), ShardFormat::Binary);
+        assert_eq!(ShardFormat::parse("fsb").unwrap(), ShardFormat::Binary);
+        assert!(ShardFormat::parse("msgpack").is_err());
+        assert_eq!(ShardFormat::default(), ShardFormat::Json);
+        assert_eq!(ShardFormat::Json.extension(), "json");
+        assert_eq!(ShardFormat::Binary.extension(), "fsb");
     }
 
     #[test]

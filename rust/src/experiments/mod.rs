@@ -11,9 +11,11 @@
 //!
 //! The same drivers also shard across processes: `fogml exp <name>
 //! --shard I/N --out DIR` runs the I-th round-robin slice of the grid and
-//! serializes it to `DIR/shard_I_of_N.json`; `fogml merge DIR` validates
-//! the set and regenerates artifacts byte-identical to an unsharded run
-//! (the contract lives in [`crate::coordinator::shard`]).
+//! serializes it to `DIR/shard_I_of_N.json` (or `.fsb` under
+//! `--shard-format binary`); `fogml merge DIR` validates the set and
+//! regenerates artifacts byte-identical to an unsharded run whichever
+//! format the shards used (the contract lives in
+//! [`crate::coordinator::shard`]).
 
 pub mod common;
 pub mod fig4;
@@ -31,7 +33,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::EngineConfig;
-use crate::coordinator::shard::{self, ShardSpec, SweepCtx};
+use crate::coordinator::shard::{self, ShardFormat, ShardSpec, SweepCtx};
 use crate::coordinator::SimPool;
 use crate::fed::eval::EvalSchedule;
 use crate::runtime::ModelKind;
@@ -45,8 +47,8 @@ pub struct ExpOptions {
     pub seeds: usize,
     /// Override the model for sweep drivers (Table II always runs both).
     pub model: Option<ModelKind>,
-    /// Output directory for CSV artifacts — and for `shard_I_of_N.json`
-    /// when sharding.
+    /// Output directory for CSV artifacts — and for
+    /// `shard_I_of_N.{json,fsb}` when sharding.
     pub out_dir: String,
     /// Concurrent engine runs for the pooled sweep drivers (`--jobs`).
     pub jobs: usize,
@@ -74,6 +76,11 @@ pub struct ExpOptions {
     /// [`crate::coordinator::shard`]). Only the pool-backed drivers
     /// ([`SHARDABLE`]) support it.
     pub shard: Option<ShardSpec>,
+    /// On-disk encoding of the shard file written under `--shard`
+    /// (`--shard-format json|binary`; default JSON). Deliberately *not*
+    /// part of the recorded opts blob: the format is pure I/O, not grid
+    /// identity, and `fogml merge` auto-detects it per file.
+    pub shard_format: ShardFormat,
     /// Override the base config the pool-backed drivers expand their
     /// grids from (library/test hook — no CLI flag; scaled-down smoke
     /// grids and `tests/shard_merge.rs` use it). `None` means
@@ -92,6 +99,7 @@ impl Default for ExpOptions {
             eval_schedule: EvalSchedule::Full,
             services: None,
             shard: None,
+            shard_format: ShardFormat::default(),
             base: None,
         }
     }
@@ -121,8 +129,8 @@ pub const SHARDABLE: &[&str] = &[
 /// pooled driver of this invocation, so `exp all --jobs N` compiles the XLA
 /// entry points once per worker instead of once per driver (DESIGN.md §Perf
 /// "compile once"). With `opts.shard` set, runs only that slice of a
-/// [`SHARDABLE`] experiment's grid and writes `shard_I_of_N.json` under
-/// `opts.out_dir` instead of artifacts.
+/// [`SHARDABLE`] experiment's grid and writes `shard_I_of_N.{json,fsb}`
+/// (per `opts.shard_format`) under `opts.out_dir` instead of artifacts.
 pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
     if opts.shard.is_some() && !SHARDABLE.contains(&which) {
         bail!(
@@ -140,8 +148,12 @@ pub fn dispatch(which: &str, opts: &ExpOptions) -> Result<()> {
             let ctx = SweepCtx::sharded(&pool, spec);
             dispatch_with(which, opts, &ctx)?;
             let owned = ctx.runs_owned();
-            let path =
-                ctx.write_shard_file(which, opts_to_json(opts), Path::new(&opts.out_dir))?;
+            let path = ctx.write_shard_file(
+                which,
+                opts_to_json(opts),
+                Path::new(&opts.out_dir),
+                opts.shard_format,
+            )?;
             eprintln!("[shard {spec} of {which}: {owned} runs -> {}]", path.display());
             Ok(())
         }

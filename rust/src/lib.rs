@@ -14,7 +14,8 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
-//! * [`util`] — deterministic RNG, statistics, JSON, console tables.
+//! * [`util`] — deterministic RNG, statistics, JSON, little-endian
+//!   binary I/O ([`util::binio`]), console tables.
 //! * [`data`] — SynthDigits dataset + iid/non-iid device partitioning.
 //! * [`topology`] — fog graphs (full/ER/Watts–Strogatz/hierarchical/
 //!   scale-free/random-geometric), churn deltas ([`topology::ChurnProcess`]),
@@ -37,8 +38,9 @@
 //!   requests into shared largest-tile dispatches, partner-invariantly),
 //!   the [`coordinator::pool::SimPool`] (config, seed) fan-out,
 //!   cross-process sweep sharding ([`coordinator::shard`]: `--shard I/N`
-//!   + `fogml merge` reassemble a grid bit-identically across machines),
-//!   and the leader/worker cluster actors.
+//!   + `fogml merge` reassemble a grid bit-identically across machines,
+//!   with shard files in JSON or the compact `.fsb` binary codec
+//!   [`coordinator::binfmt`]), and the leader/worker cluster actors.
 //! * [`experiments`] — drivers that regenerate every table and figure
 //!   (sweeps fan out through the pool via `--jobs N`, and across
 //!   processes via `--shard`; see EXPERIMENTS.md for the command ↔

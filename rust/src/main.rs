@@ -15,8 +15,9 @@
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
-//!             [--services K] [--shard I/N]
+//!             [--services K] [--shard I/N] [--shard-format json|binary]
 //! fogml merge <shard-dir> [--out DIR]
+//! fogml shard convert <file|dir> --to json|binary [--out DIR]
 //! fogml cluster [--devices 4] [--rounds 5]
 //! ```
 //!
@@ -41,7 +42,14 @@
 //! order, any `--jobs`), gather the files into one directory, then
 //! `fogml merge <dir>` validates the set (fingerprints, completeness)
 //! and regenerates every artifact byte-identical to an unsharded run
-//! (see `coordinator::shard` and EXPERIMENTS.md).
+//! (see `coordinator::shard` and EXPERIMENTS.md). `--shard-format
+//! binary` writes `shard_I_of_N.fsb` instead: the length-prefixed
+//! little-endian format (`coordinator::binfmt`) that skips text serde
+//! entirely — same bytes out of the merge, fraction of the I/O cost at
+//! sweep scale. `fogml merge` auto-detects each file's format by
+//! content; `fogml shard convert` rewrites a file (or every shard file
+//! in a directory) into `--to json|binary` under `--out` (default: next
+//! to the source) and verifies each conversion round-trips exactly.
 //!
 //! `--train-path` selects how an interval's local updates execute:
 //! `auto` (default) stacks all concurrently-training devices into one
@@ -72,7 +80,8 @@ use fogml::config::{
     CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, TopologyKind,
     TrainPath,
 };
-use fogml::coordinator::{Cluster, ClusterConfig, ShardSpec, SimPool};
+use fogml::coordinator::shard::{discover_shard_files, ShardFile};
+use fogml::coordinator::{Cluster, ClusterConfig, ShardFormat, ShardSpec, SimPool};
 use fogml::costs::{CostSource, Medium};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed;
@@ -93,11 +102,12 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("exp") => cmd_exp(&args),
         Some("merge") => cmd_merge(&args),
+        Some("shard") => cmd_shard(&args),
         Some("cluster") => cmd_cluster(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (want train|exp|merge|cluster)"),
+        Some(other) => bail!("unknown subcommand '{other}' (want train|exp|merge|shard|cluster)"),
         None => {
             println!("fogml — Network-Aware Optimization of Distributed Learning for Fog Computing");
-            println!("usage: fogml <train|exp|merge|cluster> [options]   (see README.md and EXPERIMENTS.md)");
+            println!("usage: fogml <train|exp|merge|shard|cluster> [options]   (see README.md and EXPERIMENTS.md)");
             Ok(())
         }
     }
@@ -256,6 +266,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
             Some(s) => Some(ShardSpec::parse(s)?),
             None => None,
         },
+        shard_format: match args.get("shard-format") {
+            Some(f) => ShardFormat::parse(f)?,
+            None => ShardFormat::default(),
+        },
         base: None,
     };
     experiments::dispatch(which, &opts)
@@ -266,6 +280,75 @@ fn cmd_merge(args: &Args) -> Result<()> {
         bail!("usage: fogml merge <shard-dir> [--out DIR]");
     };
     experiments::merge(dir, args.get("out"))
+}
+
+fn cmd_shard(args: &Args) -> Result<()> {
+    const USAGE: &str = "usage: fogml shard convert <file|dir> --to json|binary [--out DIR]";
+    match args.positional.get(1).map(String::as_str) {
+        Some("convert") => cmd_shard_convert(args),
+        _ => bail!("{USAGE}"),
+    }
+}
+
+/// Rewrite shard files between the JSON and binary on-disk formats.
+/// Verifies every conversion by reloading the written file and comparing
+/// its canonical JSON rendering against the source — exactly the
+/// equality the byte-identical-merge contract rests on.
+fn cmd_shard_convert(args: &Args) -> Result<()> {
+    let Some(target) = args.positional.get(2) else {
+        bail!("fogml shard convert: missing <file|dir> argument");
+    };
+    let Some(to) = args.get("to") else {
+        bail!("fogml shard convert: missing --to json|binary");
+    };
+    let to = ShardFormat::parse(to)?;
+    let target = std::path::Path::new(target);
+
+    // one file, or every recognized shard file in a directory
+    let sources: Vec<std::path::PathBuf> = if target.is_dir() {
+        let files = discover_shard_files(target)?;
+        if files.is_empty() {
+            bail!(
+                "no shard files (shard_I_of_N.json or shard_I_of_N.fsb) found in {}",
+                target.display()
+            );
+        }
+        files.into_iter().map(|(_, _, p)| p).collect()
+    } else {
+        vec![target.to_path_buf()]
+    };
+
+    for src in &sources {
+        let file = ShardFile::load(src)?;
+        let out_dir = match args.get("out") {
+            Some(d) => std::path::PathBuf::from(d),
+            None => src.parent().unwrap_or(std::path::Path::new(".")).to_path_buf(),
+        };
+        let dst = file.save_as(&out_dir, to)?;
+        // round-trip verification: reload what we just wrote and demand
+        // canonical equality with the source
+        let back = ShardFile::load(&dst)?;
+        if back.to_json().to_string() != file.to_json().to_string() {
+            bail!(
+                "round-trip verification failed: {} re-reads differently from {} — refusing to trust the conversion",
+                dst.display(),
+                src.display()
+            );
+        }
+        let (src_len, dst_len) = (
+            std::fs::metadata(src).map(|m| m.len()).unwrap_or(0),
+            std::fs::metadata(&dst).map(|m| m.len()).unwrap_or(0),
+        );
+        println!(
+            "{} -> {}  ({} -> {} bytes, {} runs, round-trip verified)",
+            src.display(),
+            dst.display(),
+            src_len,
+            dst_len,
+            file.runs.len()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {

@@ -13,8 +13,32 @@
 use crate::topology::graph::Graph;
 use crate::util::rng::Rng;
 
-/// Every ordered pair is a link.
+/// Largest `n` the inherently dense generators ([`fully_connected`],
+/// [`erdos_renyi`]) accept. Their edge sets are Θ(n²) — at the paper's
+/// scales (n ≤ a few hundred) that is nothing, but at the sparse-scale
+/// regime the movement engine targets (N = 10⁵–10⁶ devices,
+/// `bench_engine`'s `scaling` sweep) a dense graph would be hundreds of
+/// gigabytes before the first interval runs. The guard turns that
+/// inevitable OOM into an immediate, explained error; use the sparse
+/// generators ([`random_geometric`], [`watts_strogatz`], [`scale_free`])
+/// for large populations — the O(V+E) diagnostics
+/// (`Graph::is_connected_undirected`, `Graph::degree_histogram`) scale
+/// with them.
+pub const DENSE_GENERATOR_MAX_N: usize = 20_000;
+
+fn assert_dense_scale(generator: &str, n: usize) {
+    assert!(
+        n <= DENSE_GENERATOR_MAX_N,
+        "{generator}(n = {n}) would build a Θ(n²)-edge graph \
+         (limit: DENSE_GENERATOR_MAX_N = {DENSE_GENERATOR_MAX_N}); use a sparse generator \
+         (random_geometric, watts_strogatz, scale_free) for large fog populations"
+    );
+}
+
+/// Every ordered pair is a link. Dense by definition — guarded by
+/// [`DENSE_GENERATOR_MAX_N`].
 pub fn fully_connected(n: usize) -> Graph {
+    assert_dense_scale("fully_connected", n);
     let mut g = Graph::empty(n);
     for i in 0..n {
         for j in 0..n {
@@ -27,8 +51,10 @@ pub fn fully_connected(n: usize) -> Graph {
 }
 
 /// Undirected Erdős–Rényi: each unordered pair linked (both directions)
-/// with probability `rho`.
+/// with probability `rho`. The pair loop is Θ(n²) regardless of `rho` —
+/// guarded by [`DENSE_GENERATOR_MAX_N`].
 pub fn erdos_renyi(n: usize, rho: f64, rng: &mut Rng) -> Graph {
+    assert_dense_scale("erdos_renyi", n);
     let mut g = Graph::empty(n);
     for i in 0..n {
         for j in (i + 1)..n {
@@ -328,6 +354,28 @@ mod tests {
         assert!(mean > 4.0 && mean < 24.0, "mean degree {mean}");
         // O(n) edges, nowhere near dense
         assert!(g.num_edges() < 20 * n);
+    }
+
+    #[test]
+    fn dense_generators_accept_up_to_the_guard() {
+        // just below/at the boundary shape-checks cheaply via n small;
+        // the guard itself is a pure comparison, so exercise the bound
+        // logic with small numbers plus the constant
+        assert!(DENSE_GENERATOR_MAX_N >= 1_000); // paper scales must always pass
+        let g = fully_connected(8);
+        assert_eq!(g.num_edges(), 8 * 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "use a sparse generator")]
+    fn fully_connected_rejects_sparse_scale_populations() {
+        fully_connected(DENSE_GENERATOR_MAX_N + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "use a sparse generator")]
+    fn erdos_renyi_rejects_sparse_scale_populations() {
+        erdos_renyi(DENSE_GENERATOR_MAX_N + 1, 0.01, &mut Rng::new(1));
     }
 
     #[test]

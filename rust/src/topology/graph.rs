@@ -106,6 +106,13 @@ impl Graph {
     /// connects all devices, this is trivially true for n >= 1; the method
     /// instead reports whether the *device-to-device* graph is connected,
     /// which the experiments use to characterize topologies.
+    ///
+    /// O(V + E): one DFS over the adjacency rows, no matrix — this (with
+    /// [`Graph::degree_histogram`]) is the documented sparse-scale
+    /// diagnostics path, safe to call on million-device topologies from
+    /// the sparse generators. Only graph *generation* has dense
+    /// offenders, and those are guarded
+    /// ([`crate::topology::generators::DENSE_GENERATOR_MAX_N`]).
     pub fn is_connected_undirected(&self) -> bool {
         if self.n == 0 {
             return true;
@@ -144,6 +151,9 @@ impl Graph {
     }
 
     /// Out-degree histogram: `hist[k]` = number of devices with k out-edges.
+    ///
+    /// O(V + E) like [`Graph::is_connected_undirected`] — part of the
+    /// sparse-scale diagnostics path; fine at any population size.
     pub fn degree_histogram(&self) -> Vec<usize> {
         let maxd = (0..self.n).map(|i| self.out[i].len()).max().unwrap_or(0);
         let mut hist = vec![0usize; maxd + 1];

@@ -1,0 +1,309 @@
+//! Little-endian binary I/O primitives: a streaming low-allocation writer
+//! and a forward-only zero-copy reader.
+//!
+//! These are the building blocks of the binary shard format
+//! ([`crate::coordinator::binfmt`]). The design mirrors the
+//! `Utf8JsonReader`/`Utf8JsonWriter` split of forward-only tokenizers:
+//!
+//! * [`ByteWriter`] wraps any [`std::io::Write`] sink (a `BufWriter<File>`
+//!   for streaming file output, a `&mut Vec<u8>` for in-memory scratch)
+//!   and appends fixed-width little-endian scalars and length-prefixed
+//!   byte runs. No intermediate tree, no `Display` formatting — an `f64`
+//!   is eight bytes of its raw bit pattern, so NaN payloads, ±inf, `-0.0`
+//!   and subnormals round-trip exactly by construction.
+//! * [`ByteReader`] walks a borrowed `&[u8]` buffer front to back. Every
+//!   `get_*` advances a cursor; byte runs and strings are returned as
+//!   slices **borrowing the input buffer** (zero-copy — the caller copies
+//!   only into its final owned structures). Errors carry the byte offset,
+//!   like [`crate::util::json::JsonError`] does for text.
+//!
+//! All multi-byte values are little-endian, matching the wire contract in
+//! DESIGN.md §Perf rule 9.
+
+use std::fmt;
+use std::io::{self, Write};
+
+/// Streaming little-endian writer over any [`Write`] sink.
+pub struct ByteWriter<W: Write> {
+    w: W,
+    written: u64,
+}
+
+impl<W: Write> ByteWriter<W> {
+    pub fn new(w: W) -> Self {
+        ByteWriter { w, written: 0 }
+    }
+
+    /// Total bytes appended so far.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Finish writing: flush and hand the sink back.
+    pub fn into_inner(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+
+    pub fn put_bytes(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.w.write_all(bytes)?;
+        self.written += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn put_u8(&mut self, x: u8) -> io::Result<()> {
+        self.put_bytes(&[x])
+    }
+
+    pub fn put_u32(&mut self, x: u32) -> io::Result<()> {
+        self.put_bytes(&x.to_le_bytes())
+    }
+
+    pub fn put_u64(&mut self, x: u64) -> io::Result<()> {
+        self.put_bytes(&x.to_le_bytes())
+    }
+
+    /// Raw bit pattern of `x` — the exact value comes back from
+    /// [`ByteReader::get_f64`], NaN payload bits included.
+    pub fn put_f64(&mut self, x: f64) -> io::Result<()> {
+        self.put_u64(x.to_bits())
+    }
+
+    /// Length-prefixed byte run: `u32` length then the bytes.
+    pub fn put_bytes_lp(&mut self, bytes: &[u8]) -> io::Result<()> {
+        let len = u32::try_from(bytes.len()).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("byte run of {} bytes exceeds the u32 length prefix", bytes.len()),
+            )
+        })?;
+        self.put_u32(len)?;
+        self.put_bytes(bytes)
+    }
+
+    /// Length-prefixed UTF-8 string (`u32` byte length then the bytes).
+    pub fn put_str_lp(&mut self, s: &str) -> io::Result<()> {
+        self.put_bytes_lp(s.as_bytes())
+    }
+}
+
+/// Error from [`ByteReader`]: what went wrong and at which byte offset
+/// (relative to the buffer the reader was created over).
+#[derive(Debug, Clone)]
+pub struct BinError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for BinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "binary format error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for BinError {}
+
+/// Forward-only zero-copy reader over a borrowed byte buffer.
+#[derive(Debug, Clone)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    /// Offset of `buf[0]` in the original file — keeps error positions
+    /// meaningful inside [`ByteReader::sub_reader`] slices.
+    base: usize,
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, base: 0, pos: 0 }
+    }
+
+    /// Absolute byte offset of the cursor (within the original buffer).
+    pub fn pos(&self) -> usize {
+        self.base + self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn err(&self, msg: impl Into<String>) -> BinError {
+        BinError { pos: self.pos(), msg: msg.into() }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], BinError> {
+        if self.remaining() < n {
+            return Err(self.err(format!(
+                "truncated input: {what} wants {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let slice = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    pub fn get_u8(&mut self, what: &str) -> Result<u8, BinError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn get_u32(&mut self, what: &str) -> Result<u32, BinError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self, what: &str) -> Result<u64, BinError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Inverse of [`ByteWriter::put_f64`]: the exact bit pattern.
+    pub fn get_f64(&mut self, what: &str) -> Result<f64, BinError> {
+        Ok(f64::from_bits(self.get_u64(what)?))
+    }
+
+    /// Borrow `n` raw bytes out of the buffer (no copy).
+    pub fn get_bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], BinError> {
+        self.take(n, what)
+    }
+
+    /// Length-prefixed byte run (inverse of [`ByteWriter::put_bytes_lp`]).
+    pub fn get_bytes_lp(&mut self, what: &str) -> Result<&'a [u8], BinError> {
+        let len = self.get_u32(what)? as usize;
+        self.take(len, what)
+    }
+
+    /// Length-prefixed UTF-8 string, borrowed from the buffer.
+    pub fn get_str_lp(&mut self, what: &str) -> Result<&'a str, BinError> {
+        let start = self.pos();
+        let bytes = self.get_bytes_lp(what)?;
+        std::str::from_utf8(bytes)
+            .map_err(|e| BinError { pos: start, msg: format!("{what}: invalid utf-8: {e}") })
+    }
+
+    /// Consume `expected` verbatim or error (magic / sentinel checks).
+    pub fn expect(&mut self, expected: &[u8], what: &str) -> Result<(), BinError> {
+        let start = self.pos();
+        let got = self.take(expected.len(), what)?;
+        if got != expected {
+            return Err(BinError {
+                pos: start,
+                msg: format!("{what}: expected {expected:02x?}, found {got:02x?}"),
+            });
+        }
+        Ok(())
+    }
+
+    /// Split off a forward-only reader over the next `n` bytes (a
+    /// length-prefixed record body). The parent cursor skips past them, so
+    /// a malformed record cannot desynchronize its successors.
+    pub fn sub_reader(&mut self, n: usize, what: &str) -> Result<ByteReader<'a>, BinError> {
+        let base = self.pos();
+        let slice = self.take(n, what)?;
+        Ok(ByteReader { buf: slice, base, pos: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        w.put_u8(0xAB).unwrap();
+        w.put_u32(0xDEAD_BEEF).unwrap();
+        w.put_u64(u64::MAX - 1).unwrap();
+        w.put_f64(-0.0).unwrap();
+        w.put_str_lp("τ=10").unwrap();
+        assert_eq!(w.written(), 1 + 4 + 8 + 8 + 4 + "τ=10".len() as u64);
+
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8("a").unwrap(), 0xAB);
+        assert_eq!(r.get_u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64("c").unwrap(), u64::MAX - 1);
+        let z = r.get_f64("d").unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_str_lp("e").unwrap(), "τ=10");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive() {
+        // tagged-string JSON flattens these; the binary path must not
+        let torture = [
+            f64::from_bits(0x7FF8_DEAD_BEEF_CAFE), // NaN with payload
+            f64::from_bits(0xFFF0_0000_0000_0001), // signaling-ish NaN
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -0.0,
+            5e-324, // smallest subnormal
+            f64::MIN_POSITIVE,
+            0.1 + 0.2,
+        ];
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        for &x in &torture {
+            w.put_f64(x).unwrap();
+        }
+        let mut r = ByteReader::new(&buf);
+        for &x in &torture {
+            assert_eq!(r.get_f64("x").unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_errors_carry_position() {
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        w.put_u64(7).unwrap();
+        let mut r = ByteReader::new(&buf[..6]);
+        let e = r.get_u64("value").unwrap_err();
+        assert_eq!(e.pos, 0);
+        assert!(e.msg.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn expect_rejects_wrong_magic() {
+        let mut r = ByteReader::new(b"NOPE");
+        let e = r.expect(b"FGML", "magic").unwrap_err();
+        assert!(e.msg.contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn sub_reader_bounds_and_positions() {
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        w.put_u32(2).unwrap(); // record length
+        w.put_u8(1).unwrap();
+        w.put_u8(2).unwrap();
+        w.put_u8(99).unwrap(); // next record's data
+
+        let mut r = ByteReader::new(&buf);
+        let n = r.get_u32("len").unwrap() as usize;
+        let mut sub = r.sub_reader(n, "record").unwrap();
+        assert_eq!(sub.get_u8("a").unwrap(), 1);
+        assert_eq!(sub.get_u8("b").unwrap(), 2);
+        assert!(sub.is_empty());
+        // reading past the sub-slice fails even though the parent has more
+        let e = sub.get_u8("c").unwrap_err();
+        assert_eq!(e.pos, 6);
+        // the parent cursor advanced past the record
+        assert_eq!(r.get_u8("next").unwrap(), 99);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_not_wrapped() {
+        // 4 GiB string length cannot be represented: writer must error
+        // (the reader side is covered by truncation: a huge prefix with a
+        // short buffer errors out instead of panicking)
+        let mut r = ByteReader::new(&[0xFF, 0xFF, 0xFF, 0xFF, b'x']);
+        let e = r.get_bytes_lp("blob").unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+    }
+}

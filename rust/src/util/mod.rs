@@ -1,11 +1,12 @@
 //! Small self-contained substrates: deterministic RNG, statistics, a JSON
-//! reader/writer, and a console table printer.
+//! reader/writer, little-endian binary I/O, and a console table printer.
 //!
 //! These exist because the build environment is fully offline — `rand`,
 //! `serde`, `prettytable` etc. are unavailable — and because determinism
 //! under a single seed is a hard requirement for reproducing the paper's
 //! tables (every experiment is seeded and re-runnable bit-for-bit).
 
+pub mod binio;
 pub mod json;
 pub mod rng;
 pub mod stats;

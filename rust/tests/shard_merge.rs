@@ -10,7 +10,7 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 use fogml::config::{EngineConfig, Method};
-use fogml::coordinator::shard::{self, RunRecord, ShardFile, ShardSpec};
+use fogml::coordinator::shard::{self, RunRecord, ShardFile, ShardFormat, ShardSpec};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed::{EngineOutput, IntervalStats, Ledger, MovementTotals};
 use fogml::util::json::Json;
@@ -51,14 +51,24 @@ fn read(dir: &Path, name: &str) -> String {
         .unwrap_or_else(|e| panic!("missing {name} in {}: {e}", dir.display()))
 }
 
-/// Serial run, N shard runs, merge — then byte-compare every artifact.
-/// Skips (returns) without an XLA backend: shard/merge drives real
-/// engines; the format and validation tests below stay pure CPU.
-fn assert_shard_merge_identical(which: &str, shards: usize, curve: bool, files: &[&str]) {
+/// Serial run, N shard runs in the given on-disk format, merge — then
+/// byte-compare every artifact. Running this for both [`ShardFormat`]s
+/// proves the DESIGN §Perf rule-9 contract: binary merge ≡ JSON merge
+/// ≡ serial, byte-identically (both are compared against the same
+/// serial artifacts). Skips (returns) without an XLA backend:
+/// shard/merge drives real engines; the format and validation tests
+/// below stay pure CPU.
+fn assert_shard_merge_identical(
+    which: &str,
+    shards: usize,
+    curve: bool,
+    format: ShardFormat,
+    files: &[&str],
+) {
     if !fogml::runtime::backend_available() {
         return;
     }
-    let root = scratch(&format!("{which}_{shards}"));
+    let root = scratch(&format!("{which}_{shards}_{}", format.extension()));
 
     let serial_dir = root.join("serial");
     experiments::dispatch(which, &opts(&serial_dir, curve)).expect("serial run");
@@ -67,10 +77,12 @@ fn assert_shard_merge_identical(which: &str, shards: usize, curve: bool, files: 
     for i in 1..=shards {
         let mut o = opts(&shard_dir, curve);
         o.shard = Some(ShardSpec { index: i, count: shards });
+        o.shard_format = format;
         experiments::dispatch(which, &o).expect("shard run");
+        let spec = ShardSpec { index: i, count: shards };
         assert!(
-            shard_dir.join(format!("shard_{i}_of_{shards}.json")).exists(),
-            "shard {i}/{shards} file missing"
+            shard_dir.join(spec.file_name(format)).exists(),
+            "shard {i}/{shards} {format} file missing"
         );
     }
     // shard mode suppresses artifacts — only shard files appear
@@ -93,15 +105,25 @@ fn assert_shard_merge_identical(which: &str, shards: usize, curve: bool, files: 
 
 #[test]
 fn table3_shard2_and_shard3_merge_equal_serial() {
-    assert_shard_merge_identical("table3", 2, false, &["table3.csv"]);
-    assert_shard_merge_identical("table3", 3, false, &["table3.csv"]);
+    assert_shard_merge_identical("table3", 2, false, ShardFormat::Json, &["table3.csv"]);
+    assert_shard_merge_identical("table3", 3, false, ShardFormat::Json, &["table3.csv"]);
+}
+
+#[test]
+fn table3_binary_shards_merge_equal_serial() {
+    // same grid through .fsb shards: merged artifacts must be
+    // byte-identical to serial, hence to the JSON-shard merge above
+    assert_shard_merge_identical("table3", 2, false, ShardFormat::Binary, &["table3.csv"]);
+    assert_shard_merge_identical("table3", 3, false, ShardFormat::Binary, &["table3.csv"]);
 }
 
 #[test]
 fn fig9_curves_shard3_merge_equal_serial() {
     // fig9 emits both a table and a curve CSV (--curve), so this covers
     // the curve-reassembly path end to end
-    assert_shard_merge_identical("fig9", 3, true, &["fig9_pexit.csv", "fig9_pexit_curve.csv"]);
+    let files = &["fig9_pexit.csv", "fig9_pexit_curve.csv"];
+    assert_shard_merge_identical("fig9", 3, true, ShardFormat::Json, files);
+    assert_shard_merge_identical("fig9", 3, true, ShardFormat::Binary, files);
 }
 
 // ---------------------------------------------------------------------------
@@ -202,6 +224,96 @@ fn shard_file_serde_round_trip() {
         assert_eq!(a.fingerprint, b.fingerprint);
         assert_output_eq(&a.output, &b.output);
     }
+}
+
+#[test]
+fn binary_shard_file_round_trips_awkward_floats() {
+    let f = ShardFile {
+        experiment: "fig9".into(),
+        spec: ShardSpec { index: 2, count: 3 },
+        total_runs: 5,
+        grid_fingerprint: u64::MAX,
+        opts: opts_blob(),
+        runs: vec![
+            RunRecord { index: 1, fingerprint: 0xdead_beef, output: awkward_output() },
+            RunRecord { index: 4, fingerprint: 7, output: EngineOutput::default() },
+        ],
+    };
+    let dir = scratch("binfmt_rt");
+    let path = f.save_as(&dir, ShardFormat::Binary).unwrap();
+    assert_eq!(path.file_name().unwrap().to_str(), Some("shard_2_of_3.fsb"));
+
+    let back = ShardFile::load(&path).unwrap();
+    assert_eq!(back.experiment, "fig9");
+    assert_eq!(back.spec, f.spec);
+    assert_eq!(back.total_runs, 5);
+    assert_eq!(back.grid_fingerprint, u64::MAX);
+    assert_eq!(back.opts, f.opts);
+    assert_eq!(back.runs.len(), 2);
+    for (a, b) in f.runs.iter().zip(&back.runs) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_output_eq(&a.output, &b.output);
+    }
+}
+
+#[test]
+fn binary_and_json_shard_sets_load_identically() {
+    // the same grid persisted both ways must reassemble into the same
+    // ShardSet — the pure-CPU half of the merge-equivalence contract
+    let jdir = scratch("sets_json");
+    let bdir = scratch("sets_bin");
+    for i in 1..=2 {
+        let f = mk_file("table3", i, 2, 4, 7);
+        f.save(&jdir).unwrap();
+        f.save_as(&bdir, ShardFormat::Binary).unwrap();
+    }
+    let js = shard::load_shard_set(&jdir).unwrap();
+    let bs = shard::load_shard_set(&bdir).unwrap();
+    assert_eq!(js.experiment, bs.experiment);
+    assert_eq!(js.count, bs.count);
+    assert_eq!(js.opts, bs.opts);
+    assert_eq!(js.runs.len(), bs.runs.len());
+    for (a, b) in js.runs.iter().zip(&bs.runs) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_output_eq(&a.output, &b.output);
+    }
+}
+
+#[test]
+fn load_shard_set_rejects_mixed_formats() {
+    let dir = scratch("mixed_formats");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    mk_file("table3", 2, 2, 4, 7).save_as(&dir, ShardFormat::Binary).unwrap();
+    let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+    assert!(err.contains("mixed shard formats"), "unhelpful error: {err}");
+    assert!(err.contains("shard convert"), "error should point at the fix: {err}");
+}
+
+#[test]
+fn load_shard_set_ignores_unrelated_files() {
+    let dir = scratch("unrelated");
+    mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
+    mk_file("table3", 2, 2, 4, 7).save(&dir).unwrap();
+    // debris that must NOT be mistaken for shards (or trip the
+    // mixed-format check): backups, editor temp files, partial
+    // downloads, junk
+    for name in [
+        "shard_1_of_2.json.bak",
+        "shard_2_of_2.json~",
+        ".#shard_1_of_2.json",
+        "#shard_1_of_2.json#",
+        ".shard_1_of_2.json.swp",
+        "shard_1_of_2.fsb.partial",
+        "notes.txt",
+    ] {
+        fs::write(dir.join(name), b"junk").unwrap();
+    }
+    fs::create_dir_all(dir.join("shard_9_of_9.json")).unwrap(); // a *directory* with a shard name
+    let set = shard::load_shard_set(&dir).unwrap();
+    assert_eq!(set.count, 2);
+    assert_eq!(set.runs.len(), 4);
 }
 
 #[test]
