@@ -24,7 +24,12 @@
 //! 11): the edge-indexed sparse path at every size, the dense n×n path
 //! only where its plan still fits (N ≤ 10⁴, ~800 MB), asserting bitwise
 //! dense≡sparse agreement wherever both run, and reporting devices/sec
-//! plus resident plan bytes (O(E) vs O(n²)).
+//! plus resident plan bytes (O(E) vs O(n²)). Its `threads` sweep drives
+//! the same sparse engine at N ∈ {10³, 10⁴, 10⁵} across solver worker
+//! counts {1, 2, 4, 8} (§Perf rule 12: fixed-chunk row passes with
+//! serial ascending-order reductions), asserting every thread count
+//! reproduces the serial checksum bit-for-bit while reporting the
+//! devices/sec scaling.
 //!
 //! The `shard_io` section is pure CPU too — it times the sweep-sharding
 //! I/O path (§Perf rule 9) both ways: a synthetic 4-shard set of
@@ -213,6 +218,56 @@ fn scaling_section() -> Json {
         ]));
     }
 
+    // -- threads: row-parallel solver passes at fixed chunk geometry --------
+    // same sparse engine, same churned intervals, solver workers swept over
+    // {1, 2, 4, 8}: §Perf rule 12 says the chunk layout is a function of n
+    // only, so every count must reproduce the serial objective sums
+    // bit-for-bit — the sweep measures wall clock and proves invariance
+    let mut thread_rows = Vec::new();
+    for n in [1_000usize, 10_000, 100_000] {
+        let mut rng = Rng::new(44);
+        let radius = (12.0 / (std::f64::consts::PI * n as f64)).sqrt().min(1.0);
+        let (graph, pos) = random_geometric_with_positions(n, radius, &mut rng);
+        let costs = GeoCosts {
+            compute: (0..n).map(|_| rng.uniform(0.05, 0.6)).collect(),
+            error: (0..n).map(|_| rng.uniform(0.2, 0.9)).collect(),
+            pos,
+        };
+        let mut serial: Option<ScaleOutcome> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut ws = SolverWorkspace::new();
+            ws.solver_threads = threads;
+            let out = scale_run(&graph, &costs, true, &mut ws);
+            let dps = runs_per_sec(n * SCALING_T, out.secs);
+            let speedup = match &serial {
+                Some(s) => {
+                    assert_eq!(
+                        s.checksum, out.checksum,
+                        "threads={threads} diverged from serial at n={n}"
+                    );
+                    s.secs / out.secs.max(1e-9)
+                }
+                None => 1.0,
+            };
+            println!(
+                "scaling/threads n={n:<6} workers={threads}  {:>8.3}s ({dps:.0} devices/s, \
+                 {speedup:.2}× vs serial, checksum identical)",
+                out.secs
+            );
+            thread_rows.push(Json::obj(vec![
+                ("n", Json::from(n)),
+                ("threads", Json::from(threads)),
+                ("intervals", Json::from(SCALING_T)),
+                ("secs", Json::from(out.secs)),
+                ("devices_per_sec", Json::from(dps)),
+                ("speedup_vs_serial", Json::from(speedup)),
+            ]));
+            if serial.is_none() {
+                serial = Some(out);
+            }
+        }
+    }
+
     // PGD (Sqrt model) demo at n = 1000: the convex solver's sparse mirror
     // must match the dense one bitwise and beat it on wall clock
     let n = 1_000;
@@ -253,6 +308,7 @@ fn scaling_section() -> Json {
 
     Json::obj(vec![
         ("rows", Json::Arr(rows)),
+        ("threads", Json::Arr(thread_rows)),
         ("pgd_n", Json::from(n)),
         ("pgd_iterations", Json::from(60usize)),
         ("pgd_sparse_s", Json::from(pgd_sparse_s)),

@@ -133,6 +133,65 @@ impl MovementBackend {
     }
 }
 
+/// Worker-thread budget for the intra-solver parallel layer
+/// (`movement::par`; DESIGN.md §Perf rule 12). Chunk geometry is a
+/// function of n only and reductions combine per-chunk partials in
+/// ascending chunk order, so every setting produces **bit-identical**
+/// plans — this knob trades wall-clock only, never outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverThreads {
+    /// One worker below [`SolverThreads::AUTO_MIN_N`] devices (paper-scale
+    /// problems fit one core's cache and threads would only add spawn
+    /// overhead); above it, the machine's parallelism divided by the
+    /// pool's concurrent-worker count, so `--jobs`/`--services` level
+    /// parallelism and solver-level parallelism compose without
+    /// oversubscription (the default).
+    #[default]
+    Auto,
+    /// Exactly `K` workers regardless of problem size or pool sharing.
+    Fixed(usize),
+}
+
+impl SolverThreads {
+    /// `Auto` stays serial below this device count: paper-scale solves
+    /// (n ≤ 50) are far too small to amortize thread spawns, and the
+    /// sparse O(E) engine only becomes solver-bound well above the dense
+    /// cutover ([`MovementBackend::AUTO_THRESHOLD`]).
+    pub const AUTO_MIN_N: usize = 2048;
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.to_ascii_lowercase();
+        if s == "auto" {
+            return Ok(SolverThreads::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(k) if k >= 1 => Ok(SolverThreads::Fixed(k)),
+            _ => anyhow::bail!(
+                "unknown solver threads '{s}' (want auto or a worker count >= 1)"
+            ),
+        }
+    }
+
+    /// Concrete worker count for an `n`-device solve when `pool_share`
+    /// same-process pool workers run sessions concurrently (1 outside a
+    /// pool). Never 0; `Fixed` is honored verbatim.
+    pub fn resolve(self, n: usize, pool_share: usize) -> usize {
+        match self {
+            SolverThreads::Fixed(k) => k.max(1),
+            SolverThreads::Auto => {
+                if n < Self::AUTO_MIN_N {
+                    1
+                } else {
+                    let machine = std::thread::available_parallelism()
+                        .map(std::num::NonZeroUsize::get)
+                        .unwrap_or(1);
+                    (machine / pool_share.max(1)).max(1)
+                }
+            }
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -175,6 +234,10 @@ pub struct EngineConfig {
     /// starts change PGD's trajectory, so defaults stay bit-identical to
     /// the cold-start solver.
     pub warm_start: bool,
+    /// Intra-solver worker budget (bit-invariant — DESIGN.md §Perf
+    /// rule 12). `Auto` is serial at paper scale and scales out with the
+    /// problem; recorded in shard opts so `fogml merge` stays consistent.
+    pub solver_threads: SolverThreads,
     pub seed: u64,
 }
 
@@ -214,6 +277,7 @@ impl Default for EngineConfig {
             train_path: TrainPath::Auto,
             movement_backend: MovementBackend::Auto,
             warm_start: false,
+            solver_threads: SolverThreads::Auto,
             seed: 1,
         }
     }
@@ -315,6 +379,35 @@ mod tests {
         assert_eq!(c.movement_backend, MovementBackend::Auto);
         assert_eq!(c.movement_backend.resolve(c.n), MovementBackend::Dense);
         assert!(!c.warm_start);
+    }
+
+    #[test]
+    fn solver_threads_parses_and_resolves() {
+        assert_eq!(SolverThreads::parse("auto").unwrap(), SolverThreads::Auto);
+        assert_eq!(SolverThreads::parse("Auto").unwrap(), SolverThreads::Auto);
+        assert_eq!(SolverThreads::parse("4").unwrap(), SolverThreads::Fixed(4));
+        assert!(SolverThreads::parse("0").is_err());
+        assert!(SolverThreads::parse("many").is_err());
+        // Fixed is honored verbatim (clamped away from 0) at any scale
+        assert_eq!(SolverThreads::Fixed(3).resolve(10, 8), 3);
+        assert_eq!(SolverThreads::Fixed(0).resolve(10, 1), 1);
+        // Auto stays serial below the threshold, shares the machine above
+        assert_eq!(SolverThreads::Auto.resolve(50, 1), 1);
+        assert!(SolverThreads::Auto.resolve(100_000, 1) >= 1);
+        assert_eq!(SolverThreads::Auto.resolve(100_000, usize::MAX), 1);
+    }
+
+    #[test]
+    fn solver_threads_default_is_serial_at_paper_scale() {
+        // Auto resolves to one worker for every paper-scale n, and one
+        // worker runs the identical fixed-chunk reduction — default runs
+        // keep the historical solver arithmetic exactly (DESIGN.md §Perf
+        // rule 12; tests/solver_agreement.rs proves the thread-count
+        // invariance itself)
+        let c = EngineConfig::default();
+        assert_eq!(c.solver_threads, SolverThreads::Auto);
+        assert_eq!(c.solver_threads.resolve(c.n, 1), 1);
+        assert_eq!(c.solver_threads.resolve(50, 4), 1);
     }
 
     #[test]

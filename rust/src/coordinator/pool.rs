@@ -26,6 +26,7 @@
 //! within the §Perf rule 7/8 tolerances, because the tile policy
 //! differs).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -34,6 +35,28 @@ use anyhow::{anyhow, Result};
 use crate::config::EngineConfig;
 use crate::coordinator::service::{RuntimeService, ServiceClient, ServiceConfig};
 use crate::fed::session::{self, EngineOutput, Substrates};
+
+thread_local! {
+    /// How many pool workers (including this one) share the machine, seen
+    /// from the current thread: 1 on the serial path and on every thread
+    /// that is not a pool worker; the worker count inside `run_many`
+    /// fan-outs. `SolverThreads::Auto` divides `available_parallelism()`
+    /// by this share so concurrent sessions don't oversubscribe cores.
+    /// Deliberately NOT part of `EngineConfig`: it only gates *how many*
+    /// workers the (bit-invariant) row-parallel solver passes use, never
+    /// what they compute, so a per-invocation `--jobs` value must not
+    /// perturb config fingerprints.
+    static POOL_SHARE: Cell<usize> = const { Cell::new(1) };
+}
+
+/// The current thread's pool share (≥ 1). See [`POOL_SHARE`].
+pub fn worker_share() -> usize {
+    POOL_SHARE.with(|s| s.get().max(1))
+}
+
+fn set_worker_share(share: usize) {
+    POOL_SHARE.with(|s| s.set(share.max(1)));
+}
 
 /// A pool of engine workers over shared runtime services.
 pub struct SimPool {
@@ -127,18 +150,21 @@ impl SimPool {
                 let client = self.services[w % self.services.len()].client();
                 let next = &next;
                 let slots = &slots;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= cfgs.len() {
-                        break;
-                    }
-                    let out = Self::run_one(&client, &cfgs[i]);
-                    let failed = out.is_err();
-                    *slots[i].lock().unwrap() = Some(out);
-                    if failed {
-                        // drain the queue so sibling workers stop early
-                        next.store(cfgs.len(), Ordering::Relaxed);
-                        break;
+                scope.spawn(move || {
+                    set_worker_share(workers);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cfgs.len() {
+                            break;
+                        }
+                        let out = Self::run_one(&client, &cfgs[i]);
+                        let failed = out.is_err();
+                        *slots[i].lock().unwrap() = Some(out);
+                        if failed {
+                            // drain the queue so sibling workers stop early
+                            next.store(cfgs.len(), Ordering::Relaxed);
+                            break;
+                        }
                     }
                 });
             }

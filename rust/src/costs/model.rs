@@ -21,8 +21,10 @@
 /// Cost/capacity oracle consumed by the movement optimizer. Mirrors the
 /// inherent accessors of [`CostSchedule`] (the canonical dense
 /// implementation); every method must be pure in `(t, i, j)` so solver
-/// passes can re-query freely.
-pub trait MovementCosts: std::fmt::Debug {
+/// passes can re-query freely. `Sync` because the row-parallel solver
+/// layer (`movement::par`, DESIGN.md §Perf rule 12) queries the oracle
+/// from scoped worker threads concurrently.
+pub trait MovementCosts: std::fmt::Debug + Sync {
     /// Processing cost `c_i(t)`.
     fn c_node(&self, t: usize, i: usize) -> f64;
     /// Link cost `c_ij(t)`.

@@ -32,7 +32,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, SolverThreads};
 use crate::coordinator::shard::{self, ShardFormat, ShardSpec, SweepCtx};
 use crate::coordinator::SimPool;
 use crate::fed::eval::EvalSchedule;
@@ -71,6 +71,12 @@ pub struct ExpOptions {
     /// opts blob: `fogml merge` refuses to mix shards run under
     /// different service modes.
     pub services: Option<usize>,
+    /// Override the movement solvers' worker-thread budget
+    /// (`--solver-threads`; [`SolverThreads`]). `None` keeps the config
+    /// default (`Auto`). Purely a wall-clock knob: chunked reductions
+    /// make every setting bit-identical (DESIGN.md §Perf rule 12), so —
+    /// unlike `services` — merges never need to reject mixed values.
+    pub solver_threads: Option<SolverThreads>,
     /// Run only this round-robin slice of the grid and write a shard
     /// file instead of artifacts (`--shard I/N`; see
     /// [`crate::coordinator::shard`]). Only the pool-backed drivers
@@ -98,6 +104,7 @@ impl Default for ExpOptions {
             curve: false,
             eval_schedule: EvalSchedule::Full,
             services: None,
+            solver_threads: None,
             shard: None,
             shard_format: ShardFormat::default(),
             base: None,
@@ -110,7 +117,10 @@ impl ExpOptions {
     /// override (or the paper defaults) with the `--model` override
     /// applied on top.
     pub fn base_config(&self) -> EngineConfig {
-        let base = self.base.clone().unwrap_or_default();
+        let mut base = self.base.clone().unwrap_or_default();
+        if let Some(t) = self.solver_threads {
+            base.solver_threads = t;
+        }
         match self.model {
             Some(m) => base.with_model(m),
             None => base,
@@ -226,6 +236,14 @@ fn opts_to_json(o: &ExpOptions) -> Json {
                 Some(k) => Json::from(k),
             },
         ),
+        (
+            "solver_threads",
+            match o.solver_threads {
+                None => Json::Null,
+                Some(SolverThreads::Auto) => Json::from("auto".to_string()),
+                Some(SolverThreads::Fixed(k)) => Json::from(k.to_string()),
+            },
+        ),
     ])
 }
 
@@ -248,6 +266,12 @@ fn opts_from_json(j: &Json) -> Result<ExpOptions> {
     // absent (pre-scheduler shard files) and explicit null both mean the
     // default per-worker services
     opts.services = j.get("services").and_then(Json::as_usize);
+    // same convention: absent (older shard files) and null both mean the
+    // config default (and the knob is output-invariant anyway)
+    opts.solver_threads = match j.get("solver_threads").and_then(Json::as_str) {
+        Some(s) => Some(SolverThreads::parse(s)?),
+        None => None,
+    };
     Ok(opts)
 }
 
@@ -292,12 +316,18 @@ mod tests {
         o.curve = true;
         o.eval_schedule = EvalSchedule::Subset { shards: 4 };
         o.services = Some(2);
+        o.solver_threads = Some(SolverThreads::Fixed(4));
         let back = opts_from_json(&opts_to_json(&o)).unwrap();
         assert_eq!(back.seeds, 5);
         assert_eq!(back.model, Some(ModelKind::Cnn));
         assert!(back.curve);
         assert_eq!(back.eval_schedule, EvalSchedule::Subset { shards: 4 });
         assert_eq!(back.services, Some(2));
+        assert_eq!(back.solver_threads, Some(SolverThreads::Fixed(4)));
+
+        o.solver_threads = Some(SolverThreads::Auto);
+        let back = opts_from_json(&opts_to_json(&o)).unwrap();
+        assert_eq!(back.solver_threads, Some(SolverThreads::Auto));
 
         let d = opts_from_json(&opts_to_json(&ExpOptions::default())).unwrap();
         assert_eq!(d.seeds, 3);
@@ -305,6 +335,7 @@ mod tests {
         assert!(!d.curve);
         assert_eq!(d.eval_schedule, EvalSchedule::Full);
         assert_eq!(d.services, None);
+        assert_eq!(d.solver_threads, None);
     }
 
     #[test]

@@ -397,6 +397,9 @@ impl<'a, C: Compute> Session<'a, C> {
         let global = compute.init_params(sub.init_seed)?;
         let mut ws = IntervalWorkspace::new(cfg.n);
         ws.solver.warm_start = cfg.warm_start;
+        ws.solver.solver_threads = cfg
+            .solver_threads
+            .resolve(cfg.n, crate::coordinator::pool::worker_share());
         Ok(Session {
             cfg,
             sub,
@@ -1108,6 +1111,48 @@ mod tests {
                     "{model:?}"
                 );
                 assert_eq!(outs[0].similarity, other.similarity, "{model:?}");
+            }
+        }
+    }
+
+    /// `--solver-threads` is a pure execution knob: whole-session outputs
+    /// are bit-for-bit identical across worker counts (and to the Auto
+    /// default), for every discard model, on both plan backends
+    /// (DESIGN.md §Perf rule 12).
+    #[test]
+    fn solver_threads_routing_is_semantically_invisible() {
+        use crate::config::SolverThreads;
+        use crate::movement::DiscardModel;
+        for model in [DiscardModel::LinearR, DiscardModel::LinearG, DiscardModel::Sqrt] {
+            for backend in [MovementBackend::Dense, MovementBackend::Sparse] {
+                let base = stub_cfg(Method::NetworkAware).with(|c| {
+                    c.discard_model = model;
+                    c.movement_backend = backend;
+                    c.topology = crate::config::TopologyKind::Random(0.5);
+                    c.churn = Some(Churn { p_exit: 0.15, p_entry: 0.15 });
+                });
+                let sub = Substrates::derive(&base);
+                let outs: Vec<EngineOutput> = [
+                    SolverThreads::Auto,
+                    SolverThreads::Fixed(1),
+                    SolverThreads::Fixed(2),
+                    SolverThreads::Fixed(4),
+                ]
+                .into_iter()
+                .map(|st| {
+                    let cfg = base.clone().with(|c| c.solver_threads = st);
+                    run_with(&cfg, &sub, StubCompute).unwrap()
+                })
+                .collect();
+                for other in &outs[1..] {
+                    assert_eq!(outs[0].accuracy, other.accuracy, "{model:?}/{backend:?}");
+                    assert_eq!(outs[0].ledger, other.ledger, "{model:?}/{backend:?}");
+                    assert_eq!(
+                        outs[0].movement.per_interval, other.movement.per_interval,
+                        "{model:?}/{backend:?}"
+                    );
+                    assert_eq!(outs[0].similarity, other.similarity, "{model:?}/{backend:?}");
+                }
             }
         }
     }

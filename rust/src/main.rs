@@ -11,10 +11,11 @@
 //!             [--eval-schedule full|subset|subset:K]
 //!             [--eval-path auto|batched|scalar]
 //!             [--movement-backend auto|dense|sparse] [--warm-start]
-//!             [--services K]
+//!             [--solver-threads auto|K] [--services K]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
+//!             [--solver-threads auto|K]
 //!             [--services K] [--shard I/N] [--shard-format json|binary]
 //! fogml merge <shard-dir> [--out DIR]
 //! fogml shard convert <file|dir> --to json|binary [--out DIR]
@@ -72,13 +73,21 @@
 //! 11). `--warm-start` starts each interval's PGD solve from the previous
 //! interval's plan reprojected onto the new active set (opt-in: it changes
 //! the solver trajectory, so defaults stay bit-identical).
+//!
+//! `--solver-threads` sets how many worker threads the movement solvers
+//! fan their fixed-chunk row passes across: `K` forces a count, `auto`
+//! (default) keeps one worker at paper scale and divides the machine's
+//! cores by the pool's worker share above ~2k devices. The chunk
+//! geometry depends only on the device count, so every setting produces
+//! bit-identical plans — the flag changes wall time, never results
+//! (DESIGN.md §Perf rule 12).
 
 use anyhow::{bail, Result};
 
 use fogml::cli::Args;
 use fogml::config::{
-    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, TopologyKind,
-    TrainPath,
+    CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, SolverThreads,
+    TopologyKind, TrainPath,
 };
 use fogml::coordinator::shard::{discover_shard_files, ShardFile};
 use fogml::coordinator::{Cluster, ClusterConfig, ShardFormat, ShardSpec, SimPool};
@@ -176,6 +185,9 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     if args.flag("warm-start") {
         cfg.warm_start = true;
     }
+    if let Some(v) = args.get("solver-threads") {
+        cfg.solver_threads = SolverThreads::parse(v)?;
+    }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;
     if p_exit > 0.0 || p_entry > 0.0 {
@@ -262,6 +274,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
             None => EvalSchedule::Full,
         },
         services: args.get_parsed("services")?,
+        solver_threads: match args.get("solver-threads") {
+            Some(v) => Some(SolverThreads::parse(v)?),
+            None => None,
+        },
         shard: match args.get("shard") {
             Some(s) => Some(ShardSpec::parse(s)?),
             None => None,

@@ -13,16 +13,43 @@
 //! procedure justified by Theorem 6. Projected gradient descent with a
 //! diminishing step and best-iterate tracking converges fast at these sizes
 //! (n ≤ 50 ⇒ ≤ 2.5k variables).
+//!
+//! **Execution layout** (DESIGN.md §Perf rule 12): each PGD iteration is
+//! two row-parallel sweeps over fixed-size row chunks ([`super::par`]):
+//!
+//! 1. a **row pass** — gradient row from the previous sweep's G̃, step,
+//!    per-row simplex projection, and the row's *linear* objective terms
+//!    folded into its chunk's partial sum (all row-local given G̃);
+//! 2. a **gather pass** — per *target*, G̃ and this-interval inbound
+//!    accumulated source-ascending (dense: a column scan; sparse: the CSR
+//!    transpose row), then the `f/√G` objective terms appended to the same
+//!    chunk partial.
+//!
+//! Partials combine serially in ascending chunk order, so the objective —
+//! and with it best-iterate tracking and the final plan — is bit-invariant
+//! to the worker count. The fused gather also replaces the historical
+//! per-iteration standalone `objective()` recompute (which re-accumulated
+//! G̃ from scratch): one transpose sweep now feeds both the gradient and
+//! the objective, and agrees with [`MovementPlan::objective`] bitwise.
 
+use crate::movement::par::{self, ProjBuffers};
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
+use crate::movement::sparse::SparsePlan;
 use crate::movement::SolverWorkspace;
+use std::ops::Range;
 
 /// Smoothing constant in `φ(G) = (G + SQRT_EPS)^{-1/2}`.
 pub const SQRT_EPS: f64 = 1.0;
 
 /// Consecutive no-improvement iterations before a `tol > 0` run stops.
 const STALL_LIMIT: usize = 25;
+
+/// `φ'(G)` — shared by the dense and sparse gradient rows.
+#[inline]
+fn phi_prime(g: f64) -> f64 {
+    -0.5 * (g + SQRT_EPS).powf(-1.5)
+}
 
 /// PGD hyperparameters.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +83,9 @@ pub fn solve(p: &MovementProblem, opts: PgdOptions) -> MovementPlan {
 /// result is bit-identical to a fresh [`solve`].
 pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspace) {
     let n = p.n();
+    let threads = ws.solver_threads.max(1);
+    let chunk_rows = ws.chunk_rows.max(1);
+    ws.ensure_chunks(n);
     // Warm start (opt-in, DESIGN.md §Perf rule 11): reproject the previous
     // interval's plan onto the new active set instead of re-deriving the
     // greedy vertex. Churn flips few devices, so the previous optimum is a
@@ -75,9 +105,9 @@ pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspac
             }
         }
         // drops stale mass aimed at now-inactive devices and renormalizes
-        project_rows(p, ws);
+        project_rows(p, &mut ws.plan, &mut ws.proj, threads, chunk_rows);
     } else {
-        crate::movement::greedy::solve_into(p, &mut ws.plan);
+        crate::movement::greedy::solve_into_chunked(p, &mut ws.plan, threads, chunk_rows);
     }
 
     // auto step size: inversely proportional to the largest row scale
@@ -85,28 +115,49 @@ pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspac
     let step0 = if opts.step0 > 0.0 { opts.step0 } else { 0.5 / max_d };
 
     ws.best.clone_from(&ws.plan);
-    let mut best_obj = ws.plan.objective(p);
-    let mut stall = 0usize;
-
     ws.grad_s.clear();
     ws.grad_s.resize(n * n, 0.0);
+    ws.g_tilde.clear();
+    ws.g_tilde.resize(n, 0.0);
+    ws.inbound_now.clear();
+    ws.inbound_now.resize(n, 0.0);
+
+    // fused evaluation of the start plan: its linear objective terms, then
+    // one gather sweep producing its objective AND iteration 0's G̃
+    linear_pass(p, &ws.plan, &mut ws.partials, threads, chunk_rows);
+    let mut best_obj = gather_pass(
+        p,
+        &ws.plan,
+        &mut ws.g_tilde,
+        &mut ws.inbound_now,
+        &mut ws.partials,
+        threads,
+        chunk_rows,
+    );
+    let mut stall = 0usize;
+
     for it in 0..opts.iterations {
-        gradient(p, &ws.plan, &mut ws.grad_s, &mut ws.g_tilde);
         let step = step0 / (1.0 + (it as f64 / 40.0)).sqrt();
-        // gradient step on s (r has zero gradient; the simplex projection
-        // absorbs mass into r when the s-coordinates shrink)
-        for i in 0..n {
-            if !p.active[i] || p.d[i] == 0.0 {
-                continue;
-            }
-            for j in 0..n {
-                if j == i || p.graph.has_edge(i, j) {
-                    ws.plan.s[i * n + j] -= step * ws.grad_s[i * n + j];
-                }
-            }
-        }
-        project_rows(p, ws);
-        let obj = ws.plan.objective(p);
+        step_pass(
+            p,
+            &mut ws.plan,
+            &mut ws.grad_s,
+            &mut ws.proj,
+            &mut ws.partials,
+            &ws.g_tilde,
+            step,
+            threads,
+            chunk_rows,
+        );
+        let obj = gather_pass(
+            p,
+            &ws.plan,
+            &mut ws.g_tilde,
+            &mut ws.inbound_now,
+            &mut ws.partials,
+            threads,
+            chunk_rows,
+        );
         if obj < best_obj {
             if opts.tol > 0.0 && best_obj - obj > opts.tol {
                 stall = 0;
@@ -124,85 +175,263 @@ pub fn solve_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspac
     ws.plan.clone_from(&ws.best);
 }
 
-/// ∂F/∂s_ij for the smoothed objective (see module docs).
-/// ∂F/∂s_ii = d_i (c_i(t) + f_i(t) φ'(G̃_i))
-/// ∂F/∂s_ij = d_i (c_ij(t) + c_j(t+1) + f_j(t) φ'(G̃_j)), j ≠ i
-fn gradient(
+/// Linear objective terms of `plan` (processing + offloading), one partial
+/// per chunk, rows ascending within each chunk. Read-only: evaluates the
+/// start plan before any gradient step exists.
+fn linear_pass(
     p: &MovementProblem,
     plan: &MovementPlan,
-    grad_s: &mut [f64],
-    g_tilde: &mut Vec<f64>,
+    partials: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
 ) {
     let n = p.n();
-    // G̃_i = s_ii d_i + inbound_prev_i + Σ_{j≠i} s_ji d_j
-    g_tilde.clear();
-    g_tilde.resize(n, 0.0);
-    for i in 0..n {
-        g_tilde[i] = plan.s(i, i) * p.d[i] + p.inbound_prev[i];
-    }
-    for i in 0..n {
-        if p.d[i] == 0.0 {
-            continue;
-        }
-        for j in 0..n {
-            if j != i {
-                g_tilde[j] += plan.s(i, j) * p.d[i];
+    par::run_chunks(threads, partials, |c, out| {
+        let mut acc = 0.0;
+        for i in par::chunk_range(c, n, chunk_rows) {
+            let g_local = plan.s(i, i) * p.d[i] + p.inbound_prev[i];
+            acc += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for j in 0..n {
+                    if j != i && plan.s(i, j) > 0.0 {
+                        let amount = p.d[i] * plan.s(i, j);
+                        acc += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
             }
         }
-    }
-    let phi_prime = |g: f64| -0.5 * (g + SQRT_EPS).powf(-1.5);
+        *out = acc;
+    });
+}
 
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
-        }
-        grad_s[i * n + i] =
-            p.d[i] * (p.costs.c_node(p.t, i) + p.costs.f(p.t, i) * phi_prime(g_tilde[i]));
-        for j in 0..n {
-            if j == i || !p.graph.has_edge(i, j) || !p.active[j] {
+/// One dense PGD iteration's row-parallel half: per active row, the
+/// gradient from `g_tilde` (∂F/∂s_ii = d_i (c_i + f_i φ'(G̃_i));
+/// ∂F/∂s_ij = d_i (c_ij + c_j(t+1) + f_j φ'(G̃_j))), the step (r has zero
+/// gradient — the projection absorbs mass into it), the per-row simplex
+/// projection, and finally the chunk's linear objective terms.
+#[allow(clippy::too_many_arguments)]
+fn step_pass(
+    p: &MovementProblem,
+    plan: &mut MovementPlan,
+    grad_s: &mut [f64],
+    proj: &mut [ProjBuffers],
+    partials: &mut [f64],
+    g_tilde: &[f64],
+    step: f64,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct RowChunk<'a> {
+        rows: Range<usize>,
+        s: &'a mut [f64],
+        r: &'a mut [f64],
+        grad: &'a mut [f64],
+        proj: &'a mut ProjBuffers,
+        linear: f64,
+    }
+    let n = p.n();
+    let nc = partials.len();
+    let mut items: Vec<RowChunk> = Vec::with_capacity(nc);
+    for ((((c, s), r), grad), proj) in par::split_rows(&mut plan.s, n, chunk_rows)
+        .enumerate()
+        .zip(par::split_rows(&mut plan.r, 1, chunk_rows))
+        .zip(par::split_rows(grad_s, n, chunk_rows))
+        .zip(proj.iter_mut())
+    {
+        items.push(RowChunk {
+            rows: par::chunk_range(c, n, chunk_rows),
+            s,
+            r,
+            grad,
+            proj,
+            linear: 0.0,
+        });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
                 continue;
             }
-            grad_s[i * n + j] = p.d[i]
-                * (p.costs.c_link(p.t, i, j)
-                    + p.costs.c_node(p.t + 1, j)
-                    + p.costs.f(p.t, j) * phi_prime(g_tilde[j]));
+            let li = i - base;
+            it.grad[li * n + i] = p.d[i]
+                * (p.costs.c_node(p.t, i) + p.costs.f(p.t, i) * phi_prime(g_tilde[i]));
+            for j in 0..n {
+                if j == i || !p.graph.has_edge(i, j) || !p.active[j] {
+                    continue;
+                }
+                it.grad[li * n + j] = p.d[i]
+                    * (p.costs.c_link(p.t, i, j)
+                        + p.costs.c_node(p.t + 1, j)
+                        + p.costs.f(p.t, j) * phi_prime(g_tilde[j]));
+            }
+            for j in 0..n {
+                if j == i || p.graph.has_edge(i, j) {
+                    it.s[li * n + j] -= step * it.grad[li * n + j];
+                }
+            }
+            project_row(p, i, &mut it.s[li * n..(li + 1) * n], &mut it.r[li], it.proj);
+        }
+        // linear objective terms, rows ascending (the same sweep the
+        // standalone objective() runs over this chunk)
+        let mut acc = 0.0;
+        for i in it.rows.clone() {
+            let li = i - base;
+            let g_local = it.s[li * n + i] * p.d[i] + p.inbound_prev[i];
+            acc += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for j in 0..n {
+                    if j != i && it.s[li * n + j] > 0.0 {
+                        let amount = p.d[i] * it.s[li * n + j];
+                        acc += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
+            }
+        }
+        it.linear = acc;
+    });
+    for (partial, it) in partials.iter_mut().zip(items.iter()) {
+        *partial = it.linear;
+    }
+}
+
+/// The target-parallel half: per target `j`, accumulate G̃_j (seeded with
+/// `s_jj d_j + inbound_prev_j`) and this-interval inbound (seeded 0.0)
+/// source-ascending in one column scan, then append the chunk's `f/√G`
+/// objective terms to its partial (already holding the linear terms) and
+/// combine partials ascending. Returns the objective of `plan`; leaves
+/// `g_tilde` ready for the next gradient row pass.
+fn gather_pass(
+    p: &MovementProblem,
+    plan: &MovementPlan,
+    g_tilde: &mut [f64],
+    inbound_now: &mut [f64],
+    partials: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
+) -> f64 {
+    struct GatherChunk<'a> {
+        targets: Range<usize>,
+        g: &'a mut [f64],
+        inb: &'a mut [f64],
+        partial: f64,
+    }
+    let n = p.n();
+    let mut items: Vec<GatherChunk> = Vec::with_capacity(partials.len());
+    for (((c, g), inb), &partial) in par::split_rows(g_tilde, 1, chunk_rows)
+        .enumerate()
+        .zip(par::split_rows(inbound_now, 1, chunk_rows))
+        .zip(partials.iter())
+    {
+        items.push(GatherChunk {
+            targets: par::chunk_range(c, n, chunk_rows),
+            g,
+            inb,
+            partial,
+        });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.targets.start;
+        for j in it.targets.clone() {
+            let mut g = plan.s(j, j) * p.d[j] + p.inbound_prev[j];
+            let mut inb = 0.0;
+            for i in 0..n {
+                if i == j || p.d[i] == 0.0 {
+                    continue;
+                }
+                let c = plan.s(i, j) * p.d[i];
+                g += c;
+                inb += c;
+            }
+            it.g[j - base] = g;
+            it.inb[j - base] = inb;
+        }
+        let mut acc = it.partial;
+        for j in it.targets.clone() {
+            if !p.active[j] {
+                continue;
+            }
+            let g = plan.s(j, j) * p.d[j] + p.inbound_prev[j] + it.inb[j - base];
+            acc += p.costs.f(p.t, j) / (g + SQRT_EPS).sqrt();
+        }
+        it.partial = acc;
+    });
+    for (partial, it) in partials.iter_mut().zip(items.iter()) {
+        *partial = it.partial;
+    }
+    par::combine(partials)
+}
+
+/// Project one device row onto its simplex (r_i, s_ii, s_ij for active
+/// out-neighbors; every other coordinate forced to 0). `s_row` is row i of
+/// the dense plan.
+fn project_row(
+    p: &MovementProblem,
+    i: usize,
+    s_row: &mut [f64],
+    r: &mut f64,
+    buf: &mut ProjBuffers,
+) {
+    buf.coords.clear();
+    buf.coords.push((None, *r)); // r_i
+    buf.coords.push((Some(i), s_row[i]));
+    for j in p.graph.out_neighbors(i) {
+        if p.active[*j] {
+            buf.coords.push((Some(*j), s_row[*j]));
+        }
+    }
+    buf.values.clear();
+    buf.values.extend(buf.coords.iter().map(|&(_, v)| v));
+    project_simplex_into(&buf.values, &mut buf.scratch, &mut buf.projected);
+    // zero the whole row, then write back the projected coordinates
+    *r = 0.0;
+    for v in s_row.iter_mut() {
+        *v = 0.0;
+    }
+    for (&(target, _), &v) in buf.coords.iter().zip(buf.projected.iter()) {
+        match target {
+            None => *r = v,
+            Some(j) => s_row[j] = v,
         }
     }
 }
 
-/// Project every device row onto its simplex (r_i, s_ii, s_ij for active
-/// out-neighbors; other coordinates forced to 0). Uses the workspace's
-/// gather/projection buffers (`ws.plan` is the row source and target).
-fn project_rows(p: &MovementProblem, ws: &mut SolverWorkspace) {
-    let n = p.n();
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
-        }
-        // gather the free coordinates of row i
-        ws.coords.clear();
-        ws.coords.push((None, ws.plan.r[i])); // r_i
-        ws.coords.push((Some(i), ws.plan.s(i, i)));
-        for j in p.graph.out_neighbors(i) {
-            if p.active[*j] {
-                ws.coords.push((Some(*j), ws.plan.s(i, *j)));
-            }
-        }
-        ws.values.clear();
-        ws.values.extend(ws.coords.iter().map(|&(_, v)| v));
-        project_simplex_into(&ws.values, &mut ws.scratch, &mut ws.projected);
-        // zero the whole row, then write back the projected coordinates
-        ws.plan.r[i] = 0.0;
-        for j in 0..n {
-            ws.plan.s[i * n + j] = 0.0;
-        }
-        for (&(target, _), &v) in ws.coords.iter().zip(ws.projected.iter()) {
-            match target {
-                None => ws.plan.r[i] = v,
-                Some(j) => ws.plan.s[i * n + j] = v,
-            }
-        }
+/// Project every active device row onto its simplex — the warm-start
+/// reprojection. Purely row-local, so chunks fan out without reductions.
+fn project_rows(
+    p: &MovementProblem,
+    plan: &mut MovementPlan,
+    proj: &mut [ProjBuffers],
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct ProjChunk<'a> {
+        rows: Range<usize>,
+        s: &'a mut [f64],
+        r: &'a mut [f64],
+        proj: &'a mut ProjBuffers,
     }
+    let n = p.n();
+    let mut items: Vec<ProjChunk> = Vec::new();
+    for (((c, s), r), proj) in par::split_rows(&mut plan.s, n, chunk_rows)
+        .enumerate()
+        .zip(par::split_rows(&mut plan.r, 1, chunk_rows))
+        .zip(proj.iter_mut())
+    {
+        items.push(ProjChunk { rows: par::chunk_range(c, n, chunk_rows), s, r, proj });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            let li = i - base;
+            project_row(p, i, &mut it.s[li * n..(li + 1) * n], &mut it.r[li], it.proj);
+        }
+    });
 }
 
 /// Sparse mirror of [`solve_with`]: PGD over the edge-indexed plan in
@@ -213,9 +442,14 @@ fn project_rows(p: &MovementProblem, ws: &mut SolverWorkspace) {
 /// because every float op the dense path performs on *off-edge* or
 /// inactive coordinates is an exact no-op: their gradient entries are
 /// never written (zeroed once), so the update subtracts `step·0.0`, and
-/// the G̃ accumulation adds `0.0·d_i` to nonnegative partial sums.
+/// the G̃/inbound gathers add `0.0·d_i` to nonnegative partial sums. The
+/// chunk geometry and partial-combine order are identical to the dense
+/// passes, so dense ≡ sparse holds at every thread count.
 pub fn solve_sparse_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverWorkspace) {
     let n = p.n();
+    let threads = ws.solver_threads.max(1);
+    let chunk_rows = ws.chunk_rows.max(1);
+    ws.ensure_chunks(n);
     ws.sparse.rebuild(p.graph);
     let warm = ws.warm_start
         && ws.prev_sparse_valid
@@ -235,37 +469,60 @@ pub fn solve_sparse_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverW
                 ws.sparse.discard[i] = 0.0;
             }
         }
-        project_rows_sparse(p, ws);
+        project_rows_sparse(p, &mut ws.sparse, &mut ws.proj, threads, chunk_rows);
     } else {
-        crate::movement::greedy::solve_sparse_into(p, &mut ws.sparse);
+        crate::movement::greedy::solve_sparse_into_chunked(p, &mut ws.sparse, threads, chunk_rows);
     }
 
     let max_d = p.d.iter().cloned().fold(1.0, f64::max);
     let step0 = if opts.step0 > 0.0 { opts.step0 } else { 0.5 / max_d };
 
     ws.sparse_best.clone_from(&ws.sparse);
-    let mut best_obj = ws.sparse.objective(p);
-    let mut stall = 0usize;
-
     let m = ws.sparse.num_edges();
     ws.grad_edge.clear();
     ws.grad_edge.resize(m, 0.0);
     ws.grad_local.clear();
     ws.grad_local.resize(n, 0.0);
+    ws.g_tilde.clear();
+    ws.g_tilde.resize(n, 0.0);
+    ws.inbound_now.clear();
+    ws.inbound_now.resize(n, 0.0);
+
+    linear_pass_sparse(p, &ws.sparse, &mut ws.partials, threads, chunk_rows);
+    let mut best_obj = gather_pass_sparse(
+        p,
+        &ws.sparse,
+        &mut ws.g_tilde,
+        &mut ws.inbound_now,
+        &mut ws.partials,
+        threads,
+        chunk_rows,
+    );
+    let mut stall = 0usize;
+
     for it in 0..opts.iterations {
-        gradient_sparse(p, &ws.sparse, &mut ws.grad_edge, &mut ws.grad_local, &mut ws.g_tilde);
         let step = step0 / (1.0 + (it as f64 / 40.0)).sqrt();
-        for i in 0..n {
-            if !p.active[i] || p.d[i] == 0.0 {
-                continue;
-            }
-            ws.sparse.local[i] -= step * ws.grad_local[i];
-            for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
-                ws.sparse.s_edge[e] -= step * ws.grad_edge[e];
-            }
-        }
-        project_rows_sparse(p, ws);
-        let obj = ws.sparse.objective(p);
+        step_pass_sparse(
+            p,
+            &mut ws.sparse,
+            &mut ws.grad_edge,
+            &mut ws.grad_local,
+            &mut ws.proj,
+            &mut ws.partials,
+            &ws.g_tilde,
+            step,
+            threads,
+            chunk_rows,
+        );
+        let obj = gather_pass_sparse(
+            p,
+            &ws.sparse,
+            &mut ws.g_tilde,
+            &mut ws.inbound_now,
+            &mut ws.partials,
+            threads,
+            chunk_rows,
+        );
         if obj < best_obj {
             if opts.tol > 0.0 && best_obj - obj > opts.tol {
                 stall = 0;
@@ -283,88 +540,316 @@ pub fn solve_sparse_with(p: &MovementProblem, opts: PgdOptions, ws: &mut SolverW
     ws.sparse.clone_from(&ws.sparse_best);
 }
 
-/// Sparse mirror of [`gradient`]: per-edge-slot gradients. Entries whose
-/// target is inactive are never written (they stay at the initial 0.0),
-/// matching the dense solver's untouched coordinates.
-fn gradient_sparse(
+/// Sparse mirror of [`linear_pass`]: off-edge dense terms fail the
+/// `s > 0` guard, so skipping them preserves bits.
+fn linear_pass_sparse(
     p: &MovementProblem,
-    sp: &crate::movement::sparse::SparsePlan,
-    grad_edge: &mut [f64],
-    grad_local: &mut [f64],
-    g_tilde: &mut Vec<f64>,
+    sp: &SparsePlan,
+    partials: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
 ) {
     let n = p.n();
-    g_tilde.clear();
-    g_tilde.resize(n, 0.0);
-    for i in 0..n {
-        g_tilde[i] = sp.local[i] * p.d[i] + p.inbound_prev[i];
-    }
-    for i in 0..n {
-        if p.d[i] == 0.0 {
-            continue;
+    par::run_chunks(threads, partials, |c, out| {
+        let mut acc = 0.0;
+        for i in par::chunk_range(c, n, chunk_rows) {
+            let g_local = sp.local[i] * p.d[i] + p.inbound_prev[i];
+            acc += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for e in sp.offsets[i]..sp.offsets[i + 1] {
+                    if sp.s_edge[e] > 0.0 {
+                        let j = sp.targets[e];
+                        let amount = p.d[i] * sp.s_edge[e];
+                        acc += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
+            }
         }
-        for e in sp.offsets[i]..sp.offsets[i + 1] {
-            g_tilde[sp.targets[e]] += sp.s_edge[e] * p.d[i];
-        }
-    }
-    let phi_prime = |g: f64| -0.5 * (g + SQRT_EPS).powf(-1.5);
+        *out = acc;
+    });
+}
 
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
+/// Sparse mirror of [`step_pass`] over CSR row slices. Gradient entries
+/// whose target is inactive are never written (they stay at the initial
+/// 0.0), matching the dense solver's untouched coordinates.
+#[allow(clippy::too_many_arguments)]
+fn step_pass_sparse(
+    p: &MovementProblem,
+    sp: &mut SparsePlan,
+    grad_edge: &mut [f64],
+    grad_local: &mut [f64],
+    proj: &mut [ProjBuffers],
+    partials: &mut [f64],
+    g_tilde: &[f64],
+    step: f64,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct SparseRowChunk<'a> {
+        rows: Range<usize>,
+        s_edge: &'a mut [f64],
+        local: &'a mut [f64],
+        discard: &'a mut [f64],
+        grad_edge: &'a mut [f64],
+        grad_local: &'a mut [f64],
+        proj: &'a mut ProjBuffers,
+        linear: f64,
+    }
+    let n = sp.n;
+    let offsets = &sp.offsets;
+    let targets = &sp.targets;
+    let mut items: Vec<SparseRowChunk> = Vec::with_capacity(partials.len());
+    let edge_chunks = par::split_csr(&mut sp.s_edge, offsets, n, chunk_rows);
+    let grad_edge_chunks = par::split_csr(grad_edge, offsets, n, chunk_rows);
+    for (((((c, s_edge), local), discard), (ge, gl)), proj) in edge_chunks
+        .into_iter()
+        .enumerate()
+        .zip(par::split_rows(&mut sp.local, 1, chunk_rows))
+        .zip(par::split_rows(&mut sp.discard, 1, chunk_rows))
+        .zip(grad_edge_chunks.into_iter().zip(par::split_rows(grad_local, 1, chunk_rows)))
+        .zip(proj.iter_mut())
+    {
+        items.push(SparseRowChunk {
+            rows: par::chunk_range(c, n, chunk_rows),
+            s_edge,
+            local,
+            discard,
+            grad_edge: ge,
+            grad_local: gl,
+            proj,
+            linear: 0.0,
+        });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        let ebase = offsets[base];
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            let li = i - base;
+            it.grad_local[li] = p.d[i]
+                * (p.costs.c_node(p.t, i) + p.costs.f(p.t, i) * phi_prime(g_tilde[i]));
+            for e in offsets[i]..offsets[i + 1] {
+                let j = targets[e];
+                if !p.active[j] {
+                    continue;
+                }
+                it.grad_edge[e - ebase] = p.d[i]
+                    * (p.costs.c_link(p.t, i, j)
+                        + p.costs.c_node(p.t + 1, j)
+                        + p.costs.f(p.t, j) * phi_prime(g_tilde[j]));
+            }
+            it.local[li] -= step * it.grad_local[li];
+            for e in offsets[i]..offsets[i + 1] {
+                it.s_edge[e - ebase] -= step * it.grad_edge[e - ebase];
+            }
+            project_row_sparse(
+                p,
+                i,
+                offsets,
+                targets,
+                ebase,
+                it.s_edge,
+                &mut it.local[li],
+                &mut it.discard[li],
+                it.proj,
+            );
         }
-        grad_local[i] =
-            p.d[i] * (p.costs.c_node(p.t, i) + p.costs.f(p.t, i) * phi_prime(g_tilde[i]));
-        for e in sp.offsets[i]..sp.offsets[i + 1] {
-            let j = sp.targets[e];
+        let mut acc = 0.0;
+        for i in it.rows.clone() {
+            let li = i - base;
+            let g_local = it.local[li] * p.d[i] + p.inbound_prev[i];
+            acc += g_local * p.costs.c_node(p.t, i);
+            if p.d[i] > 0.0 {
+                for e in offsets[i]..offsets[i + 1] {
+                    if it.s_edge[e - ebase] > 0.0 {
+                        let j = targets[e];
+                        let amount = p.d[i] * it.s_edge[e - ebase];
+                        acc += amount
+                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
+                    }
+                }
+            }
+        }
+        it.linear = acc;
+    });
+    for (partial, it) in partials.iter_mut().zip(items.iter()) {
+        *partial = it.linear;
+    }
+}
+
+/// Sparse mirror of [`gather_pass`]: per target, the CSR transpose row
+/// supplies in-edges source-ascending — the same per-target accumulation
+/// chain as the dense column scan (off-edge dense contributions are
+/// `+0.0` exact no-ops).
+fn gather_pass_sparse(
+    p: &MovementProblem,
+    sp: &SparsePlan,
+    g_tilde: &mut [f64],
+    inbound_now: &mut [f64],
+    partials: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
+) -> f64 {
+    struct GatherChunk<'a> {
+        targets: Range<usize>,
+        g: &'a mut [f64],
+        inb: &'a mut [f64],
+        partial: f64,
+    }
+    let n = sp.n;
+    let mut items: Vec<GatherChunk> = Vec::with_capacity(partials.len());
+    for (((c, g), inb), &partial) in par::split_rows(g_tilde, 1, chunk_rows)
+        .enumerate()
+        .zip(par::split_rows(inbound_now, 1, chunk_rows))
+        .zip(partials.iter())
+    {
+        items.push(GatherChunk {
+            targets: par::chunk_range(c, n, chunk_rows),
+            g,
+            inb,
+            partial,
+        });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.targets.start;
+        for j in it.targets.clone() {
+            let mut g = sp.local[j] * p.d[j] + p.inbound_prev[j];
+            let mut inb = 0.0;
+            for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+                let i = sp.t_sources[te];
+                if p.d[i] == 0.0 {
+                    continue;
+                }
+                let c = sp.s_edge[sp.t_slot[te]] * p.d[i];
+                g += c;
+                inb += c;
+            }
+            it.g[j - base] = g;
+            it.inb[j - base] = inb;
+        }
+        let mut acc = it.partial;
+        for j in it.targets.clone() {
             if !p.active[j] {
                 continue;
             }
-            grad_edge[e] = p.d[i]
-                * (p.costs.c_link(p.t, i, j)
-                    + p.costs.c_node(p.t + 1, j)
-                    + p.costs.f(p.t, j) * phi_prime(g_tilde[j]));
+            let g = sp.local[j] * p.d[j] + p.inbound_prev[j] + it.inb[j - base];
+            acc += p.costs.f(p.t, j) / (g + SQRT_EPS).sqrt();
+        }
+        it.partial = acc;
+    });
+    for (partial, it) in partials.iter_mut().zip(items.iter()) {
+        *partial = it.partial;
+    }
+    par::combine(partials)
+}
+
+/// Project one sparse device row in the same gather order the dense path
+/// uses — `r_i`, `s_ii`, then active out-neighbors ascending — so the
+/// Duchi projection sees an identical value sequence. `s_edge` is the
+/// chunk's CSR value slice, offset by `ebase`.
+#[allow(clippy::too_many_arguments)]
+fn project_row_sparse(
+    p: &MovementProblem,
+    i: usize,
+    offsets: &[usize],
+    targets: &[usize],
+    ebase: usize,
+    s_edge: &mut [f64],
+    local: &mut f64,
+    discard: &mut f64,
+    buf: &mut ProjBuffers,
+) {
+    buf.values.clear();
+    buf.values.push(*discard); // r_i
+    buf.values.push(*local); // s_ii
+    for e in offsets[i]..offsets[i + 1] {
+        if p.active[targets[e]] {
+            buf.values.push(s_edge[e - ebase]);
+        }
+    }
+    project_simplex_into(&buf.values, &mut buf.scratch, &mut buf.projected);
+    // zero the whole row, then scatter back in gather order
+    *discard = 0.0;
+    *local = 0.0;
+    for e in offsets[i]..offsets[i + 1] {
+        s_edge[e - ebase] = 0.0;
+    }
+    let mut cursor = buf.projected.iter();
+    *discard = *cursor.next().expect("r coordinate");
+    *local = *cursor.next().expect("s_ii coordinate");
+    for e in offsets[i]..offsets[i + 1] {
+        if p.active[targets[e]] {
+            s_edge[e - ebase] = *cursor.next().expect("edge coordinate");
         }
     }
 }
 
-/// Sparse mirror of [`project_rows`]: gathers each device row in the same
-/// order the dense path does — `r_i`, `s_ii`, then active out-neighbors
-/// ascending — so the Duchi projection sees an identical value sequence.
-fn project_rows_sparse(p: &MovementProblem, ws: &mut SolverWorkspace) {
-    let n = p.n();
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
-        }
-        ws.values.clear();
-        ws.values.push(ws.sparse.discard[i]); // r_i
-        ws.values.push(ws.sparse.local[i]); // s_ii
-        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
-            if p.active[ws.sparse.targets[e]] {
-                ws.values.push(ws.sparse.s_edge[e]);
-            }
-        }
-        project_simplex_into(&ws.values, &mut ws.scratch, &mut ws.projected);
-        // zero the whole row, then scatter back in gather order
-        ws.sparse.discard[i] = 0.0;
-        ws.sparse.local[i] = 0.0;
-        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
-            ws.sparse.s_edge[e] = 0.0;
-        }
-        let mut cursor = ws.projected.iter();
-        ws.sparse.discard[i] = *cursor.next().expect("r coordinate");
-        ws.sparse.local[i] = *cursor.next().expect("s_ii coordinate");
-        for e in ws.sparse.offsets[i]..ws.sparse.offsets[i + 1] {
-            if p.active[ws.sparse.targets[e]] {
-                ws.sparse.s_edge[e] = *cursor.next().expect("edge coordinate");
-            }
-        }
+/// Sparse mirror of [`project_rows`] — the warm-start reprojection.
+fn project_rows_sparse(
+    p: &MovementProblem,
+    sp: &mut SparsePlan,
+    proj: &mut [ProjBuffers],
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct ProjChunk<'a> {
+        rows: Range<usize>,
+        s_edge: &'a mut [f64],
+        local: &'a mut [f64],
+        discard: &'a mut [f64],
+        proj: &'a mut ProjBuffers,
     }
+    let n = sp.n;
+    let offsets = &sp.offsets;
+    let targets = &sp.targets;
+    let mut items: Vec<ProjChunk> = Vec::new();
+    for ((((c, s_edge), local), discard), proj) in
+        par::split_csr(&mut sp.s_edge, offsets, n, chunk_rows)
+            .into_iter()
+            .enumerate()
+            .zip(par::split_rows(&mut sp.local, 1, chunk_rows))
+            .zip(par::split_rows(&mut sp.discard, 1, chunk_rows))
+            .zip(proj.iter_mut())
+    {
+        items.push(ProjChunk {
+            rows: par::chunk_range(c, n, chunk_rows),
+            s_edge,
+            local,
+            discard,
+            proj,
+        });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        let ebase = offsets[base];
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            let li = i - base;
+            project_row_sparse(
+                p,
+                i,
+                offsets,
+                targets,
+                ebase,
+                it.s_edge,
+                &mut it.local[li],
+                &mut it.discard[li],
+                it.proj,
+            );
+        }
+    });
 }
 
 /// Euclidean projection of `v` onto the probability simplex
 /// (Held–Wolfe–Crowder / Duchi et al. algorithm).
+///
+/// Thin allocating wrapper for tests and docs — every hot path routes
+/// through [`project_simplex_into`] with workspace buffers instead.
 pub fn project_simplex(v: &[f64]) -> Vec<f64> {
     let mut scratch = Vec::new();
     let mut out = Vec::new();
@@ -436,6 +921,77 @@ mod tests {
                     assert!(d_proj <= d_q + 1e-9);
                 }
             }
+        });
+    }
+
+    /// The fused linear+gather evaluation must agree **bitwise** with the
+    /// standalone `objective()` — at the default single-chunk geometry and
+    /// under forced multi-chunk reductions, dense and sparse alike.
+    #[test]
+    fn prop_fused_objective_matches_standalone_bitwise() {
+        for_all("fused_objective", 40, |g| {
+            let n = g.usize_in(2, 7);
+            let graph = erdos_renyi(n, g.f64_in(0.2, 1.0), g.rng());
+            let mut costs = CostSchedule::zeros(n, 2);
+            for t in 0..2 {
+                for i in 0..n {
+                    costs.compute[t][i] = g.f64_in(0.0, 1.0);
+                    costs.error_weight[t][i] = g.f64_in(0.1, 2.0);
+                    for j in 0..n {
+                        if i != j {
+                            costs.link[t][i * n + j] = g.f64_in(0.0, 0.5);
+                        }
+                    }
+                }
+            }
+            let d: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 15.0)).collect();
+            let inbound: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 4.0)).collect();
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.85)).collect();
+            let p = MovementProblem {
+                t: 0,
+                graph: &graph,
+                active: &active,
+                d: &d,
+                inbound_prev: &inbound,
+                costs: &costs,
+                discard_model: DiscardModel::Sqrt,
+            };
+            let plan = crate::movement::greedy::solve(&p);
+            let mut sp = SparsePlan::keep_all(&graph);
+            sp.from_dense(&plan);
+            for chunk_rows in [par::CHUNK_ROWS, 2] {
+                let nc = par::num_chunks(n, chunk_rows);
+                let mut g_tilde = vec![0.0; n];
+                let mut inb = vec![0.0; n];
+                let mut partials = vec![0.0; nc];
+                linear_pass(&p, &plan, &mut partials, 1, chunk_rows);
+                let fused =
+                    gather_pass(&p, &plan, &mut g_tilde, &mut inb, &mut partials, 1, chunk_rows);
+                assert_eq!(
+                    fused.to_bits(),
+                    plan.objective_chunked(&p, chunk_rows).to_bits(),
+                    "dense fused vs standalone, chunk_rows={chunk_rows}"
+                );
+                let mut partials_sp = vec![0.0; nc];
+                linear_pass_sparse(&p, &sp, &mut partials_sp, 1, chunk_rows);
+                let fused_sp = gather_pass_sparse(
+                    &p,
+                    &sp,
+                    &mut g_tilde,
+                    &mut inb,
+                    &mut partials_sp,
+                    1,
+                    chunk_rows,
+                );
+                assert_eq!(
+                    fused_sp.to_bits(),
+                    sp.objective_chunked(&p, chunk_rows).to_bits(),
+                    "sparse fused vs standalone, chunk_rows={chunk_rows}"
+                );
+                assert_eq!(fused.to_bits(), fused_sp.to_bits(), "dense vs sparse fused");
+            }
+            // the default geometry reproduces the historical objective()
+            assert_eq!(plan.objective(&p), plan.objective_chunked(&p, par::CHUNK_ROWS));
         });
     }
 

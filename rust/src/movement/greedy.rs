@@ -16,9 +16,11 @@
 //! Ties break process > offload > discard, matching the paper's preference
 //! for keeping data when indifferent.
 
+use crate::movement::par;
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
 use crate::movement::sparse::SparsePlan;
+use std::ops::Range;
 
 /// Solve by the Theorem-3 rule. Inactive devices (or devices with no data)
 /// get `s_ii = 1` rows, which is vacuous since `D_i(t) = 0`.
@@ -31,29 +33,58 @@ pub fn solve(p: &MovementProblem) -> MovementPlan {
 /// In-place variant for workspace reuse: `plan` is reset to keep-all and
 /// then filled exactly as [`solve`] would.
 pub fn solve_into(p: &MovementProblem, plan: &mut MovementPlan) {
+    solve_into_chunked(p, plan, 1, par::CHUNK_ROWS);
+}
+
+/// Row-parallel variant of [`solve_into`]. Each device's decision is a
+/// closed form of its own costs — rows never interact — so fanning chunks
+/// across workers is trivially bit-invariant to `threads` (DESIGN.md
+/// §Perf rule 12).
+pub fn solve_into_chunked(
+    p: &MovementProblem,
+    plan: &mut MovementPlan,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct RowChunk<'a> {
+        rows: Range<usize>,
+        s: &'a mut [f64],
+        r: &'a mut [f64],
+    }
     let n = p.n();
     plan.reset_keep_all(n);
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
-        }
-        let process = p.process_cost(i);
-        let discard = p.discard_cost(i);
-        let best = p.best_neighbor(i);
-
-        plan.set_s(i, i, 0.0);
-        match best {
-            Some((k, offload)) if offload < process && offload < discard => {
-                plan.set_s(i, k, 1.0);
-            }
-            _ if process <= discard => {
-                plan.set_s(i, i, 1.0);
-            }
-            _ => {
-                plan.r[i] = 1.0;
-            }
-        }
+    let mut items: Vec<RowChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+    for ((c, s), r) in par::split_rows(&mut plan.s, n, chunk_rows)
+        .enumerate()
+        .zip(par::split_rows(&mut plan.r, 1, chunk_rows))
+    {
+        items.push(RowChunk { rows: par::chunk_range(c, n, chunk_rows), s, r });
     }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            let li = i - base;
+            let process = p.process_cost(i);
+            let discard = p.discard_cost(i);
+            let best = p.best_neighbor(i);
+
+            it.s[li * n + i] = 0.0;
+            match best {
+                Some((k, offload)) if offload < process && offload < discard => {
+                    it.s[li * n + k] = 1.0;
+                }
+                _ if process <= discard => {
+                    it.s[li * n + i] = 1.0;
+                }
+                _ => {
+                    it.r[li] = 1.0;
+                }
+            }
+        }
+    });
 }
 
 /// Sparse mirror of [`solve_into`]: rebuilds `sp`'s structure from
@@ -64,30 +95,70 @@ pub fn solve_into(p: &MovementProblem, plan: &mut MovementPlan) {
 /// is exactly the sparse row order, so tie-breaks are identical and
 /// `sp.to_dense()` equals [`solve`]'s plan bitwise.
 pub fn solve_sparse_into(p: &MovementProblem, sp: &mut SparsePlan) {
+    solve_sparse_into_chunked(p, sp, 1, par::CHUNK_ROWS);
+}
+
+/// Row-parallel variant of [`solve_sparse_into`] over CSR row chunks.
+pub fn solve_sparse_into_chunked(
+    p: &MovementProblem,
+    sp: &mut SparsePlan,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct SparseRowChunk<'a> {
+        rows: Range<usize>,
+        s_edge: &'a mut [f64],
+        local: &'a mut [f64],
+        discard: &'a mut [f64],
+    }
     sp.rebuild(p.graph);
     let n = p.n();
-    for i in 0..n {
-        if !p.active[i] || p.d[i] == 0.0 {
-            continue;
-        }
-        let process = p.process_cost(i);
-        let discard = p.discard_cost(i);
-        let best = p.best_neighbor(i);
-
-        sp.local[i] = 0.0;
-        match best {
-            Some((k, offload)) if offload < process && offload < discard => {
-                let slot = sp.slot(i, k).expect("best neighbor must be an edge");
-                sp.s_edge[slot] = 1.0;
-            }
-            _ if process <= discard => {
-                sp.local[i] = 1.0;
-            }
-            _ => {
-                sp.discard[i] = 1.0;
-            }
-        }
+    let offsets = &sp.offsets;
+    let targets = &sp.targets;
+    let mut items: Vec<SparseRowChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+    for (((c, s_edge), local), discard) in par::split_csr(&mut sp.s_edge, offsets, n, chunk_rows)
+        .into_iter()
+        .enumerate()
+        .zip(par::split_rows(&mut sp.local, 1, chunk_rows))
+        .zip(par::split_rows(&mut sp.discard, 1, chunk_rows))
+    {
+        items.push(SparseRowChunk {
+            rows: par::chunk_range(c, n, chunk_rows),
+            s_edge,
+            local,
+            discard,
+        });
     }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.rows.start;
+        let ebase = offsets[base];
+        for i in it.rows.clone() {
+            if !p.active[i] || p.d[i] == 0.0 {
+                continue;
+            }
+            let li = i - base;
+            let process = p.process_cost(i);
+            let discard = p.discard_cost(i);
+            let best = p.best_neighbor(i);
+
+            it.local[li] = 0.0;
+            match best {
+                Some((k, offload)) if offload < process && offload < discard => {
+                    let slot = offsets[i]
+                        + targets[offsets[i]..offsets[i + 1]]
+                            .binary_search(&k)
+                            .expect("best neighbor must be an edge");
+                    it.s_edge[slot - ebase] = 1.0;
+                }
+                _ if process <= discard => {
+                    it.local[li] = 1.0;
+                }
+                _ => {
+                    it.discard[li] = 1.0;
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]

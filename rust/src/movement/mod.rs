@@ -16,15 +16,20 @@
 //! * [`convex`] — projected-gradient solver for the convex `f/√G` model.
 //! * [`repair`] — capacity-constraint repair pass (§IV-B's "minimal
 //!   adjustment" procedure justified by Theorem 6).
+//! * [`par`] — the fixed-chunk row-parallel execution layer every solver
+//!   pass runs on (DESIGN.md §Perf rule 12).
 //! * [`theory`] — closed forms of Theorems 4, 5, 6 + their validators.
 //!
 //! Both [`solve_with`] (dense) and [`solve_sparse_with`] (edge-indexed)
 //! produce the same plan bitwise for the same instance; the engine picks
-//! per [`crate::config::MovementBackend`].
+//! per [`crate::config::MovementBackend`]. Plans are also bit-invariant
+//! to [`SolverWorkspace::solver_threads`]: chunk geometry depends on n
+//! only and reductions combine per-chunk partials in ascending order.
 
 pub mod convex;
 pub mod distributed;
 pub mod greedy;
+pub mod par;
 pub mod plan;
 pub mod problem;
 pub mod repair;
@@ -58,6 +63,17 @@ pub struct SolverWorkspace {
     pub sparse: SparsePlan,
     /// Opt-in warm starting (set from `EngineConfig::warm_start`).
     pub warm_start: bool,
+    /// Resolved worker count for the row-parallel solver passes (set from
+    /// `EngineConfig::solver_threads` via `SolverThreads::resolve`;
+    /// 1 = serial). Plans are **bit-invariant** to this knob — DESIGN.md
+    /// §Perf rule 12.
+    pub solver_threads: usize,
+    /// Rows per reduction chunk. Defaults to [`par::CHUNK_ROWS`] and must
+    /// stay there in production (chunk geometry is a function of n only);
+    /// tests override it to force multi-chunk reductions at small n.
+    /// Changing it changes float-addition association — and therefore
+    /// bits — while `solver_threads` never does.
+    pub chunk_rows: usize,
     /// Best-iterate tracking buffer for the PGD solver.
     pub(crate) best: MovementPlan,
     pub(crate) sparse_best: SparsePlan,
@@ -67,11 +83,12 @@ pub struct SolverWorkspace {
     pub(crate) grad_local: Vec<f64>,
     /// G̃ accumulator for the convex objective gradient.
     pub(crate) g_tilde: Vec<f64>,
-    /// Free-coordinate gathering for per-row simplex projection.
-    pub(crate) coords: Vec<(Option<usize>, f64)>,
-    pub(crate) values: Vec<f64>,
-    pub(crate) projected: Vec<f64>,
-    pub(crate) scratch: Vec<f64>,
+    /// This-interval inbound accumulator for the fused objective pass.
+    pub(crate) inbound_now: Vec<f64>,
+    /// Per-chunk objective partial sums (combined ascending).
+    pub(crate) partials: Vec<f64>,
+    /// Per-chunk simplex-projection scratch.
+    pub(crate) proj: Vec<par::ProjBuffers>,
     /// Capacity-repair scratch (excess/slack/option buffers).
     pub(crate) repair: repair::RepairScratch,
     /// Previous interval's solutions for warm starts.
@@ -87,16 +104,17 @@ impl SolverWorkspace {
             plan: MovementPlan::keep_all(0),
             sparse: SparsePlan::empty(),
             warm_start: false,
+            solver_threads: 1,
+            chunk_rows: par::CHUNK_ROWS,
             best: MovementPlan::keep_all(0),
             sparse_best: SparsePlan::empty(),
             grad_s: Vec::new(),
             grad_edge: Vec::new(),
             grad_local: Vec::new(),
             g_tilde: Vec::new(),
-            coords: Vec::new(),
-            values: Vec::new(),
-            projected: Vec::new(),
-            scratch: Vec::new(),
+            inbound_now: Vec::new(),
+            partials: Vec::new(),
+            proj: Vec::new(),
             repair: repair::RepairScratch::default(),
             prev: MovementPlan::keep_all(0),
             prev_valid: false,
@@ -110,6 +128,17 @@ impl SolverWorkspace {
     pub fn reset_warm_state(&mut self) {
         self.prev_valid = false;
         self.prev_sparse_valid = false;
+    }
+
+    /// Size the per-chunk buffers for an `n`-row solve: the objective
+    /// partials and one projection-scratch set per chunk.
+    pub(crate) fn ensure_chunks(&mut self, n: usize) {
+        let nc = par::num_chunks(n, self.chunk_rows);
+        self.partials.clear();
+        self.partials.resize(nc, 0.0);
+        if self.proj.len() < nc {
+            self.proj.resize_with(nc, par::ProjBuffers::default);
+        }
     }
 }
 
@@ -132,10 +161,12 @@ pub fn solve(p: &MovementProblem) -> MovementPlan {
 /// `ws.plan` (already capacity-repaired).
 pub fn solve_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
     match p.discard_model {
-        DiscardModel::LinearR | DiscardModel::LinearG => greedy::solve_into(p, &mut ws.plan),
+        DiscardModel::LinearR | DiscardModel::LinearG => {
+            greedy::solve_into_chunked(p, &mut ws.plan, ws.solver_threads, ws.chunk_rows)
+        }
         DiscardModel::Sqrt => convex::solve_with(p, convex::PgdOptions::default(), ws),
     }
-    repair::repair_with(p, &mut ws.plan, &mut ws.repair);
+    repair::repair_chunked(p, &mut ws.plan, &mut ws.repair, ws.solver_threads, ws.chunk_rows);
     if ws.warm_start {
         ws.prev.clone_from(&ws.plan);
         ws.prev_valid = true;
@@ -150,11 +181,17 @@ pub fn solve_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
 pub fn solve_sparse_with(p: &MovementProblem, ws: &mut SolverWorkspace) {
     match p.discard_model {
         DiscardModel::LinearR | DiscardModel::LinearG => {
-            greedy::solve_sparse_into(p, &mut ws.sparse)
+            greedy::solve_sparse_into_chunked(p, &mut ws.sparse, ws.solver_threads, ws.chunk_rows)
         }
         DiscardModel::Sqrt => convex::solve_sparse_with(p, convex::PgdOptions::default(), ws),
     }
-    repair::repair_sparse(p, &mut ws.sparse, &mut ws.repair);
+    repair::repair_sparse_chunked(
+        p,
+        &mut ws.sparse,
+        &mut ws.repair,
+        ws.solver_threads,
+        ws.chunk_rows,
+    );
     if ws.warm_start {
         ws.prev_sparse.clone_from(&ws.sparse);
         ws.prev_sparse_valid = true;

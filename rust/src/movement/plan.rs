@@ -146,55 +146,80 @@ impl MovementPlan {
     /// reports). Offloaded data is charged the receiver's next-interval
     /// processing cost, consistent with the solvers' marginal costs.
     pub fn objective(&self, p: &MovementProblem) -> f64 {
-        let mut obj = 0.0;
-        for i in 0..self.n {
-            // local processing of own data + inbound
-            let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
-            obj += g_local * p.costs.c_node(p.t, i);
-            if p.d[i] > 0.0 {
-                for j in 0..self.n {
-                    if j != i && self.s(i, j) > 0.0 {
-                        let amount = p.d[i] * self.s(i, j);
-                        obj += amount
-                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
-                    }
-                }
-            }
-        }
-        match p.discard_model {
-            DiscardModel::LinearR => {
-                for i in 0..self.n {
-                    obj += p.costs.f(p.t, i) * p.d[i] * self.r[i];
-                }
-            }
-            DiscardModel::LinearG => {
-                // -f_i(t) per point processed now; -f_j(t+1) per point
-                // offloaded to j (processed there next interval)
-                for i in 0..self.n {
-                    let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
-                    obj -= p.costs.f(p.t, i) * g_local;
+        self.objective_chunked(p, crate::movement::par::CHUNK_ROWS)
+    }
+
+    /// [`Self::objective`] on explicit chunk geometry: per chunk, the
+    /// linear terms of its rows then its model terms, partials combined in
+    /// ascending chunk order. This is the same accumulation tree the fused
+    /// solver passes build (DESIGN.md §Perf rule 12), so the PGD loop's
+    /// in-flight objectives agree with this function bitwise — a unit test
+    /// in [`crate::movement::convex`] pins that down. A single chunk
+    /// (n ≤ [`crate::movement::par::CHUNK_ROWS`]) reproduces the
+    /// historical single-accumulator sweep exactly.
+    pub(crate) fn objective_chunked(&self, p: &MovementProblem, chunk_rows: usize) -> f64 {
+        // this-interval inbound for the Sqrt model (the scatter loop's
+        // per-target chains match the solver's gather bitwise)
+        let inbound_now = match p.discard_model {
+            DiscardModel::Sqrt => Some(self.inbound_next(p)),
+            _ => None,
+        };
+        let nc = crate::movement::par::num_chunks(self.n, chunk_rows);
+        let mut partials = vec![0.0; nc];
+        for (c, partial) in partials.iter_mut().enumerate() {
+            let rows = crate::movement::par::chunk_range(c, self.n, chunk_rows);
+            let mut obj = 0.0;
+            for i in rows.clone() {
+                // local processing of own data + inbound
+                let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
+                obj += g_local * p.costs.c_node(p.t, i);
+                if p.d[i] > 0.0 {
                     for j in 0..self.n {
-                        if j != i && p.d[i] > 0.0 {
-                            obj -= p.costs.f(p.t + 1, j) * p.d[i] * self.s(i, j);
+                        if j != i && self.s(i, j) > 0.0 {
+                            let amount = p.d[i] * self.s(i, j);
+                            obj += amount
+                                * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
                         }
                     }
                 }
             }
-            DiscardModel::Sqrt => {
-                // f_i / sqrt(G̃_i): processed now + received now (credited
-                // to the receiver, where it is processed next interval)
-                let inbound_now = self.inbound_next(p);
-                for i in 0..self.n {
-                    if !p.active[i] {
-                        continue;
+            match p.discard_model {
+                DiscardModel::LinearR => {
+                    for i in rows {
+                        obj += p.costs.f(p.t, i) * p.d[i] * self.r[i];
                     }
-                    let g = self.s(i, i) * p.d[i] + p.inbound_prev[i] + inbound_now[i];
-                    obj += p.costs.f(p.t, i)
-                        / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                }
+                DiscardModel::LinearG => {
+                    // -f_i(t) per point processed now; -f_j(t+1) per point
+                    // offloaded to j (processed there next interval)
+                    for i in rows {
+                        let g_local = self.s(i, i) * p.d[i] + p.inbound_prev[i];
+                        obj -= p.costs.f(p.t, i) * g_local;
+                        for j in 0..self.n {
+                            if j != i && p.d[i] > 0.0 {
+                                obj -= p.costs.f(p.t + 1, j) * p.d[i] * self.s(i, j);
+                            }
+                        }
+                    }
+                }
+                DiscardModel::Sqrt => {
+                    // f_i / sqrt(G̃_i): processed now + received now
+                    // (credited to the receiver, where it is processed
+                    // next interval)
+                    let inbound_now = inbound_now.as_ref().expect("computed for Sqrt");
+                    for i in rows {
+                        if !p.active[i] {
+                            continue;
+                        }
+                        let g = self.s(i, i) * p.d[i] + p.inbound_prev[i] + inbound_now[i];
+                        obj += p.costs.f(p.t, i)
+                            / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                    }
                 }
             }
+            *partial = obj;
         }
-        obj
+        crate::movement::par::combine(&partials)
     }
 
     /// Panics with a description if the plan violates feasibility (eqs.

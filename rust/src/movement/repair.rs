@@ -16,9 +16,11 @@
 //! updating shared slacks as it assigns. Discarding is always feasible, so
 //! the pass terminates with a feasible plan in one sweep.
 
+use crate::movement::par;
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
 use crate::movement::sparse::SparsePlan;
+use std::ops::Range;
 
 /// One redistribution option for a displaced fraction: process locally or
 /// offload to neighbor `j` (whose edge slot, for the sparse path, is
@@ -38,6 +40,9 @@ pub struct RepairScratch {
     excess: Vec<f64>,
     recv_slack: Vec<f64>,
     options: Vec<(f64, Opt)>,
+    /// Per-target inbound sums for the receiver phases, gathered
+    /// target-parallel before the (order-dependent, serial) scaling loop.
+    inbound: Vec<f64>,
 }
 
 impl std::fmt::Debug for Opt {
@@ -58,39 +63,114 @@ pub fn repair(p: &MovementProblem, plan: &mut MovementPlan) {
 /// Scratch-reusing variant of [`repair`] — bit-identical results; the
 /// buffers are fully overwritten per call.
 pub fn repair_with(p: &MovementProblem, plan: &mut MovementPlan, ws: &mut RepairScratch) {
+    repair_chunked(p, plan, ws, 1, par::CHUNK_ROWS);
+}
+
+/// Per-target inbound sums on the current plan, one entry per target with
+/// a finite `C_j(t+1)` (others stay 0.0, unused). Each target's sum walks
+/// sources ascending — the exact chain of the historical serial
+/// `filter().map().sum()` — and targets are independent, so the gather
+/// fans out over chunks without reductions.
+fn gather_inbound(
+    p: &MovementProblem,
+    plan: &MovementPlan,
+    inbound: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct GatherChunk<'a> {
+        targets: Range<usize>,
+        inb: &'a mut [f64],
+    }
+    let n = p.n();
+    let mut items: Vec<GatherChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+    for (c, inb) in par::split_rows(inbound, 1, chunk_rows).enumerate() {
+        items.push(GatherChunk { targets: par::chunk_range(c, n, chunk_rows), inb });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.targets.start;
+        for j in it.targets.clone() {
+            if p.costs.cap_node_at(p.t + 1, j).is_infinite() {
+                it.inb[j - base] = 0.0;
+                continue;
+            }
+            let mut sum = 0.0;
+            for i in 0..n {
+                if i != j && p.d[i] > 0.0 {
+                    sum += plan.s(i, j) * p.d[i];
+                }
+            }
+            it.inb[j - base] = sum;
+        }
+    });
+}
+
+/// Row-parallel variant of [`repair_with`] (DESIGN.md §Perf rule 12).
+/// Phases 1 and 3 clamp row-locally and fan out over chunks; phase 2
+/// pre-gathers the per-target inbound sums target-parallel (columns are
+/// disjoint, so the values match the historical lazy inline sums exactly)
+/// and then scales serially in ascending target order, because each
+/// scaling mutates sender rows whose excess the redistribution consumes
+/// in device order. Phase 4's redistribution mutates shared receiver
+/// slacks and stays serial.
+pub fn repair_chunked(
+    p: &MovementProblem,
+    plan: &mut MovementPlan,
+    ws: &mut RepairScratch,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct RowChunk<'a> {
+        rows: Range<usize>,
+        s: &'a mut [f64],
+        excess: &'a mut [f64],
+    }
     let n = p.n();
     ws.excess.clear();
     ws.excess.resize(n, 0.0); // displaced fraction per sender
 
     // --- 1. link capacities -------------------------------------------------
-    for i in 0..n {
-        if p.d[i] <= 0.0 {
-            continue;
+    {
+        let mut items: Vec<RowChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+        for ((c, s), excess) in par::split_rows(&mut plan.s, n, chunk_rows)
+            .enumerate()
+            .zip(par::split_rows(&mut ws.excess, 1, chunk_rows))
+        {
+            items.push(RowChunk { rows: par::chunk_range(c, n, chunk_rows), s, excess });
         }
-        for j in 0..n {
-            if j == i || plan.s(i, j) == 0.0 {
-                continue;
+        par::run_chunks(threads, &mut items, |_, it| {
+            let base = it.rows.start;
+            for i in it.rows.clone() {
+                if p.d[i] <= 0.0 {
+                    continue;
+                }
+                let li = i - base;
+                for j in 0..n {
+                    if j == i || it.s[li * n + j] == 0.0 {
+                        continue;
+                    }
+                    let cap = p.costs.cap_link_at(p.t, i, j);
+                    let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
+                    if it.s[li * n + j] > max_frac {
+                        it.excess[li] += it.s[li * n + j] - max_frac;
+                        it.s[li * n + j] = max_frac;
+                    }
+                }
             }
-            let cap = p.costs.cap_link_at(p.t, i, j);
-            let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
-            if plan.s(i, j) > max_frac {
-                ws.excess[i] += plan.s(i, j) - max_frac;
-                plan.set_s(i, j, max_frac);
-            }
-        }
+        });
     }
 
     // --- 2. receiver capacities ---------------------------------------------
     // inbound to j this interval is processed at t+1 and must fit C_j(t+1)
+    ws.inbound.clear();
+    ws.inbound.resize(n, 0.0);
+    gather_inbound(p, plan, &mut ws.inbound, threads, chunk_rows);
     for j in 0..n {
         let cap = p.costs.cap_node_at(p.t + 1, j);
         if cap.is_infinite() {
             continue;
         }
-        let inbound: f64 = (0..n)
-            .filter(|&i| i != j && p.d[i] > 0.0)
-            .map(|i| plan.s(i, j) * p.d[i])
-            .sum();
+        let inbound = ws.inbound[j];
         if inbound > cap {
             let scale = cap / inbound;
             for i in 0..n {
@@ -104,35 +184,46 @@ pub fn repair_with(p: &MovementProblem, plan: &mut MovementPlan, ws: &mut Repair
     }
 
     // --- 3. sender local capacities ------------------------------------------
-    for i in 0..n {
-        if p.d[i] <= 0.0 {
-            continue;
+    {
+        let mut items: Vec<RowChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+        for ((c, s), excess) in par::split_rows(&mut plan.s, n, chunk_rows)
+            .enumerate()
+            .zip(par::split_rows(&mut ws.excess, 1, chunk_rows))
+        {
+            items.push(RowChunk { rows: par::chunk_range(c, n, chunk_rows), s, excess });
         }
-        let cap = p.costs.cap_node_at(p.t, i);
-        if cap.is_infinite() {
-            continue;
-        }
-        let avail = (cap - p.inbound_prev[i]).max(0.0);
-        let max_frac = avail / p.d[i];
-        if plan.s(i, i) > max_frac {
-            ws.excess[i] += plan.s(i, i) - max_frac;
-            plan.set_s(i, i, max_frac);
-        }
+        par::run_chunks(threads, &mut items, |_, it| {
+            let base = it.rows.start;
+            for i in it.rows.clone() {
+                if p.d[i] <= 0.0 {
+                    continue;
+                }
+                let cap = p.costs.cap_node_at(p.t, i);
+                if cap.is_infinite() {
+                    continue;
+                }
+                let li = i - base;
+                let avail = (cap - p.inbound_prev[i]).max(0.0);
+                let max_frac = avail / p.d[i];
+                if it.s[li * n + i] > max_frac {
+                    it.excess[li] += it.s[li * n + i] - max_frac;
+                    it.s[li * n + i] = max_frac;
+                }
+            }
+        });
     }
 
     // --- 4. redistribute displaced fractions ---------------------------------
     // shared slacks after the clamping above
+    gather_inbound(p, plan, &mut ws.inbound, threads, chunk_rows);
     ws.recv_slack.clear();
+    let inbound = &ws.inbound;
     ws.recv_slack.extend((0..n).map(|j| {
         let cap = p.costs.cap_node_at(p.t + 1, j);
         if cap.is_infinite() {
             return f64::INFINITY;
         }
-        let inbound: f64 = (0..n)
-            .filter(|&i| i != j && p.d[i] > 0.0)
-            .map(|i| plan.s(i, j) * p.d[i])
-            .sum();
-        (cap - inbound).max(0.0)
+        (cap - inbound[j]).max(0.0)
     }));
 
     for i in 0..n {
@@ -205,42 +296,110 @@ pub fn repair_with(p: &MovementProblem, plan: &mut MovementPlan, ws: &mut Repair
 /// (off-edge dense terms are `+0.0` no-ops on nonnegative sums), so the
 /// repaired sparse plan densifies bit-identically.
 pub fn repair_sparse(p: &MovementProblem, sp: &mut SparsePlan, ws: &mut RepairScratch) {
+    repair_sparse_chunked(p, sp, ws, 1, par::CHUNK_ROWS);
+}
+
+/// Sparse mirror of [`gather_inbound`]: per-target sums via the CSR
+/// transpose rows (sources ascending — the historical serial chain).
+fn gather_inbound_sparse(
+    p: &MovementProblem,
+    sp: &SparsePlan,
+    inbound: &mut [f64],
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct GatherChunk<'a> {
+        targets: Range<usize>,
+        inb: &'a mut [f64],
+    }
+    let n = sp.n;
+    let mut items: Vec<GatherChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+    for (c, inb) in par::split_rows(inbound, 1, chunk_rows).enumerate() {
+        items.push(GatherChunk { targets: par::chunk_range(c, n, chunk_rows), inb });
+    }
+    par::run_chunks(threads, &mut items, |_, it| {
+        let base = it.targets.start;
+        for j in it.targets.clone() {
+            if p.costs.cap_node_at(p.t + 1, j).is_infinite() {
+                it.inb[j - base] = 0.0;
+                continue;
+            }
+            let mut sum = 0.0;
+            for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
+                let i = sp.t_sources[te];
+                if p.d[i] > 0.0 {
+                    sum += sp.s_edge[sp.t_slot[te]] * p.d[i];
+                }
+            }
+            it.inb[j - base] = sum;
+        }
+    });
+}
+
+/// Row-parallel variant of [`repair_sparse`] — same phase layout as
+/// [`repair_chunked`], over CSR row chunks and transpose gathers.
+pub fn repair_sparse_chunked(
+    p: &MovementProblem,
+    sp: &mut SparsePlan,
+    ws: &mut RepairScratch,
+    threads: usize,
+    chunk_rows: usize,
+) {
+    struct RowChunk<'a> {
+        rows: Range<usize>,
+        s_edge: &'a mut [f64],
+        excess: &'a mut [f64],
+    }
     let n = p.n();
     assert_eq!(sp.n, n, "sparse plan size mismatch");
     ws.excess.clear();
     ws.excess.resize(n, 0.0);
 
     // --- 1. link capacities -------------------------------------------------
-    for i in 0..n {
-        if p.d[i] <= 0.0 {
-            continue;
+    {
+        let offsets = &sp.offsets;
+        let targets = &sp.targets;
+        let mut items: Vec<RowChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+        for ((c, s_edge), excess) in par::split_csr(&mut sp.s_edge, offsets, n, chunk_rows)
+            .into_iter()
+            .enumerate()
+            .zip(par::split_rows(&mut ws.excess, 1, chunk_rows))
+        {
+            items.push(RowChunk { rows: par::chunk_range(c, n, chunk_rows), s_edge, excess });
         }
-        for e in sp.offsets[i]..sp.offsets[i + 1] {
-            if sp.s_edge[e] == 0.0 {
-                continue;
+        par::run_chunks(threads, &mut items, |_, it| {
+            let base = it.rows.start;
+            let ebase = offsets[base];
+            for i in it.rows.clone() {
+                if p.d[i] <= 0.0 {
+                    continue;
+                }
+                let li = i - base;
+                for e in offsets[i]..offsets[i + 1] {
+                    if it.s_edge[e - ebase] == 0.0 {
+                        continue;
+                    }
+                    let cap = p.costs.cap_link_at(p.t, i, targets[e]);
+                    let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
+                    if it.s_edge[e - ebase] > max_frac {
+                        it.excess[li] += it.s_edge[e - ebase] - max_frac;
+                        it.s_edge[e - ebase] = max_frac;
+                    }
+                }
             }
-            let cap = p.costs.cap_link_at(p.t, i, sp.targets[e]);
-            let max_frac = if cap.is_infinite() { f64::INFINITY } else { cap / p.d[i] };
-            if sp.s_edge[e] > max_frac {
-                ws.excess[i] += sp.s_edge[e] - max_frac;
-                sp.s_edge[e] = max_frac;
-            }
-        }
+        });
     }
 
     // --- 2. receiver capacities ---------------------------------------------
+    ws.inbound.clear();
+    ws.inbound.resize(n, 0.0);
+    gather_inbound_sparse(p, sp, &mut ws.inbound, threads, chunk_rows);
     for j in 0..n {
         let cap = p.costs.cap_node_at(p.t + 1, j);
         if cap.is_infinite() {
             continue;
         }
-        let mut inbound = 0.0;
-        for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
-            let i = sp.t_sources[te];
-            if p.d[i] > 0.0 {
-                inbound += sp.s_edge[sp.t_slot[te]] * p.d[i];
-            }
-        }
+        let inbound = ws.inbound[j];
         if inbound > cap {
             let scale = cap / inbound;
             for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
@@ -256,37 +415,50 @@ pub fn repair_sparse(p: &MovementProblem, sp: &mut SparsePlan, ws: &mut RepairSc
     }
 
     // --- 3. sender local capacities ------------------------------------------
-    for i in 0..n {
-        if p.d[i] <= 0.0 {
-            continue;
+    {
+        struct LocalChunk<'a> {
+            rows: Range<usize>,
+            local: &'a mut [f64],
+            excess: &'a mut [f64],
         }
-        let cap = p.costs.cap_node_at(p.t, i);
-        if cap.is_infinite() {
-            continue;
+        let mut items: Vec<LocalChunk> = Vec::with_capacity(par::num_chunks(n, chunk_rows));
+        for ((c, local), excess) in par::split_rows(&mut sp.local, 1, chunk_rows)
+            .enumerate()
+            .zip(par::split_rows(&mut ws.excess, 1, chunk_rows))
+        {
+            items.push(LocalChunk { rows: par::chunk_range(c, n, chunk_rows), local, excess });
         }
-        let avail = (cap - p.inbound_prev[i]).max(0.0);
-        let max_frac = avail / p.d[i];
-        if sp.local[i] > max_frac {
-            ws.excess[i] += sp.local[i] - max_frac;
-            sp.local[i] = max_frac;
-        }
+        par::run_chunks(threads, &mut items, |_, it| {
+            let base = it.rows.start;
+            for i in it.rows.clone() {
+                if p.d[i] <= 0.0 {
+                    continue;
+                }
+                let cap = p.costs.cap_node_at(p.t, i);
+                if cap.is_infinite() {
+                    continue;
+                }
+                let li = i - base;
+                let avail = (cap - p.inbound_prev[i]).max(0.0);
+                let max_frac = avail / p.d[i];
+                if it.local[li] > max_frac {
+                    it.excess[li] += it.local[li] - max_frac;
+                    it.local[li] = max_frac;
+                }
+            }
+        });
     }
 
     // --- 4. redistribute displaced fractions ---------------------------------
+    gather_inbound_sparse(p, sp, &mut ws.inbound, threads, chunk_rows);
     ws.recv_slack.clear();
+    let inbound = &ws.inbound;
     ws.recv_slack.extend((0..n).map(|j| {
         let cap = p.costs.cap_node_at(p.t + 1, j);
         if cap.is_infinite() {
             return f64::INFINITY;
         }
-        let mut inbound = 0.0;
-        for te in sp.t_offsets[j]..sp.t_offsets[j + 1] {
-            let i = sp.t_sources[te];
-            if p.d[i] > 0.0 {
-                inbound += sp.s_edge[sp.t_slot[te]] * p.d[i];
-            }
-        }
-        (cap - inbound).max(0.0)
+        (cap - inbound[j]).max(0.0)
     }));
 
     for i in 0..n {

@@ -250,54 +250,74 @@ impl SparsePlan {
     /// subtracts `f · d_i · 0.0` for off-edge pairs — an exact no-op — so
     /// skipping them here preserves bits.
     pub fn objective(&self, p: &MovementProblem) -> f64 {
-        let mut obj = 0.0;
-        for i in 0..self.n {
-            let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
-            obj += g_local * p.costs.c_node(p.t, i);
-            if p.d[i] > 0.0 {
-                for e in self.offsets[i]..self.offsets[i + 1] {
-                    if self.s_edge[e] > 0.0 {
-                        let j = self.targets[e];
-                        let amount = p.d[i] * self.s_edge[e];
-                        obj += amount
-                            * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
-                    }
-                }
+        self.objective_chunked(p, crate::movement::par::CHUNK_ROWS)
+    }
+
+    /// Mirror of [`MovementPlan::objective_chunked`]: the same per-chunk
+    /// linear-then-model accumulation tree over the sparse support, so the
+    /// fused sparse solver passes agree with this function bitwise.
+    pub(crate) fn objective_chunked(&self, p: &MovementProblem, chunk_rows: usize) -> f64 {
+        let inbound_now = match p.discard_model {
+            DiscardModel::Sqrt => {
+                let mut inb = Vec::new();
+                self.inbound_next_into(p, &mut inb);
+                Some(inb)
             }
-        }
-        match p.discard_model {
-            DiscardModel::LinearR => {
-                for i in 0..self.n {
-                    obj += p.costs.f(p.t, i) * p.d[i] * self.discard[i];
-                }
-            }
-            DiscardModel::LinearG => {
-                for i in 0..self.n {
-                    let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
-                    obj -= p.costs.f(p.t, i) * g_local;
-                    if p.d[i] > 0.0 {
-                        for e in self.offsets[i]..self.offsets[i + 1] {
-                            obj -= p.costs.f(p.t + 1, self.targets[e])
-                                * p.d[i]
-                                * self.s_edge[e];
+            _ => None,
+        };
+        let nc = crate::movement::par::num_chunks(self.n, chunk_rows);
+        let mut partials = vec![0.0; nc];
+        for (c, partial) in partials.iter_mut().enumerate() {
+            let rows = crate::movement::par::chunk_range(c, self.n, chunk_rows);
+            let mut obj = 0.0;
+            for i in rows.clone() {
+                let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
+                obj += g_local * p.costs.c_node(p.t, i);
+                if p.d[i] > 0.0 {
+                    for e in self.offsets[i]..self.offsets[i + 1] {
+                        if self.s_edge[e] > 0.0 {
+                            let j = self.targets[e];
+                            let amount = p.d[i] * self.s_edge[e];
+                            obj += amount
+                                * (p.costs.c_link(p.t, i, j) + p.costs.c_node(p.t + 1, j));
                         }
                     }
                 }
             }
-            DiscardModel::Sqrt => {
-                let mut inbound_now = Vec::new();
-                self.inbound_next_into(p, &mut inbound_now);
-                for i in 0..self.n {
-                    if !p.active[i] {
-                        continue;
+            match p.discard_model {
+                DiscardModel::LinearR => {
+                    for i in rows {
+                        obj += p.costs.f(p.t, i) * p.d[i] * self.discard[i];
                     }
-                    let g = self.local[i] * p.d[i] + p.inbound_prev[i] + inbound_now[i];
-                    obj += p.costs.f(p.t, i)
-                        / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                }
+                DiscardModel::LinearG => {
+                    for i in rows {
+                        let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
+                        obj -= p.costs.f(p.t, i) * g_local;
+                        if p.d[i] > 0.0 {
+                            for e in self.offsets[i]..self.offsets[i + 1] {
+                                obj -= p.costs.f(p.t + 1, self.targets[e])
+                                    * p.d[i]
+                                    * self.s_edge[e];
+                            }
+                        }
+                    }
+                }
+                DiscardModel::Sqrt => {
+                    let inbound_now = inbound_now.as_ref().expect("computed for Sqrt");
+                    for i in rows {
+                        if !p.active[i] {
+                            continue;
+                        }
+                        let g = self.local[i] * p.d[i] + p.inbound_prev[i] + inbound_now[i];
+                        obj += p.costs.f(p.t, i)
+                            / (g + crate::movement::convex::SQRT_EPS).sqrt();
+                    }
                 }
             }
+            *partial = obj;
         }
-        obj
+        crate::movement::par::combine(&partials)
     }
 
     /// Mirror of [`MovementPlan::assert_feasible`] over the sparse support

@@ -6,8 +6,9 @@
 //! extend it: through shared coalescing services (`--services K`),
 //! outputs are additionally invariant to the partner runs that share the
 //! stacked dispatches, to K, and to arrival order (DESIGN.md §Perf
-//! rule 10). Requires `make artifacts`; skips without an XLA backend
-//! (the pure-CPU CI gate).
+//! rule 10), and so is the movement solvers' worker count
+//! (`--solver-threads`; §Perf rule 12). Requires `make artifacts`; skips
+//! without an XLA backend (the pure-CPU CI gate).
 
 use fogml::config::{Churn, EngineConfig, Method, MovementBackend, TrainPath};
 use fogml::coordinator::SimPool;
@@ -242,6 +243,34 @@ fn movement_backend_and_warm_start_defaults_are_bit_identical() {
     // replay (nothing solver-side carries over between runs)
     let again = fed::run(&sparse_cfg, &rt).expect("sparse-backend rerun");
     assert_identical(&sparse, &again, "sparse rerun, warm_start off");
+}
+
+/// The solver-threads knob is a pure execution-strategy knob too
+/// (DESIGN.md §Perf rule 12): the row-parallel movement passes use
+/// fixed-size chunks whose geometry depends only on n, with reductions
+/// combined in ascending chunk order, so the default (`Auto`), `Fixed(1)`
+/// and oversubscribed `Fixed` runs are bit-identical end-to-end — through
+/// training, churn, repair, and plan apportionment on both backends.
+#[test]
+fn solver_threads_default_is_bit_identical() {
+    use fogml::config::SolverThreads;
+    let Some(rt) = fogml::runtime::test_runtime() else { return };
+    for backend in [MovementBackend::Dense, MovementBackend::Sparse] {
+        let base = small().with(|c| c.movement_backend = backend);
+        let reference = fed::run(&base, &rt).expect("default (Auto) run");
+        for threads in [1usize, 2, 4] {
+            let forced = fed::run(
+                &base.clone().with(|c| c.solver_threads = SolverThreads::Fixed(threads)),
+                &rt,
+            )
+            .expect("forced-threads run");
+            assert_identical(
+                &reference,
+                &forced,
+                &format!("{backend:?} backend, Auto vs Fixed({threads})"),
+            );
+        }
+    }
 }
 
 /// The centralized baseline must round-trip through the pool identically

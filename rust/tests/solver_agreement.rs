@@ -14,14 +14,21 @@
 //!    `to_dense()` of its plan equals the dense plan with `==`, across
 //!    topologies, churn masks, discard models, capacities, and warm
 //!    starts.
+//! 4. The row-parallel execution layer (DESIGN.md §Perf rule 12) is
+//!    bit-invariant to `SolverWorkspace::solver_threads`: chunk geometry
+//!    is a function of n only and reductions combine per-chunk partials
+//!    in ascending order, so threads ∈ {2, 4, 7} must reproduce the
+//!    serial plans with exact `==` — on both backends, every discard
+//!    model, under churn, capacities, and forced multi-chunk layouts.
 
 use fogml::costs::{CapacityMode, CostSchedule};
 use fogml::movement::convex::{self, PgdOptions};
 use fogml::movement::problem::DiscardModel;
 use fogml::movement::{self, greedy, repair, MovementPlan, MovementProblem, SolverWorkspace};
 use fogml::prop::for_all;
-use fogml::topology::generators::erdos_renyi;
+use fogml::topology::generators::{erdos_renyi, random_geometric};
 use fogml::topology::Graph;
+use fogml::util::rng::Rng;
 
 struct Instance {
     graph: Graph,
@@ -207,6 +214,126 @@ fn prop_sparse_pipeline_is_bit_identical_to_dense() {
         );
         sparse_ws.sparse.assert_feasible(&p, 1e-6);
     });
+}
+
+/// Solve an instance on both backends with the given worker count and
+/// chunk layout, returning both plans densified for exact comparison.
+fn solve_both(
+    p: &MovementProblem,
+    threads: usize,
+    chunk_rows: usize,
+) -> (MovementPlan, MovementPlan) {
+    let mut dense_ws = SolverWorkspace::new();
+    dense_ws.solver_threads = threads;
+    dense_ws.chunk_rows = chunk_rows;
+    movement::solve_with(p, &mut dense_ws);
+    let mut sparse_ws = SolverWorkspace::new();
+    sparse_ws.solver_threads = threads;
+    sparse_ws.chunk_rows = chunk_rows;
+    movement::solve_sparse_with(p, &mut sparse_ws);
+    (dense_ws.plan, sparse_ws.sparse.to_dense())
+}
+
+/// Plans must be bit-invariant to the solver worker count (DESIGN.md
+/// §Perf rule 12): random ER and random-geometric topologies × churn
+/// masks × idle devices × all three discard models × with/without
+/// capacities, with `chunk_rows` forced down to 2–3 so even n ≤ 7
+/// instances reduce across several chunks. Compared with exact `==`
+/// against the single-worker reference, on both plan backends.
+#[test]
+fn prop_solver_threads_are_bit_invariant() {
+    for_all("solver_threads_invariance", 60, |g| {
+        let capacitated = g.bool(0.5);
+        let mut inst = random_instance(g, capacitated);
+        let n = inst.d.len();
+        // half the cases swap in a random-geometric topology — the fog
+        // shape the scaling bench sweeps — at a radius that keeps a mix
+        // of connected and isolated devices
+        if g.bool(0.5) {
+            inst.graph = random_geometric(n, g.f64_in(0.3, 0.9), g.rng());
+        }
+        for a in inst.active.iter_mut() {
+            *a = g.bool(0.75);
+        }
+        for x in inst.d.iter_mut() {
+            if g.bool(0.2) {
+                *x = 0.0;
+            }
+        }
+        let model = match g.usize_in(0, 2) {
+            0 => DiscardModel::LinearR,
+            1 => DiscardModel::LinearG,
+            _ => DiscardModel::Sqrt,
+        };
+        let p = inst.problem(model);
+        let chunk_rows = g.usize_in(2, 3);
+
+        let (dense_ref, sparse_ref) = solve_both(&p, 1, chunk_rows);
+        assert_eq!(
+            sparse_ref, dense_ref,
+            "sparse diverged from dense at threads=1 ({model:?})"
+        );
+        for threads in [2usize, 4, 7] {
+            let (dense, sparse) = solve_both(&p, threads, chunk_rows);
+            assert_eq!(
+                dense, dense_ref,
+                "dense plan changed under threads={threads} ({model:?}, \
+                 chunk_rows={chunk_rows}, capacitated={capacitated})"
+            );
+            assert_eq!(
+                sparse, dense_ref,
+                "sparse plan changed under threads={threads} ({model:?}, \
+                 chunk_rows={chunk_rows}, capacitated={capacitated})"
+            );
+        }
+    });
+}
+
+/// The same invariance at a size where the *production* chunk layout is
+/// still a single chunk but a forced multi-chunk layout gives every
+/// worker several chunks of real work: one fixed n = 48 geometric
+/// instance, Sqrt model (the PGD path — gradients, projections, fused
+/// objective reductions), uniform capacities (the repair path), solved
+/// at threads ∈ {1, 2, 4, 7} × chunk layouts {default, 4 rows}.
+#[test]
+fn solver_threads_invariance_at_multichunk_scale() {
+    let n = 48;
+    let mut rng = Rng::new(4242);
+    let graph = random_geometric(n, 0.35, &mut rng);
+    let mut costs = CostSchedule::zeros(n, 2);
+    for t in 0..2 {
+        for i in 0..n {
+            costs.compute[t][i] = rng.uniform(0.05, 0.6);
+            costs.error_weight[t][i] = rng.uniform(0.2, 0.9);
+            for j in 0..n {
+                if i != j {
+                    costs.link[t][i * n + j] = rng.uniform(0.1, 2.0);
+                }
+            }
+        }
+    }
+    costs.set_capacities(CapacityMode::Uniform(40.0));
+    let d: Vec<f64> = (0..n).map(|_| (rng.f64() * 20.0).floor()).collect();
+    let inbound = vec![0.0; n];
+    let active: Vec<bool> = (0..n).map(|_| rng.bool(0.8)).collect();
+    let inst = Instance { graph, costs, d, inbound, active };
+    let p = inst.problem(DiscardModel::Sqrt);
+
+    for chunk_rows in [SolverWorkspace::new().chunk_rows, 4] {
+        let (dense_ref, sparse_ref) = solve_both(&p, 1, chunk_rows);
+        assert_eq!(sparse_ref, dense_ref, "backends diverged at threads=1");
+        for threads in [2usize, 4, 7] {
+            let (dense, sparse) = solve_both(&p, threads, chunk_rows);
+            assert_eq!(
+                dense, dense_ref,
+                "dense n=48 plan changed under threads={threads}, chunk_rows={chunk_rows}"
+            );
+            assert_eq!(
+                sparse, dense_ref,
+                "sparse n=48 plan changed under threads={threads}, chunk_rows={chunk_rows}"
+            );
+        }
+    }
 }
 
 /// Warm starts must preserve the identity too: with `warm_start` on in
