@@ -31,6 +31,13 @@
 //! reproduces the serial checksum bit-for-bit while reporting the
 //! devices/sec scaling.
 //!
+//! The `participation` section is pure CPU as well (stub compute): it
+//! sweeps the device-sampling overlay (§Perf rule 13) over
+//! K/N ∈ {0.25, 0.5, 1.0} for both `uniform:K` and `importance:K`
+//! schedules, reporting engine runs/sec and per-run train-dispatch
+//! counts — the point of sampling is that unsampled devices never reach
+//! the compute backend, and the dispatch ratio makes that visible.
+//!
 //! The `shard_io` section is pure CPU too — it times the sweep-sharding
 //! I/O path (§Perf rule 9) both ways: a synthetic 4-shard set of
 //! 12 000 full `EngineOutput` runs written and reassembled
@@ -42,9 +49,11 @@
 //! Emits `BENCH_engine.json` (and a copy under `results/bench/`) so later
 //! PRs have numbers to beat.
 
+use std::cell::Cell;
+use std::rc::Rc;
 use std::time::Instant;
 
-use fogml::config::{EngineConfig, TrainPath};
+use fogml::config::{EngineConfig, Method, TrainPath};
 use fogml::coordinator::shard::{load_shard_set, RunRecord, ShardFile, ShardFormat, ShardSpec};
 use fogml::coordinator::SimPool;
 use fogml::costs::MovementCosts;
@@ -52,7 +61,8 @@ use fogml::experiments::common::seed_sweep;
 use fogml::fed;
 use fogml::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use fogml::fed::eval::{EvalPath, EvalSchedule, EvalWork};
-use fogml::fed::{EngineOutput, Substrates, Trainer};
+use fogml::fed::session::{run_with, Compute, Params};
+use fogml::fed::{EngineOutput, ParticipationSchedule, Substrates, Trainer};
 use fogml::movement::{self, convex, DiscardModel, MovementProblem, SolverWorkspace};
 use fogml::runtime::{ModelKind, Runtime};
 use fogml::topology::generators::random_geometric_with_positions;
@@ -314,6 +324,100 @@ fn scaling_section() -> Json {
         ("pgd_sparse_s", Json::from(pgd_sparse_s)),
         ("pgd_dense_s", Json::from(pgd_dense_s)),
     ])
+}
+
+// -- participation: device-sampling overlay cost (pure CPU) -----------------
+
+/// Arithmetic stub compute (same shape as the session unit tests') with a
+/// shared dispatch counter: every non-empty `train_interval` call is one
+/// device reaching the backend, so the counter exposes exactly what the
+/// sampling overlay is supposed to cut.
+struct CountingStub {
+    train_dispatches: Rc<Cell<usize>>,
+}
+
+impl Compute for CountingStub {
+    fn init_params(&self, seed: u64) -> anyhow::Result<Params> {
+        Ok(vec![fogml::runtime::HostTensor::new(vec![2], vec![(seed % 97) as f32, 0.0])])
+    }
+
+    fn train_interval(
+        &self,
+        params: &mut Params,
+        samples: &[u32],
+    ) -> anyhow::Result<Option<f32>> {
+        if samples.is_empty() {
+            return Ok(None);
+        }
+        self.train_dispatches.set(self.train_dispatches.get() + 1);
+        params[0].data[1] += samples.len() as f32;
+        Ok(Some(1.0 / (1.0 + params[0].data[1])))
+    }
+
+    fn evaluate(&self, params: &[fogml::runtime::HostTensor]) -> anyhow::Result<f64> {
+        Ok((params[0].data[1] as f64 / 1e4).tanh())
+    }
+}
+
+fn participation_section() -> Json {
+    const N: usize = 8;
+    const REPS: usize = 20;
+    let base = EngineConfig {
+        method: Method::NetworkAware,
+        n: N,
+        t_max: 40,
+        tau: 4,
+        n_train: 1200,
+        n_test: 200,
+        ..Default::default()
+    };
+    // K/N ∈ {1.0, 0.5, 0.25} for both sampled schedules; Full is the
+    // K/N = 1.0 reference the dispatch ratios are quoted against
+    let schedules = [
+        ParticipationSchedule::Full,
+        ParticipationSchedule::UniformK { k: N / 2 },
+        ParticipationSchedule::UniformK { k: N / 4 },
+        ParticipationSchedule::ImportanceK { k: N / 2 },
+        ParticipationSchedule::ImportanceK { k: N / 4 },
+    ];
+    let mut rows = Vec::new();
+    let mut full_dispatches = 0usize;
+    for s in schedules {
+        let cfg = base.clone().with(|c| c.participation = s);
+        let sub = Substrates::derive(&cfg);
+        let counter = Rc::new(Cell::new(0usize));
+        let start = Instant::now();
+        for _ in 0..REPS {
+            std::hint::black_box(
+                run_with(&cfg, &sub, CountingStub { train_dispatches: counter.clone() })
+                    .expect("participation bench run"),
+            );
+        }
+        let secs = start.elapsed().as_secs_f64();
+        // identical config + substrates every rep ⇒ identical dispatch
+        // counts per rep (determinism), so per-run is an exact division
+        let per_run = counter.get() / REPS;
+        let label = s.label();
+        if matches!(s, ParticipationSchedule::Full) {
+            full_dispatches = per_run;
+        }
+        let ratio = per_run as f64 / full_dispatches.max(1) as f64;
+        let rps = runs_per_sec(REPS, secs);
+        println!(
+            "participation/{label:<13} {secs:>7.3}s ({rps:.1} runs/s)  \
+             {per_run} train dispatches/run ({ratio:.2}× of full)"
+        );
+        rows.push(Json::obj(vec![
+            ("schedule", Json::from(label)),
+            ("n", Json::from(N)),
+            ("runs", Json::from(REPS)),
+            ("secs", Json::from(secs)),
+            ("runs_per_sec", Json::from(rps)),
+            ("train_dispatches_per_run", Json::from(per_run)),
+            ("dispatch_ratio_vs_full", Json::from(ratio)),
+        ]));
+    }
+    Json::obj(vec![("rows", Json::Arr(rows))])
 }
 
 // -- shard_io: binary vs JSON shard write + merge reassembly ----------------
@@ -735,6 +839,7 @@ fn main() {
     // pure-CPU sections first: they run (and the report is written) even
     // without runtime artifacts
     let scaling = scaling_section();
+    let participation = participation_section();
     let shard_io = shard_io_section();
 
     let runtime = match Runtime::load_default() {
@@ -756,6 +861,7 @@ fn main() {
         ])),
         ("runtime", Json::from(runtime.is_some())),
         ("scaling", scaling),
+        ("participation", participation),
         ("shard_io", shard_io),
     ];
     if let Some(rt) = runtime {

@@ -54,7 +54,9 @@ fn main() {
     let p1 = rt.init_params(ModelKind::Mlp, 1).unwrap();
     let p2 = rt.init_params(ModelKind::Mlp, 2).unwrap();
     runner.bench("fedavg_aggregate_2xMLP", || {
-        std::hint::black_box(fogml::fed::aggregator::aggregate(&[(&p1, 3.0), (&p2, 5.0)]).unwrap());
+        std::hint::black_box(
+            fogml::fed::aggregator::aggregate(&[(&p1, 3.0), (&p2, 5.0)]).unwrap().unwrap(),
+        );
     });
 
     let _ = NUM_CLASSES;

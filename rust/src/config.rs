@@ -4,6 +4,7 @@
 use crate::costs::traces::ErrorWeightProfile;
 use crate::costs::{CostSource, Medium};
 use crate::fed::eval::{EvalPath, EvalSchedule};
+use crate::fed::participation::ParticipationSchedule;
 use crate::movement::DiscardModel;
 use crate::runtime::ModelKind;
 
@@ -238,6 +239,11 @@ pub struct EngineConfig {
     /// rule 12). `Auto` is serial at paper scale and scales out with the
     /// problem; recorded in shard opts so `fogml merge` stays consistent.
     pub solver_threads: SolverThreads,
+    /// Per-period device sampling (`fed::participation`; DESIGN.md §Perf
+    /// rule 13). `Full` by default — sampling changes which devices train,
+    /// so the schedule is an identity field in the shard opts blob and
+    /// mixed-schedule merges are refused.
+    pub participation: ParticipationSchedule,
     pub seed: u64,
 }
 
@@ -278,6 +284,7 @@ impl Default for EngineConfig {
             movement_backend: MovementBackend::Auto,
             warm_start: false,
             solver_threads: SolverThreads::Auto,
+            participation: ParticipationSchedule::Full,
             seed: 1,
         }
     }
@@ -408,6 +415,17 @@ mod tests {
         assert_eq!(c.solver_threads, SolverThreads::Auto);
         assert_eq!(c.solver_threads.resolve(c.n, 1), 1);
         assert_eq!(c.solver_threads.resolve(50, 4), 1);
+    }
+
+    #[test]
+    fn participation_default_is_full() {
+        // Full materializes no sampling state at all inside the session
+        // (fed::participation::ParticipationState::new returns None), so
+        // default runs keep the pre-subsystem engine bit-for-bit
+        // (tests/participation.rs proves the bit-identity; this pins the
+        // default selection — DESIGN.md §Perf rule 13)
+        let c = EngineConfig::default();
+        assert_eq!(c.participation, ParticipationSchedule::Full);
     }
 
     #[test]

@@ -136,7 +136,7 @@ impl Cluster {
             }
             let refs: Vec<(&Params, f64)> =
                 contributions.iter().map(|(p, h)| (p, *h)).collect();
-            if let Some(agg) = aggregator::aggregate(&refs) {
+            if let Some(agg) = aggregator::aggregate(&refs)? {
                 global = agg;
             }
             round_accuracy.push(handle.evaluate(global.clone())?);

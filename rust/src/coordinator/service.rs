@@ -1034,7 +1034,7 @@ mod tests {
         let r2 = t2.join().unwrap();
 
         // fedavg of the two shard models
-        let agg = crate::fed::aggregator::aggregate(&[(&r1, 1.0), (&r2, 1.0)]).unwrap();
+        let agg = crate::fed::aggregator::aggregate(&[(&r1, 1.0), (&r2, 1.0)]).unwrap().unwrap();
         let after = handle.evaluate(agg).unwrap();
         assert!(after > before + 0.15, "{before} -> {after}");
         svc.shutdown();

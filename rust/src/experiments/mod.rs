@@ -36,6 +36,7 @@ use crate::config::{EngineConfig, SolverThreads};
 use crate::coordinator::shard::{self, ShardFormat, ShardSpec, SweepCtx};
 use crate::coordinator::SimPool;
 use crate::fed::eval::EvalSchedule;
+use crate::fed::participation::ParticipationSchedule;
 use crate::runtime::ModelKind;
 use crate::util::json::Json;
 
@@ -77,6 +78,13 @@ pub struct ExpOptions {
     /// make every setting bit-identical (DESIGN.md §Perf rule 12), so —
     /// unlike `services` — merges never need to reject mixed values.
     pub solver_threads: Option<SolverThreads>,
+    /// Per-period device sampling schedule (`--participation`;
+    /// [`ParticipationSchedule`]). `None` keeps the config default
+    /// (`Full`). Sampling changes which devices train — unlike
+    /// `solver_threads` this is grid identity, so the value is recorded
+    /// in the shard opts blob and `fogml merge` refuses mixed-schedule
+    /// sets (DESIGN.md §Perf rule 13).
+    pub participation: Option<ParticipationSchedule>,
     /// Run only this round-robin slice of the grid and write a shard
     /// file instead of artifacts (`--shard I/N`; see
     /// [`crate::coordinator::shard`]). Only the pool-backed drivers
@@ -105,6 +113,7 @@ impl Default for ExpOptions {
             eval_schedule: EvalSchedule::Full,
             services: None,
             solver_threads: None,
+            participation: None,
             shard: None,
             shard_format: ShardFormat::default(),
             base: None,
@@ -120,6 +129,9 @@ impl ExpOptions {
         let mut base = self.base.clone().unwrap_or_default();
         if let Some(t) = self.solver_threads {
             base.solver_threads = t;
+        }
+        if let Some(p) = self.participation {
+            base.participation = p;
         }
         match self.model {
             Some(m) => base.with_model(m),
@@ -244,6 +256,13 @@ fn opts_to_json(o: &ExpOptions) -> Json {
                 Some(SolverThreads::Fixed(k)) => Json::from(k.to_string()),
             },
         ),
+        (
+            "participation",
+            match o.participation {
+                None => Json::Null,
+                Some(p) => Json::from(p.label()),
+            },
+        ),
     ])
 }
 
@@ -270,6 +289,13 @@ fn opts_from_json(j: &Json) -> Result<ExpOptions> {
     // config default (and the knob is output-invariant anyway)
     opts.solver_threads = match j.get("solver_threads").and_then(Json::as_str) {
         Some(s) => Some(SolverThreads::parse(s)?),
+        None => None,
+    };
+    // absent (pre-sampling shard files) and null both mean the config
+    // default (Full). The merge-time opts equality check compares the
+    // raw blobs, so a Full-vs-uniform mix is refused before this runs.
+    opts.participation = match j.get("participation").and_then(Json::as_str) {
+        Some(s) => Some(ParticipationSchedule::parse(s)?),
         None => None,
     };
     Ok(opts)
@@ -329,6 +355,10 @@ mod tests {
         let back = opts_from_json(&opts_to_json(&o)).unwrap();
         assert_eq!(back.solver_threads, Some(SolverThreads::Auto));
 
+        o.participation = Some(ParticipationSchedule::ImportanceK { k: 3 });
+        let back = opts_from_json(&opts_to_json(&o)).unwrap();
+        assert_eq!(back.participation, Some(ParticipationSchedule::ImportanceK { k: 3 }));
+
         let d = opts_from_json(&opts_to_json(&ExpOptions::default())).unwrap();
         assert_eq!(d.seeds, 3);
         assert_eq!(d.model, None);
@@ -336,6 +366,7 @@ mod tests {
         assert_eq!(d.eval_schedule, EvalSchedule::Full);
         assert_eq!(d.services, None);
         assert_eq!(d.solver_threads, None);
+        assert_eq!(d.participation, None);
     }
 
     #[test]

@@ -6,7 +6,13 @@
 //!
 //! where `H_i` is the number of datapoints device i processed since the
 //! last aggregation. Devices that processed more data carry more weight,
-//! consistent with the empirical-loss objective (1).
+//! consistent with the empirical-loss objective (1). Under importance
+//! sampling (`fed::participation`) the session pre-scales each sampled
+//! device's `H_i` by `1 / π_i` — the Horvitz–Thompson correction — before
+//! it reaches this function; the normalization below is otherwise
+//! unchanged.
+
+use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
 
@@ -14,15 +20,27 @@ use crate::runtime::HostTensor;
 /// entry's leading inputs.
 pub type Params = Vec<HostTensor>;
 
-/// Aggregate `(params, weight)` contributions. Contributions with zero
-/// weight are ignored; returns `None` if no weight at all (the paper keeps
-/// the previous global model in that case).
-pub fn aggregate(contributions: &[(&Params, f64)]) -> Option<Params> {
+/// Aggregate `(params, weight)` contributions.
+///
+/// Contract (pinned by the unit tests below):
+/// * any non-finite weight (NaN or ±∞) is an error — a poisoned weight
+///   must abort the run, never silently corrupt the global model;
+/// * contributions with weight ≤ 0 are ignored;
+/// * `Ok(None)` when no positive weight remains (empty input or all-zero
+///   weights) — the paper keeps the previous global model in that case.
+pub fn aggregate(contributions: &[(&Params, f64)]) -> Result<Option<Params>> {
+    if let Some((i, &(_, h))) =
+        contributions.iter().enumerate().find(|&(_, &(_, h))| !h.is_finite())
+    {
+        bail!("aggregate: non-finite weight {h} for contribution {i}");
+    }
     let total: f64 = contributions.iter().map(|&(_, h)| h).sum();
     if total <= 0.0 {
-        return None;
+        return Ok(None);
     }
-    let first = contributions.iter().find(|&&(_, h)| h > 0.0)?.0;
+    let Some(&(first, _)) = contributions.iter().find(|&&(_, h)| h > 0.0) else {
+        return Ok(None);
+    };
     let mut acc: Params = first
         .iter()
         .map(|t| HostTensor::zeros(t.shape.clone()))
@@ -36,7 +54,7 @@ pub fn aggregate(contributions: &[(&Params, f64)]) -> Option<Params> {
             a.axpy(w, p);
         }
     }
-    Some(acc)
+    Ok(Some(acc))
 }
 
 #[cfg(test)]
@@ -52,7 +70,7 @@ mod tests {
         let a = p(1.0);
         let b = p(4.0);
         // H_a = 3, H_b = 1 -> w = (3*1 + 1*4)/4 = 1.75
-        let agg = aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap();
+        let agg = aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap().unwrap();
         assert!((agg[0].data[0] - 1.75).abs() < 1e-6);
         assert!((agg[0].data[1] - 3.5).abs() < 1e-6);
     }
@@ -61,21 +79,37 @@ mod tests {
     fn zero_weight_contributions_ignored() {
         let a = p(1.0);
         let b = p(100.0);
-        let agg = aggregate(&[(&a, 2.0), (&b, 0.0)]).unwrap();
+        let agg = aggregate(&[(&a, 2.0), (&b, 0.0)]).unwrap().unwrap();
         assert_eq!(agg[0].data, vec![1.0, 2.0]);
     }
 
     #[test]
     fn no_contributors_returns_none() {
         let a = p(1.0);
-        assert!(aggregate(&[(&a, 0.0)]).is_none());
-        assert!(aggregate(&[]).is_none());
+        // all-zero weights and the empty list both mean "keep the
+        // previous global model" — Ok(None), not an error
+        assert!(aggregate(&[(&a, 0.0)]).unwrap().is_none());
+        assert!(aggregate(&[]).unwrap().is_none());
+        let b = p(2.0);
+        assert!(aggregate(&[(&a, 0.0), (&b, 0.0)]).unwrap().is_none());
     }
 
     #[test]
     fn single_contributor_identity() {
         let a = p(3.0);
-        let agg = aggregate(&[(&a, 5.0)]).unwrap();
+        let agg = aggregate(&[(&a, 5.0)]).unwrap().unwrap();
         assert_eq!(agg[0].data, a[0].data);
+    }
+
+    #[test]
+    fn non_finite_weights_are_rejected() {
+        let a = p(1.0);
+        let b = p(2.0);
+        // a single NaN poisons the whole aggregation — even alongside
+        // healthy contributions, and regardless of sign conventions
+        let err = aggregate(&[(&a, 1.0), (&b, f64::NAN)]).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        assert!(aggregate(&[(&a, f64::INFINITY)]).is_err());
+        assert!(aggregate(&[(&a, f64::NEG_INFINITY), (&b, 1.0)]).is_err());
     }
 }

@@ -11,6 +11,7 @@ pub mod accounting;
 pub mod aggregator;
 pub mod engine;
 pub mod eval;
+pub mod participation;
 pub mod session;
 pub mod similarity;
 pub mod trainer;
@@ -18,5 +19,6 @@ pub mod trainer;
 pub use accounting::{IntervalStats, Ledger, MovementTotals};
 pub use engine::{run, EngineOutput};
 pub use eval::{EvalPath, EvalPlan, EvalSchedule, EvalUnit, EvalWork};
+pub use participation::{ParticipationCosts, ParticipationSchedule, ParticipationState};
 pub use session::{Compute, LocalCompute, Session, SessionState, Substrates};
 pub use trainer::{DeviceWork, TileFill, TrainUnit, Trainer};

@@ -1,0 +1,508 @@
+//! Per-period device participation sampling — the train-side twin of the
+//! eval-subset trick (DESIGN.md §Perf rule 13).
+//!
+//! Instead of training every active device every interval, a
+//! [`ParticipationSchedule`] selects `K` of the devices active at the
+//! start of each aggregation period. The paper's offloading primitive
+//! turns the unselected devices into *offload-only sources*: a
+//! [`ParticipationCosts`] wrapper zeroes their processing capacity in the
+//! movement problem, so their collected data flows toward sampled
+//! neighbors (or is discarded, per the cost trade-off) rather than
+//! silently vanishing. The aggregator keeps the period average unbiased
+//! by Horvitz–Thompson reweighting: each sampled device's eq. (4) weight
+//! is scaled by `1 / π_i`, the inverse of its inclusion probability.
+//!
+//! Determinism contract: the sampler draws from its own domain-separated
+//! stream (`seed ^ PARTICIPATION_SALT`, like the eval planner's
+//! `EVAL_PLAN_SALT`), so enabling it cannot perturb the load-bearing RNG
+//! split order of [`crate::fed::session::Substrates::derive`] — and the
+//! `Full` default materializes no state at all, which is what guarantees
+//! bit-identity with the pre-subsystem engine (`tests/participation.rs`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::costs::MovementCosts;
+use crate::util::rng::Rng;
+
+/// Which devices participate in each aggregation period (CLI
+/// `--participation`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParticipationSchedule {
+    /// Every active device trains every interval — the historical
+    /// behavior, bit-identical to the pre-subsystem engine.
+    #[default]
+    Full,
+    /// `k` devices drawn uniformly without replacement from the devices
+    /// active at each period start (`π_i = k / m`, equal reweighting).
+    UniformK { k: usize },
+    /// `k` devices drawn with probability proportional to an importance
+    /// score (collected data volume over believed processing cost), with
+    /// per-device `1 / π_i` reweighting in the aggregator.
+    ImportanceK { k: usize },
+}
+
+impl ParticipationSchedule {
+    /// Parse `full`, `uniform:K` or `importance:K` (K ≥ 1).
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "full" {
+            return Ok(ParticipationSchedule::Full);
+        }
+        let Some((kind, kstr)) = lower.split_once(':') else {
+            bail!("unknown participation schedule '{s}' (want full|uniform:K|importance:K)");
+        };
+        let k: usize =
+            kstr.parse().map_err(|e| anyhow!("--participation {kind}:{kstr}: {e}"))?;
+        if k < 1 {
+            bail!("participation schedule needs at least 1 device per period (got {k})");
+        }
+        match kind {
+            "uniform" => Ok(ParticipationSchedule::UniformK { k }),
+            "importance" => Ok(ParticipationSchedule::ImportanceK { k }),
+            _ => bail!("unknown participation schedule '{s}' (want full|uniform:K|importance:K)"),
+        }
+    }
+
+    /// Canonical string form — the inverse of [`ParticipationSchedule::parse`].
+    /// Recorded in the shard opts blob as an identity field, so shard sets
+    /// produced under different schedules refuse to merge.
+    pub fn label(&self) -> String {
+        match self {
+            ParticipationSchedule::Full => "full".to_string(),
+            ParticipationSchedule::UniformK { k } => format!("uniform:{k}"),
+            ParticipationSchedule::ImportanceK { k } => format!("importance:{k}"),
+        }
+    }
+}
+
+/// Domain-separation constant for the participation draws: the sampler
+/// owns `Rng::new(seed ^ PARTICIPATION_SALT)` so the schedule cannot
+/// perturb any other seeded stream (distinct from the eval planner's
+/// `EVAL_PLAN_SALT`).
+const PARTICIPATION_SALT: u64 = 0x5A3D_91C7_0B6E_F24D;
+
+/// Per-run sampling state: which devices participate in the current
+/// aggregation period, and the Horvitz–Thompson multiplier (`1 / π_i`)
+/// applied to each sampled device's aggregation weight. One instance
+/// lives in the session (`None` under `Full`), re-resolved at every
+/// period start over the then-active devices.
+#[derive(Debug, Clone)]
+pub struct ParticipationState {
+    schedule: ParticipationSchedule,
+    rng: Rng,
+    /// Whether device `i` participates this period. Devices entering
+    /// mid-period stay unsampled until the next resolution (they would be
+    /// unsynced and excluded from the aggregate anyway).
+    pub sampled: Vec<bool>,
+    /// `1 / π_i` for sampled devices, `1.0` otherwise.
+    pub weight_scale: Vec<f64>,
+    /// Degenerate period (`Full`-equivalent): `k` covered every active
+    /// device, so the whole sampling machinery — cost wrapper, train
+    /// gate, reweighting — is bypassed and the period is bitwise the
+    /// pre-subsystem engine.
+    pub full_period: bool,
+}
+
+impl ParticipationState {
+    /// Materialize sampling state for a run of `n` devices. Returns
+    /// `None` under `Full`: the absence of state (not a disabled flag) is
+    /// what pins the default to the pre-subsystem code path.
+    pub fn new(schedule: ParticipationSchedule, n: usize, seed: u64) -> Option<ParticipationState> {
+        if schedule == ParticipationSchedule::Full {
+            return None;
+        }
+        Some(ParticipationState {
+            schedule,
+            rng: Rng::new(seed ^ PARTICIPATION_SALT),
+            sampled: vec![true; n],
+            weight_scale: vec![1.0; n],
+            full_period: true,
+        })
+    }
+
+    /// Draw the participant set for the period starting now. `active` is
+    /// the post-churn activity mask; `score` supplies the importance score
+    /// of an active device (ignored under `UniformK`, must be finite and
+    /// positive to carry weight — degenerate scores fall back to uniform
+    /// mass).
+    ///
+    /// When `k` covers every active device the period degrades to `Full`
+    /// **exactly** and no RNG output is consumed, so alternating
+    /// degenerate and sampled periods cannot shift later draws.
+    pub fn resolve_period(&mut self, active: &[bool], mut score: impl FnMut(usize) -> f64) {
+        let n = active.len();
+        debug_assert_eq!(n, self.sampled.len());
+        for i in 0..n {
+            self.sampled[i] = false;
+            self.weight_scale[i] = 1.0;
+        }
+        let ids: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+        let m = ids.len();
+        let k = match self.schedule {
+            ParticipationSchedule::Full => m,
+            ParticipationSchedule::UniformK { k } | ParticipationSchedule::ImportanceK { k } => k,
+        };
+        if k >= m {
+            self.full_period = true;
+            for &i in &ids {
+                self.sampled[i] = true;
+            }
+            return;
+        }
+        self.full_period = false;
+        match self.schedule {
+            ParticipationSchedule::Full => unreachable!("Full materializes no state"),
+            ParticipationSchedule::UniformK { k } => {
+                let scale = m as f64 / k as f64;
+                for slot in self.rng.sample_indices(m, k) {
+                    let i = ids[slot];
+                    self.sampled[i] = true;
+                    self.weight_scale[i] = scale;
+                }
+            }
+            ParticipationSchedule::ImportanceK { k } => {
+                let scores: Vec<f64> = ids
+                    .iter()
+                    .map(|&i| {
+                        let s = score(i);
+                        if s.is_finite() && s > 0.0 {
+                            s
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                let pi = inclusion_probabilities(&scores, k);
+                self.systematic_pps(&ids, &pi, k);
+            }
+        }
+    }
+
+    /// Systematic probability-proportional-to-size draw: one uniform `u`
+    /// selects the units whose cumulative-`π` interval contains a point of
+    /// `{u, u+1, …, u+k-1}` (valid because `Σ π_i = k` and every
+    /// `π_i ≤ 1`, so each unit is hit at most once). A single RNG output
+    /// per period keeps the stream advance schedule-independent.
+    fn systematic_pps(&mut self, ids: &[usize], pi: &[f64], k: usize) {
+        let u = self.rng.f64();
+        let mut cum = 0.0;
+        let mut next = 0usize;
+        for (slot, &i) in ids.iter().enumerate() {
+            let hi = cum + pi[slot];
+            while next < k && (u + next as f64) < hi {
+                next += 1;
+                if !self.sampled[i] {
+                    self.sampled[i] = true;
+                    self.weight_scale[i] = 1.0 / pi[slot];
+                }
+            }
+            cum = hi;
+        }
+        // float-drift backstop: if accumulated rounding starved a target,
+        // top up deterministically with the largest unsampled π
+        let mut selected = ids.iter().filter(|&&i| self.sampled[i]).count();
+        while selected < k {
+            let Some((slot, &i)) = ids
+                .iter()
+                .enumerate()
+                .filter(|&(_, &i)| !self.sampled[i])
+                .max_by(|a, b| pi[a.0].partial_cmp(&pi[b.0]).unwrap())
+            else {
+                break;
+            };
+            self.sampled[i] = true;
+            self.weight_scale[i] = 1.0 / pi[slot].max(f64::MIN_POSITIVE);
+            selected += 1;
+        }
+    }
+}
+
+/// Horvitz–Thompson inclusion probabilities for a size-`k`
+/// without-replacement PPS draw: `π_i = k·s_i / Σs`, iteratively capping
+/// units that exceed 1 (they enter with certainty) and re-solving over the
+/// rest, so `Σ π_i = k` exactly. All-zero score vectors fall back to
+/// uniform mass (every unit equally likely).
+fn inclusion_probabilities(scores: &[f64], k: usize) -> Vec<f64> {
+    let m = scores.len();
+    debug_assert!(k < m);
+    let total: f64 = scores.iter().sum();
+    let uniform = vec![1.0; m];
+    let scores = if total > 0.0 { scores } else { &uniform[..] };
+    let mut pi = vec![0.0; m];
+    let mut capped = vec![false; m];
+    let mut k_rem = k;
+    loop {
+        let total: f64 = (0..m).filter(|&i| !capped[i]).map(|i| scores[i]).sum();
+        if k_rem == 0 || total <= 0.0 {
+            for i in (0..m).filter(|&i| !capped[i]) {
+                pi[i] = 0.0;
+            }
+            break;
+        }
+        let mut newly = 0usize;
+        for i in 0..m {
+            if capped[i] {
+                continue;
+            }
+            let p = k_rem as f64 * scores[i] / total;
+            if p >= 1.0 {
+                capped[i] = true;
+                pi[i] = 1.0;
+                newly += 1;
+            } else {
+                pi[i] = p;
+            }
+        }
+        if newly == 0 {
+            break;
+        }
+        k_rem -= newly;
+    }
+    pi
+}
+
+/// Capacity-zero view of a cost oracle for unsampled devices: costs and
+/// link/error terms pass through untouched, but an unsampled device's
+/// node capacity reads as 0, so the movement solver can only route its
+/// collected data outward (offload to a sampled neighbor or discard per
+/// the cost trade-off) — the "offload-only source" of the device-sampling
+/// papers. The mask is the period's participant set for both the `t` and
+/// `t+1` oracle queries; data already in flight toward a device that the
+/// *next* period leaves unsampled is discarded (and charged) by the train
+/// gate instead.
+#[derive(Debug)]
+pub struct ParticipationCosts<'a> {
+    pub inner: &'a dyn MovementCosts,
+    pub sampled: &'a [bool],
+}
+
+impl MovementCosts for ParticipationCosts<'_> {
+    fn c_node(&self, t: usize, i: usize) -> f64 {
+        self.inner.c_node(t, i)
+    }
+    fn c_link(&self, t: usize, i: usize, j: usize) -> f64 {
+        self.inner.c_link(t, i, j)
+    }
+    fn f(&self, t: usize, i: usize) -> f64 {
+        self.inner.f(t, i)
+    }
+    fn cap_node_at(&self, t: usize, i: usize) -> f64 {
+        if self.sampled[i] {
+            self.inner.cap_node_at(t, i)
+        } else {
+            0.0
+        }
+    }
+    fn cap_link_at(&self, t: usize, i: usize, j: usize) -> f64 {
+        self.inner.cap_link_at(t, i, j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::CostSchedule;
+
+    #[test]
+    fn schedule_parses() {
+        assert_eq!(ParticipationSchedule::parse("full").unwrap(), ParticipationSchedule::Full);
+        assert_eq!(
+            ParticipationSchedule::parse("Uniform:3").unwrap(),
+            ParticipationSchedule::UniformK { k: 3 }
+        );
+        assert_eq!(
+            ParticipationSchedule::parse("importance:8").unwrap(),
+            ParticipationSchedule::ImportanceK { k: 8 }
+        );
+        assert!(ParticipationSchedule::parse("uniform:0").is_err());
+        assert!(ParticipationSchedule::parse("uniform").is_err());
+        assert!(ParticipationSchedule::parse("uniform:x").is_err());
+        assert!(ParticipationSchedule::parse("topk:3").is_err());
+        assert_eq!(ParticipationSchedule::default(), ParticipationSchedule::Full);
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for s in [
+            ParticipationSchedule::Full,
+            ParticipationSchedule::UniformK { k: 4 },
+            ParticipationSchedule::ImportanceK { k: 7 },
+        ] {
+            assert_eq!(ParticipationSchedule::parse(&s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn full_materializes_no_state() {
+        assert!(ParticipationState::new(ParticipationSchedule::Full, 8, 1).is_none());
+        assert!(ParticipationState::new(ParticipationSchedule::UniformK { k: 2 }, 8, 1).is_some());
+    }
+
+    #[test]
+    fn uniform_draws_exactly_k_active_devices() {
+        let mut st =
+            ParticipationState::new(ParticipationSchedule::UniformK { k: 3 }, 10, 42).unwrap();
+        let mut active = vec![true; 10];
+        active[2] = false;
+        active[7] = false;
+        for _ in 0..50 {
+            st.resolve_period(&active, |_| 1.0);
+            assert!(!st.full_period);
+            let picked: Vec<usize> = (0..10).filter(|&i| st.sampled[i]).collect();
+            assert_eq!(picked.len(), 3);
+            assert!(picked.iter().all(|&i| active[i]), "{picked:?}");
+            for &i in &picked {
+                // π = k/m = 3/8 -> scale = 8/3
+                assert!((st.weight_scale[i] - 8.0 / 3.0).abs() < 1e-12);
+            }
+            for i in (0..10).filter(|&i| !st.sampled[i]) {
+                assert_eq!(st.weight_scale[i], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_marginals_match_inclusion_probability() {
+        let (n, k, periods) = (10usize, 3usize, 4000usize);
+        let mut st =
+            ParticipationState::new(ParticipationSchedule::UniformK { k }, n, 7).unwrap();
+        let active = vec![true; n];
+        let mut hits = vec![0usize; n];
+        for _ in 0..periods {
+            st.resolve_period(&active, |_| 1.0);
+            for i in 0..n {
+                hits[i] += usize::from(st.sampled[i]);
+            }
+        }
+        let expect = k as f64 / n as f64;
+        for (i, &h) in hits.iter().enumerate() {
+            let freq = h as f64 / periods as f64;
+            assert!((freq - expect).abs() < 0.03, "device {i}: freq={freq} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn sampler_is_seed_deterministic() {
+        let mk = || {
+            ParticipationState::new(ParticipationSchedule::ImportanceK { k: 4 }, 12, 99).unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let active = vec![true; 12];
+        for _ in 0..20 {
+            a.resolve_period(&active, |i| 1.0 + i as f64);
+            b.resolve_period(&active, |i| 1.0 + i as f64);
+            assert_eq!(a.sampled, b.sampled);
+            assert_eq!(a.weight_scale, b.weight_scale);
+        }
+        let mut c =
+            ParticipationState::new(ParticipationSchedule::ImportanceK { k: 4 }, 12, 100).unwrap();
+        let mut diverged = false;
+        for _ in 0..20 {
+            a.resolve_period(&active, |i| 1.0 + i as f64);
+            c.resolve_period(&active, |i| 1.0 + i as f64);
+            diverged |= a.sampled != c.sampled;
+        }
+        assert!(diverged, "different seeds never diverged");
+    }
+
+    #[test]
+    fn degenerate_k_covers_all_and_consumes_no_rng() {
+        let schedule = ParticipationSchedule::UniformK { k: 3 };
+        let mut with_degenerate = ParticipationState::new(schedule, 8, 5).unwrap();
+        let mut without = ParticipationState::new(schedule, 8, 5).unwrap();
+        let all = vec![true; 8];
+        let mut few = vec![false; 8];
+        few[1] = true;
+        few[4] = true;
+
+        // k >= m: full-period degradation, everyone active is in
+        with_degenerate.resolve_period(&few, |_| 1.0);
+        assert!(with_degenerate.full_period);
+        assert_eq!(
+            (0..8).filter(|&i| with_degenerate.sampled[i]).collect::<Vec<_>>(),
+            vec![1, 4]
+        );
+        assert!(with_degenerate.weight_scale.iter().all(|&w| w == 1.0));
+
+        // ...and it must not have advanced the RNG: the next sampled
+        // period matches a state that never saw the degenerate one
+        with_degenerate.resolve_period(&all, |_| 1.0);
+        without.resolve_period(&all, |_| 1.0);
+        assert!(!with_degenerate.full_period);
+        assert_eq!(with_degenerate.sampled, without.sampled);
+    }
+
+    #[test]
+    fn inclusion_probabilities_sum_to_k_and_cap_at_one() {
+        let pi = inclusion_probabilities(&[1.0, 1.0, 1.0, 1.0], 2);
+        assert!(pi.iter().all(|&p| (p - 0.5).abs() < 1e-12));
+
+        // one dominant score: capped at 1, remainder spread over the rest
+        let pi = inclusion_probabilities(&[100.0, 1.0, 1.0, 1.0, 1.0], 2);
+        assert_eq!(pi[0], 1.0);
+        for &p in &pi[1..] {
+            assert!((p - 0.25).abs() < 1e-12, "{pi:?}");
+        }
+        let sum: f64 = pi.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-9, "{pi:?}");
+
+        // all-zero scores fall back to uniform
+        let pi = inclusion_probabilities(&[0.0, 0.0, 0.0], 2);
+        assert!(pi.iter().all(|&p| (p - 2.0 / 3.0).abs() < 1e-12), "{pi:?}");
+    }
+
+    #[test]
+    fn importance_draws_exactly_k_and_prefers_high_scores() {
+        let n = 12;
+        let mut st =
+            ParticipationState::new(ParticipationSchedule::ImportanceK { k: 4 }, n, 21).unwrap();
+        let active = vec![true; n];
+        let mut hits = vec![0usize; n];
+        let periods = 2000;
+        for _ in 0..periods {
+            st.resolve_period(&active, |i| if i < 4 { 8.0 } else { 1.0 });
+            let picked = (0..n).filter(|&i| st.sampled[i]).count();
+            assert_eq!(picked, 4);
+            for i in 0..n {
+                if st.sampled[i] {
+                    hits[i] += 1;
+                    assert!(st.weight_scale[i] >= 1.0 - 1e-12, "scale under 1: {}", st.weight_scale[i]);
+                }
+            }
+        }
+        let hot = hits[..4].iter().sum::<usize>() as f64 / 4.0;
+        let cold = hits[4..].iter().sum::<usize>() as f64 / (n - 4) as f64;
+        assert!(hot > 2.0 * cold, "hot={hot} cold={cold}");
+    }
+
+    #[test]
+    fn participation_costs_zero_unsampled_node_capacity_only() {
+        let mut sched = CostSchedule::zeros(3, 2);
+        for t in 0..2 {
+            for i in 0..3 {
+                sched.compute[t][i] = 1.5;
+                sched.error_weight[t][i] = 2.5;
+                sched.cap_node[t][i] = 10.0;
+                for j in 0..3 {
+                    sched.link[t][i * 3 + j] = 0.5;
+                    sched.cap_link[t][i * 3 + j] = 20.0;
+                }
+            }
+        }
+        let sampled = vec![true, false, true];
+        let wrapped = ParticipationCosts { inner: &sched, sampled: &sampled };
+        for t in 0..2 {
+            assert_eq!(wrapped.cap_node_at(t, 0), 10.0);
+            assert_eq!(wrapped.cap_node_at(t, 1), 0.0);
+            assert_eq!(wrapped.cap_node_at(t, 2), 10.0);
+            for i in 0..3 {
+                assert_eq!(wrapped.c_node(t, i), 1.5);
+                assert_eq!(wrapped.f(t, i), 2.5);
+                for j in 0..3 {
+                    assert_eq!(wrapped.c_link(t, i, j), 0.5);
+                    assert_eq!(wrapped.cap_link_at(t, i, j), 20.0);
+                }
+            }
+        }
+    }
+}

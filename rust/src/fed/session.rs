@@ -35,12 +35,13 @@ use crate::config::{
     CapacityPolicy, Churn, EngineConfig, InfoMode, Method, MovementBackend, TopologyKind,
     TrainPath,
 };
-use crate::costs::{estimator, traces, CapacityMode, CostSchedule};
+use crate::costs::{estimator, traces, CapacityMode, CostSchedule, MovementCosts};
 use crate::data::dataset::Dataset;
 use crate::data::{Arrivals, Partitioner, SynthDigits};
 use crate::fed::accounting::{IntervalStats, Ledger, MovementTotals};
 use crate::fed::aggregator;
 use crate::fed::eval::{self, EvalPath, EvalPlan, EvalWork};
+use crate::fed::participation::{ParticipationCosts, ParticipationState};
 use crate::fed::similarity;
 use crate::fed::trainer::{DeviceWork, Trainer};
 use crate::movement::{self, MovementPlan, MovementProblem, SolverWorkspace, SparsePlan};
@@ -390,6 +391,10 @@ pub struct Session<'a, C: Compute> {
     eval_plan: Option<EvalPlan>,
     /// Reusable single-slot buffer for curve evaluations.
     eval_work: Vec<EvalWork>,
+    /// Per-period device sampling state (`cfg.participation`); `None`
+    /// under the `Full` default, which is what pins the default to the
+    /// pre-subsystem code path bit-for-bit (DESIGN.md §Perf rule 13).
+    participation: Option<ParticipationState>,
 }
 
 impl<'a, C: Compute> Session<'a, C> {
@@ -413,6 +418,7 @@ impl<'a, C: Compute> Session<'a, C> {
                 .eval_curve
                 .then(|| EvalPlan::new(cfg.eval_schedule, sub.test.len(), cfg.seed)),
             eval_work: Vec::new(),
+            participation: ParticipationState::new(cfg.participation, cfg.n, cfg.seed),
         })
     }
 
@@ -426,7 +432,12 @@ impl<'a, C: Compute> Session<'a, C> {
     /// old every-inactive-device sweep because a device's `h` can only
     /// become nonzero while it is active (so it is already 0 for devices
     /// that stayed inactive).
-    pub fn step_churn(&mut self, _t: usize) {
+    ///
+    /// At each aggregation-period start (`t % τ == 0`) the participation
+    /// sampler — when one exists — draws the period's participant set over
+    /// the post-churn active devices, so `k >= n_active` periods degrade
+    /// to `Full` exactly.
+    pub fn step_churn(&mut self, t: usize) {
         let delta = self.churn.step(&mut self.churn_rng);
         for &i in &delta.entered {
             self.state.synced[i] = false;
@@ -436,6 +447,25 @@ impl<'a, C: Compute> Session<'a, C> {
             self.state.h[i] = 0.0;
         }
         self.ws.active.apply(delta);
+        if t % self.cfg.tau == 0 {
+            if let Some(p) = self.participation.as_mut() {
+                let arrivals = &self.sub.arrivals;
+                let costs = &self.sub.belief_costs;
+                let t_end = (t + self.cfg.tau).min(self.cfg.t_max);
+                // importance score: the data volume the device will collect
+                // this period, discounted by its believed mean processing
+                // cost — devices holding much cheap-to-process data matter
+                // most (both score inputs are substrate-deterministic)
+                p.resolve_period(self.ws.active.as_slice(), |i| {
+                    let volume: usize =
+                        (t..t_end).map(|s| arrivals.schedule[i][s].len()).sum();
+                    let span = (t_end - t).max(1) as f64;
+                    let mean_cost: f64 =
+                        (t..t_end).map(|s| costs.c_node(s, i)).sum::<f64>() / span;
+                    (1.0 + volume as f64) / (1.0 + mean_cost.max(0.0))
+                });
+            }
+        }
     }
 
     /// Materialize this interval's arrivals `D_i(t)` for active devices.
@@ -464,6 +494,25 @@ impl<'a, C: Compute> Session<'a, C> {
             self.cfg.method == Method::NetworkAware && self.backend == MovementBackend::Sparse;
         match self.cfg.method {
             Method::NetworkAware => {
+                // Under a sampling period, unsampled devices become
+                // offload-only sources: a capacity-zero view of the belief
+                // oracle forces the solver to route their collections to
+                // sampled neighbors or discard them (never a cost
+                // override — 0 × ∞ hazards live that way). Full periods
+                // skip the wrapper entirely, keeping the historical
+                // problem construction bit-for-bit.
+                let sampling = self
+                    .participation
+                    .as_ref()
+                    .filter(|p| !p.full_period)
+                    .map(|p| ParticipationCosts {
+                        inner: &self.sub.belief_costs,
+                        sampled: &p.sampled,
+                    });
+                let costs: &dyn MovementCosts = match &sampling {
+                    Some(wrapped) => wrapped,
+                    None => &self.sub.belief_costs,
+                };
                 // The solvers filter on the active mask themselves, and the
                 // base graph's adjacency is natively sorted, so solving over
                 // (base graph, mask) is bit-identical to the historical
@@ -475,7 +524,7 @@ impl<'a, C: Compute> Session<'a, C> {
                     active: self.ws.active.as_slice(),
                     d: &self.ws.d,
                     inbound_prev: &self.ws.inbound_counts,
-                    costs: &self.sub.belief_costs,
+                    costs,
                     discard_model: self.cfg.discard_model,
                 };
                 if use_sparse {
@@ -528,17 +577,25 @@ impl<'a, C: Compute> Session<'a, C> {
     /// for the whole interval instead of one per device per chunk).
     pub fn step_train(&mut self, t: usize) -> Result<()> {
         let n = self.cfg.n;
+        // devices a sampling period benched: they neither process nor
+        // train — whatever still reaches their queue (cross-period
+        // offloads in flight, mid-period entrants) is lost like data at
+        // an exited device
+        let unsampled = |p: &Option<ParticipationState>, i: usize| {
+            matches!(p, Some(p) if !p.full_period && !p.sampled[i])
+        };
         self.ws.trainee_ids.clear();
         for i in 0..n {
             self.ws.workload.clear();
             self.ws.workload.extend_from_slice(&self.state.inbound[i]);
             self.state.inbound[i].clear();
             self.ws.workload.extend_from_slice(&self.ws.new_data[i]);
-            if self.ws.workload.is_empty() || !self.ws.active[i] {
+            let benched = !self.ws.active[i] || unsampled(&self.participation, i);
+            if self.ws.workload.is_empty() || benched {
                 // inactive devices drop their queue (worst case: data at an
                 // exited device is unreachable); its discard cost is charged
                 // since the network loses those points.
-                if !self.ws.workload.is_empty() && !self.ws.active[i] {
+                if !self.ws.workload.is_empty() && benched {
                     self.state.ledger.discard +=
                         self.ws.workload.len() as f64 * self.sub.actual_costs.f(t, i);
                     self.ws.stats.discarded += self.ws.workload.len();
@@ -632,11 +689,20 @@ impl<'a, C: Compute> Session<'a, C> {
             return Ok(());
         }
         let n = self.cfg.n;
+        // Horvitz–Thompson correction under a sampling period: each
+        // sampled device's eq. (4) weight is its processed count scaled by
+        // 1/π_i, so the weighted average stays unbiased for the full-
+        // participation aggregate. Full periods multiply by nothing at
+        // all — the historical weights, bit-for-bit.
+        let scale = |i: usize| match &self.participation {
+            Some(p) if !p.full_period => self.state.h[i] * p.weight_scale[i],
+            _ => self.state.h[i],
+        };
         let contributions: Vec<(&Params, f64)> = (0..n)
             .filter(|&i| self.ws.active[i] && self.state.synced[i])
-            .map(|i| (&self.state.device_params[i], self.state.h[i]))
+            .map(|i| (&self.state.device_params[i], scale(i)))
             .collect();
-        let new_global = aggregator::aggregate(&contributions);
+        let new_global = aggregator::aggregate(&contributions)?;
         if let Some(g) = new_global {
             self.state.global = g;
         }

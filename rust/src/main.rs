@@ -12,10 +12,12 @@
 //!             [--eval-path auto|batched|scalar]
 //!             [--movement-backend auto|dense|sparse] [--warm-start]
 //!             [--solver-threads auto|K] [--services K]
+//!             [--participation full|uniform:K|importance:K]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
 //!             [--solver-threads auto|K]
+//!             [--participation full|uniform:K|importance:K]
 //!             [--services K] [--shard I/N] [--shard-format json|binary]
 //! fogml merge <shard-dir> [--out DIR]
 //! fogml shard convert <file|dir> --to json|binary [--out DIR]
@@ -81,6 +83,17 @@
 //! geometry depends only on the device count, so every setting produces
 //! bit-identical plans — the flag changes wall time, never results
 //! (DESIGN.md §Perf rule 12).
+//!
+//! `--participation` samples K of the active devices per aggregation
+//! period (`fed::participation`): `uniform:K` draws uniformly,
+//! `importance:K` draws proportionally to data volume over believed
+//! processing cost with Horvitz–Thompson reweighting in the aggregator.
+//! Unsampled devices become offload-only sources in the movement problem
+//! (capacity zero), so their collections flow toward sampled neighbors.
+//! `full` (the default) materializes no sampling state and is
+//! bit-identical to previous releases; the schedule is an identity field
+//! in shard files — `fogml merge` refuses mixed-schedule sets (DESIGN.md
+//! §Perf rule 13).
 
 use anyhow::{bail, Result};
 
@@ -95,6 +108,7 @@ use fogml::costs::{CostSource, Medium};
 use fogml::experiments::{self, ExpOptions};
 use fogml::fed;
 use fogml::fed::eval::{EvalPath, EvalSchedule};
+use fogml::fed::participation::ParticipationSchedule;
 use fogml::movement::DiscardModel;
 use fogml::runtime::{ModelKind, Runtime};
 
@@ -188,6 +202,9 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     if let Some(v) = args.get("solver-threads") {
         cfg.solver_threads = SolverThreads::parse(v)?;
     }
+    if let Some(p) = args.get("participation") {
+        cfg.participation = ParticipationSchedule::parse(p)?;
+    }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;
     if p_exit > 0.0 || p_entry > 0.0 {
@@ -276,6 +293,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
         services: args.get_parsed("services")?,
         solver_threads: match args.get("solver-threads") {
             Some(v) => Some(SolverThreads::parse(v)?),
+            None => None,
+        },
+        participation: match args.get("participation") {
+            Some(p) => Some(ParticipationSchedule::parse(p)?),
             None => None,
         },
         shard: match args.get("shard") {

@@ -292,6 +292,39 @@ fn load_shard_set_rejects_mixed_formats() {
 }
 
 #[test]
+fn load_shard_set_rejects_mixed_participation_schedules() {
+    // the participation schedule is a grid *identity* (DESIGN §Perf
+    // rule 13): shards recorded under different schedules sample
+    // different device subsets, so merging them would silently mix
+    // incomparable runs. The recorded-options check must refuse the
+    // set in both on-disk formats.
+    for format in [ShardFormat::Json, ShardFormat::Binary] {
+        let dir = scratch(&format!("mixed_participation_{}", format.extension()));
+        let participation_blob = |label: &str| {
+            Json::obj(vec![
+                ("seeds", Json::from(1usize)),
+                ("model", Json::Null),
+                ("curve", Json::from(false)),
+                ("eval_schedule", Json::from("full")),
+                ("participation", Json::from(label)),
+            ])
+        };
+        let mut f1 = mk_file("table3", 1, 2, 4, 7);
+        f1.opts = participation_blob("full");
+        f1.save_as(&dir, format).unwrap();
+        let mut f2 = mk_file("table3", 2, 2, 4, 7);
+        f2.opts = participation_blob("uniform:2");
+        f2.save_as(&dir, format).unwrap();
+        let err = shard::load_shard_set(&dir).unwrap_err().to_string();
+        assert!(
+            err.contains("recorded options disagree"),
+            "unhelpful error (.{} shards): {err}",
+            format.extension()
+        );
+    }
+}
+
+#[test]
 fn load_shard_set_ignores_unrelated_files() {
     let dir = scratch("unrelated");
     mk_file("table3", 1, 2, 4, 7).save(&dir).unwrap();
