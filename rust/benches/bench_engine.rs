@@ -38,6 +38,18 @@
 //! counts — the point of sampling is that unsampled devices never reach
 //! the compute backend, and the dispatch ratio makes that visible.
 //!
+//! The `aggregation` section is pure CPU too: the copy-on-write epoch
+//! data plane (§Perf rule 14) at N ∈ {10³, 10⁴, 10⁵} devices ×
+//! aggregation threads {1, 2, 4, 8}. Each run drives synthetic periods —
+//! 10% of devices clone-on-train (`Arc::make_mut`), chunk-parallel
+//! `aggregate_chunked`, pointer-bump resync — against a deep-clone-resync
+//! reference, asserting every thread count and both resync strategies
+//! produce bitwise-identical global parameters, and reporting periods/sec,
+//! resident parameter bytes, and parameter bytes deep-copied per period
+//! (the COW plane must copy ≥ 5× fewer at N = 10⁵; asserted). Its
+//! `session` rows run the real engine (stub compute) with the O(t_max·n)
+//! trace state off vs on — scaling benches run untraced.
+//!
 //! The `shard_io` section is pure CPU too — it times the sweep-sharding
 //! I/O path (§Perf rule 9) both ways: a synthetic 4-shard set of
 //! 12 000 full `EngineOutput` runs written and reassembled
@@ -51,6 +63,7 @@
 
 use std::cell::Cell;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use fogml::config::{EngineConfig, Method, TrainPath};
@@ -60,11 +73,12 @@ use fogml::costs::MovementCosts;
 use fogml::experiments::common::seed_sweep;
 use fogml::fed;
 use fogml::fed::accounting::{IntervalStats, Ledger, MovementTotals};
+use fogml::fed::aggregator;
 use fogml::fed::eval::{EvalPath, EvalSchedule, EvalWork};
 use fogml::fed::session::{run_with, Compute, Params};
 use fogml::fed::{EngineOutput, ParticipationSchedule, Substrates, Trainer};
 use fogml::movement::{self, convex, DiscardModel, MovementProblem, SolverWorkspace};
-use fogml::runtime::{ModelKind, Runtime};
+use fogml::runtime::{HostTensor, ModelKind, Runtime};
 use fogml::topology::generators::random_geometric_with_positions;
 use fogml::topology::{ActiveView, ChurnProcess, Graph};
 use fogml::util::json::Json;
@@ -418,6 +432,225 @@ fn participation_section() -> Json {
         ]));
     }
     Json::obj(vec![("rows", Json::Arr(rows))])
+}
+
+// -- aggregation: COW epoch plane vs deep-clone resync (pure CPU) -----------
+
+/// Per-replica parameter footprint of the synthetic model: one
+/// 512-element f32 layer (2 KiB) — small enough that the N = 10⁵
+/// deep-clone reference still fits in memory, large enough that the
+/// copied-bytes gap dominates the period cost.
+const AGG_PARAM_ELEMS: usize = 512;
+const AGG_PERIODS: usize = 3;
+/// Fraction of devices that train (and therefore unshare) each period.
+const AGG_TRAINEE_SHARE: usize = 10;
+
+struct AggOutcome {
+    secs: f64,
+    /// Parameter bytes deep-copied per period: clone-on-train for the COW
+    /// plane, whole-population resync for the clone plane.
+    copied_bytes_per_period: usize,
+    /// Resident parameter bytes right after the final resync.
+    resident_bytes: usize,
+    /// Final global parameters — the bitwise witness across thread counts
+    /// and between the two resync strategies.
+    global: Params,
+}
+
+/// Drive `AGG_PERIODS` synthetic aggregation periods over `n` devices:
+/// a deterministic 1/`AGG_TRAINEE_SHARE` trainee set perturbs its replica,
+/// the trainees aggregate through `aggregate_chunked(threads)`, and the
+/// new global resyncs to every device — by pointer bump (`cow`) or by
+/// deep clone (the pre-rule-14 plane).
+fn agg_run(n: usize, threads: usize, cow: bool) -> AggOutcome {
+    let param_bytes = AGG_PARAM_ELEMS * std::mem::size_of::<f32>();
+    let init: Params = vec![HostTensor::new(
+        vec![AGG_PARAM_ELEMS],
+        (0..AGG_PARAM_ELEMS).map(|k| (k as f32 * 0.01).sin()).collect(),
+    )];
+    let mut copied_total = 0usize;
+    let start = Instant::now();
+    let mut global = Arc::new(init);
+    let mut cow_params: Vec<Arc<Params>> =
+        if cow { vec![Arc::clone(&global); n] } else { Vec::new() };
+    let mut clone_params: Vec<Params> =
+        if cow { Vec::new() } else { vec![(*global).clone(); n] };
+    for period in 0..AGG_PERIODS {
+        // deterministic, period-shifted trainee set (no wraparound:
+        // period < AGG_TRAINEE_SHARE keeps every index distinct)
+        let trainees: Vec<usize> = (0..n / AGG_TRAINEE_SHARE)
+            .map(|j| j * AGG_TRAINEE_SHARE + period)
+            .collect();
+        for &i in &trainees {
+            let delta = (i as f32 + 1.0) * 1e-4;
+            if cow {
+                // shared at period start ⇒ make_mut deep-copies exactly once
+                let p = Arc::make_mut(&mut cow_params[i]);
+                for x in p[0].data.iter_mut() {
+                    *x += delta;
+                }
+                copied_total += param_bytes;
+            } else {
+                for x in clone_params[i][0].data.iter_mut() {
+                    *x += delta;
+                }
+            }
+        }
+        let refs: Vec<(&Params, f64)> = trainees
+            .iter()
+            .map(|&i| {
+                let p: &Params =
+                    if cow { cow_params[i].as_ref() } else { &clone_params[i] };
+                (p, 1.0 + (i % 7) as f64)
+            })
+            .collect();
+        let agg = aggregator::aggregate_chunked(
+            &refs,
+            threads,
+            aggregator::CHUNK_CONTRIBUTORS,
+            aggregator::CHUNK_ELEMS,
+        )
+        .expect("aggregate")
+        .expect("positive total weight");
+        global = Arc::new(agg);
+        if cow {
+            for p in cow_params.iter_mut() {
+                *p = Arc::clone(&global);
+            }
+        } else {
+            for p in clone_params.iter_mut() {
+                p.clone_from(&global);
+                copied_total += param_bytes;
+            }
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let resident_bytes = if cow {
+        // after resync every Arc aliases the single global allocation
+        param_bytes + n * std::mem::size_of::<Arc<Params>>()
+    } else {
+        n * param_bytes
+    };
+    AggOutcome {
+        secs,
+        copied_bytes_per_period: copied_total / AGG_PERIODS,
+        resident_bytes,
+        global: (*global).clone(),
+    }
+}
+
+fn aggregation_section() -> Json {
+    let mut rows = Vec::new();
+    for n in [1_000usize, 10_000, 100_000] {
+        let cloned = agg_run(n, 1, false);
+        let mut serial: Option<AggOutcome> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let out = agg_run(n, threads, true);
+            match &serial {
+                Some(s) => assert_eq!(
+                    s.global, out.global,
+                    "aggregation threads={threads} diverged from serial at n={n}"
+                ),
+                // same trainee sets, same contributions: the two resync
+                // strategies must land on bitwise-identical globals
+                None => assert_eq!(
+                    cloned.global, out.global,
+                    "COW plane diverged from the deep-clone plane at n={n}"
+                ),
+            }
+            let copy_ratio = cloned.copied_bytes_per_period as f64
+                / out.copied_bytes_per_period.max(1) as f64;
+            if n == 100_000 && threads == 1 {
+                assert!(
+                    copy_ratio >= 5.0,
+                    "COW copied-bytes advantage collapsed at n={n}: {copy_ratio:.1}×"
+                );
+            }
+            let pps = runs_per_sec(AGG_PERIODS, out.secs);
+            println!(
+                "aggregation/n={n:<6} threads={threads}  cow {:>7.3}s ({pps:.1} periods/s, \
+                 {} copied B/period, {} resident B)  cloned {:>7.3}s ({} copied B/period, \
+                 {copy_ratio:.1}× more copied)",
+                out.secs,
+                out.copied_bytes_per_period,
+                out.resident_bytes,
+                cloned.secs,
+                cloned.copied_bytes_per_period,
+            );
+            rows.push(Json::obj(vec![
+                ("n", Json::from(n)),
+                ("threads", Json::from(threads)),
+                ("periods", Json::from(AGG_PERIODS)),
+                ("cow_s", Json::from(out.secs)),
+                ("cow_periods_per_sec", Json::from(pps)),
+                ("cow_copied_bytes_per_period", Json::from(out.copied_bytes_per_period)),
+                ("cow_resident_bytes", Json::from(out.resident_bytes)),
+                ("cloned_s", Json::from(cloned.secs)),
+                ("cloned_copied_bytes_per_period", Json::from(cloned.copied_bytes_per_period)),
+                ("cloned_resident_bytes", Json::from(cloned.resident_bytes)),
+                ("cloned_over_cow_copied", Json::from(copy_ratio)),
+            ]));
+            if serial.is_none() {
+                serial = Some(out);
+            }
+        }
+    }
+
+    // engine-in-the-loop rows: the real session state machine over a stub
+    // backend with the O(t_max·n) trace state off vs on — scaling runs go
+    // untraced; flipping the flag must not change any result field it
+    // doesn't own (asserted on accuracy)
+    let mut session_rows = Vec::new();
+    const SESSION_REPS: usize = 5;
+    let base = EngineConfig {
+        method: Method::NetworkAware,
+        n: 256,
+        t_max: 40,
+        tau: 4,
+        n_train: 1600,
+        n_test: 200,
+        ..Default::default()
+    };
+    let sub = Substrates::derive(&base);
+    let mut accuracies = Vec::new();
+    for trace in [false, true] {
+        let cfg = base.clone().with(|c| c.trace = trace);
+        let counter = Rc::new(Cell::new(0usize));
+        let start = Instant::now();
+        let mut last_accuracy = 0.0;
+        for _ in 0..SESSION_REPS {
+            let out = run_with(&cfg, &sub, CountingStub { train_dispatches: counter.clone() })
+                .expect("aggregation session run");
+            last_accuracy = out.accuracy;
+            std::hint::black_box(&out);
+        }
+        let secs = start.elapsed().as_secs_f64();
+        accuracies.push(last_accuracy);
+        let rps = runs_per_sec(SESSION_REPS, secs);
+        println!(
+            "aggregation/session n={} trace={trace:<5} {secs:>7.3}s ({rps:.1} runs/s)",
+            base.n
+        );
+        session_rows.push(Json::obj(vec![
+            ("n", Json::from(base.n)),
+            ("t_max", Json::from(base.t_max)),
+            ("runs", Json::from(SESSION_REPS)),
+            ("trace", Json::Bool(trace)),
+            ("secs", Json::from(secs)),
+            ("runs_per_sec", Json::from(rps)),
+        ]));
+    }
+    assert_eq!(
+        accuracies[0], accuracies[1],
+        "trace flag changed the session's accuracy"
+    );
+
+    Json::obj(vec![
+        ("param_elems", Json::from(AGG_PARAM_ELEMS)),
+        ("trainee_share", Json::from(AGG_TRAINEE_SHARE)),
+        ("rows", Json::Arr(rows)),
+        ("session", Json::Arr(session_rows)),
+    ])
 }
 
 // -- shard_io: binary vs JSON shard write + merge reassembly ----------------
@@ -840,6 +1073,7 @@ fn main() {
     // without runtime artifacts
     let scaling = scaling_section();
     let participation = participation_section();
+    let aggregation = aggregation_section();
     let shard_io = shard_io_section();
 
     let runtime = match Runtime::load_default() {
@@ -862,6 +1096,7 @@ fn main() {
         ("runtime", Json::from(runtime.is_some())),
         ("scaling", scaling),
         ("participation", participation),
+        ("aggregation", aggregation),
         ("shard_io", shard_io),
     ];
     if let Some(rt) = runtime {

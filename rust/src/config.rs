@@ -135,7 +135,7 @@ impl MovementBackend {
 }
 
 /// Worker-thread budget for the intra-solver parallel layer
-/// (`movement::par`; DESIGN.md §Perf rule 12). Chunk geometry is a
+/// (`util::par`; DESIGN.md §Perf rule 12). Chunk geometry is a
 /// function of n only and reductions combine per-chunk partials in
 /// ascending chunk order, so every setting produces **bit-identical**
 /// plans — this knob trades wall-clock only, never outputs.
@@ -244,6 +244,14 @@ pub struct EngineConfig {
     /// so the schedule is an identity field in the shard opts blob and
     /// mixed-schedule merges are refused.
     pub participation: ParticipationSchedule,
+    /// Record the O(t_max·n) per-device trace state (dense per-device
+    /// loss rows, collected/processed sample logs, and the label-
+    /// similarity summary derived from them). On by default — the CLI
+    /// front ends and fig4/similarity pipelines report these — and
+    /// purely observational: flipping it never changes accuracy, curves,
+    /// ledgers, or movement stats (DESIGN.md §Perf rule 14). Scaling
+    /// benches turn it off so resident state is O(n), not O(t_max·n).
+    pub trace: bool,
     pub seed: u64,
 }
 
@@ -285,6 +293,7 @@ impl Default for EngineConfig {
             warm_start: false,
             solver_threads: SolverThreads::Auto,
             participation: ParticipationSchedule::Full,
+            trace: true,
             seed: 1,
         }
     }
@@ -426,6 +435,16 @@ mod tests {
         // default selection — DESIGN.md §Perf rule 13)
         let c = EngineConfig::default();
         assert_eq!(c.participation, ParticipationSchedule::Full);
+    }
+
+    #[test]
+    fn trace_default_is_on() {
+        // the CLI front ends print the similarity summary and fig4 reads
+        // the dense loss rows, so default runs must keep recording the
+        // trace state; large-n scaling benches opt out explicitly
+        // (DESIGN.md §Perf rule 14; tests/aggregation.rs proves the flag
+        // is observation-only)
+        assert!(EngineConfig::default().trace);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! [`crate::fed::run`], or fanned out via [`crate::coordinator::pool::SimPool`].
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -69,7 +70,12 @@ pub struct ClusterReport {
 }
 
 enum ToDevice {
-    Round { params: Params, round: usize },
+    /// Round broadcast. The epoch params are shared copy-on-write
+    /// (DESIGN.md §Perf rule 14): the server sends n pointer bumps and
+    /// each actor materializes its private copy on its *own* thread, in
+    /// parallel — instead of the server deep-cloning |params| n times per
+    /// round before any device lifts a finger.
+    Round { params: Arc<Params>, round: usize },
     Stop,
 }
 
@@ -118,12 +124,12 @@ impl Cluster {
         drop(result_tx);
 
         // server loop
-        let mut global = global;
+        let mut global = Arc::new(global);
         let mut round_accuracy = Vec::with_capacity(cfg.rounds);
         let mut device_samples = vec![0usize; cfg.n_devices];
         for round in 0..cfg.rounds {
             for tx in &device_txs {
-                tx.send(ToDevice::Round { params: global.clone(), round })
+                tx.send(ToDevice::Round { params: Arc::clone(&global), round })
                     .map_err(|_| anyhow!("device actor died"))?;
             }
             let mut contributions: Vec<(Params, f64)> = Vec::with_capacity(cfg.n_devices);
@@ -137,9 +143,9 @@ impl Cluster {
             let refs: Vec<(&Params, f64)> =
                 contributions.iter().map(|(p, h)| (p, *h)).collect();
             if let Some(agg) = aggregator::aggregate(&refs)? {
-                global = agg;
+                global = Arc::new(agg);
             }
-            round_accuracy.push(handle.evaluate(global.clone())?);
+            round_accuracy.push(handle.evaluate((*global).clone())?);
         }
 
         for tx in &device_txs {
@@ -166,7 +172,10 @@ fn device_actor(
     while let Ok(msg) = rx.recv() {
         match msg {
             ToDevice::Round { params, round } => {
-                let mut params = params;
+                // clone off the shared epoch on the actor's own thread
+                // (try_unwrap succeeds — zero copy — only if every other
+                // holder already dropped its handle)
+                let mut params = Arc::try_unwrap(params).unwrap_or_else(|p| (*p).clone());
                 let mut processed = 0f64;
                 for step in 0..tau {
                     let t = round * tau + step;

@@ -43,8 +43,10 @@ thread_local! {
     /// fan-outs. `SolverThreads::Auto` divides `available_parallelism()`
     /// by this share so concurrent sessions don't oversubscribe cores.
     /// Deliberately NOT part of `EngineConfig`: it only gates *how many*
-    /// workers the (bit-invariant) row-parallel solver passes use, never
-    /// what they compute, so a per-invocation `--jobs` value must not
+    /// workers the (bit-invariant) fixed-chunk passes use — the
+    /// row-parallel movement solvers (§Perf rule 12) and the
+    /// chunk-parallel federated average (§Perf rule 14) — never what
+    /// they compute, so a per-invocation `--jobs` value must not
     /// perturb config fingerprints.
     static POOL_SHARE: Cell<usize> = const { Cell::new(1) };
 }

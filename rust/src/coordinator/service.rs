@@ -57,7 +57,12 @@ use crate::fed::session::Compute;
 use crate::fed::trainer::{DeviceWork, TileFill, TrainUnit, Trainer};
 use crate::runtime::{HostTensor, ModelKind, Runtime};
 
-/// Model parameters as they travel between threads.
+/// Model parameters as they travel between threads. Always moved by
+/// value — requests carry an *owned* tensor vector, never a shared
+/// handle — which is what lets the copy-on-write epoch store (DESIGN.md
+/// §Perf rule 14) stay session-local: callers materialize a private
+/// copy (`Arc::make_mut` / unwrap-or-clone) before dispatching, so the
+/// service thread can mutate freely without aliasing any replica.
 pub type Params = Vec<HostTensor>;
 
 /// Handle to a `(train, test)` dataset pair registered with the service.

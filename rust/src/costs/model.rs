@@ -22,7 +22,7 @@
 /// inherent accessors of [`CostSchedule`] (the canonical dense
 /// implementation); every method must be pure in `(t, i, j)` so solver
 /// passes can re-query freely. `Sync` because the row-parallel solver
-/// layer (`movement::par`, DESIGN.md §Perf rule 12) queries the oracle
+/// layer (`util::par`, DESIGN.md §Perf rule 12) queries the oracle
 /// from scoped worker threads concurrently.
 pub trait MovementCosts: std::fmt::Debug + Sync {
     /// Processing cost `c_i(t)`.

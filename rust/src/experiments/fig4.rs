@@ -26,7 +26,16 @@ pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
     // --- (a) per-device loss trajectories (single representative run) ------
     // under --curve the same run also traces test accuracy through the
     // fed::eval planner (fig4a_curve.csv)
-    let cfg = with_eval(base.clone().with(|c| c.iid = false), opts);
+    // fig4a reads the dense per-device loss rows: opt in to the trace
+    // state explicitly (on by default, but this driver *requires* it —
+    // DESIGN.md §Perf rule 14)
+    let cfg = with_eval(
+        base.clone().with(|c| {
+            c.iid = false;
+            c.trace = true;
+        }),
+        opts,
+    );
     let out = ctx.run_many(std::slice::from_ref(&cfg))?.remove(0);
     emit_curves(
         ctx,
@@ -72,6 +81,9 @@ pub fn run(opts: &ExpOptions, ctx: &SweepCtx) -> Result<()> {
                     // keep these cheap: similarity needs no long horizon
                     c.t_max = 40;
                     c.n_train = 3200;
+                    // the similarity pipeline is *built from* the
+                    // collected/processed trace logs — explicit opt-in
+                    c.trace = true;
                 })
                 .seeded(2000 + r as u64)
         })

@@ -11,16 +11,51 @@
 //! device's `H_i` by `1 / π_i` — the Horvitz–Thompson correction — before
 //! it reaches this function; the normalization below is otherwise
 //! unchanged.
+//!
+//! # Chunk-parallel evaluation (DESIGN.md §Perf rule 14)
+//!
+//! The averaging sum is evaluated on the crate-wide fixed-chunk layer
+//! ([`crate::util::par`]): contributors split into fixed
+//! [`CHUNK_CONTRIBUTORS`]-entry chunks, each chunk folds its own partial
+//! accumulator with the historical serial `axpy` chain, and the partials
+//! are combined serially in ascending chunk order. Chunk geometry depends
+//! on the contributor count only — never the thread count — so
+//! `--solver-threads K` is bit-invariant for every K, and with ≤ 512
+//! contributors (every paper-scale run) there is exactly **one** chunk
+//! whose internal term order replays the historical serial sweep bitwise.
+//! On the single-chunk path, large-tensor models additionally fan the
+//! *element* axis across threads in [`CHUNK_ELEMS`]-element blocks; each
+//! element's accumulation chain visits contributors in the same ascending
+//! order regardless of blocking, so that axis is bit-neutral by
+//! construction.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
+use crate::util::par;
 
 /// Model parameters: one tensor per layer, positionally matching the AOT
 /// entry's leading inputs.
 pub type Params = Vec<HostTensor>;
 
-/// Aggregate `(params, weight)` contributions.
+/// Contributors per chunk. Matches [`par::CHUNK_ROWS`] (and therefore
+/// [`crate::config::MovementBackend::AUTO_THRESHOLD`]): every paper-scale
+/// aggregation is a single chunk — historical bits — and by the time a
+/// period has thousands of contributors, per-chunk axpy work amortizes
+/// the thread handoff.
+pub const CHUNK_CONTRIBUTORS: usize = 512;
+
+/// Elements per block when the single-chunk path fans the element axis
+/// across threads (64 KiB of f32 per block — large enough that a block is
+/// worth a thread, small enough that MLP-scale layers still split).
+pub const CHUNK_ELEMS: usize = 1 << 14;
+
+fn zeros_like(p: &Params) -> Params {
+    p.iter().map(|t| HostTensor::zeros(t.shape.clone())).collect()
+}
+
+/// Aggregate `(params, weight)` contributions (serial entry point —
+/// exactly [`aggregate_chunked`] at one thread and default geometry).
 ///
 /// Contract (pinned by the unit tests below):
 /// * any non-finite weight (NaN or ±∞) is an error — a poisoned weight
@@ -29,32 +64,129 @@ pub type Params = Vec<HostTensor>;
 /// * `Ok(None)` when no positive weight remains (empty input or all-zero
 ///   weights) — the paper keeps the previous global model in that case.
 pub fn aggregate(contributions: &[(&Params, f64)]) -> Result<Option<Params>> {
+    aggregate_chunked(contributions, 1, CHUNK_CONTRIBUTORS, CHUNK_ELEMS)
+}
+
+/// [`aggregate`] with explicit thread count and chunk geometry.
+///
+/// Determinism contract: the result is a function of `contributions`,
+/// `chunk_contributors`, and `chunk_elems` only — **never** of `threads`.
+/// At the default geometry a single chunk (≤ 512 contributors) replays
+/// the historical serial axpy chain bitwise, and `chunk_elems` is
+/// bit-neutral at every value (per-element accumulation order is
+/// independent of element blocking). Both invariances are pinned by
+/// `tests/aggregation.rs`.
+pub fn aggregate_chunked(
+    contributions: &[(&Params, f64)],
+    threads: usize,
+    chunk_contributors: usize,
+    chunk_elems: usize,
+) -> Result<Option<Params>> {
     if let Some((i, &(_, h))) =
         contributions.iter().enumerate().find(|&(_, &(_, h))| !h.is_finite())
     {
         bail!("aggregate: non-finite weight {h} for contribution {i}");
     }
-    let total: f64 = contributions.iter().map(|&(_, h)| h).sum();
+    let n = contributions.len();
+    let nc = par::num_chunks(n, chunk_contributors);
+    // Chunked weight total: per-chunk serial sums combined ascending. A
+    // single chunk is exactly the historical `iter().sum()` fold
+    // (0.0 + h₀ + h₁ + …), so the normalizer — and with it every per-
+    // contributor `w` — replays bitwise at paper scale.
+    let mut h_partials = vec![0.0f64; nc];
+    par::run_chunks(threads, &mut h_partials, |c, out| {
+        let range = par::chunk_range(c, n, chunk_contributors);
+        *out = contributions[range].iter().map(|&(_, h)| h).sum();
+    });
+    let total = par::combine(&h_partials);
     if total <= 0.0 {
         return Ok(None);
     }
     let Some(&(first, _)) = contributions.iter().find(|&&(_, h)| h > 0.0) else {
         return Ok(None);
     };
-    let mut acc: Params = first
-        .iter()
-        .map(|t| HostTensor::zeros(t.shape.clone()))
-        .collect();
-    for &(params, h) in contributions {
-        if h <= 0.0 {
-            continue;
+    if nc <= 1 {
+        // historical term order; threads (if any) fan the element axis,
+        // which cannot reorder any single element's accumulation chain
+        let mut acc = zeros_like(first);
+        accumulate_elem_blocks(&mut acc, contributions, total, threads, chunk_elems);
+        return Ok(Some(acc));
+    }
+    // Per-chunk partial accumulators: each chunk runs the serial axpy
+    // chain over its own contributors (None when the chunk has no
+    // positive weight), then partials combine serially ascending —
+    // `((p₀ + p₁) + p₂) + …`, the one association every thread count
+    // reproduces.
+    let mut partials: Vec<Option<Params>> = vec![None; nc];
+    par::run_chunks(threads, &mut partials, |c, out| {
+        let range = par::chunk_range(c, n, chunk_contributors);
+        let mut acc: Option<Params> = None;
+        for &(params, h) in &contributions[range] {
+            if h <= 0.0 {
+                continue;
+            }
+            let w = (h / total) as f32;
+            let acc = acc.get_or_insert_with(|| zeros_like(params));
+            for (a, p) in acc.iter_mut().zip(params) {
+                a.axpy(w, p);
+            }
         }
-        let w = (h / total) as f32;
-        for (a, p) in acc.iter_mut().zip(params) {
-            a.axpy(w, p);
+        *out = acc;
+    });
+    let mut acc: Option<Params> = None;
+    for partial in partials.into_iter().flatten() {
+        match &mut acc {
+            None => acc = Some(partial),
+            Some(acc) => {
+                for (a, p) in acc.iter_mut().zip(&partial) {
+                    a.axpy(1.0, p);
+                }
+            }
         }
     }
-    Ok(Some(acc))
+    Ok(acc) // total > 0 guarantees at least one Some partial
+}
+
+/// One element block of the accumulator a worker owns exclusively.
+struct ElemBlock<'a> {
+    layer: usize,
+    start: usize,
+    data: &'a mut [f32],
+}
+
+/// Single-chunk accumulation with the element axis split into
+/// `chunk_elems`-element blocks fanned across `threads`. Every element's
+/// op sequence is `a += w·p` over positive contributors ascending —
+/// identical to the serial [`HostTensor::axpy`] chain for any blocking.
+fn accumulate_elem_blocks(
+    acc: &mut Params,
+    contributions: &[(&Params, f64)],
+    total: f64,
+    threads: usize,
+    chunk_elems: usize,
+) {
+    let chunk_elems = chunk_elems.max(1);
+    let mut blocks: Vec<ElemBlock> = Vec::new();
+    for (layer, t) in acc.iter_mut().enumerate() {
+        let mut start = 0usize;
+        for data in t.data.chunks_mut(chunk_elems) {
+            let len = data.len();
+            blocks.push(ElemBlock { layer, start, data });
+            start += len;
+        }
+    }
+    par::run_chunks(threads, &mut blocks, |_, b| {
+        for &(params, h) in contributions {
+            if h <= 0.0 {
+                continue;
+            }
+            let w = (h / total) as f32;
+            let src = &params[b.layer].data[b.start..b.start + b.data.len()];
+            for (a, p) in b.data.iter_mut().zip(src) {
+                *a += w * p;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -111,5 +243,45 @@ mod tests {
         assert!(err.to_string().contains("non-finite"), "{err}");
         assert!(aggregate(&[(&a, f64::INFINITY)]).is_err());
         assert!(aggregate(&[(&a, f64::NEG_INFINITY), (&b, 1.0)]).is_err());
+
+        // the chunked path keeps the poisoned-weight contract even when
+        // the NaN lands in a late chunk
+        let owned: Vec<Params> = (0..5).map(|i| p(i as f32)).collect();
+        let mut refs: Vec<(&Params, f64)> = owned.iter().map(|q| (q, 1.0)).collect();
+        refs[4].1 = f64::NAN;
+        assert!(aggregate_chunked(&refs, 2, 2, CHUNK_ELEMS).is_err());
+    }
+
+    #[test]
+    fn chunked_is_thread_and_elem_block_invariant() {
+        let owned: Vec<Params> = (0..11).map(|i| p(0.3 * i as f32 - 1.0)).collect();
+        let refs: Vec<(&Params, f64)> =
+            owned.iter().enumerate().map(|(i, q)| (q, (i % 4) as f64)).collect();
+        let serial = aggregate(&refs).unwrap().unwrap();
+        for chunk in [2, 3, CHUNK_CONTRIBUTORS] {
+            let base = aggregate_chunked(&refs, 1, chunk, CHUNK_ELEMS).unwrap().unwrap();
+            for threads in [2, 4, 7] {
+                for elems in [1, 3, CHUNK_ELEMS] {
+                    let out =
+                        aggregate_chunked(&refs, threads, chunk, elems).unwrap().unwrap();
+                    assert_eq!(
+                        out[0].data, base[0].data,
+                        "chunk={chunk} threads={threads} elems={elems}"
+                    );
+                }
+            }
+            // 11 contributors fit one default chunk: that geometry must
+            // replay the serial entry point bitwise
+            if chunk == CHUNK_CONTRIBUTORS {
+                assert_eq!(base[0].data, serial[0].data);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_none_when_positive_weight_is_absent() {
+        let owned: Vec<Params> = (0..7).map(|i| p(i as f32)).collect();
+        let refs: Vec<(&Params, f64)> = owned.iter().map(|q| (q, 0.0)).collect();
+        assert!(aggregate_chunked(&refs, 4, 2, 3).unwrap().is_none());
     }
 }

@@ -18,6 +18,13 @@
 //! split order of [`crate::fed::session::Substrates::derive`] — and the
 //! `Full` default materializes no state at all, which is what guarantees
 //! bit-identity with the pre-subsystem engine (`tests/participation.rs`).
+//!
+//! The `1 / π_i` weight scales feed straight into the chunk-parallel
+//! aggregator ([`crate::fed::aggregator::aggregate_chunked`], DESIGN.md
+//! §Perf rule 14): the session pre-scales each sampled device's `H_i`
+//! before aggregation, so the reweighting is invariant to the aggregate's
+//! chunk/thread geometry for free — the weights are inputs to the fixed
+//! geometry, never participants in its reduction order.
 
 use anyhow::{anyhow, bail, Result};
 

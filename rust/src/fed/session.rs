@@ -27,7 +27,7 @@
 //! and contributes only after it re-synchronizes at the end of the ongoing
 //! aggregation period.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
@@ -65,12 +65,14 @@ pub struct EngineOutput {
     /// Test accuracy after each aggregation `(t, acc)` (if `eval_curve`).
     pub accuracy_curve: Vec<(usize, f64)>,
     /// Per-interval, per-device training loss (None when the device did
-    /// not train that interval) — Fig. 4a.
+    /// not train that interval) — Fig. 4a. Empty when
+    /// `EngineConfig::trace` is off (the dense rows are O(t_max·n)).
     pub per_device_loss: Vec<Vec<Option<f32>>>,
     pub ledger: Ledger,
     pub movement: MovementTotals,
     /// Mean pairwise label similarity (before movement, after movement) —
-    /// Fig. 4b.
+    /// Fig. 4b. The `(0.0, 0.0)` sentinel when `EngineConfig::trace` is
+    /// off (similarity is derived from the per-device sample logs).
     pub similarity: (f64, f64),
     /// Mean active devices per interval (Table V / Figs. 9–10).
     pub mean_active: f64,
@@ -283,11 +285,20 @@ fn build_topology(cfg: &EngineConfig, costs: &CostSchedule, rng: &mut Rng) -> Gr
 
 /// The mutable learning state of a running session: what a checkpoint of
 /// the distributed system would have to contain.
+///
+/// Model state is copy-on-write (DESIGN.md §Perf rule 14): `global` and
+/// every `device_params[i]` are `Arc<Params>`, so a period-end resync is
+/// n pointer bumps — all synced replicas *share* the global allocation —
+/// and only devices that actually train materialize a private copy
+/// (`Arc::make_mut` / unwrap-or-clone in the dispatch paths). Resident
+/// model memory is O(trainees·|params|), not O(n·|params|), and the
+/// shared epoch is bit-identical to the historical clone-per-device
+/// storage because synced replicas were equal by construction.
 pub struct SessionState {
     /// Global model parameters (updated at each aggregation).
-    pub global: Params,
-    /// Per-device local parameters.
-    pub device_params: Vec<Params>,
+    pub global: Arc<Params>,
+    /// Per-device local parameters (synced devices alias `global`).
+    pub device_params: Vec<Arc<Params>>,
     /// Whether device i holds a model synchronized with the current
     /// aggregation period (re-entering devices wait for the next one).
     pub synced: Vec<bool>,
@@ -308,15 +319,21 @@ pub struct SessionState {
 impl SessionState {
     fn new(cfg: &EngineConfig, global: Params) -> SessionState {
         let n = cfg.n;
+        let global = Arc::new(global);
         SessionState {
-            device_params: vec![global.clone(); n],
+            // every device starts synced: n pointer bumps, one allocation
+            device_params: vec![Arc::clone(&global); n],
             global,
             synced: vec![true; n],
             h: vec![0.0; n],
             inbound: vec![Vec::new(); n],
             ledger: Ledger::default(),
             movement: MovementTotals::default(),
-            per_device_loss: vec![vec![None; n]; cfg.t_max],
+            per_device_loss: if cfg.trace {
+                vec![vec![None; n]; cfg.t_max]
+            } else {
+                Vec::new()
+            },
             curve: Vec::new(),
             collected_per_device: vec![Vec::new(); n],
             processed_per_device: vec![Vec::new(); n],
@@ -445,6 +462,11 @@ impl<'a, C: Compute> Session<'a, C> {
         }
         for &i in &delta.exited {
             self.state.h[i] = 0.0;
+            // an exited device's uncollected queue is gone; clearing here
+            // (instead of the old every-device sweep in step_collect)
+            // keeps the invariant that inactive devices always hold empty
+            // queues, so the active-id sweeps below can skip them
+            self.ws.new_data[i].clear();
         }
         self.ws.active.apply(delta);
         if t % self.cfg.tau == 0 {
@@ -469,13 +491,19 @@ impl<'a, C: Compute> Session<'a, C> {
     }
 
     /// Materialize this interval's arrivals `D_i(t)` for active devices.
+    ///
+    /// O(n_active), not O(n): inactive devices always hold empty queues
+    /// (`step_churn` clears on exit, nothing refills while inactive), so
+    /// sweeping the active-id list reproduces the historical full scan —
+    /// which only ever cleared already-empty queues elsewhere — exactly.
     pub fn step_collect(&mut self, t: usize) {
-        for i in 0..self.cfg.n {
-            self.ws.new_data[i].clear();
-            if self.ws.active[i] {
-                self.ws.new_data[i].extend_from_slice(&self.sub.arrivals.schedule[i][t]);
+        let IntervalWorkspace { active, new_data, .. } = &mut self.ws;
+        for &i in active.ids() {
+            new_data[i].clear();
+            new_data[i].extend_from_slice(&self.sub.arrivals.schedule[i][t]);
+            if self.cfg.trace {
+                self.state.collected_per_device[i].extend_from_slice(&new_data[i]);
             }
-            self.state.collected_per_device[i].extend_from_slice(&self.ws.new_data[i]);
         }
     }
 
@@ -537,32 +565,38 @@ impl<'a, C: Compute> Session<'a, C> {
             Method::Centralized => unreachable!("centralized runs bypass Session"),
         }
 
+        // materialization sweep over the active-id list (O(n_active)):
+        // inactive devices always hold empty queues, and the historical
+        // full 0..n scan `continue`d on them without a float op, so the
+        // restricted sweep is bit-identical
         self.ws.stats = IntervalStats::default();
-        for i in 0..n {
-            let count = self.ws.new_data[i].len();
-            self.ws.stats.collected += count;
+        let IntervalWorkspace { active, new_data, pending, apportion, solver, stats, .. } =
+            &mut self.ws;
+        for &i in active.ids() {
+            let count = new_data[i].len();
+            stats.collected += count;
             if count == 0 {
                 continue;
             }
             let keep = if use_sparse {
-                apportion_sparse_into(&self.ws.solver.sparse, i, count, &mut self.ws.apportion)
+                apportion_sparse_into(&solver.sparse, i, count, apportion)
             } else {
-                apportion_into(&self.ws.solver.plan, i, count, &mut self.ws.apportion)
+                apportion_into(&solver.plan, i, count, apportion)
             };
             // offloads, ascending j (deterministic)
             let mut cursor = keep;
-            for &(j, sent) in &self.ws.apportion.offloads {
-                self.ws.pending[j].extend_from_slice(&self.ws.new_data[i][cursor..cursor + sent]);
+            for &(j, sent) in &apportion.offloads {
+                pending[j].extend_from_slice(&new_data[i][cursor..cursor + sent]);
                 cursor += sent;
-                self.ws.stats.offloaded += sent;
+                stats.offloaded += sent;
                 self.state.ledger.transfer +=
                     sent as f64 * self.sub.actual_costs.c_link(t, i, j);
             }
             let dropped = count - cursor;
-            self.ws.stats.discarded += dropped;
+            stats.discarded += dropped;
             self.state.ledger.discard += dropped as f64 * self.sub.actual_costs.f(t, i);
             // local processing queue = kept prefix (+ inbound, in step_train)
-            self.ws.new_data[i].truncate(keep);
+            new_data[i].truncate(keep);
         }
     }
 
@@ -605,7 +639,9 @@ impl<'a, C: Compute> Session<'a, C> {
             self.ws.stats.processed += self.ws.workload.len();
             self.state.ledger.process +=
                 self.ws.workload.len() as f64 * self.sub.actual_costs.c_node(t, i);
-            self.state.processed_per_device[i].extend_from_slice(&self.ws.workload);
+            if self.cfg.trace {
+                self.state.processed_per_device[i].extend_from_slice(&self.ws.workload);
+            }
             if self.state.synced[i] {
                 let slot = self.ws.trainee_ids.len();
                 self.ws.trainee_ids.push(i);
@@ -643,38 +679,45 @@ impl<'a, C: Compute> Session<'a, C> {
             TrainPath::Auto => k > 1,
         };
         if batched {
-            // params move into the work list for the duration of the call.
-            // The swap-back runs on the error path too, but a failed
+            // params move into the work list for the duration of the call:
+            // a trainee still sharing the epoch allocation clones here
+            // (clone-on-train — the only place a synced replica ever
+            // copies), an already-private replica unwraps with zero copy.
+            // The rewrap-back runs on the error path too, but a failed
             // service round-trip (RuntimeHandle) loses the in-flight
             // params — the error aborts the run, so the session must not
             // be stepped further after a dispatch failure.
             for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
-                std::mem::swap(
-                    &mut self.ws.train_work[slot].params,
-                    &mut self.state.device_params[i],
-                );
+                let arc = std::mem::take(&mut self.state.device_params[i]);
+                self.ws.train_work[slot].params =
+                    Arc::try_unwrap(arc).unwrap_or_else(|shared| (*shared).clone());
             }
             let res = self.compute.train_interval_many(&mut self.ws.train_work[..k]);
             for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
-                std::mem::swap(
-                    &mut self.ws.train_work[slot].params,
-                    &mut self.state.device_params[i],
-                );
+                self.state.device_params[i] =
+                    Arc::new(std::mem::take(&mut self.ws.train_work[slot].params));
             }
             res?;
             for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
                 if let Some(loss) = self.ws.train_work[slot].loss {
-                    self.state.per_device_loss[t][i] = Some(loss);
+                    if self.cfg.trace {
+                        self.state.per_device_loss[t][i] = Some(loss);
+                    }
                     self.state.h[i] += self.ws.train_work[slot].samples.len() as f64;
                 }
             }
         } else {
             for (slot, &i) in self.ws.trainee_ids.iter().enumerate() {
+                // make_mut = clone-on-train: the first interval after a
+                // resync copies the shared epoch params once; later
+                // intervals find the Arc unique and mutate in place
                 if let Some(loss) = self.compute.train_interval(
-                    &mut self.state.device_params[i],
+                    Arc::make_mut(&mut self.state.device_params[i]),
                     &self.ws.train_work[slot].samples,
                 )? {
-                    self.state.per_device_loss[t][i] = Some(loss);
+                    if self.cfg.trace {
+                        self.state.per_device_loss[t][i] = Some(loss);
+                    }
                     self.state.h[i] += self.ws.train_work[slot].samples.len() as f64;
                 }
             }
@@ -688,7 +731,6 @@ impl<'a, C: Compute> Session<'a, C> {
         if (t + 1) % self.cfg.tau != 0 {
             return Ok(());
         }
-        let n = self.cfg.n;
         // Horvitz–Thompson correction under a sampling period: each
         // sampled device's eq. (4) weight is its processed count scaled by
         // 1/π_i, so the weighted average stays unbiased for the full-
@@ -698,21 +740,34 @@ impl<'a, C: Compute> Session<'a, C> {
             Some(p) if !p.full_period => self.state.h[i] * p.weight_scale[i],
             _ => self.state.h[i],
         };
-        let contributions: Vec<(&Params, f64)> = (0..n)
-            .filter(|&i| self.ws.active[i] && self.state.synced[i])
-            .map(|i| (&self.state.device_params[i], scale(i)))
+        // active-id sweep: the historical 0..n filter visited the same
+        // devices in the same ascending order
+        let contributions: Vec<(&Params, f64)> = self
+            .ws
+            .active
+            .ids()
+            .iter()
+            .copied()
+            .filter(|&i| self.state.synced[i])
+            .map(|i| (self.state.device_params[i].as_ref(), scale(i)))
             .collect();
-        let new_global = aggregator::aggregate(&contributions)?;
+        // fixed 512-contributor chunks, partials combined ascending: one
+        // chunk at paper scale replays the serial axpy chain bitwise, and
+        // the result is invariant to the worker count (§Perf rule 14)
+        let new_global = aggregator::aggregate_chunked(
+            &contributions,
+            self.ws.solver.solver_threads,
+            aggregator::CHUNK_CONTRIBUTORS,
+            aggregator::CHUNK_ELEMS,
+        )?;
         if let Some(g) = new_global {
-            self.state.global = g;
+            self.state.global = Arc::new(g);
         }
-        for i in 0..n {
-            if self.ws.active[i] {
-                self.state.device_params[i] = self.state.global.clone();
-                self.state.synced[i] = true;
-            }
-            self.state.h[i] = 0.0;
-        }
+        // Curve point before the resync: the freshly-aggregated global is
+        // still uniquely owned, so make_mut hands the evaluator a mutable
+        // view without copying (after the pointer bumps it would have to
+        // deep-clone). Bit-neutral reordering — the resync below touches
+        // no evaluator input and the evaluator touches no resync state.
         if let Some(plan) = &self.eval_plan {
             // through the eval planner: the k-th shard of the schedule, in
             // one evaluate_many dispatch (one EvalMany round-trip per
@@ -723,10 +778,21 @@ impl<'a, C: Compute> Session<'a, C> {
                 plan,
                 self.cfg.eval_path,
                 &mut self.eval_work,
-                &mut self.state.global,
+                Arc::make_mut(&mut self.state.global),
                 k,
             )?;
             self.state.curve.push((t + 1, acc));
+        }
+        // O(n_active) pointer-bump resync: every active device re-shares
+        // the epoch allocation instead of deep-cloning it (the historical
+        // O(n·|params|) wall this PR removes). Inactive devices keep
+        // whatever stale replica they exited with — as before.
+        for &i in self.ws.active.ids() {
+            self.state.device_params[i] = Arc::clone(&self.state.global);
+            self.state.synced[i] = true;
+        }
+        for h in self.state.h.iter_mut() {
+            *h = 0.0;
         }
         Ok(())
     }
@@ -746,14 +812,23 @@ impl<'a, C: Compute> Session<'a, C> {
     /// Final evaluation and similarity metrics.
     pub fn finish(self) -> Result<EngineOutput> {
         let accuracy = self.compute.evaluate(&self.state.global)?;
-        let sim_before = similarity::mean_similarity(&similarity::label_histograms(
-            &self.sub.train,
-            &self.state.collected_per_device,
-        ));
-        let sim_after = similarity::mean_similarity(&similarity::label_histograms(
-            &self.sub.train,
-            &self.state.processed_per_device,
-        ));
+        // similarity is derived entirely from the per-device trace logs;
+        // with tracing off they are empty and the summary is reported as
+        // the (0.0, 0.0) sentinel instead of a misleading number
+        let (sim_before, sim_after) = if self.cfg.trace {
+            (
+                similarity::mean_similarity(&similarity::label_histograms(
+                    &self.sub.train,
+                    &self.state.collected_per_device,
+                )),
+                similarity::mean_similarity(&similarity::label_histograms(
+                    &self.sub.train,
+                    &self.state.processed_per_device,
+                )),
+            )
+        } else {
+            (0.0, 0.0)
+        };
         let total_collected = self.state.movement.collected();
         Ok(EngineOutput {
             accuracy,
@@ -789,7 +864,11 @@ fn run_centralized<C: Compute>(
     compute: &C,
 ) -> Result<EngineOutput> {
     let mut params = compute.init_params(sub.init_seed)?;
-    let mut per_device_loss = vec![vec![None; cfg.n]; cfg.t_max];
+    let mut per_device_loss = if cfg.trace {
+        vec![vec![None; cfg.n]; cfg.t_max]
+    } else {
+        Vec::new()
+    };
     let mut collected = 0usize;
     let mut curve = Vec::new();
     let mut batch: Vec<u32> = Vec::new();
@@ -804,7 +883,9 @@ fn run_centralized<C: Compute>(
         }
         collected += batch.len();
         if let Some(loss) = compute.train_interval(&mut params, &batch)? {
-            per_device_loss[t][0] = Some(loss);
+            if cfg.trace {
+                per_device_loss[t][0] = Some(loss);
+            }
         }
         if let (Some(plan), true) = (&eval_plan, (t + 1) % cfg.tau == 0) {
             let k = curve.len();
@@ -826,7 +907,9 @@ fn run_centralized<C: Compute>(
         per_device_loss,
         ledger: Ledger::default(),
         movement: MovementTotals::default(),
-        similarity: (1.0, 1.0),
+        // one server sees everything: similarity is 1 by definition, but
+        // the untraced sentinel stays consistent with Session::finish
+        similarity: if cfg.trace { (1.0, 1.0) } else { (0.0, 0.0) },
         mean_active: cfg.n as f64,
         total_collected: collected,
     })
@@ -1455,5 +1538,67 @@ mod tests {
         assert_eq!(whole.accuracy, stepped.accuracy);
         assert_eq!(whole.ledger, stepped.ledger);
         assert_eq!(whole.movement.per_interval, stepped.movement.per_interval);
+    }
+
+    /// The trace flag is pure observability (DESIGN.md §Perf rule 14):
+    /// everything the learning loop computes is bit-identical with it
+    /// off; only the recorded trace state (loss rows, similarity) and the
+    /// O(t_max·n) allocation behind it disappear.
+    #[test]
+    fn trace_flag_is_observation_only() {
+        for method in [Method::NetworkAware, Method::Federated, Method::Centralized] {
+            let on = stub_cfg(method).with(|c| {
+                c.eval_curve = true;
+                c.churn =
+                    (method != Method::Centralized).then_some(Churn { p_exit: 0.1, p_entry: 0.1 });
+            });
+            let off = on.clone().with(|c| c.trace = false);
+            let sub = Substrates::derive(&on);
+            let a = run_with(&on, &sub, StubCompute).unwrap();
+            let b = run_with(&off, &sub, StubCompute).unwrap();
+            assert_eq!(a.accuracy, b.accuracy, "{method:?}");
+            assert_eq!(a.accuracy_curve, b.accuracy_curve, "{method:?}");
+            assert_eq!(a.ledger, b.ledger, "{method:?}");
+            assert_eq!(a.movement.per_interval, b.movement.per_interval, "{method:?}");
+            assert_eq!(a.total_collected, b.total_collected, "{method:?}");
+            assert!(!a.per_device_loss.is_empty(), "{method:?}");
+            assert!(b.per_device_loss.is_empty(), "{method:?}");
+            assert_eq!(b.similarity, (0.0, 0.0), "{method:?}");
+        }
+    }
+
+    /// Period-end resync is pointer bumps, not clones: after an
+    /// aggregation every active device aliases the global allocation, and
+    /// mid-period only the devices that actually trained hold private
+    /// copies (§Perf rule 14; `tests/aggregation.rs` proves the aliasing
+    /// never leaks a trainee's mutation).
+    #[test]
+    fn resync_shares_the_epoch_allocation() {
+        let cfg = stub_cfg(Method::NetworkAware);
+        let sub = Substrates::derive(&cfg);
+        let mut session = Session::new(&cfg, &sub, StubCompute).unwrap();
+        // initial state: one allocation, n + 1 handles
+        for p in &session.state.device_params {
+            assert!(Arc::ptr_eq(p, &session.state.global));
+        }
+        for t in 0..cfg.tau {
+            session.step_churn(t);
+            session.step_collect(t);
+            session.step_movement(t);
+            session.step_train(t).unwrap();
+            if t + 1 < cfg.tau {
+                // mid-period: exactly the devices that have trained so far
+                // have diverged from the shared epoch
+                for (i, p) in session.state.device_params.iter().enumerate() {
+                    let trained = session.state.h[i] > 0.0;
+                    assert_eq!(!Arc::ptr_eq(p, &session.state.global), trained, "device {i}");
+                }
+            }
+            session.step_aggregate(t).unwrap();
+        }
+        // period end: everyone re-shares the (new) epoch allocation
+        for (i, p) in session.state.device_params.iter().enumerate() {
+            assert!(Arc::ptr_eq(p, &session.state.global), "device {i} not resynced");
+        }
     }
 }

@@ -43,6 +43,13 @@ use crate::runtime::{literal_from_slice, HostTensor, ModelKind, Runtime};
 /// One device's slice of a batched training interval: the trainer consumes
 /// `samples`, updates `params` in place and reports the device's
 /// sample-weighted mean loss (None when `samples` is empty).
+///
+/// `params` is an *owned* private copy for the duration of the dispatch:
+/// the session's device state is `Arc`-shared copy-on-write (DESIGN.md
+/// §Perf rule 14), and the dispatch path materializes (unwrap-or-clone)
+/// each trainee's params into its slot before the call, re-wrapping them
+/// afterwards — so a trainer may mutate slots freely without ever
+/// touching the shared epoch allocation.
 #[derive(Debug, Default)]
 pub struct DeviceWork {
     pub params: Vec<HostTensor>,

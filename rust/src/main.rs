@@ -12,7 +12,7 @@
 //!             [--eval-path auto|batched|scalar]
 //!             [--movement-backend auto|dense|sparse] [--warm-start]
 //!             [--solver-threads auto|K] [--services K]
-//!             [--participation full|uniform:K|importance:K]
+//!             [--participation full|uniform:K|importance:K] [--no-trace]
 //! fogml exp <table2|table3|table4|table5|fig4|fig5|fig6|fig7|fig8|fig9|fig10|theory|all>
 //!             [--seeds 3] [--model mlp|cnn] [--out results] [--jobs 1]
 //!             [--curve] [--eval-schedule full|subset|subset:K]
@@ -94,6 +94,13 @@
 //! bit-identical to previous releases; the schedule is an identity field
 //! in shard files — `fogml merge` refuses mixed-schedule sets (DESIGN.md
 //! §Perf rule 13).
+//!
+//! `--no-trace` drops the O(t_max·n) observation state — per-device loss
+//! rows and the collected/processed sample logs behind the similarity
+//! metric. Accuracy, curves, ledgers and movement are bit-unchanged;
+//! only the trace-derived outputs empty out (similarity prints are
+//! skipped). Useful for large-n throughput runs (DESIGN.md §Perf
+//! rule 14).
 
 use anyhow::{bail, Result};
 
@@ -205,6 +212,11 @@ fn config_from_args(args: &Args) -> Result<EngineConfig> {
     if let Some(p) = args.get("participation") {
         cfg.participation = ParticipationSchedule::parse(p)?;
     }
+    if args.flag("no-trace") {
+        // drop the O(t_max·n) per-device trace state (loss rows, sample
+        // logs, similarity) — observation only, outputs are unchanged
+        cfg.trace = false;
+    }
     let p_exit: f64 = args.get_or("p-exit", 0.0)?;
     let p_entry: f64 = args.get_or("p-entry", 0.0)?;
     if p_exit > 0.0 || p_entry > 0.0 {
@@ -265,11 +277,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let (rate_mean, rate_min, rate_max) = m.movement_rate_stats();
     println!("movement rate   mean {rate_mean:.2}  range [{rate_min:.2}, {rate_max:.2}]");
-    println!(
-        "similarity      before {:.2}%  after {:.2}%",
-        100.0 * out.similarity.0,
-        100.0 * out.similarity.1
-    );
+    if cfg.trace {
+        println!(
+            "similarity      before {:.2}%  after {:.2}%",
+            100.0 * out.similarity.0,
+            100.0 * out.similarity.1
+        );
+    }
     println!("active nodes    {:.1} mean", out.mean_active);
     println!("wall time       {:.2?}", elapsed);
     Ok(())

@@ -32,7 +32,7 @@
 //! G̃ from scratch): one transpose sweep now feeds both the gradient and
 //! the objective, and agrees with [`MovementPlan::objective`] bitwise.
 
-use crate::movement::par::{self, ProjBuffers};
+use crate::util::par::{self, ProjBuffers};
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
 use crate::movement::sparse::SparsePlan;

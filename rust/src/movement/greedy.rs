@@ -16,7 +16,7 @@
 //! Ties break process > offload > discard, matching the paper's preference
 //! for keeping data when indifferent.
 
-use crate::movement::par;
+use crate::util::par;
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
 use crate::movement::sparse::SparsePlan;

@@ -1,182 +1,11 @@
-//! Fixed-chunk deterministic parallel execution layer (DESIGN.md §Perf
-//! rule 12).
-//!
-//! Every row-parallel solver pass partitions device rows into chunks of
-//! [`CHUNK_ROWS`] rows. The geometry is a function of the problem size
-//! only — **never** of the thread count — and every cross-row reduction
-//! (objective terms, G̃/inbound gathers) is accumulated into a per-chunk
-//! partial and combined serially in ascending chunk order. Workers may
-//! execute chunks in any order on any thread; the combine step fixes the
-//! float-addition association, so `threads = 1` and `threads = K` produce
-//! **bit-identical** results for every K.
-//!
-//! Below [`CHUNK_ROWS`] rows there is exactly one chunk, whose internal
-//! term order is exactly the historical serial sweep — paper-scale solves
-//! (n ≤ 50) and every recorded experiment number replay bitwise.
+//! Compatibility re-export: the fixed-chunk deterministic parallel layer
+//! was born here for the row-parallel movement solvers (DESIGN.md §Perf
+//! rule 12) and has been promoted crate-wide to [`crate::util::par`] so
+//! the federated aggregation data plane (§Perf rule 14) can share the
+//! same geometry and ascending-combine contract. The public surface
+//! (`CHUNK_ROWS`, chunk geometry, projection scratch) stays reachable
+//! under the historical `movement::par` path; crate-internal helpers
+//! (`run_chunks`, `combine`, the split helpers) now live in `util::par`
+//! and are imported from there directly.
 
-use std::ops::Range;
-
-/// Rows per chunk. Matches
-/// [`crate::config::MovementBackend::AUTO_THRESHOLD`]: every dense
-/// paper-scale problem is a single chunk (historical bits), and by the
-/// time a problem spans several chunks it is already on the sparse O(E)
-/// backend where per-chunk work amortizes thread handoff.
-pub const CHUNK_ROWS: usize = 512;
-
-/// Number of row chunks for `n` rows under `chunk_rows`-row geometry.
-pub fn num_chunks(n: usize, chunk_rows: usize) -> usize {
-    n.div_ceil(chunk_rows.max(1))
-}
-
-/// Row range of chunk `c` (ascending, the combine order).
-pub fn chunk_range(c: usize, n: usize, chunk_rows: usize) -> Range<usize> {
-    let chunk_rows = chunk_rows.max(1);
-    let start = c * chunk_rows;
-    start..(start + chunk_rows).min(n)
-}
-
-/// Per-chunk scratch for the row-wise simplex projection (the gather /
-/// sort / scatter buffers formerly shared serially on the workspace).
-/// Contents are fully overwritten per row, so which chunk owns which
-/// buffer never affects bits.
-#[derive(Debug, Default)]
-pub struct ProjBuffers {
-    pub(crate) coords: Vec<(Option<usize>, f64)>,
-    pub(crate) values: Vec<f64>,
-    pub(crate) projected: Vec<f64>,
-    pub(crate) scratch: Vec<f64>,
-}
-
-/// Run `f(chunk_index, item)` once per item, fanning contiguous blocks of
-/// items across at most `threads` scoped workers. With one worker (or one
-/// item) everything runs inline on the calling thread in ascending order.
-///
-/// Determinism contract: `f` must confine its writes to its own item (and
-/// the disjoint buffers it holds) and fold cross-row sums into per-item
-/// partials — the *caller* combines partials in ascending item order, so
-/// scheduling can never reorder float additions.
-pub(crate) fn run_chunks<T, F>(threads: usize, items: &mut [T], f: F)
-where
-    T: Send,
-    F: Fn(usize, &mut T) + Sync,
-{
-    let workers = threads.max(1).min(items.len());
-    if workers <= 1 {
-        for (c, item) in items.iter_mut().enumerate() {
-            f(c, item);
-        }
-        return;
-    }
-    let block = items.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (b, chunk_block) in items.chunks_mut(block).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (k, item) in chunk_block.iter_mut().enumerate() {
-                    f(b * block + k, item);
-                }
-            });
-        }
-    });
-}
-
-/// Combine per-chunk partial sums serially in ascending chunk order:
-/// `((p₀ + p₁) + p₂) + …` — the one association every thread count
-/// reproduces. A single chunk returns its partial untouched, so the
-/// historical single-accumulator sweep replays exactly.
-pub(crate) fn combine(partials: &[f64]) -> f64 {
-    let mut it = partials.iter().copied();
-    match it.next() {
-        None => 0.0,
-        Some(first) => it.fold(first, |acc, p| acc + p),
-    }
-}
-
-/// Split a row-major buffer (`per_row` values per row) into per-chunk
-/// mutable row blocks, ascending.
-pub(crate) fn split_rows(
-    buf: &mut [f64],
-    per_row: usize,
-    chunk_rows: usize,
-) -> impl Iterator<Item = &mut [f64]> {
-    buf.chunks_mut((chunk_rows.max(1) * per_row).max(1))
-}
-
-/// Split a CSR value buffer into per-chunk mutable blocks at the chunk
-/// row boundaries given by `offsets` (length n + 1), ascending.
-pub(crate) fn split_csr<'a>(
-    values: &'a mut [f64],
-    offsets: &[usize],
-    n: usize,
-    chunk_rows: usize,
-) -> Vec<&'a mut [f64]> {
-    let nc = num_chunks(n, chunk_rows);
-    let mut out = Vec::with_capacity(nc);
-    let mut rest = values;
-    let mut consumed = 0usize;
-    for c in 0..nc {
-        let rows = chunk_range(c, n, chunk_rows);
-        let end = offsets[rows.end];
-        let (head, tail) = rest.split_at_mut(end - consumed);
-        out.push(head);
-        consumed = end;
-        rest = tail;
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn geometry_is_a_function_of_n_only() {
-        assert_eq!(num_chunks(0, CHUNK_ROWS), 0);
-        assert_eq!(num_chunks(1, CHUNK_ROWS), 1);
-        assert_eq!(num_chunks(CHUNK_ROWS, CHUNK_ROWS), 1);
-        assert_eq!(num_chunks(CHUNK_ROWS + 1, CHUNK_ROWS), 2);
-        assert_eq!(chunk_range(0, 10, CHUNK_ROWS), 0..10);
-        assert_eq!(chunk_range(1, 1000, 512), 512..1000);
-        // paper scale is always a single chunk: the historical serial
-        // term order replays bitwise at every default-config size
-        assert_eq!(num_chunks(50, CHUNK_ROWS), 1);
-    }
-
-    #[test]
-    fn run_chunks_is_thread_count_invariant() {
-        // per-item partials + ascending combine: identical for any K
-        let base: Vec<f64> = (0..37).map(|i| 0.1 * i as f64).collect();
-        let mut reference: Vec<f64> = base.clone();
-        run_chunks(1, &mut reference, |c, v| *v += c as f64);
-        for threads in [2, 3, 8, 64] {
-            let mut items = base.clone();
-            run_chunks(threads, &mut items, |c, v| *v += c as f64);
-            assert_eq!(items, reference, "threads={threads}");
-        }
-        assert_eq!(combine(&reference), {
-            let mut acc = reference[0];
-            for p in &reference[1..] {
-                acc += *p;
-            }
-            acc
-        });
-    }
-
-    #[test]
-    fn split_helpers_cover_disjointly() {
-        let mut buf = vec![0.0; 7 * 3]; // 7 rows, 3 cols, chunk 2 rows
-        let blocks: Vec<usize> = split_rows(&mut buf, 3, 2).map(|b| b.len()).collect();
-        assert_eq!(blocks, vec![6, 6, 6, 3]);
-
-        let offsets = vec![0, 2, 2, 5, 6, 9];
-        let mut vals = vec![0.0; 9];
-        let csr = split_csr(&mut vals, &offsets, 5, 2);
-        assert_eq!(csr.iter().map(|b| b.len()).collect::<Vec<_>>(), vec![2, 4, 3]);
-    }
-
-    #[test]
-    fn combine_handles_empty_and_single() {
-        assert_eq!(combine(&[]), 0.0);
-        assert_eq!(combine(&[0.3]), 0.3);
-    }
-}
+pub use crate::util::par::{chunk_range, num_chunks, ProjBuffers, CHUNK_ROWS};

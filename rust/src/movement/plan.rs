@@ -146,7 +146,7 @@ impl MovementPlan {
     /// reports). Offloaded data is charged the receiver's next-interval
     /// processing cost, consistent with the solvers' marginal costs.
     pub fn objective(&self, p: &MovementProblem) -> f64 {
-        self.objective_chunked(p, crate::movement::par::CHUNK_ROWS)
+        self.objective_chunked(p, crate::util::par::CHUNK_ROWS)
     }
 
     /// [`Self::objective`] on explicit chunk geometry: per chunk, the
@@ -155,7 +155,7 @@ impl MovementPlan {
     /// solver passes build (DESIGN.md §Perf rule 12), so the PGD loop's
     /// in-flight objectives agree with this function bitwise — a unit test
     /// in [`crate::movement::convex`] pins that down. A single chunk
-    /// (n ≤ [`crate::movement::par::CHUNK_ROWS`]) reproduces the
+    /// (n ≤ [`crate::util::par::CHUNK_ROWS`]) reproduces the
     /// historical single-accumulator sweep exactly.
     pub(crate) fn objective_chunked(&self, p: &MovementProblem, chunk_rows: usize) -> f64 {
         // this-interval inbound for the Sqrt model (the scatter loop's
@@ -164,10 +164,10 @@ impl MovementPlan {
             DiscardModel::Sqrt => Some(self.inbound_next(p)),
             _ => None,
         };
-        let nc = crate::movement::par::num_chunks(self.n, chunk_rows);
+        let nc = crate::util::par::num_chunks(self.n, chunk_rows);
         let mut partials = vec![0.0; nc];
         for (c, partial) in partials.iter_mut().enumerate() {
-            let rows = crate::movement::par::chunk_range(c, self.n, chunk_rows);
+            let rows = crate::util::par::chunk_range(c, self.n, chunk_rows);
             let mut obj = 0.0;
             for i in rows.clone() {
                 // local processing of own data + inbound
@@ -219,7 +219,7 @@ impl MovementPlan {
             }
             *partial = obj;
         }
-        crate::movement::par::combine(&partials)
+        crate::util::par::combine(&partials)
     }
 
     /// Panics with a description if the plan violates feasibility (eqs.

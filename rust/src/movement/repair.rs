@@ -16,7 +16,7 @@
 //! updating shared slacks as it assigns. Discarding is always feasible, so
 //! the pass terminates with a feasible plan in one sweep.
 
-use crate::movement::par;
+use crate::util::par;
 use crate::movement::plan::MovementPlan;
 use crate::movement::problem::MovementProblem;
 use crate::movement::sparse::SparsePlan;

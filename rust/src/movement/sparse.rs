@@ -250,7 +250,7 @@ impl SparsePlan {
     /// subtracts `f · d_i · 0.0` for off-edge pairs — an exact no-op — so
     /// skipping them here preserves bits.
     pub fn objective(&self, p: &MovementProblem) -> f64 {
-        self.objective_chunked(p, crate::movement::par::CHUNK_ROWS)
+        self.objective_chunked(p, crate::util::par::CHUNK_ROWS)
     }
 
     /// Mirror of [`MovementPlan::objective_chunked`]: the same per-chunk
@@ -265,10 +265,10 @@ impl SparsePlan {
             }
             _ => None,
         };
-        let nc = crate::movement::par::num_chunks(self.n, chunk_rows);
+        let nc = crate::util::par::num_chunks(self.n, chunk_rows);
         let mut partials = vec![0.0; nc];
         for (c, partial) in partials.iter_mut().enumerate() {
-            let rows = crate::movement::par::chunk_range(c, self.n, chunk_rows);
+            let rows = crate::util::par::chunk_range(c, self.n, chunk_rows);
             let mut obj = 0.0;
             for i in rows.clone() {
                 let g_local = self.local[i] * p.d[i] + p.inbound_prev[i];
@@ -317,7 +317,7 @@ impl SparsePlan {
             }
             *partial = obj;
         }
-        crate::movement::par::combine(&partials)
+        crate::util::par::combine(&partials)
     }
 
     /// Mirror of [`MovementPlan::assert_feasible`] over the sparse support

@@ -21,30 +21,69 @@ use crate::topology::dynamics::ChurnDelta;
 use crate::topology::graph::Graph;
 
 /// A mutable activity mask over device ids `0..n` with an O(1) active
-/// counter. Indexable like the `Vec<bool>` it replaces: `view[i]`.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// counter and a maintained ascending active-id list. Indexable like the
+/// `Vec<bool>` it replaces: `view[i]`.
+///
+/// The id list lets the session's per-interval stats sweeps visit
+/// `O(n_active)` devices instead of `0..n` (DESIGN.md §Perf rule 14); it
+/// is rebuilt by a single ascending merge per churn delta, so a quiet
+/// interval costs `O(n_active)` with no per-flip `Vec::insert` memmoves.
+#[derive(Debug, Clone)]
 pub struct ActiveView {
     bits: Vec<bool>,
     n_active: usize,
+    ids: Vec<usize>,
+    scratch: Vec<usize>,
 }
+
+impl PartialEq for ActiveView {
+    // `ids` is derived from `bits` (an invariant, not state) and
+    // `scratch` is garbage between calls — neither participates
+    fn eq(&self, other: &Self) -> bool {
+        self.bits == other.bits
+    }
+}
+
+impl Eq for ActiveView {}
 
 impl ActiveView {
     /// All devices active (the engine's initial state).
     pub fn all_active(n: usize) -> Self {
-        ActiveView { bits: vec![true; n], n_active: n }
+        ActiveView {
+            bits: vec![true; n],
+            n_active: n,
+            ids: (0..n).collect(),
+            scratch: Vec::new(),
+        }
     }
 
     /// All devices inactive.
     pub fn all_inactive(n: usize) -> Self {
-        ActiveView { bits: vec![false; n], n_active: 0 }
+        ActiveView {
+            bits: vec![false; n],
+            n_active: 0,
+            ids: Vec::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Adopt an explicit mask.
     pub fn from_mask(mask: &[bool]) -> Self {
-        ActiveView {
+        let mut view = ActiveView {
             bits: mask.to_vec(),
-            n_active: mask.iter().filter(|&&b| b).count(),
-        }
+            n_active: 0,
+            ids: Vec::new(),
+            scratch: Vec::new(),
+        };
+        view.rebuild_ids();
+        view
+    }
+
+    fn rebuild_ids(&mut self) {
+        self.ids.clear();
+        self.ids
+            .extend(self.bits.iter().enumerate().filter(|&(_, &b)| b).map(|(i, _)| i));
+        self.n_active = self.ids.len();
     }
 
     pub fn n(&self) -> usize {
@@ -60,14 +99,22 @@ impl ActiveView {
         self.bits[i]
     }
 
-    /// Flip device `i` to `on`, maintaining the counter. Idempotent.
+    /// Flip device `i` to `on`, maintaining the counter and the sorted id
+    /// list (O(n_active) memmove — `apply` merges instead on the churn
+    /// hot path). Idempotent.
     pub fn set(&mut self, i: usize, on: bool) {
         if self.bits[i] != on {
             self.bits[i] = on;
             if on {
                 self.n_active += 1;
+                if let Err(pos) = self.ids.binary_search(&i) {
+                    self.ids.insert(pos, i);
+                }
             } else {
                 self.n_active -= 1;
+                if let Ok(pos) = self.ids.binary_search(&i) {
+                    self.ids.remove(pos);
+                }
             }
         }
     }
@@ -75,26 +122,67 @@ impl ActiveView {
     /// Apply one churn interval's delta: exits then entries. The sets are
     /// disjoint (a device cannot both exit and enter in one step), so the
     /// order is immaterial; exits-first matches the churn semantics.
+    ///
+    /// The sorted id list is rebuilt with one ascending merge of the old
+    /// list against the delta — O(n_active + |Δ|) total, relying on
+    /// [`ChurnDelta`]'s contract that `entered`/`exited` are ascending,
+    /// disjoint, and that entered devices were inactive.
     pub fn apply(&mut self, delta: &ChurnDelta) {
         for &i in &delta.exited {
-            self.set(i, false);
+            if self.bits[i] {
+                self.bits[i] = false;
+                self.n_active -= 1;
+            }
         }
         for &i in &delta.entered {
-            self.set(i, true);
+            if !self.bits[i] {
+                self.bits[i] = true;
+                self.n_active += 1;
+            }
         }
+        self.scratch.clear();
+        let mut entered = delta.entered.iter().copied().peekable();
+        for &i in &self.ids {
+            while let Some(&j) = entered.peek() {
+                if j >= i {
+                    break;
+                }
+                if self.bits[j] {
+                    self.scratch.push(j);
+                }
+                entered.next();
+            }
+            // i was active before the delta: keep it unless it just exited
+            if self.bits[i] {
+                self.scratch.push(i);
+            }
+        }
+        for j in entered {
+            if self.bits[j] {
+                self.scratch.push(j);
+            }
+        }
+        std::mem::swap(&mut self.ids, &mut self.scratch);
+        debug_assert_eq!(self.ids.len(), self.n_active);
     }
 
     /// Overwrite from a full mask (used when a session resets).
     pub fn copy_from(&mut self, mask: &[bool]) {
         assert_eq!(mask.len(), self.bits.len());
         self.bits.copy_from_slice(mask);
-        self.n_active = mask.iter().filter(|&&b| b).count();
+        self.rebuild_ids();
     }
 
     /// Borrow the raw mask — the shape every movement solver takes as
     /// `active: &[bool]`.
     pub fn as_slice(&self) -> &[bool] {
         &self.bits
+    }
+
+    /// Active device ids, ascending — the `O(n_active)` sweep order the
+    /// session's stats loops use instead of scanning `0..n`.
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
     }
 
     /// Out-neighbors of `i` in the masked graph, ascending: exactly
@@ -140,6 +228,12 @@ mod tests {
     use crate::topology::dynamics::ChurnProcess;
     use crate::topology::generators::{erdos_renyi, watts_strogatz};
     use crate::util::rng::Rng;
+
+    fn assert_ids_invariant(view: &ActiveView) {
+        let expect: Vec<usize> = (0..view.n()).filter(|&i| view[i]).collect();
+        assert_eq!(view.ids(), expect.as_slice(), "id list drifted from mask");
+        assert_eq!(view.ids().len(), view.num_active());
+    }
 
     fn assert_matches_restrict(g: &Graph, view: &ActiveView) {
         let oracle = g.restrict(view.as_slice());
@@ -211,8 +305,27 @@ mod tests {
             view.apply(&delta);
             assert_eq!(view.as_slice(), mask.as_slice(), "delta drifted from mask");
             assert_eq!(view.num_active(), churn.num_active());
+            assert_ids_invariant(&view);
             assert_matches_restrict(&g, &view);
         }
+    }
+
+    #[test]
+    fn id_list_tracks_set_and_copy_from() {
+        let mut v = ActiveView::all_active(6);
+        assert_ids_invariant(&v);
+        v.set(4, false);
+        v.set(1, false);
+        v.set(4, false); // idempotent
+        assert_ids_invariant(&v);
+        assert_eq!(v.ids(), &[0, 2, 3, 5]);
+        v.set(1, true);
+        assert_ids_invariant(&v);
+        v.copy_from(&[false, true, false, true, false, false]);
+        assert_eq!(v.ids(), &[1, 3]);
+        assert_ids_invariant(&v);
+        assert_ids_invariant(&ActiveView::all_inactive(3));
+        assert_ids_invariant(&ActiveView::from_mask(&[true, false, true]));
     }
 
     #[test]

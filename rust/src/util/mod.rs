@@ -8,6 +8,7 @@
 
 pub mod binio;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 pub mod table;

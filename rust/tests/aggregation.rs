@@ -1,0 +1,353 @@
+//! Aggregation data-plane contract (DESIGN.md §Perf rule 14): the
+//! chunk-parallel federated average and the copy-on-write epoch store
+//! must be *pure execution strategies* — bit-invariant overlays on the
+//! historical serial, clone-per-device engine.
+//!
+//! Four properties are pinned here:
+//! * **Geometry exactness** — with exactly-representable inputs, every
+//!   contributor-chunk size, thread count, and element-block size
+//!   reproduces the serial `aggregate` bitwise (property test).
+//! * **Thread invariance** — with arbitrary float inputs the result is a
+//!   function of the chunk geometry only, never of the worker count, and
+//!   the default geometry replays the serial entry point bitwise
+//!   (property test).
+//! * **COW identity** — a session whose `Arc` sharing edges are forcibly
+//!   severed after every interval (deep-unshared global + replicas)
+//!   produces bitwise-identical output to the normal pointer-bump run,
+//!   across churn, movement backends, participation schedules, and
+//!   forced `--solver-threads` counts.
+//! * **No aliasing leaks** — mid-period, a trainee's `Arc::make_mut`
+//!   copy never mutates the shared global allocation or any partner
+//!   replica; untrained synced devices keep aliasing the epoch.
+//!
+//! Everything here is pure CPU (stub compute, no XLA artifacts).
+
+use std::sync::Arc;
+
+use fogml::config::{Churn, EngineConfig, Method, MovementBackend, SolverThreads};
+use fogml::fed::aggregator::{
+    aggregate, aggregate_chunked, CHUNK_CONTRIBUTORS, CHUNK_ELEMS,
+};
+use fogml::fed::session::{run_with, Compute, Params, Substrates};
+use fogml::fed::{EngineOutput, ParticipationSchedule, Session};
+use fogml::prop::{for_all, Gen};
+use fogml::runtime::HostTensor;
+
+/// Same arithmetic stub the session unit tests use: params carry a
+/// seed marker and a sample counter, so the full churn/movement/COW
+/// bookkeeping is exercised without XLA artifacts.
+struct StubCompute;
+
+impl Compute for StubCompute {
+    fn init_params(&self, seed: u64) -> anyhow::Result<Params> {
+        Ok(vec![HostTensor::new(vec![2], vec![(seed % 97) as f32, 0.0])])
+    }
+
+    fn train_interval(
+        &self,
+        params: &mut Params,
+        samples: &[u32],
+    ) -> anyhow::Result<Option<f32>> {
+        if samples.is_empty() {
+            return Ok(None);
+        }
+        params[0].data[1] += samples.len() as f32;
+        Ok(Some(1.0 / (1.0 + params[0].data[1])))
+    }
+
+    fn evaluate(&self, params: &[HostTensor]) -> anyhow::Result<f64> {
+        Ok((params[0].data[1] as f64 / 1e4).tanh())
+    }
+}
+
+fn stub_cfg() -> EngineConfig {
+    EngineConfig {
+        method: Method::NetworkAware,
+        n: 6,
+        t_max: 24,
+        tau: 4,
+        n_train: 600,
+        n_test: 120,
+        ..Default::default()
+    }
+}
+
+fn assert_identical(a: &EngineOutput, b: &EngineOutput, label: &str) {
+    assert_eq!(a.accuracy, b.accuracy, "{label}: accuracy");
+    assert_eq!(a.accuracy_curve, b.accuracy_curve, "{label}: curve");
+    assert_eq!(a.per_device_loss, b.per_device_loss, "{label}: losses");
+    assert_eq!(a.ledger, b.ledger, "{label}: ledger");
+    assert_eq!(
+        a.movement.per_interval, b.movement.per_interval,
+        "{label}: movement"
+    );
+    assert_eq!(a.similarity, b.similarity, "{label}: similarity");
+    assert_eq!(a.mean_active, b.mean_active, "{label}: mean_active");
+    assert_eq!(a.total_collected, b.total_collected, "{label}: collected");
+}
+
+// ---------------------------------------------------------------------------
+// Chunk/thread/element-block invariance of `aggregate_chunked`
+// ---------------------------------------------------------------------------
+
+/// With dyadic-exact inputs — a power-of-two count of weight-1
+/// contributors (zero-weight decoys interleaved) over small-integer
+/// parameter values — every floating-point association is exact, so
+/// *every* chunk size, thread count, and element blocking must land on
+/// the serial result bit-for-bit. This pins the skip-nonpositive and
+/// normalization contracts across chunk boundaries, not just the
+/// fixed-geometry determinism.
+#[test]
+fn every_geometry_is_bitwise_exact_on_dyadic_inputs() {
+    for_all("aggregate_dyadic_geometry", 40, |g: &mut Gen| {
+        let positives = 1usize << g.usize_in(0, 5);
+        let layers = g.usize_in(1, 2);
+        let elems = g.usize_in(1, 40);
+        let mut owned: Vec<(Params, f64)> = Vec::new();
+        for _ in 0..positives {
+            let params: Params = (0..layers)
+                .map(|_| {
+                    HostTensor::new(
+                        vec![elems],
+                        (0..elems).map(|_| g.usize_in(0, 64) as f32 - 32.0).collect(),
+                    )
+                })
+                .collect();
+            owned.push((params, 1.0));
+            // zero-weight decoys: skipped by the accumulator, neutral in
+            // the normalizer, but they shift chunk boundaries around
+            while g.bool(0.3) {
+                let decoy: Params = (0..layers)
+                    .map(|_| HostTensor::new(vec![elems], vec![7.0; elems]))
+                    .collect();
+                owned.push((decoy, 0.0));
+            }
+        }
+        let refs: Vec<(&Params, f64)> = owned.iter().map(|(p, h)| (p, *h)).collect();
+        let serial = aggregate(&refs).unwrap().unwrap();
+        for chunk in [1usize, 2, 3, 5, CHUNK_CONTRIBUTORS] {
+            for threads in [1usize, 2, 4, 7] {
+                for elems_per_block in [1usize, 3, 7, CHUNK_ELEMS] {
+                    let out = aggregate_chunked(&refs, threads, chunk, elems_per_block)
+                        .unwrap()
+                        .unwrap();
+                    assert_eq!(
+                        out, serial,
+                        "chunk={chunk} threads={threads} elems={elems_per_block}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// With arbitrary float inputs the chunked result may associate sums
+/// differently from the serial chain — but it must be a function of the
+/// chunk geometry *only*: forced chunks {2, 3} are identical at threads
+/// {2, 4, 7} vs 1, element blocking is bit-neutral at every size, the
+/// default geometry replays the serial entry point bitwise, and every
+/// geometry agrees with serial to float tolerance.
+#[test]
+fn threads_never_change_bits_on_arbitrary_inputs() {
+    for_all("aggregate_thread_invariance", 40, |g: &mut Gen| {
+        let n = g.usize_in(1, 24);
+        let elems = g.usize_in(1, 33);
+        let owned: Vec<(Params, f64)> = (0..n)
+            .map(|_| {
+                let params: Params = vec![HostTensor::new(
+                    vec![elems],
+                    (0..elems).map(|_| g.f64_in(-2.0, 2.0) as f32).collect(),
+                )];
+                let h = if g.bool(0.2) { 0.0 } else { g.f64_in(0.1, 50.0) };
+                (params, h)
+            })
+            .collect();
+        let refs: Vec<(&Params, f64)> = owned.iter().map(|(p, h)| (p, *h)).collect();
+        let serial = aggregate(&refs).unwrap();
+        for chunk in [2usize, 3, CHUNK_CONTRIBUTORS] {
+            let base = aggregate_chunked(&refs, 1, chunk, CHUNK_ELEMS).unwrap();
+            for threads in [2usize, 4, 7] {
+                for elems_per_block in [1usize, 5, CHUNK_ELEMS] {
+                    let out =
+                        aggregate_chunked(&refs, threads, chunk, elems_per_block).unwrap();
+                    assert_eq!(
+                        out, base,
+                        "chunk={chunk} threads={threads} elems={elems_per_block}"
+                    );
+                }
+            }
+            match (&serial, &base) {
+                (None, None) => {}
+                (Some(s), Some(b)) => {
+                    // n ≤ 24 < 512: the default geometry is one chunk and
+                    // must be the serial chain bit-for-bit
+                    if chunk == CHUNK_CONTRIBUTORS {
+                        assert_eq!(s, b, "single default chunk diverged from serial");
+                    }
+                    for (st, bt) in s.iter().zip(b) {
+                        for (x, y) in st.data.iter().zip(&bt.data) {
+                            assert!(
+                                (x - y).abs() <= 1e-5 * (1.0 + x.abs()),
+                                "chunk={chunk}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+                _ => panic!("chunk={chunk}: Some/None disagreement with serial"),
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end COW identity (pure CPU)
+// ---------------------------------------------------------------------------
+
+/// Run the session manually, forcibly severing every `Arc` sharing edge
+/// after each interval — the global and all replicas become uniquely
+/// owned deep copies, exactly the storage the pre-rule-14 engine kept.
+/// If any step observed sharing (instead of just exploiting it), its
+/// output would diverge from the normal run.
+fn run_deep_unshared(cfg: &EngineConfig, sub: &Substrates) -> EngineOutput {
+    let mut s = Session::new(cfg, sub, StubCompute).expect("session");
+    for t in 0..cfg.t_max {
+        s.step_churn(t);
+        s.step_collect(t);
+        s.step_movement(t);
+        s.step_train(t).expect("train");
+        s.step_aggregate(t).expect("aggregate");
+        s.state.global = Arc::new((*s.state.global).clone());
+        for p in s.state.device_params.iter_mut() {
+            *p = Arc::new((**p).clone());
+        }
+    }
+    s.finish().expect("finish")
+}
+
+/// The COW store is invisible to every observable output: pointer-bump
+/// runs and forcibly deep-cloned runs agree bitwise across churn,
+/// movement backends, and participation schedules.
+#[test]
+fn cow_and_deep_clone_runs_are_bit_identical() {
+    let configs = [
+        stub_cfg(),
+        stub_cfg().with(|c| c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 })),
+        stub_cfg().with(|c| {
+            c.movement_backend = MovementBackend::Sparse;
+            c.churn = Some(Churn { p_exit: 0.05, p_entry: 0.05 });
+        }),
+        stub_cfg().with(|c| {
+            c.participation = ParticipationSchedule::UniformK { k: 3 };
+            c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 });
+        }),
+        stub_cfg().with(|c| {
+            c.participation = ParticipationSchedule::ImportanceK { k: 3 };
+        }),
+    ];
+    for (ci, cfg) in configs.iter().enumerate() {
+        let sub = Substrates::derive(cfg);
+        let normal = run_with(cfg, &sub, StubCompute).expect("normal run");
+        let unshared = run_deep_unshared(cfg, &sub);
+        assert_identical(&normal, &unshared, &format!("config #{ci}, COW vs deep-clone"));
+    }
+}
+
+/// Forced `--solver-threads` counts feed `aggregate_chunked` directly
+/// from `step_aggregate`; at paper scale (n ≤ 512 contributors — one
+/// chunk) every count must reproduce the serial run bitwise.
+#[test]
+fn forced_solver_threads_leave_runs_bit_identical() {
+    let base = stub_cfg().with(|c| c.churn = Some(Churn { p_exit: 0.1, p_entry: 0.1 }));
+    let sub = Substrates::derive(&base);
+    let reference = run_with(&base, &sub, StubCompute).expect("serial run");
+    for k in [2usize, 4, 7] {
+        let cfg = base.clone().with(|c| c.solver_threads = SolverThreads::Fixed(k));
+        // same substrate seed ⇒ only the worker count differs
+        let out = run_with(&cfg, &Substrates::derive(&cfg), StubCompute).expect("forced run");
+        assert_identical(&reference, &out, &format!("solver-threads={k}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aliasing discipline of the COW store (pure CPU)
+// ---------------------------------------------------------------------------
+
+/// Mid-period, the `Arc::make_mut` in the dispatch path must hand each
+/// trainee a *private* copy: the shared global allocation keeps its bits,
+/// untrained synced devices keep aliasing it, and no two trainees share
+/// an allocation. At every period end the pointer-bump resync restores
+/// full sharing.
+#[test]
+fn trainee_copies_never_leak_into_shared_replicas() {
+    let cfg = stub_cfg().with(|c| c.t_max = 12);
+    let sub = Substrates::derive(&cfg);
+    let mut s = Session::new(&cfg, &sub, StubCompute).expect("session");
+
+    // fresh session: one allocation, n aliases
+    for p in &s.state.device_params {
+        assert!(Arc::ptr_eq(p, &s.state.global), "initial replicas must alias");
+    }
+
+    let mut saw_multi_trainee_interval = false;
+    for t in 0..cfg.t_max {
+        s.step_churn(t);
+        s.step_collect(t);
+        s.step_movement(t);
+        let global_before: Params = (*s.state.global).clone();
+        let replicas_before: Vec<Params> =
+            s.state.device_params.iter().map(|p| (**p).clone()).collect();
+        s.step_train(t).expect("train");
+
+        // training must never write through a sharing edge
+        assert_eq!(
+            *s.state.global, global_before,
+            "t={t}: a trainee mutated the shared global allocation"
+        );
+        let trained: Vec<usize> =
+            (0..cfg.n).filter(|&i| s.state.h[i] > 0.0).collect();
+        for i in 0..cfg.n {
+            let p = &s.state.device_params[i];
+            if s.state.h[i] > 0.0 {
+                assert!(
+                    !Arc::ptr_eq(p, &s.state.global),
+                    "t={t}: trainee {i} still aliases the epoch after training"
+                );
+            } else {
+                assert_eq!(
+                    **p, replicas_before[i],
+                    "t={t}: untrained device {i}'s replica changed bits"
+                );
+            }
+        }
+        // no two trainees may share an allocation either
+        for (a, &i) in trained.iter().enumerate() {
+            for &j in &trained[a + 1..] {
+                assert!(
+                    !Arc::ptr_eq(&s.state.device_params[i], &s.state.device_params[j]),
+                    "t={t}: trainees {i} and {j} share one allocation"
+                );
+            }
+        }
+        if trained.len() >= 2 {
+            saw_multi_trainee_interval = true;
+        }
+
+        s.step_aggregate(t).expect("aggregate");
+        if (t + 1) % cfg.tau == 0 {
+            // period end: the resync re-shares the epoch with every
+            // active device (no churn here, so that is all of them)
+            for (i, p) in s.state.device_params.iter().enumerate() {
+                assert!(
+                    Arc::ptr_eq(p, &s.state.global),
+                    "t={t}: device {i} not re-shared after resync"
+                );
+                assert_eq!(s.state.h[i], 0.0, "t={t}: h not reset at period end");
+            }
+        }
+    }
+    assert!(
+        saw_multi_trainee_interval,
+        "test never exercised an interval with ≥ 2 concurrent trainees"
+    );
+    s.finish().expect("finish");
+}
